@@ -1,0 +1,44 @@
+//! Quickstart: sample from a diffusion model with UniPC in ~30 lines.
+//!
+//!   cargo run --release --offline --example quickstart
+//!
+//! Uses the trained PJRT model when `make artifacts` has run, otherwise the
+//! analytic mixture — the sampler API is identical.
+
+use std::path::Path;
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::numerics::vandermonde::BFunction;
+use unipc::rng::Rng;
+use unipc::runtime::{EngineOptions, PjrtHandle, PjrtModel};
+use unipc::sched::VpLinear;
+use unipc::solver::{sample, Model, Prediction, SampleOptions};
+
+fn main() -> anyhow::Result<()> {
+    let sched = VpLinear::default();
+    // 8 samples, 10 NFE, UniPC-3 with B₂ — the paper's headline setting.
+    let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 10);
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let (result, backend) = if dir.join("manifest.json").exists() && dir.join("model.upw").exists()
+    {
+        let handle = PjrtHandle::spawn(&dir, None, EngineOptions::default())?;
+        let model = PjrtModel::new(handle.clone()).with_class(3, Some(1.5));
+        let x_t = Rng::seed_from(7).normal_tensor(&[8, model.dim()]);
+        let r = sample(&model, &sched, &x_t, &opts);
+        handle.shutdown();
+        (r, "trained model via PJRT (class 3, CFG 1.5)")
+    } else {
+        let model = GmmModel { gm: &gm, sched: &sched };
+        let x_t = Rng::seed_from(7).normal_tensor(&[8, model.dim()]);
+        (sample(&model, &sched, &x_t, &opts), "analytic mixture")
+    };
+
+    println!("backend : {backend}");
+    println!("sampler : {} ({} NFE)", opts.id(), result.nfe);
+    println!("samples : {:?} (first row)", &result.x.row(0)[..4.min(result.x.shape()[1])]);
+    println!("rms     : {:.3}", result.x.rms());
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Order-schedule search (paper §4.2 "Customizing order schedule"): exhausts
+//! all monotone-start order schedules at a small NFE budget and reports the
+//! best ones — the experiment behind Table 4, extended into an actual
+//! search tool.
+//!
+//!   cargo run --release --offline --example schedule_search -- [--nfe 6]
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::cli::Args;
+use unipc::evalharness::RefErr;
+use unipc::numerics::vandermonde::BFunction;
+use unipc::sched::VpLinear;
+use unipc::solver::unipc::CoeffVariant;
+use unipc::solver::{Method, Prediction, SampleOptions};
+
+/// Enumerate schedules: s[0] = 1, each step can raise the order by at most
+/// one (warm-up constraint), capped at `max_order`.
+fn schedules(len: usize, max_order: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = vec![1usize];
+    fn rec(cur: &mut Vec<usize>, len: usize, max_order: usize, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == len {
+            out.push(cur.clone());
+            return;
+        }
+        let last = *cur.last().unwrap();
+        let hi = (last + 1).min(max_order).min(cur.len() + 1);
+        for next in 1..=hi {
+            cur.push(next);
+            rec(cur, len, max_order, out);
+            cur.pop();
+        }
+    }
+    rec(&mut cur, len, max_order, &mut out);
+    out
+}
+
+fn main() {
+    let (_, args) = Args::from_env();
+    let nfe = args.get_usize("nfe", 6).unwrap_or(6);
+    let max_order = args.get_usize("max-order", 4).unwrap_or(4);
+
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let sched = VpLinear::default();
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let re = RefErr::new(&model, &sched, 16, 42, 1.0, 1e-3, 3000);
+
+    let all = schedules(nfe, max_order);
+    println!("searching {} schedules at NFE={nfe} (max order {max_order})", all.len());
+
+    let mut scored: Vec<(f64, String)> = all
+        .iter()
+        .map(|schedule| {
+            let opts = SampleOptions::new(
+                Method::UniP {
+                    order: *schedule.iter().max().unwrap(),
+                    variant: CoeffVariant::Bh(BFunction::Bh1),
+                    pred: Prediction::Noise,
+                    schedule: Some(schedule.clone()),
+                },
+                nfe,
+            )
+            .with_unic(CoeffVariant::Bh(BFunction::Bh1), false);
+            let err = re.err(&model, &sched, &opts);
+            let label: String = schedule.iter().map(|o| o.to_string()).collect();
+            (err, label)
+        })
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    println!("\ntop 10 schedules:");
+    for (err, label) in scored.iter().take(10) {
+        println!("  {label:<12} l2={err:.5}");
+    }
+    println!("\nbottom 3 (the 'as high as possible' trap the paper warns about):");
+    for (err, label) in scored.iter().rev().take(3) {
+        println!("  {label:<12} l2={err:.5}");
+    }
+
+    // Default (ascending capped at 3) for comparison.
+    let default: Vec<usize> = (1..=nfe).map(|i| i.min(3)).collect();
+    let dl: String = default.iter().map(|o| o.to_string()).collect();
+    let de = scored.iter().find(|(_, l)| l == &dl);
+    if let Some((err, _)) = de {
+        println!("\ndefault {dl}: l2={err:.5}");
+    }
+}

@@ -1,0 +1,156 @@
+//! **End-to-end driver** (DESIGN.md §4): boots the full serving stack on the
+//! trained model — PJRT executor → coordinator → TCP server — drives a
+//! Poisson workload of batched sampling requests with mixed NFE budgets and
+//! methods, reports latency/throughput, and cross-checks one request's
+//! output against a directly-computed reference.
+//!
+//!   make artifacts && cargo run --release --offline --example serve_e2e
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::config::ServerConfig;
+use unipc::coordinator::{ModelBackend, SampleRequest, Service};
+use unipc::numerics::vandermonde::BFunction;
+use unipc::rng::Rng;
+use unipc::runtime::{EngineOptions, PjrtHandle, PjrtModel};
+use unipc::sched::VpLinear;
+use unipc::server::{run_load, Client, LoadConfig, Server};
+use unipc::solver::{sample, Model, Prediction, SampleOptions};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let have_artifacts = dir.join("manifest.json").exists() && dir.join("model.upw").exists();
+
+    // 1. Backend.
+    let (backend, pjrt) = if have_artifacts {
+        let h = PjrtHandle::spawn(
+            &dir,
+            None,
+            EngineOptions { max_batch: 64, batch_wait: Duration::from_micros(200) },
+        )?;
+        println!("backend: trained model via PJRT (dim {}, {} classes)", h.dim, h.n_classes);
+        (ModelBackend::Pjrt(h.clone()), Some(h))
+    } else {
+        println!("backend: analytic (run `make artifacts` for the trained model)");
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        (ModelBackend::Analytic { gm, class_components: Arc::new(classes) }, None)
+    };
+
+    // 2. Service + server.
+    let svc = Service::start(
+        ServerConfig { workers: 4, queue_cap: 256, ..Default::default() },
+        backend,
+    );
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0")?;
+    println!("server : {}", server.addr);
+
+    // 3. Correctness cross-check: one guided request through the full stack
+    //    vs the same solve computed directly.
+    let mut client = Client::connect(&server.addr.to_string())?;
+    let req = SampleRequest {
+        n: 4,
+        steps: 8,
+        method: "unipc-3".into(),
+        unic: true,
+        class: Some(2),
+        guidance: Some(1.5),
+        seed: 1234,
+        return_samples: true,
+    };
+    let resp = client.sample(&req)?;
+    anyhow::ensure!(resp.ok, "request failed: {:?}", resp.error);
+    println!(
+        "check  : request ok, nfe={} queue={}us compute={}us",
+        resp.nfe, resp.queue_us, resp.compute_us
+    );
+    if let Some(h) = &pjrt {
+        let model = PjrtModel::new(h.clone()).with_class(2, Some(1.5));
+        let sched = VpLinear::default();
+        let x_t = Rng::seed_from(1234).normal_tensor(&[4, model.dim()]);
+        let direct = sample(
+            &model,
+            &sched,
+            &x_t,
+            &SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8),
+        )
+        .x;
+        let got = resp.samples.as_ref().unwrap();
+        let mut max_err = 0.0f64;
+        for (a, b) in got.iter().zip(direct.data()) {
+            max_err = max_err.max((a - b).abs());
+        }
+        anyhow::ensure!(max_err < 1e-5, "server output diverges from direct solve: {max_err}");
+        println!("check  : server output == direct solve (max err {max_err:.2e})");
+    }
+
+    // 4. Mixed workload under Poisson load: three request classes.
+    println!("\n== mixed Poisson workload ==");
+    for (label, template) in [
+        (
+            "unipc-3 @ 8 NFE, n=4",
+            SampleRequest {
+                n: 4,
+                steps: 8,
+                method: "unipc-3".into(),
+                unic: true,
+                return_samples: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "unipc-2 guided @ 6 NFE, n=2",
+            SampleRequest {
+                n: 2,
+                steps: 6,
+                method: "unipc-2".into(),
+                unic: true,
+                class: Some(1),
+                guidance: Some(2.0),
+                return_samples: false,
+                ..Default::default()
+            },
+        ),
+        (
+            "dpmpp-3m @ 10 NFE, n=4",
+            SampleRequest {
+                n: 4,
+                steps: 10,
+                method: "dpmpp-3m".into(),
+                unic: false,
+                return_samples: false,
+                ..Default::default()
+            },
+        ),
+    ] {
+        let cfg = LoadConfig { rps: 12.0, total: 36, connections: 3, template, seed: 5 };
+        let mut report = run_load(&server.addr.to_string(), &cfg)?;
+        println!("{label:<32} {}", report.summary());
+    }
+
+    // 5. Batching effectiveness + service metrics.
+    if let Some(h) = &pjrt {
+        let s = h.stats()?;
+        println!(
+            "\npjrt   : {} calls, {:.2} mean rows/call, {} padded rows, hist {:?}",
+            s.calls,
+            s.mean_rows_per_call(),
+            s.padded_rows,
+            s.batch_hist
+        );
+    }
+    println!("metrics: {}", svc.metrics_json().to_string());
+
+    server.stop();
+    svc.shutdown();
+    if let Some(h) = pjrt {
+        h.shutdown();
+    }
+    Ok(())
+}

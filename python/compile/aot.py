@@ -1,0 +1,243 @@
+"""AOT lowering: JAX -> HLO **text** artifacts for the rust PJRT runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >=
+0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Lowered entry points (each at a fixed set of static batch sizes):
+  eps_b{B}        eps_theta(params..., x[B,d], t[B], y[B])        -> eps[B,d]
+  eps_cfg_b{B}    CFG: (params..., x, t, y, scale[])              -> eps[B,d]
+  correct_b{B}    fused eval+UniC step (params..., x_pred, t, x_prev,
+                  m0, d1s[P,B,d], coeffs[P+3])                    -> (x_c, m_t)
+                  (uses the L1 pallas unipc_update kernel; one PJRT call
+                   instead of model-call + host update)
+
+Everything is recorded in artifacts/manifest.json: parameter order/shapes,
+artifact -> input signature, schedule constants, model config.
+
+Usage: python -m compile.aot [--out ../artifacts] [--batches 1,4,16,64]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.unipc_update import unipc_update
+from .model import ModelConfig, eps_model, eps_model_cfg, init_params, param_names
+from .sde import VpLinear
+
+
+def _load_upw(path: str) -> dict:
+    """Read the .upw container back into a param dict (golden generation)."""
+    import struct
+
+    import numpy as np
+
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"UPW1"
+    pos = 4
+    (n,) = struct.unpack_from("<I", raw, pos)
+    pos += 4
+    headers = []
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<I", raw, pos)
+        pos += 4
+        name = raw[pos : pos + nl].decode()
+        pos += nl
+        (nd,) = struct.unpack_from("<I", raw, pos)
+        pos += 4
+        dims = struct.unpack_from("<" + "I" * nd, raw, pos)
+        pos += 4 * nd
+        pos += 1  # dtype
+        headers.append((name, dims))
+    params = {}
+    for name, dims in headers:
+        cnt = int(np.prod(dims)) if dims else 1
+        params[name] = jnp.asarray(
+            np.frombuffer(raw, np.float32, cnt, pos).reshape(dims)
+        )
+        pos += 4 * cnt
+    return params
+
+# Corrector buffer depth baked into the fused-correct artifact (order <= 3 +
+# the current-point difference; see rust coordinator).
+FUSED_P = 3
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_eps(cfg: ModelConfig, batch: int):
+    names = param_names(cfg)
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+
+    def fn(*args):
+        flat = args[: len(names)]
+        x, t, y = args[len(names) :]
+        params = dict(zip(names, flat))
+        return (eps_model(params, cfg, x, t, y),)
+
+    specs = [jax.ShapeDtypeStruct(params0[n].shape, jnp.float32) for n in names]
+    specs += [
+        jax.ShapeDtypeStruct((batch, cfg.dim), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_eps_cfg(cfg: ModelConfig, batch: int):
+    names = param_names(cfg)
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+
+    def fn(*args):
+        flat = args[: len(names)]
+        x, t, y, scale = args[len(names) :]
+        params = dict(zip(names, flat))
+        return (eps_model_cfg(params, cfg, x, t, y, scale),)
+
+    specs = [jax.ShapeDtypeStruct(params0[n].shape, jnp.float32) for n in names]
+    specs += [
+        jax.ShapeDtypeStruct((batch, cfg.dim), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_correct(cfg: ModelConfig, batch: int):
+    """Fused UniC step: evaluate the model at the predicted point and apply
+    the corrector combination in one XLA program (EXPERIMENTS.md SS Perf-L2).
+
+    coeffs layout: [c_1..c_P, a_coef, b_coef, res_scale]; the residual term
+    adds c_P * (m_t - m0) for the current point (r_P = 1), with unused buffer
+    slots zero-padded by the caller.
+    """
+    names = param_names(cfg)
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+
+    def fn(*args):
+        flat = args[: len(names)]
+        x_pred, t, y, x_prev, m0, d1s, coeffs = args[len(names) :]
+        params = dict(zip(names, flat))
+        m_t = eps_model(params, cfg, x_pred, t, y)
+        # D_P / r_P with r_P = 1 is (m_t - m0); stack it into the buffer.
+        d1s_full = jnp.concatenate([d1s, (m_t - m0)[None]], axis=0)
+        x_c = unipc_update(
+            x_prev,
+            m0,
+            d1s_full,
+            coeffs[: FUSED_P + 1],
+            coeffs[FUSED_P + 1],
+            coeffs[FUSED_P + 2],
+            coeffs[FUSED_P + 3],
+        )
+        return (x_c, m_t)
+
+    specs = [jax.ShapeDtypeStruct(params0[n].shape, jnp.float32) for n in names]
+    specs += [
+        jax.ShapeDtypeStruct((batch, cfg.dim), jnp.float32),  # x_pred
+        jax.ShapeDtypeStruct((batch,), jnp.float32),  # t
+        jax.ShapeDtypeStruct((batch,), jnp.int32),  # y
+        jax.ShapeDtypeStruct((batch, cfg.dim), jnp.float32),  # x_prev
+        jax.ShapeDtypeStruct((batch, cfg.dim), jnp.float32),  # m0
+        jax.ShapeDtypeStruct((FUSED_P, batch, cfg.dim), jnp.float32),  # d1s
+        jax.ShapeDtypeStruct((FUSED_P + 4,), jnp.float32),  # coeffs
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def build(out_dir: str, batches: list[int]) -> dict:
+    cfg = ModelConfig()
+    sched = VpLinear()
+    os.makedirs(out_dir, exist_ok=True)
+    params0 = init_params(cfg, jax.random.PRNGKey(0))
+    names = param_names(cfg)
+
+    artifacts = {}
+    for b in batches:
+        for kind, lower in (
+            ("eps", lower_eps),
+            ("eps_cfg", lower_eps_cfg),
+            ("correct", lower_correct),
+        ):
+            name = f"{kind}_b{b}"
+            text = to_hlo_text(lower(cfg, b))
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            artifacts[name] = {"file": f"{name}.hlo.txt", "kind": kind, "batch": b}
+            print(f"wrote {path} ({len(text)} chars)")
+
+    # Golden input/output pair for the rust runtime's end-to-end check:
+    # computed with the *trained* weights when present, else init weights.
+    import numpy as np
+
+    weights_path = os.path.join(out_dir, "model.upw")
+    if os.path.exists(weights_path):
+        golden_params = _load_upw(weights_path)
+    else:
+        golden_params = params0
+    gb = min(batches)
+    gx = jnp.asarray(
+        np.linspace(-1.0, 1.0, gb * cfg.dim, dtype=np.float32).reshape(gb, cfg.dim)
+    )
+    gt = jnp.full((gb,), 0.5, jnp.float32)
+    gy = jnp.zeros((gb,), jnp.int32)
+    from .model import eps_model as _eps
+
+    g_eps = _eps(golden_params, cfg, gx, gt, gy)
+    g_cfg = eps_model_cfg(golden_params, cfg, gx, gt, gy, jnp.float32(2.0))
+    golden = {
+        "batch": gb,
+        "x": [float(v) for v in np.asarray(gx).ravel()],
+        "t": 0.5,
+        "y": 0,
+        "eps": [float(v) for v in np.asarray(g_eps).ravel()],
+        "cfg_scale": 2.0,
+        "eps_cfg": [float(v) for v in np.asarray(g_cfg).ravel()],
+        "weights": "trained" if os.path.exists(weights_path) else "init",
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    manifest = {
+        "model": cfg.to_dict(),
+        "param_names": names,
+        "param_shapes": {n: list(params0[n].shape) for n in names},
+        "schedule": {"kind": "vp_linear", "beta_0": sched.beta_0, "beta_1": sched.beta_1},
+        "fused_p": FUSED_P,
+        "batches": batches,
+        "artifacts": artifacts,
+        "weights": "model.upw",
+        "mixture": "mixture.json",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--batches", type=str, default="1,4,16,64")
+    args = ap.parse_args()
+    build(args.out, [int(b) for b in args.batches.split(",")])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Synthetic benchmark data for training the learned denoiser.
+
+The training distribution is a class-conditional Gaussian mixture (2
+components per class on a jittered sphere) — the same family the rust
+`analytic` substrate uses, so the learned model can be validated against an
+exact score. The mixture spec is written to `artifacts/mixture.json` and
+loaded by the rust side for ground-truth metrics (DESIGN.md SS2).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+import numpy as np
+
+
+def make_mixture(
+    dim: int = 16,
+    n_classes: int = 10,
+    comps_per_class: int = 2,
+    radius: float = 3.0,
+    std: float = 0.55,
+    seed: int = 2024,
+) -> Dict:
+    """Deterministic mixture spec: means on a sphere, jittered stds/weights."""
+    rng = np.random.default_rng(seed)
+    k = n_classes * comps_per_class
+    means = rng.normal(size=(k, dim))
+    means *= radius / np.linalg.norm(means, axis=1, keepdims=True)
+    stds = std * (0.8 + 0.4 * rng.random(k))
+    weights = 0.5 + rng.random(k)
+    weights /= weights.sum()
+    return {
+        "dim": dim,
+        "n_classes": n_classes,
+        "comps_per_class": comps_per_class,
+        "means": means.tolist(),
+        "stds": stds.tolist(),
+        "weights": weights.tolist(),
+    }
+
+
+def save_mixture(spec: Dict, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(spec, f)
+
+
+def load_mixture(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def class_of_component(spec: Dict, k: int) -> int:
+    return k // spec["comps_per_class"]
+
+
+def sample_batch(spec: Dict, rng: np.random.Generator, n: int):
+    """Draw (x0 [n, dim] f32, labels [n] i32) from the mixture."""
+    means = np.asarray(spec["means"])
+    stds = np.asarray(spec["stds"])
+    weights = np.asarray(spec["weights"])
+    ks = rng.choice(len(weights), size=n, p=weights)
+    x = means[ks] + stds[ks, None] * rng.normal(size=(n, spec["dim"]))
+    labels = ks // spec["comps_per_class"]
+    return x.astype(np.float32), labels.astype(np.int32)
+
+
+def exact_eps(spec: Dict, x: np.ndarray, t: float, alpha: float, sigma: float,
+              subset: List[int] | None = None) -> np.ndarray:
+    """Closed-form eps*(x, t) for the mixture (numpy mirror of
+    rust `analytic::gmm`); used to validate the trained network."""
+    means = np.asarray(spec["means"])
+    stds = np.asarray(spec["stds"])
+    weights = np.asarray(spec["weights"])
+    if subset is not None:
+        means, stds, weights = means[subset], stds[subset], weights[subset]
+    d = x.shape[1]
+    v = alpha**2 * stds**2 + sigma**2  # [K]
+    diff = x[:, None, :] - alpha * means[None, :, :]  # [N, K, D]
+    sq = np.sum(diff**2, axis=-1)  # [N, K]
+    logp = np.log(weights)[None, :] - 0.5 * d * np.log(v)[None, :] - sq / (2 * v)[None, :]
+    logp -= logp.max(axis=1, keepdims=True)
+    g = np.exp(logp)
+    g /= g.sum(axis=1, keepdims=True)
+    out = np.einsum("nk,nkd->nd", g / v[None, :], diff)
+    return (sigma * out).astype(x.dtype)

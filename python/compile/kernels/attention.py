@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: fused single-head attention.
+
+TPU adaptation of the GPU flash-attention pattern (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging K/V tiles
+through shared memory, the BlockSpec grid streams one (q-tile, full-KV)
+working set through VMEM per grid step, and the kernel keeps a running
+(max, denominator, accumulator) triple so only O(T_q x D) state lives in
+registers/VMEM. Lowered with interpret=True — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; on a real TPU the same BlockSpec lowers to MXU
+matmuls over 128-aligned tiles.
+
+VMEM budget per grid step (f32): q-tile T_q x D + K,V tiles 2 x T_k x D +
+accumulator T_q x D. With the model's T=8, D=16 this is well under a
+single core's ~16 MiB VMEM; the tiling knobs exist for the perf study in
+EXPERIMENTS.md §Perf-L1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int):
+    """One (batch, q-tile) grid step: online-softmax attention."""
+    q = q_ref[0]  # [Tq, D]
+    t_k = k_ref.shape[1]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+
+    n_kv = t_k // block_k
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], i * block_k, block_k, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], i * block_k, block_k, axis=0)
+        s = jnp.dot(q, k.T) * scale  # [Tq, Tk]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.dot(p, v)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((q.shape[0], 1), -jnp.inf, q.dtype)
+    l0 = jnp.zeros((q.shape[0], 1), q.dtype)
+    acc0 = jnp.zeros_like(q)
+    _, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    o_ref[0] = acc / l
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def attention(q, k, v, block_q: int = 0, block_k: int = 0):
+    """Fused attention over [B, T, D] tensors via Pallas (interpret mode).
+
+    block_q / block_k default to the full sequence (single tile) — the right
+    choice for the model's T=8; the knobs are exercised by the kernel tests
+    and the perf study.
+    """
+    b, t, d = q.shape
+    assert k.shape == (b, t, d) and v.shape == (b, t, d)
+    bq = block_q or t
+    bk = block_k or t
+    assert t % bq == 0 and t % bk == 0, "tile sizes must divide T"
+
+    grid = (b, t // bq)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, block_k=bk),
+        out_shape=jax.ShapeDtypeStruct((b, t, d), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),  # q tile
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),  # full K
+            pl.BlockSpec((1, t, d), lambda i, j: (i, 0, 0)),  # full V
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+        interpret=True,
+    )(q, k, v)
+
+
+def attention_vmem_bytes(t: int, d: int, block_q: int = 0, block_k: int = 0,
+                         dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint estimate per grid step (perf study, §Perf-L1)."""
+    bq = block_q or t
+    bk = block_k or t
+    q_tile = bq * d
+    kv_tiles = 2 * t * d  # full K and V are resident per grid step
+    acc = bq * d
+    softmax_state = 2 * bq
+    scores = bq * bk
+    return dtype_bytes * (q_tile + kv_tiles + acc + softmax_state + scores)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest + hypothesis sweep shapes against these)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v):
+    """Single-head scaled-dot-product attention.
+
+    q, k, v: [B, T, D] -> [B, T, D].
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("btd,bsd->bts", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bts,bsd->btd", p, v)
+    return o / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def unipc_update_ref(x_prev, m0, d1s, coeffs, a_coef, b_coef, res_scale):
+    """UniPC linear-combination update (Eq. 3 / Alg. 5-8 inner step).
+
+    x_prev, m0 : [B, D]      state at t_{i-1} and buffered model output
+    d1s        : [P, B, D]   stacked D_m / r_m differences
+    coeffs     : [P]         combination coefficients (already B(h)-scaled)
+    a_coef, b_coef, res_scale : scalars
+        out = a_coef * x_prev + b_coef * m0
+              + res_scale * sum_p coeffs[p] * d1s[p]
+    """
+    res = jnp.einsum("p,pbd->bd", coeffs, d1s)
+    return a_coef * x_prev + b_coef * m0 + res_scale * res

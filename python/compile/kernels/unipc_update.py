@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernel: the fused UniPC state update.
+
+The UniPC step (Eq. 3 / Algorithms 5-8) is a memory-bound linear
+combination over the multistep buffer:
+
+    out = a * x_prev + b * m0 + s * sum_p c_p * D1s[p]
+
+Done naively (one axpy per buffer entry) it reads the state P+2 times; this
+kernel fuses the whole combination into a single pass — one read per input
+tile, one write — which is exactly the optimization the rust host path
+mirrors in `tensor::weighted_sum`. The BlockSpec grid tiles the batch so a
+[tile, D] slab of every operand is resident in VMEM at once (HBM<->VMEM
+schedule; a CUDA port would use threadblock striding here).
+
+interpret=True for CPU PJRT; see kernels/attention.py for the rationale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _update_kernel(coef_ref, x_ref, m0_ref, d1s_ref, o_ref):
+    """One batch-tile grid step.
+
+    coef_ref: [P + 3] — c_0..c_{P-1}, then (a, b, s).
+    x_ref, m0_ref: [tile, D]; d1s_ref: [P, tile, D].
+    """
+    p = d1s_ref.shape[0]
+    coefs = coef_ref[...]
+    a = coefs[p]
+    b = coefs[p + 1]
+    s = coefs[p + 2]
+    acc = a * x_ref[...] + b * m0_ref[...]
+
+    def body(i, acc):
+        return acc + s * coefs[i] * d1s_ref[i]
+
+    o_ref[...] = jax.lax.fori_loop(0, p, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def unipc_update(x_prev, m0, d1s, coeffs, a_coef, b_coef, res_scale, block_b: int = 0):
+    """Fused UniPC update over [B, D] state with a [P, B, D] buffer."""
+    b, d = x_prev.shape
+    p = d1s.shape[0]
+    assert m0.shape == (b, d)
+    assert d1s.shape == (p, b, d)
+    assert coeffs.shape == (p,)
+    tile = block_b or b
+    assert b % tile == 0, "batch tile must divide B"
+
+    packed = jnp.concatenate(
+        [
+            coeffs.astype(x_prev.dtype),
+            jnp.asarray([a_coef, b_coef, res_scale], x_prev.dtype),
+        ]
+    )
+    grid = (b // tile,)
+    return pl.pallas_call(
+        _update_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, d), x_prev.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p + 3,), lambda i: (0,)),  # coefficients (broadcast)
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((p, tile, d), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        interpret=True,
+    )(packed, x_prev, m0, d1s)
+
+
+def unipc_update_vmem_bytes(b_tile: int, d: int, p: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint per grid step (perf study, §Perf-L1)."""
+    return dtype_bytes * ((p + 3) + (2 + p) * b_tile * d + b_tile * d)

@@ -1,0 +1,197 @@
+"""Layer-2: the learned noise-prediction network eps_theta in pure JAX.
+
+A time-conditioned residual MLP with one attention block (the attention is
+the L1 Pallas kernel, so it lowers into the same HLO the rust runtime
+executes). Small by design (~0.4M params): the serving/runtime path it
+exercises is identical to a big UNet's, and training to convergence on the
+synthetic benchmark takes minutes on CPU (see train.py).
+
+Parametrization: predicts epsilon (noise). Supports class conditioning with
+a null class for classifier-free guidance (paper SS4.1's latent-space
+setting).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+
+class ModelConfig:
+    """Hyper-parameters; serialized into the AOT manifest."""
+
+    def __init__(
+        self,
+        dim: int = 16,
+        width: int = 128,
+        depth: int = 3,
+        tokens: int = 8,
+        n_classes: int = 10,
+        temb_dim: int = 64,
+    ):
+        assert width % tokens == 0, "width must split into attention tokens"
+        self.dim = dim
+        self.width = width
+        self.depth = depth
+        self.tokens = tokens
+        self.n_classes = n_classes  # class `n_classes` is the null token
+        self.temb_dim = temb_dim
+
+    def to_dict(self) -> Dict[str, int]:
+        return {
+            "dim": self.dim,
+            "width": self.width,
+            "depth": self.depth,
+            "tokens": self.tokens,
+            "n_classes": self.n_classes,
+            "temb_dim": self.temb_dim,
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "ModelConfig":
+        return ModelConfig(**{k: int(v) for k, v in d.items()})
+
+
+def _dense_init(key, fan_in: int, fan_out: int):
+    scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.uniform(key, (fan_in, fan_out), jnp.float32, -scale, scale)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Flat, name-keyed parameter dict (deterministic iteration order is the
+    sorted key order — the same order the AOT manifest records)."""
+    keys = jax.random.split(key, 64)
+    ki = iter(keys)
+    p: Dict[str, jnp.ndarray] = {}
+    w = cfg.width
+    p["in.w"] = _dense_init(next(ki), cfg.dim, w)
+    p["in.b"] = jnp.zeros((w,), jnp.float32)
+    p["temb.w1"] = _dense_init(next(ki), cfg.temb_dim, w)
+    p["temb.b1"] = jnp.zeros((w,), jnp.float32)
+    p["temb.w2"] = _dense_init(next(ki), w, w)
+    p["temb.b2"] = jnp.zeros((w,), jnp.float32)
+    p["label.emb"] = 0.02 * jax.random.normal(next(ki), (cfg.n_classes + 1, w), jnp.float32)
+    for i in range(cfg.depth):
+        p[f"blk{i}.norm.g"] = jnp.ones((w,), jnp.float32)
+        p[f"blk{i}.norm.b"] = jnp.zeros((w,), jnp.float32)
+        p[f"blk{i}.film.w"] = _dense_init(next(ki), w, 2 * w)
+        p[f"blk{i}.film.b"] = jnp.zeros((2 * w,), jnp.float32)
+        p[f"blk{i}.mlp.w1"] = _dense_init(next(ki), w, 4 * w)
+        p[f"blk{i}.mlp.b1"] = jnp.zeros((4 * w,), jnp.float32)
+        p[f"blk{i}.mlp.w2"] = _dense_init(next(ki), 4 * w, w)
+        p[f"blk{i}.mlp.b2"] = jnp.zeros((w,), jnp.float32)
+    # Attention block (QKV + output projection).
+    p["attn.norm.g"] = jnp.ones((w,), jnp.float32)
+    p["attn.norm.b"] = jnp.zeros((w,), jnp.float32)
+    p["attn.wq"] = _dense_init(next(ki), w, w)
+    p["attn.wk"] = _dense_init(next(ki), w, w)
+    p["attn.wv"] = _dense_init(next(ki), w, w)
+    p["attn.wo"] = _dense_init(next(ki), w, w)
+    p["out.norm.g"] = jnp.ones((w,), jnp.float32)
+    p["out.norm.b"] = jnp.zeros((w,), jnp.float32)
+    p["out.w"] = jnp.zeros((w, cfg.dim), jnp.float32)  # zero-init output
+    p["out.b"] = jnp.zeros((cfg.dim,), jnp.float32)
+    return p
+
+
+def param_names(cfg: ModelConfig) -> List[str]:
+    """The positional parameter order used by the AOT artifacts."""
+    return sorted(init_params(cfg, jax.random.PRNGKey(0)).keys())
+
+
+def param_list(params: Dict[str, jnp.ndarray]) -> List[jnp.ndarray]:
+    return [params[k] for k in sorted(params.keys())]
+
+
+def params_from_list(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    names = param_names(cfg)
+    assert len(names) == len(flat)
+    return dict(zip(names, flat))
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.var(x, axis=-1, keepdims=True)
+    return (x - m) / jnp.sqrt(v + eps) * g + b
+
+
+def _time_embedding(t, temb_dim: int):
+    """Sinusoidal features of t in [0, 1] (standard DDPM embedding)."""
+    half = temb_dim // 2
+    freqs = jnp.exp(jnp.linspace(0.0, math.log(1000.0), half))
+    ang = t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def eps_model(params: Dict[str, jnp.ndarray], cfg: ModelConfig, x, t, y,
+              use_pallas: bool = True):
+    """eps_theta(x, t, y): x [B, dim], t [B], y [B] int32 (n_classes = null).
+
+    Returns predicted noise [B, dim].
+
+    `use_pallas=False` swaps the attention block to the jnp reference —
+    needed for training (pallas_call has no reverse-mode autodiff rule);
+    the two are assert_allclose-equal in python/tests/test_kernels.py, and
+    the AOT inference artifacts always use the kernel.
+    """
+    w = cfg.width
+    b = x.shape[0]
+
+    temb = _time_embedding(t, cfg.temb_dim)
+    c = jnp.tanh(temb @ params["temb.w1"] + params["temb.b1"])
+    c = c @ params["temb.w2"] + params["temb.b2"]
+    c = c + params["label.emb"][y]
+
+    h = x @ params["in.w"] + params["in.b"]
+    for i in range(cfg.depth):
+        film = c @ params[f"blk{i}.film.w"] + params[f"blk{i}.film.b"]
+        scale, shift = film[:, :w], film[:, w:]
+        hn = _layernorm(h, params[f"blk{i}.norm.g"], params[f"blk{i}.norm.b"])
+        hn = hn * (1.0 + scale) + shift
+        hh = jax.nn.silu(hn @ params[f"blk{i}.mlp.w1"] + params[f"blk{i}.mlp.b1"])
+        h = h + hh @ params[f"blk{i}.mlp.w2"] + params[f"blk{i}.mlp.b2"]
+
+    # Attention over `tokens` chunks of the hidden state (L1 Pallas kernel).
+    hn = _layernorm(h, params["attn.norm.g"], params["attn.norm.b"])
+    q = (hn @ params["attn.wq"]).reshape(b, cfg.tokens, w // cfg.tokens)
+    k = (hn @ params["attn.wk"]).reshape(b, cfg.tokens, w // cfg.tokens)
+    v = (hn @ params["attn.wv"]).reshape(b, cfg.tokens, w // cfg.tokens)
+    if use_pallas:
+        a = attention(q, k, v).reshape(b, w)
+    else:
+        from .kernels.ref import attention_ref
+
+        a = attention_ref(q, k, v).reshape(b, w)
+    h = h + a @ params["attn.wo"]
+
+    hn = _layernorm(h, params["out.norm.g"], params["out.norm.b"])
+    return hn @ params["out.w"] + params["out.b"]
+
+
+def eps_model_cfg(params, cfg: ModelConfig, x, t, y, guidance_scale):
+    """Classifier-free guidance: (1+s)*eps(x,t,y) - s*eps(x,t,null).
+
+    Both branches run in one batched evaluation (2B rows), matching how
+    production CFG is served.
+    """
+    b = x.shape[0]
+    null = jnp.full((b,), cfg.n_classes, jnp.int32)
+    x2 = jnp.concatenate([x, x], axis=0)
+    t2 = jnp.concatenate([t, t], axis=0)
+    y2 = jnp.concatenate([y.astype(jnp.int32), null], axis=0)
+    eps = eps_model(params, cfg, x2, t2, y2)
+    cond, uncond = eps[:b], eps[b:]
+    return (1.0 + guidance_scale) * cond - guidance_scale * uncond
+
+
+def count_params(params: Dict[str, jnp.ndarray]) -> int:
+    return sum(int(v.size) for v in params.values())
+
+
+def shapes(params: Dict[str, jnp.ndarray]) -> List[Tuple[str, List[int]]]:
+    return [(k, list(params[k].shape)) for k in sorted(params.keys())]

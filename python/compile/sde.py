@@ -1,0 +1,52 @@
+"""VP noise schedule — python mirror of `rust/src/sched/mod.rs`.
+
+Held to golden-value parity with the Rust implementation by
+`python/tests/test_sde_parity.py`; if you change constants here, change them
+there (and in Rust) too.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+class VpLinear:
+    """VP SDE with linear beta(t); ScoreSDE continuous-time convention."""
+
+    def __init__(self, beta_0: float = 0.1, beta_1: float = 20.0):
+        self.beta_0 = beta_0
+        self.beta_1 = beta_1
+
+    def log_alpha(self, t):
+        return -(t**2) * (self.beta_1 - self.beta_0) / 4.0 - t * self.beta_0 / 2.0
+
+    def alpha(self, t):
+        return jnp.exp(self.log_alpha(t))
+
+    def sigma(self, t):
+        return jnp.sqrt(-jnp.expm1(2.0 * self.log_alpha(t)))
+
+    def lam(self, t):
+        """Half log-SNR lambda_t = log(alpha_t / sigma_t)."""
+        la = self.log_alpha(t)
+        return la - 0.5 * jnp.log(-jnp.expm1(2.0 * la))
+
+    def t_of_lambda(self, lam):
+        """Closed-form inverse (DPM-Solver appendix)."""
+        l = jnp.logaddexp(-2.0 * lam, 0.0)
+        tmp = 2.0 * (self.beta_1 - self.beta_0) * l
+        delta = self.beta_0**2 + tmp
+        return tmp / ((jnp.sqrt(delta) + self.beta_0) * (self.beta_1 - self.beta_0))
+
+    def marginal_sample(self, key, x0, t):
+        """Draw x_t ~ q(x_t | x_0) = N(alpha_t x0, sigma_t^2 I)."""
+        import jax
+
+        eps = jax.random.normal(key, x0.shape, x0.dtype)
+        a = self.alpha(t)
+        s = self.sigma(t)
+        # t may be per-sample [B]; broadcast over trailing dims.
+        while a.ndim < x0.ndim:
+            a = a[..., None]
+            s = s[..., None]
+        return a * x0 + s * eps, eps

@@ -1,0 +1,136 @@
+"""Train the tiny denoiser on the synthetic mixture (build-time only).
+
+Standard epsilon-prediction objective with label dropout for classifier-free
+guidance. Hand-rolled Adam (no optax in the image's dependency closure).
+Writes `artifacts/model.upw` (weights, rust-readable) and
+`artifacts/mixture.json` (ground-truth spec).
+
+Usage: python -m compile.train [--steps 4000] [--out ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from .model import ModelConfig, count_params, eps_model, init_params
+from .sde import VpLinear
+
+
+def save_upw(params: dict, path: str) -> None:
+    """Write the `.upw` weights container (see rust/src/weights/mod.rs)."""
+    names = sorted(params.keys())
+    with open(path, "wb") as f:
+        f.write(b"UPW1")
+        f.write(struct.pack("<I", len(names)))
+        for n in names:
+            arr = np.asarray(params[n], np.float32)
+            nb = n.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<B", 0))
+        for n in names:
+            f.write(np.ascontiguousarray(params[n], np.float32).tobytes())
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1**step
+    bc2 = 1 - b2**step
+    params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps), params, m, v
+    )
+    return params, m, v
+
+
+def train(
+    steps: int = 4000,
+    batch: int = 256,
+    lr: float = 2e-3,
+    seed: int = 0,
+    label_dropout: float = 0.1,
+    out_dir: str = "../artifacts",
+    log_every: int = 500,
+) -> dict:
+    cfg = ModelConfig()
+    spec = data_mod.make_mixture(dim=cfg.dim, n_classes=cfg.n_classes)
+    sched = VpLinear()
+    key = jax.random.PRNGKey(seed)
+    params = init_params(cfg, key)
+    print(f"model params: {count_params(params)}")
+
+    @jax.jit
+    def loss_fn(params, x0, labels, t, noise_key):
+        xt, eps = sched.marginal_sample(noise_key, x0, t)
+        pred = eps_model(params, cfg, xt, t, labels, use_pallas=False)
+        return jnp.mean((pred - eps) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed + 1)
+    t0 = time.time()
+    losses = []
+    for step in range(1, steps + 1):
+        x0, labels = data_mod.sample_batch(spec, rng, batch)
+        # Label dropout -> null class for CFG training.
+        drop = rng.random(batch) < label_dropout
+        labels = labels.copy()
+        labels[drop] = cfg.n_classes
+        t = rng.uniform(1e-3, 1.0, size=batch).astype(np.float32)
+        key, nk = jax.random.split(key)
+        # Cosine LR decay with short warmup.
+        cur_lr = lr * min(step / 100.0, 1.0) * 0.5 * (
+            1.0 + np.cos(np.pi * step / steps)
+        )
+        loss, grads = grad_fn(params, jnp.asarray(x0), jnp.asarray(labels), jnp.asarray(t), nk)
+        params, m, v = adam_update(params, grads, m, v, step, cur_lr)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == 1:
+            print(
+                f"step {step:5d}  loss {np.mean(losses[-log_every:]):.4f}  "
+                f"({time.time() - t0:.1f}s)"
+            )
+
+    os.makedirs(out_dir, exist_ok=True)
+    save_upw(params, os.path.join(out_dir, "model.upw"))
+    data_mod.save_mixture(spec, os.path.join(out_dir, "mixture.json"))
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(
+            {
+                "steps": steps,
+                "final_loss": float(np.mean(losses[-200:])),
+                "params": count_params(params),
+                "config": cfg.to_dict(),
+            },
+            f,
+        )
+    print(f"saved weights + mixture to {out_dir}")
+    return {"params": params, "cfg": cfg, "spec": spec, "losses": losses}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=4000)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--out", type=str, default="../artifacts")
+    args = ap.parse_args()
+    train(steps=args.steps, batch=args.batch, lr=args.lr, out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes-compatible ranges, and tile sizes;
+assert_allclose against ref.py is THE build-time correctness signal for the
+kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention, attention_vmem_bytes
+from compile.kernels.ref import attention_ref, unipc_update_ref
+from compile.kernels.unipc_update import unipc_update, unipc_update_vmem_bytes
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestAttention:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        t_pow=st.integers(1, 4),
+        d=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference_across_shapes(self, b, t_pow, d, seed):
+        t = 2**t_pow
+        q = rand(seed, (b, t, d))
+        k = rand(seed + 1, (b, t, d))
+        v = rand(seed + 2, (b, t, d))
+        out = attention(q, k, v)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bq_pow=st.integers(0, 3),
+        bk_pow=st.integers(0, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tilings_agree(self, bq_pow, bk_pow, seed):
+        t, d = 8, 16
+        q = rand(seed, (2, t, d))
+        k = rand(seed + 1, (2, t, d))
+        v = rand(seed + 2, (2, t, d))
+        out = attention(q, k, v, block_q=2**bq_pow, block_k=2**bk_pow)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+    def test_large_logits_stable(self):
+        # Online softmax must survive large score magnitudes.
+        q = rand(0, (1, 8, 16), scale=30.0)
+        k = rand(1, (1, 8, 16), scale=30.0)
+        v = rand(2, (1, 8, 16))
+        out = attention(q, k, v, block_k=2)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+    def test_uniform_values_average(self):
+        # With identical K rows, attention averages V exactly.
+        q = rand(0, (1, 4, 8))
+        k = jnp.ones((1, 4, 8), jnp.float32)
+        v = rand(1, (1, 4, 8))
+        out = attention(q, k, v)
+        expect = jnp.broadcast_to(jnp.mean(v, axis=1, keepdims=True), v.shape)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-6)
+
+    def test_bad_tile_rejected(self):
+        q = rand(0, (1, 8, 4))
+        with pytest.raises(AssertionError):
+            attention(q, q, q, block_q=3)
+
+    def test_vmem_estimate_monotone_in_tiles(self):
+        small = attention_vmem_bytes(128, 64, block_q=16)
+        big = attention_vmem_bytes(128, 64, block_q=128)
+        assert small < big
+
+
+class TestUnipcUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b_pow=st.integers(0, 4),
+        d=st.sampled_from([2, 8, 16, 33]),
+        p=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference_across_shapes(self, b_pow, d, p, seed):
+        b = 2**b_pow
+        x = rand(seed, (b, d))
+        m0 = rand(seed + 1, (b, d))
+        d1s = rand(seed + 2, (p, b, d))
+        coeffs = rand(seed + 3, (p,))
+        out = unipc_update(x, m0, d1s, coeffs, 1.2, -0.4, 0.9)
+        ref = unipc_update_ref(x, m0, d1s, coeffs, 1.2, -0.4, 0.9)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(tile_pow=st.integers(0, 3), seed=st.integers(0, 2**31 - 1))
+    def test_batch_tiling_agrees(self, tile_pow, seed):
+        b, d, p = 8, 16, 3
+        x = rand(seed, (b, d))
+        m0 = rand(seed + 1, (b, d))
+        d1s = rand(seed + 2, (p, b, d))
+        coeffs = rand(seed + 3, (p,))
+        out = unipc_update(x, m0, d1s, coeffs, 0.7, 0.1, -1.0, block_b=2**tile_pow)
+        ref = unipc_update_ref(x, m0, d1s, coeffs, 0.7, 0.1, -1.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+    def test_zero_coeffs_is_affine_only(self):
+        x = rand(0, (2, 4))
+        m0 = rand(1, (2, 4))
+        d1s = rand(2, (2, 2, 4))
+        out = unipc_update(x, m0, d1s, jnp.zeros((2,)), 2.0, 3.0, 5.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(2.0 * x + 3.0 * m0), atol=1e-6)
+
+    def test_vmem_estimate(self):
+        assert unipc_update_vmem_bytes(8, 16, 3) > 0
+        assert unipc_update_vmem_bytes(8, 16, 3) < unipc_update_vmem_bytes(64, 16, 3)

@@ -1,0 +1,52 @@
+"""Schedule parity: python/compile/sde.py must match rust/src/sched/mod.rs
+to ~1e-9 on shared golden values (see `golden_values_vp_linear` there)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.sde import VpLinear
+
+S = VpLinear()
+
+
+def test_golden_values_match_rust():
+    # Same constants asserted in rust/src/sched/mod.rs tests.
+    assert abs(float(S.lam(1e-3)) - 4.557714932729898) < 1e-6
+    assert abs(float(S.lam(1.0)) - (-5.024978406659204)) < 1e-6
+    assert abs(float(S.lam(0.5)) - (-1.2275677344107871)) < 1e-6
+
+
+def test_alpha_sigma_pythagorean():
+    for t in (0.01, 0.3, 0.7, 1.0):
+        a = float(S.alpha(t))
+        s = float(S.sigma(t))
+        assert abs(a * a + s * s - 1.0) < 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(t=st.floats(1e-3, 1.0))
+def test_lambda_roundtrip(t):
+    lam = S.lam(jnp.float64(t)) if False else S.lam(t)
+    t2 = float(S.t_of_lambda(lam))
+    assert abs(t2 - t) < 1e-4, (t, t2)
+
+
+def test_lambda_monotone_decreasing():
+    ts = np.linspace(1e-3, 1.0, 200)
+    lams = np.asarray([float(S.lam(t)) for t in ts])
+    assert np.all(np.diff(lams) < 0)
+
+
+def test_marginal_sample_moments():
+    import jax
+
+    key = jax.random.PRNGKey(0)
+    x0 = jnp.ones((20000, 2), jnp.float32)
+    t = jnp.full((20000,), 0.5, jnp.float32)
+    xt, eps = S.marginal_sample(key, x0, t)
+    a = float(S.alpha(0.5))
+    s = float(S.sigma(0.5))
+    assert abs(float(jnp.mean(xt)) - a) < 0.02
+    assert abs(float(jnp.std(xt)) - s) < 0.02
+    assert abs(float(jnp.mean(eps))) < 0.02

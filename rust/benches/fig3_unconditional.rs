@@ -1,0 +1,78 @@
+//! Figure 3 reproduction: unconditional sampling quality vs NFE on the
+//! three unconditional benchmarks (CIFAR10 / LSUN Bedroom / FFHQ stand-ins,
+//! DESIGN.md §2). Series: DDIM, DPM-Solver++(3M), UniPC-3 (B₂) — the same
+//! three the figure plots. Metric: mean ‖x₀ − x₀*‖₂/√D to the RK4 reference
+//! (the discretization error FID proxies), plus a Fréchet column at the
+//! extremes.
+//!
+//! Expected shape (paper): UniPC < DPM-Solver++ < DDIM at every NFE, with
+//! the gap largest at 5–6 NFE.
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::evalharness::{gen_samples, quality, RefErr, ResultTable};
+use unipc::numerics::vandermonde::BFunction;
+use unipc::sched::VpLinear;
+use unipc::solver::{Method, Prediction, SampleOptions};
+
+fn main() {
+    let nfes = [5usize, 6, 7, 8, 9, 10];
+    for spec in [DatasetSpec::Cifar10Like, DatasetSpec::BedroomLike, DatasetSpec::FfhqLike] {
+        let gm = dataset(spec);
+        let sched = VpLinear::default();
+        let model = GmmModel { gm: &gm, sched: &sched };
+        let re = RefErr::new(&model, &sched, 16, 42, 1.0, 1e-3, 3000);
+
+        let methods: Vec<(&str, Box<dyn Fn(usize) -> SampleOptions>)> = vec![
+            (
+                "DDIM",
+                Box::new(|s| SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, s)),
+            ),
+            (
+                "DPM-Solver++(3M)",
+                Box::new(|s| SampleOptions::new(Method::DpmSolverPp { order: 3 }, s)),
+            ),
+            (
+                "UniPC-3 (ours)",
+                Box::new(|s| SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, s)),
+            ),
+        ];
+
+        let mut table = ResultTable::new(
+            &format!("Fig.3 {} — l2 to reference (lower = better FID proxy)", spec.name()),
+            &nfes,
+        );
+        for (label, mk) in &methods {
+            let vals = nfes.iter().map(|&n| re.err(&model, &sched, &mk(n))).collect();
+            table.push(label, vals);
+        }
+        table.emit(&format!("fig3_{}.json", spec.name()));
+
+        // Fréchet spot-check at the extremes (population-level quality).
+        let mut fr = ResultTable::new(
+            &format!("Fig.3 {} — Fréchet distance (data space)", spec.name()),
+            &[5, 10],
+        );
+        for (label, mk) in &methods {
+            let vals = [5usize, 10]
+                .iter()
+                .map(|&n| {
+                    let (s, _) = gen_samples(&model, &sched, &mk(n), 1024, 7, 64);
+                    quality(&gm, &s, 7).0
+                })
+                .collect();
+            fr.push(label, vals);
+        }
+        fr.emit(&format!("fig3_frechet_{}.json", spec.name()));
+
+        // The paper's headline shape must hold.
+        for &n in &nfes {
+            assert_eq!(
+                table.winner(n),
+                Some("UniPC-3 (ours)"),
+                "UniPC should win at NFE={n} on {}",
+                spec.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Figure 4a/4b (+ Table 9's s=1.0 row) reproduction: guided sampling
+//! quality vs NFE on the ImageNet-256 stand-in at guidance scales
+//! s ∈ {8.0, 4.0, 1.0}. Series: DDIM, DPM-Solver++(2M), UniPC-2 (B₂) —
+//! the figure's method set.
+//!
+//! Expected shape (paper): UniPC converges fastest at every scale, and the
+//! margin grows with the guidance scale (larger s ⇒ stiffer dynamics).
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GuidedGmmModel;
+use unipc::evalharness::{RefErr, ResultTable};
+use unipc::numerics::vandermonde::BFunction;
+use unipc::sched::VpLinear;
+use unipc::solver::{DynamicThresholding, Method, Prediction, SampleOptions};
+
+fn main() {
+    let nfes = [5usize, 6, 7, 8, 9, 10];
+    let spec = DatasetSpec::ImagenetLike;
+    let gm = dataset(spec);
+    let sched = VpLinear::default();
+
+    for scale in [1.0, 4.0, 8.0] {
+        let model = GuidedGmmModel {
+            gm: &gm,
+            sched: &sched,
+            class_components: spec.class_components(3),
+            scale,
+        };
+        let re = RefErr::new(&model, &sched, 12, 42, 1.0, 1e-3, 4000);
+
+        let rows: Vec<(&str, Box<dyn Fn(usize) -> SampleOptions>)> = vec![
+            (
+                "DDIM",
+                Box::new(|s| SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, s)),
+            ),
+            (
+                "DPM-Solver++(2M)",
+                Box::new(|s| {
+                    let mut o = SampleOptions::new(Method::DpmSolverPp { order: 2 }, s);
+                    // Dynamic-thresholding analog for unbounded data
+                    // (clip-only; DESIGN.md §2): tame large-guidance x₀
+                    // extrapolations, as the paper does for pixel space.
+                    o.thresholding = Some(DynamicThresholding::clip(8.0));
+                    o
+                }),
+            ),
+            (
+                "UniPC-2 (ours)",
+                Box::new(|s| {
+                    let mut o = SampleOptions::unipc(2, BFunction::Bh2, Prediction::Data, s);
+                    o.thresholding = Some(DynamicThresholding::clip(8.0));
+                    o
+                }),
+            ),
+        ];
+
+        let mut table = ResultTable::new(
+            &format!("Fig.4 imagenet-like s={scale} — l2 to reference"),
+            &nfes,
+        );
+        for (label, mk) in &rows {
+            table.push(label, nfes.iter().map(|&n| re.err(&model, &sched, &mk(n))).collect());
+        }
+        table.emit(&format!("fig4_s{scale}.json"));
+
+        // Shape: UniPC wins a clear majority of the NFE grid (individual
+        // low-NFE cells are noisy at extreme guidance on this substitute).
+        let wins_unipc = nfes
+            .iter()
+            .filter(|&&n| table.winner(n) == Some("UniPC-2 (ours)"))
+            .count();
+        // UniPC must beat DPM-Solver++(2M) (its direct high-order rival) on
+        // most of the grid at every scale; at moderate scales it should win
+        // the table outright (at s=8 the paper itself shows DDIM competitive
+        // at NFE 5, Table 9).
+        let beats_dpmpp = (0..nfes.len())
+            .filter(|&i| table.rows[2].1[i] <= table.rows[1].1[i])
+            .count();
+        assert!(
+            beats_dpmpp * 2 >= nfes.len(),
+            "UniPC should beat DPM-Solver++ on most of the s={scale} grid ({beats_dpmpp}/{})",
+            nfes.len()
+        );
+        if scale <= 1.0 {
+            assert!(
+                wins_unipc * 2 > nfes.len(),
+                "UniPC should win a majority at s={scale} (won {wins_unipc}/{})",
+                nfes.len()
+            );
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Empirical order-of-convergence validation of Theorem 3.1, Corollary 3.2
+//! and Propositions D.5/D.6: with O(h^p)-accurate starting values (exact
+//! warm-up), the measured global-error slope must be ≈ p for UniP-p and
+//! ≈ p+1 for UniPC-p.
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::{reference_solution, GmmModel};
+use unipc::evalharness::ResultTable;
+use unipc::numerics::vandermonde::BFunction;
+use unipc::rng::Rng;
+use unipc::sched::VpLinear;
+use unipc::solver::{sample, Method, Prediction, SampleOptions};
+
+fn slope(steps: &[usize], errs: &[f64]) -> f64 {
+    let n = steps.len() as f64;
+    let xs: Vec<f64> = steps.iter().map(|&s| (s as f64).log2()).collect();
+    let ys: Vec<f64> = errs.iter().map(|e| e.log2()).collect();
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let num: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    -num / den
+}
+
+fn main() {
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let sched = VpLinear::default();
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let mut rng = Rng::seed_from(5);
+    let x_t = rng.normal_tensor(&[4, gm.dim]);
+    let truth = reference_solution(&model, &sched, &x_t, 1.0, 1e-3, 8000);
+
+    let grid = [160usize, 320, 640, 1280];
+    let mut table = ResultTable::new("Order sweep (global error; slope = order)", &grid);
+    let mut slopes: Vec<(String, f64, f64)> = Vec::new(); // (name, slope, expected)
+
+    for (name, order, corrector, expected) in [
+        ("UniP-1 (DDIM)", 1usize, false, 1.0),
+        ("UniP-2", 2, false, 2.0),
+        ("UniP-3", 3, false, 3.0),
+        ("UniPC-1", 1, true, 2.0),
+        ("UniPC-2", 2, true, 3.0),
+        ("UniPC-3", 3, true, 4.0),
+    ] {
+        let errs: Vec<f64> = grid
+            .iter()
+            .map(|&steps| {
+                let mut opts = if corrector {
+                    SampleOptions::unipc(order, BFunction::Bh2, Prediction::Noise, steps)
+                } else {
+                    SampleOptions::new(
+                        Method::unip(order, BFunction::Bh2, Prediction::Noise),
+                        steps,
+                    )
+                };
+                opts.exact_warmup = true;
+                sample(&model, &sched, &x_t, &opts).x.sub(&truth).norm()
+            })
+            .collect();
+        let s = slope(&grid, &errs);
+        slopes.push((name.to_string(), s, expected));
+        table.push(&format!("{name} (slope {s:.2})"), errs);
+    }
+    table.emit("order_sweep.json");
+
+    println!("{:<16} {:>8} {:>9}", "method", "slope", "expected");
+    for (name, s, exp) in &slopes {
+        println!("{name:<16} {s:>8.2} {exp:>9.1}");
+        // Allow generous tolerance near the f64 noise floor for UniPC-3.
+        assert!(
+            (s - exp).abs() < 0.9,
+            "{name}: measured slope {s:.2}, expected ~{exp}"
+        );
+    }
+}

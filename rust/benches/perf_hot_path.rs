@@ -1,0 +1,132 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//!   L3-a  solver arithmetic per step (weighted_sum fusion vs naive axpy)
+//!   L3-b  coefficient solve (Vandermonde) cost per step
+//!   L3-c  full UniPC-3 step on an analytic model (batch 64, dim 16)
+//!   RT-a  PJRT ε call latency vs batch size (batching amortization)
+//!   RT-b  fused correct artifact vs eval + host update (round-trip saving)
+
+use std::hint::black_box;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::numerics::vandermonde::{unipc_coeffs, BFunction};
+use unipc::rng::Rng;
+use unipc::runtime::{EngineOptions, PjrtHandle};
+use unipc::sched::VpLinear;
+use unipc::solver::{sample, SampleOptions, Prediction};
+use unipc::tensor::{weighted_sum, Tensor};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Duration {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed() / iters as u32;
+    println!("{name:<44} {per:>12.2?}/iter  ({iters} iters)");
+    per
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(1);
+    let (b, d, p) = (64usize, 16usize, 3usize);
+    let tensors: Vec<Tensor> = (0..p).map(|_| rng.normal_tensor(&[b, d])).collect();
+    let coeffs = [0.4, -0.2, 0.1];
+
+    // L3-a: fused weighted sum vs naive repeated axpy.
+    bench("L3-a weighted_sum fused (64x16, p=3)", 20_000, || {
+        let refs: Vec<&Tensor> = tensors.iter().collect();
+        black_box(weighted_sum(&coeffs, &refs));
+    });
+    bench("L3-a naive axpy chain   (64x16, p=3)", 20_000, || {
+        let mut acc = tensors[0].scaled(coeffs[0]);
+        for i in 1..p {
+            acc.axpy(coeffs[i], &tensors[i]);
+        }
+        black_box(acc);
+    });
+
+    // L3-b: coefficient solve.
+    bench("L3-b unipc_coeffs p=3", 100_000, || {
+        black_box(unipc_coeffs(&[-2.0, -1.0, 1.0], black_box(0.3), BFunction::Bh2));
+    });
+    bench("L3-b unipc_coeffs p=6", 50_000, || {
+        black_box(unipc_coeffs(
+            &[-5.0, -4.0, -3.0, -2.0, -1.0, 1.0],
+            black_box(0.3),
+            BFunction::Bh2,
+        ));
+    });
+
+    // L3-c: a full 8-step UniPC-3 sampling run on the analytic model.
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let sched = VpLinear::default();
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let x_t = rng.normal_tensor(&[b, d]);
+    let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
+    bench("L3-c UniPC-3 x8 steps, analytic (64x16)", 200, || {
+        black_box(sample(&model, &sched, &x_t, &opts));
+    });
+
+    // RT: PJRT path (requires artifacts).
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() || !dir.join("model.upw").exists() {
+        println!("RT-*: artifacts missing — run `make artifacts` (skipped)");
+        return;
+    }
+    let h = PjrtHandle::spawn(&dir, None, EngineOptions::default()).unwrap();
+    let dim = h.dim;
+    for rows in [1usize, 4, 16, 64] {
+        let x = vec![0.1f32; rows * dim];
+        let t = vec![0.5f32; rows];
+        let y = vec![0i32; rows];
+        let per = bench(&format!("RT-a pjrt eps rows={rows}"), 50, || {
+            black_box(h.eps(x.clone(), t.clone(), y.clone()).unwrap());
+        });
+        println!("{:<44} {:>12.2?}/row", format!("RT-a   per-row at rows={rows}"), per / rows as u32);
+    }
+
+    // RT-b: fused correct vs eval + host combination.
+    let rows = 16usize;
+    let x_pred = vec![0.1f32; rows * dim];
+    let t = vec![0.5f32; rows];
+    let y = vec![0i32; rows];
+    let x_prev = vec![0.2f32; rows * dim];
+    let m0 = vec![0.0f32; rows * dim];
+    let d1s = vec![0.05f32; 3 * rows * dim];
+    let coeffs = vec![0.2f32, -0.1, 0.05, 0.3, 1.1, -0.4, 0.9];
+    bench("RT-b fused correct (rows=16)", 50, || {
+        black_box(
+            h.fused_correct(
+                x_pred.clone(),
+                t.clone(),
+                y.clone(),
+                x_prev.clone(),
+                m0.clone(),
+                d1s.clone(),
+                coeffs.clone(),
+            )
+            .unwrap(),
+        );
+    });
+    bench("RT-b eval + host update (rows=16)", 50, || {
+        let m_t = h.eps(x_pred.clone(), t.clone(), y.clone()).unwrap();
+        // Host-side combination (what the fused artifact replaces).
+        let mut out = vec![0.0f32; rows * dim];
+        for i in 0..rows * dim {
+            let mut res = 0.0f32;
+            for pl in 0..3 {
+                res += coeffs[pl] * d1s[pl * rows * dim + i];
+            }
+            res += coeffs[3] * (m_t[i] - m0[i]);
+            out[i] = coeffs[4] * x_prev[i] + coeffs[5] * m0[i] + coeffs[6] * res;
+        }
+        black_box(out);
+    });
+    h.shutdown();
+}

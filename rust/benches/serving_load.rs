@@ -1,0 +1,111 @@
+//! Serving benchmark: throughput/latency of the full stack under open-loop
+//! Poisson load, plus a dynamic-batching ablation (batch window vs mean
+//! rows per PJRT call). Uses the trained PJRT backend when artifacts exist,
+//! the analytic backend otherwise (the coordinator path is identical).
+//!
+//! This is the serving-system counterpart of the paper's NFE claims: UniPC
+//! at 8 NFE serves ~(20/8)× the throughput of a 20-NFE baseline at equal
+//! quality budget, because the solver *is* the unit of serving cost.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::config::ServerConfig;
+use unipc::coordinator::{ModelBackend, SampleRequest, Service};
+use unipc::runtime::{EngineOptions, PjrtHandle};
+use unipc::server::{run_load, LoadConfig, Server};
+
+fn backend(batch_wait_us: u64) -> (ModelBackend, &'static str) {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() && dir.join("model.upw").exists() {
+        let h = PjrtHandle::spawn(
+            &dir,
+            None,
+            EngineOptions {
+                max_batch: 64,
+                batch_wait: Duration::from_micros(batch_wait_us),
+            },
+        )
+        .expect("pjrt");
+        (ModelBackend::Pjrt(h), "pjrt")
+    } else {
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        (
+            ModelBackend::Analytic { gm, class_components: Arc::new(classes) },
+            "analytic",
+        )
+    }
+}
+
+fn run_point(rps: f64, total: usize, batch_wait_us: u64, workers: usize) -> String {
+    let (be, kind) = backend(batch_wait_us);
+    let pjrt = match &be {
+        ModelBackend::Pjrt(h) => Some(h.clone()),
+        _ => None,
+    };
+    let svc = Service::start(
+        ServerConfig { workers, queue_cap: 512, ..Default::default() },
+        be,
+    );
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+
+    let cfg = LoadConfig {
+        rps,
+        total,
+        connections: 4,
+        template: SampleRequest {
+            n: 4,
+            steps: 8,
+            method: "unipc-3".into(),
+            unic: true,
+            seed: 0,
+            return_samples: false,
+            ..Default::default()
+        },
+        seed: 9,
+    };
+    let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
+    let mut line = format!(
+        "[{kind}] rps={rps:<6} wait={batch_wait_us:>5}us workers={workers}: {}",
+        report.summary()
+    );
+    if let Some(h) = pjrt {
+        let s = h.stats().unwrap();
+        line.push_str(&format!(
+            "  pjrt: calls={} mean_rows/call={:.2} padded={}",
+            s.calls,
+            s.mean_rows_per_call(),
+            s.padded_rows
+        ));
+        h.shutdown();
+    }
+    server.stop();
+    svc.shutdown();
+    line
+}
+
+fn main() {
+    println!("== serving load sweep (4 samples/request, UniPC-3 @ 8 NFE) ==");
+    let mut lines = Vec::new();
+    for rps in [4.0, 8.0, 16.0] {
+        lines.push(run_point(rps, 48, 200, 4));
+    }
+    println!("-- offered-load sweep --");
+    for l in &lines {
+        println!("{l}");
+    }
+
+    println!("-- batching-window ablation (rps=16) --");
+    for wait in [0u64, 200, 2000] {
+        println!("{}", run_point(16.0, 48, wait, 4));
+    }
+
+    println!("-- worker-count ablation (rps=16) --");
+    for workers in [1usize, 2, 8] {
+        println!("{}", run_point(16.0, 48, 200, workers));
+    }
+}

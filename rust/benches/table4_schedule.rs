@@ -1,0 +1,85 @@
+//! Table 4 reproduction: customizing the order schedule. UniPC with
+//! per-step predictor orders on the CIFAR10-like benchmark at NFE 6 and 7
+//! (the actual accuracy order is +1 from UniC, as in the paper).
+//!
+//! Expected shape (paper): a tuned schedule (123432 at NFE 6, 1223334 at 7)
+//! beats the default ascending-then-capped one, and the max-order schedule
+//! (123456 / 1234567) is clearly *harmful*.
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::evalharness::{RefErr, ResultTable};
+use unipc::numerics::vandermonde::BFunction;
+use unipc::sched::VpLinear;
+use unipc::solver::unipc::CoeffVariant;
+use unipc::solver::{Method, Prediction, SampleOptions};
+
+fn run(re: &RefErr, model: &GmmModel, sched: &VpLinear, schedule: &[usize]) -> f64 {
+    let steps = schedule.len();
+    let max = *schedule.iter().max().unwrap();
+    let opts = SampleOptions::new(
+        Method::UniP {
+            order: max,
+            variant: CoeffVariant::Bh(BFunction::Bh1),
+            pred: Prediction::Noise,
+            schedule: Some(schedule.to_vec()),
+        },
+        steps,
+    )
+    .with_unic(CoeffVariant::Bh(BFunction::Bh1), false);
+    re.err(model, sched, &opts)
+}
+
+fn main() {
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let sched = VpLinear::default();
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let re = RefErr::new(&model, &sched, 16, 42, 1.0, 1e-3, 3000);
+
+    let grids: Vec<(usize, Vec<(&str, Vec<usize>)>)> = vec![
+        (
+            6,
+            vec![
+                ("123321", vec![1, 2, 3, 3, 2, 1]),
+                ("123432", vec![1, 2, 3, 4, 3, 2]),
+                ("123443", vec![1, 2, 3, 4, 4, 3]),
+                ("123456", vec![1, 2, 3, 4, 5, 6]),
+                ("123333 (default)", vec![1, 2, 3, 3, 3, 3]),
+            ],
+        ),
+        (
+            7,
+            vec![
+                ("1233321", vec![1, 2, 3, 3, 3, 2, 1]),
+                ("1223334", vec![1, 2, 2, 3, 3, 3, 4]),
+                ("1234321", vec![1, 2, 3, 4, 3, 2, 1]),
+                ("1234567", vec![1, 2, 3, 4, 5, 6, 7]),
+                ("1233333 (default)", vec![1, 2, 3, 3, 3, 3, 3]),
+            ],
+        ),
+    ];
+
+    for (nfe, rows) in grids {
+        let mut table = ResultTable::new(
+            &format!("Table 4 cifar10-like — order schedules at NFE={nfe} (l2 to ref)"),
+            &[nfe],
+        );
+        let mut max_order_err = 0.0;
+        let mut best_other = f64::INFINITY;
+        for (label, schedule) in &rows {
+            let e = run(&re, &model, &sched, schedule);
+            if label.starts_with(&"1234567"[..nfe.min(7)]) && schedule.windows(2).all(|w| w[1] == w[0] + 1)
+            {
+                max_order_err = e;
+            } else {
+                best_other = best_other.min(e);
+            }
+            table.push(label, vec![e]);
+        }
+        table.emit(&format!("table4_nfe{nfe}.json"));
+        assert!(
+            max_order_err > best_other,
+            "max-order schedule must be harmful (paper): {max_order_err} vs {best_other}"
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! Appendix Tables 6–8 reproduction: the full unconditional grids,
+//! including DPM-Solver-3 (singlestep), UniPC_v (varying coefficients), and
+//! the "+UniC" rows, at NFE 5–10 on all three unconditional stand-ins.
+//!
+//! Expected shape (paper): singlestep DPM-Solver-3 is erratic at 5–7 NFE;
+//! UniPC variants lead; UniPC_v is competitive in the mid-NFE range.
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::evalharness::{RefErr, ResultTable};
+use unipc::numerics::vandermonde::BFunction;
+use unipc::sched::VpLinear;
+use unipc::solver::unipc::CoeffVariant;
+use unipc::solver::{Method, Prediction, SampleOptions};
+
+fn main() {
+    let nfes = [5usize, 6, 7, 8, 9, 10];
+    for spec in [DatasetSpec::Cifar10Like, DatasetSpec::FfhqLike, DatasetSpec::BedroomLike] {
+        let gm = dataset(spec);
+        let sched = VpLinear::default();
+        let model = GmmModel { gm: &gm, sched: &sched };
+        let re = RefErr::new(&model, &sched, 16, 42, 1.0, 1e-3, 3000);
+
+        let rows: Vec<(&str, Box<dyn Fn(usize) -> SampleOptions>)> = vec![
+            (
+                "DDIM",
+                Box::new(|s| SampleOptions::new(Method::Ddim { pred: Prediction::Data }, s)),
+            ),
+            (
+                "DDIM +UniC-1",
+                Box::new(|s| {
+                    SampleOptions::new(Method::Ddim { pred: Prediction::Data }, s)
+                        .with_unic(CoeffVariant::Bh(BFunction::Bh2), false)
+                }),
+            ),
+            (
+                "DPM-Solver-3 (single)",
+                Box::new(|s| SampleOptions::new(Method::DpmSolverSingle { order: 3 }, s)),
+            ),
+            (
+                "DPM-Solver++(2M)",
+                Box::new(|s| SampleOptions::new(Method::DpmSolverPp { order: 2 }, s)),
+            ),
+            (
+                "DPM-Solver++(2M) +UniC",
+                Box::new(|s| {
+                    SampleOptions::new(Method::DpmSolverPp { order: 2 }, s)
+                        .with_unic(CoeffVariant::Bh(BFunction::Bh2), false)
+                }),
+            ),
+            (
+                "DPM-Solver++(3M)",
+                Box::new(|s| SampleOptions::new(Method::DpmSolverPp { order: 3 }, s)),
+            ),
+            (
+                "DPM-Solver++(3M) +UniC",
+                Box::new(|s| {
+                    SampleOptions::new(Method::DpmSolverPp { order: 3 }, s)
+                        .with_unic(CoeffVariant::Bh(BFunction::Bh2), false)
+                }),
+            ),
+            (
+                "UniPC-3-B1",
+                Box::new(|s| SampleOptions::unipc(3, BFunction::Bh1, Prediction::Noise, s)),
+            ),
+            (
+                "UniPC-3-B2",
+                Box::new(|s| SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, s)),
+            ),
+            (
+                "UniPC_v-3",
+                Box::new(|s| {
+                    SampleOptions::new(
+                        Method::UniP {
+                            order: 3,
+                            variant: CoeffVariant::Varying,
+                            pred: Prediction::Noise,
+                            schedule: None,
+                        },
+                        s,
+                    )
+                    .with_unic(CoeffVariant::Varying, false)
+                }),
+            ),
+        ];
+
+        let mut table = ResultTable::new(
+            &format!("Tables 6-8 {} — full grid (l2 to reference)", spec.name()),
+            &nfes,
+        );
+        for (label, mk) in &rows {
+            table.push(label, nfes.iter().map(|&n| re.err(&model, &sched, &mk(n))).collect());
+        }
+        table.emit(&format!("table6_9_{}.json", spec.name()));
+
+        // Shape: UniPC-3 must beat its direct rival DPM-Solver++(3M) at
+        // every NFE (single-cell table winners can flip on estimator luck —
+        // e.g. DPM-Solver++(2M)'s non-monotone NFE=5 cell).
+        let dpmpp3m = &table.rows[5].1;
+        let unipc3 = &table.rows[8].1;
+        for (i, &n) in nfes.iter().enumerate() {
+            assert!(
+                unipc3[i] < dpmpp3m[i],
+                "UniPC-3-B2 must beat DPM-Solver++(3M) at NFE={n}"
+            );
+        }
+        // Paper Table 6 at NFE 10 has UniPC-B2 (3.87) and 3M+UniC (3.90)
+        // essentially tied — accept any corrector-bearing winner.
+        let w10 = table.winner(10).unwrap();
+        assert!(
+            w10.contains("UniPC") || w10.contains("UniC"),
+            "expected a UniC-corrected method to win NFE=10, got {w10}"
+        );
+    }
+}

@@ -1,0 +1,138 @@
+//! Named analytic "datasets" standing in for the paper's benchmarks.
+//!
+//! Each spec mirrors one of the paper's evaluation settings: same role
+//! (pixel- vs latent-space, unconditional vs class-conditional), scaled to a
+//! dimensionality where exact reference solutions are cheap. The mapping is
+//! recorded in DESIGN.md §2 (substitutions).
+
+use super::gmm::GaussianMixture;
+use crate::rng::Rng;
+
+/// A named analytic benchmark distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetSpec {
+    /// Stands in for CIFAR10 (pixel-space DPM): 16-d, 10 spread-out modes
+    /// (one per "class"), moderate within-mode spread.
+    Cifar10Like,
+    /// Stands in for LSUN Bedroom (latent-space DPM): 8-d, 4 broad modes.
+    BedroomLike,
+    /// Stands in for FFHQ (latent-space DPM): 12-d, 6 modes, tighter spread.
+    FfhqLike,
+    /// Stands in for class-conditional ImageNet-256 (guided sampling):
+    /// 16-d, 10 classes × 2 modes each.
+    ImagenetLike,
+}
+
+impl DatasetSpec {
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetSpec::Cifar10Like => "cifar10-like",
+            DatasetSpec::BedroomLike => "bedroom-like",
+            DatasetSpec::FfhqLike => "ffhq-like",
+            DatasetSpec::ImagenetLike => "imagenet-like",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cifar10-like" | "cifar10" => Some(DatasetSpec::Cifar10Like),
+            "bedroom-like" | "bedroom" | "lsun" => Some(DatasetSpec::BedroomLike),
+            "ffhq-like" | "ffhq" => Some(DatasetSpec::FfhqLike),
+            "imagenet-like" | "imagenet" => Some(DatasetSpec::ImagenetLike),
+            _ => None,
+        }
+    }
+
+    /// Number of classes for the conditional datasets (components per class
+    /// are contiguous blocks).
+    pub fn n_classes(self) -> usize {
+        match self {
+            DatasetSpec::ImagenetLike => 10,
+            DatasetSpec::Cifar10Like => 10,
+            _ => 1,
+        }
+    }
+
+    /// Component indices belonging to `class`.
+    pub fn class_components(self, class: usize) -> Vec<usize> {
+        match self {
+            DatasetSpec::ImagenetLike => vec![2 * class, 2 * class + 1],
+            DatasetSpec::Cifar10Like => vec![class],
+            _ => (0..dataset(self).n_components()).collect(),
+        }
+    }
+}
+
+/// Build the mixture for a spec (deterministic: component layout is seeded).
+pub fn dataset(spec: DatasetSpec) -> GaussianMixture {
+    match spec {
+        DatasetSpec::Cifar10Like => random_mixture(16, 10, 3.0, 0.6, 101),
+        DatasetSpec::BedroomLike => random_mixture(8, 4, 2.5, 0.9, 202),
+        DatasetSpec::FfhqLike => random_mixture(12, 6, 2.8, 0.5, 303),
+        DatasetSpec::ImagenetLike => random_mixture(16, 20, 3.5, 0.55, 404),
+    }
+}
+
+/// Deterministic mixture with means drawn on a sphere of radius `r` and
+/// jittered, stds jittered around `s`.
+fn random_mixture(dim: usize, k: usize, r: f64, s: f64, seed: u64) -> GaussianMixture {
+    let mut rng = Rng::seed_from(seed);
+    let means = (0..k)
+        .map(|_| {
+            let mut m = rng.normal_vec(dim);
+            let n = m.iter().map(|v| v * v).sum::<f64>().sqrt();
+            for v in &mut m {
+                *v *= r / n;
+            }
+            m
+        })
+        .collect();
+    let stds = (0..k).map(|_| s * (0.8 + 0.4 * rng.uniform())).collect();
+    let weights = (0..k).map(|_| 0.5 + rng.uniform()).collect();
+    GaussianMixture::new(means, stds, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_are_deterministic() {
+        let a = dataset(DatasetSpec::Cifar10Like);
+        let b = dataset(DatasetSpec::Cifar10Like);
+        assert_eq!(a.means, b.means);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn dims_and_components() {
+        assert_eq!(dataset(DatasetSpec::Cifar10Like).dim, 16);
+        assert_eq!(dataset(DatasetSpec::BedroomLike).n_components(), 4);
+        assert_eq!(dataset(DatasetSpec::ImagenetLike).n_components(), 20);
+    }
+
+    #[test]
+    fn class_components_partition_imagenet() {
+        let spec = DatasetSpec::ImagenetLike;
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..spec.n_classes() {
+            for k in spec.class_components(c) {
+                assert!(seen.insert(k), "component {k} in two classes");
+            }
+        }
+        assert_eq!(seen.len(), 20);
+    }
+
+    #[test]
+    fn parse_names() {
+        for spec in [
+            DatasetSpec::Cifar10Like,
+            DatasetSpec::BedroomLike,
+            DatasetSpec::FfhqLike,
+            DatasetSpec::ImagenetLike,
+        ] {
+            assert_eq!(DatasetSpec::parse(spec.name()), Some(spec));
+        }
+        assert_eq!(DatasetSpec::parse("zzz"), None);
+    }
+}

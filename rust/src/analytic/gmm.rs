@@ -1,0 +1,366 @@
+//! Gaussian mixtures with closed-form noise prediction, plus guided
+//! (classifier-free-style) variants.
+
+use crate::rng::Rng;
+use crate::sched::NoiseSchedule;
+use crate::solver::{Model, Prediction};
+use crate::tensor::Tensor;
+
+/// An isotropic Gaussian mixture q₀ = Σ_k w_k N(μ_k, s_k² I).
+#[derive(Clone, Debug)]
+pub struct GaussianMixture {
+    pub dim: usize,
+    /// Mixture weights (normalized on construction).
+    pub weights: Vec<f64>,
+    /// Component means, each of length `dim`.
+    pub means: Vec<Vec<f64>>,
+    /// Component standard deviations (isotropic).
+    pub stds: Vec<f64>,
+}
+
+impl GaussianMixture {
+    pub fn new(means: Vec<Vec<f64>>, stds: Vec<f64>, weights: Vec<f64>) -> Self {
+        assert!(!means.is_empty());
+        assert_eq!(means.len(), stds.len());
+        assert_eq!(means.len(), weights.len());
+        let dim = means[0].len();
+        for m in &means {
+            assert_eq!(m.len(), dim);
+        }
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0);
+        let weights = weights.iter().map(|w| w / total).collect();
+        GaussianMixture { dim, weights, means, stds }
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.means.len()
+    }
+
+    /// Draw `n` samples from q₀ as an `[n, dim]` tensor.
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> Tensor {
+        let mut data = Vec::with_capacity(n * self.dim);
+        for _ in 0..n {
+            let k = rng.categorical(&self.weights);
+            for j in 0..self.dim {
+                data.push(self.means[k][j] + self.stds[k] * rng.normal());
+            }
+        }
+        Tensor::from_vec(&[n, self.dim], data)
+    }
+
+    /// Mixture mean E[x].
+    pub fn mean(&self) -> Vec<f64> {
+        let mut mu = vec![0.0; self.dim];
+        for (k, m) in self.means.iter().enumerate() {
+            for j in 0..self.dim {
+                mu[j] += self.weights[k] * m[j];
+            }
+        }
+        mu
+    }
+
+    /// Mixture covariance (row-major dim×dim):
+    /// Σ_k w_k (s_k² I + μ_k μ_kᵀ) − μ μᵀ.
+    pub fn covariance(&self) -> Vec<f64> {
+        let d = self.dim;
+        let mu = self.mean();
+        let mut c = vec![0.0; d * d];
+        for (k, m) in self.means.iter().enumerate() {
+            let w = self.weights[k];
+            for i in 0..d {
+                c[i * d + i] += w * self.stds[k] * self.stds[k];
+                for j in 0..d {
+                    c[i * d + j] += w * m[i] * m[j];
+                }
+            }
+        }
+        for i in 0..d {
+            for j in 0..d {
+                c[i * d + j] -= mu[i] * mu[j];
+            }
+        }
+        c
+    }
+
+    /// ε*(x, t) for one flattened row, writing into `out`.
+    /// Subset restricts to the given components (class-conditional score);
+    /// `None` uses all components.
+    fn eps_row(
+        &self,
+        sched: &dyn NoiseSchedule,
+        x: &[f64],
+        t: f64,
+        subset: Option<&[usize]>,
+        out: &mut [f64],
+    ) {
+        let a = sched.alpha(t);
+        let sg = sched.sigma(t);
+        let d = self.dim;
+        let ks: Vec<usize> = match subset {
+            Some(s) => s.to_vec(),
+            None => (0..self.n_components()).collect(),
+        };
+
+        // log γ_k ∝ log w_k − d/2 log v_k − ‖x − α μ_k‖²/(2 v_k)
+        let mut logp = Vec::with_capacity(ks.len());
+        let mut vks = Vec::with_capacity(ks.len());
+        for &k in &ks {
+            let v = a * a * self.stds[k] * self.stds[k] + sg * sg;
+            let mut sq = 0.0;
+            for j in 0..d {
+                let r = x[j] - a * self.means[k][j];
+                sq += r * r;
+            }
+            logp.push(self.weights[k].ln() - 0.5 * d as f64 * v.ln() - sq / (2.0 * v));
+            vks.push(v);
+        }
+        let mx = logp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut total = 0.0;
+        let gammas: Vec<f64> = logp
+            .iter()
+            .map(|&lp| {
+                let g = (lp - mx).exp();
+                total += g;
+                g
+            })
+            .collect();
+
+        // ε* = σ Σ_k γ_k (x − α μ_k) / v_k
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (i, &k) in ks.iter().enumerate() {
+            let g = gammas[i] / total;
+            let v = vks[i];
+            for j in 0..d {
+                out[j] += g * (x[j] - a * self.means[k][j]) / v;
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= sg;
+        }
+    }
+
+    /// Batched ε*(x, t).
+    pub fn eps_star(
+        &self,
+        sched: &dyn NoiseSchedule,
+        x: &Tensor,
+        t: f64,
+        subset: Option<&[usize]>,
+    ) -> Tensor {
+        assert_eq!(x.shape().len(), 2);
+        assert_eq!(x.shape()[1], self.dim);
+        let n = x.shape()[0];
+        let mut out = Tensor::zeros(x.shape());
+        for i in 0..n {
+            // Split borrows: read row i of x, write row i of out.
+            let xi = x.row(i).to_vec();
+            self.eps_row(sched, &xi, t, subset, out.row_mut(i));
+        }
+        out
+    }
+
+    /// A standard benchmark mixture: `k` components on a circle of radius
+    /// `r` embedded in `dim` dimensions, std `s`.
+    pub fn ring(dim: usize, k: usize, r: f64, s: f64) -> Self {
+        assert!(dim >= 2);
+        let means = (0..k)
+            .map(|i| {
+                let th = 2.0 * std::f64::consts::PI * i as f64 / k as f64;
+                let mut m = vec![0.0; dim];
+                m[0] = r * th.cos();
+                m[1] = r * th.sin();
+                m
+            })
+            .collect();
+        GaussianMixture::new(means, vec![s; k], vec![1.0; k])
+    }
+}
+
+/// The unconditional analytic model: ε_θ := ε* (noise prediction).
+pub struct GmmModel<'a> {
+    pub gm: &'a GaussianMixture,
+    pub sched: &'a dyn NoiseSchedule,
+}
+
+impl Model for GmmModel<'_> {
+    fn prediction(&self) -> Prediction {
+        Prediction::Noise
+    }
+    fn eval(&self, x: &Tensor, t: f64) -> Tensor {
+        self.gm.eps_star(self.sched, x, t, None)
+    }
+    fn dim(&self) -> usize {
+        self.gm.dim
+    }
+}
+
+/// Guided analytic model: classifier-free guidance over class-conditional
+/// component subsets, ε̃ = (1+s)·ε_cond − s·ε_uncond (paper §4.1 setting).
+pub struct GuidedGmmModel<'a> {
+    pub gm: &'a GaussianMixture,
+    pub sched: &'a dyn NoiseSchedule,
+    /// Components belonging to the conditioned class.
+    pub class_components: Vec<usize>,
+    /// Guidance scale s (s = 0 recovers the conditional model).
+    pub scale: f64,
+}
+
+impl Model for GuidedGmmModel<'_> {
+    fn prediction(&self) -> Prediction {
+        Prediction::Noise
+    }
+    fn eval(&self, x: &Tensor, t: f64) -> Tensor {
+        let cond = self.gm.eps_star(self.sched, x, t, Some(&self.class_components));
+        if self.scale == 0.0 {
+            return cond;
+        }
+        let uncond = self.gm.eps_star(self.sched, x, t, None);
+        Tensor::lincomb(1.0 + self.scale, &cond, -self.scale, &uncond)
+    }
+    fn dim(&self) -> usize {
+        self.gm.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::VpLinear;
+
+    fn single(dim: usize, s: f64) -> GaussianMixture {
+        GaussianMixture::new(vec![vec![0.0; dim]], vec![s], vec![1.0])
+    }
+
+    #[test]
+    fn weights_normalized() {
+        let g = GaussianMixture::new(
+            vec![vec![0.0], vec![1.0]],
+            vec![1.0, 1.0],
+            vec![2.0, 6.0],
+        );
+        assert!((g.weights[0] - 0.25).abs() < 1e-12);
+        assert!((g.weights[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_gaussian_eps_is_linear() {
+        // ε*(x,t) = σ x / (α²s² + σ²) for a centered Gaussian.
+        let sched = VpLinear::default();
+        let g = single(3, 2.0);
+        let t = 0.6;
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.5, 0.0, 3.0, -1.0]);
+        let eps = g.eps_star(&sched, &x, t, None);
+        let (a, s) = (sched.alpha(t), sched.sigma(t));
+        let v = a * a * 4.0 + s * s;
+        for (e, xv) in eps.data().iter().zip(x.data()) {
+            assert!((e - s * xv / v).abs() < 1e-12, "{e} vs {}", s * xv / v);
+        }
+    }
+
+    #[test]
+    fn eps_matches_finite_difference_score() {
+        // ε* = −σ ∇ log q_t: check against a numerical gradient of the
+        // mixture log-density.
+        let sched = VpLinear::default();
+        let g = GaussianMixture::ring(2, 3, 2.0, 0.5);
+        let t = 0.4;
+        let (a, sg) = (sched.alpha(t), sched.sigma(t));
+        let logq = |x: &[f64]| -> f64 {
+            let mut terms = Vec::new();
+            for k in 0..g.n_components() {
+                let v = a * a * g.stds[k] * g.stds[k] + sg * sg;
+                let mut sq = 0.0;
+                for j in 0..2 {
+                    let r = x[j] - a * g.means[k][j];
+                    sq += r * r;
+                }
+                terms.push(g.weights[k].ln() - (v * 2.0 * std::f64::consts::PI).ln() - sq / (2.0 * v));
+            }
+            let mx = terms.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            mx + terms.iter().map(|t| (t - mx).exp()).sum::<f64>().ln()
+        };
+        let x = [0.7, -1.1];
+        let h = 1e-5;
+        let mut grad = [0.0; 2];
+        for j in 0..2 {
+            let mut xp = x;
+            let mut xm = x;
+            xp[j] += h;
+            xm[j] -= h;
+            grad[j] = (logq(&xp) - logq(&xm)) / (2.0 * h);
+        }
+        let xt = Tensor::from_vec(&[1, 2], x.to_vec());
+        let eps = g.eps_star(&sched, &xt, t, None);
+        for j in 0..2 {
+            let expect = -sg * grad[j];
+            assert!(
+                (eps.data()[j] - expect).abs() < 1e-6,
+                "{} vs {expect}",
+                eps.data()[j]
+            );
+        }
+    }
+
+    #[test]
+    fn sampling_moments_match() {
+        let g = GaussianMixture::ring(2, 4, 3.0, 0.3);
+        let mut rng = Rng::seed_from(5);
+        let xs = g.sample(&mut rng, 50_000);
+        let mu = g.mean();
+        let mut emp = vec![0.0; 2];
+        for i in 0..xs.shape()[0] {
+            for j in 0..2 {
+                emp[j] += xs.row(i)[j];
+            }
+        }
+        for j in 0..2 {
+            emp[j] /= xs.shape()[0] as f64;
+            assert!((emp[j] - mu[j]).abs() < 0.05, "dim {j}: {} vs {}", emp[j], mu[j]);
+        }
+    }
+
+    #[test]
+    fn covariance_of_symmetric_ring_is_isotropic_in_plane() {
+        let g = GaussianMixture::ring(2, 8, 2.0, 0.5);
+        let c = g.covariance();
+        // Symmetry: c[0][0] == c[1][1], off-diagonals ~0.
+        assert!((c[0] - c[3]).abs() < 1e-10);
+        assert!(c[1].abs() < 1e-10);
+        // Variance = r²/2 + s².
+        assert!((c[0] - (2.0 * 2.0 / 2.0 + 0.25)).abs() < 1e-10, "{}", c[0]);
+    }
+
+    #[test]
+    fn guidance_zero_scale_equals_conditional() {
+        let sched = VpLinear::default();
+        let g = GaussianMixture::ring(2, 4, 2.0, 0.4);
+        let guided = GuidedGmmModel {
+            gm: &g,
+            sched: &sched,
+            class_components: vec![0, 1],
+            scale: 0.0,
+        };
+        let x = Tensor::from_vec(&[1, 2], vec![0.3, 0.4]);
+        let a = guided.eval(&x, 0.5);
+        let b = g.eps_star(&sched, &x, 0.5, Some(&[0, 1]));
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn guidance_pushes_toward_class() {
+        // With a large scale the guided field should differ from uncond.
+        let sched = VpLinear::default();
+        let g = GaussianMixture::ring(2, 4, 2.0, 0.4);
+        let guided = GuidedGmmModel {
+            gm: &g,
+            sched: &sched,
+            class_components: vec![0],
+            scale: 4.0,
+        };
+        let x = Tensor::from_vec(&[1, 2], vec![0.1, 0.1]);
+        let eg = guided.eval(&x, 0.5);
+        let eu = g.eps_star(&sched, &x, 0.5, None);
+        assert!(eg.sub(&eu).norm() > 1e-3);
+    }
+}

@@ -1,0 +1,167 @@
+//! Hand-rolled argument parser (no clap in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands; generates usage text from declared options.
+
+use std::collections::BTreeMap;
+
+/// Declared option for usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv slice (without the program/subcommand names).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates option parsing.
+                    out.positional.extend(argv[i + 1..].iter().cloned());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.opts.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> (String, Args) {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let sub = argv.first().cloned().unwrap_or_default();
+        let rest = if argv.is_empty() { &[][..] } else { &argv[1..] };
+        (sub, Args::parse(rest).unwrap_or_default())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Keys of unknown options given a spec list (for strict commands).
+    pub fn unknown_keys(&self, specs: &[OptSpec]) -> Vec<String> {
+        self.opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !specs.iter().any(|s| s.name == k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in specs {
+        let def = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = Args::parse(&argv(&["--steps", "10", "--method=unipc-3", "--verbose"])).unwrap();
+        assert_eq!(a.get("steps"), Some("10"));
+        assert_eq!(a.get("method"), Some("unipc-3"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::parse(&argv(&["--n", "5", "--x", "2.5"])).unwrap();
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert!((a.get_f64("x", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!(a.get_usize("x", 0).is_err());
+    }
+
+    #[test]
+    fn positionals_and_separator() {
+        let a = Args::parse(&argv(&["file1", "--k", "v", "--", "--not-an-opt"])).unwrap();
+        assert_eq!(a.positional(), &["file1", "--not-an-opt"]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--x -5" would read -5 as a flag start; use --x=-5 form.
+        let a = Args::parse(&argv(&["--x=-5"])).unwrap();
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), -5.0);
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let specs = [OptSpec { name: "steps", help: "", default: None }];
+        let a = Args::parse(&argv(&["--steps", "3", "--bogus", "1"])).unwrap();
+        assert_eq!(a.unknown_keys(&specs), vec!["bogus".to_string()]);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("serve", "run the server", &[OptSpec {
+            name: "port",
+            help: "TCP port",
+            default: Some("7878"),
+        }]);
+        assert!(u.contains("--port"));
+        assert!(u.contains("default: 7878"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Typed configuration for the serving stack, layered as
+//! defaults ← JSON config file ← CLI overrides.
+
+use crate::cli::Args;
+use crate::json::{self, Value};
+use crate::sched::TimeSpacing;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Server + engine configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    /// TCP bind address.
+    pub addr: String,
+    /// Directory holding AOT artifacts + manifest.json.
+    pub artifacts_dir: PathBuf,
+    /// Path to the `.upw` weights file (empty ⇒ use the analytic model).
+    pub weights: Option<PathBuf>,
+    /// Max batch rows per model call.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub batch_wait_us: u64,
+    /// Worker threads running sampling loops.
+    pub workers: usize,
+    /// Queue capacity; requests beyond it are rejected (backpressure).
+    pub queue_cap: usize,
+    /// Default solver settings for requests that don't override them.
+    pub default_steps: usize,
+    pub default_method: String,
+    pub spacing: TimeSpacing,
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            weights: None,
+            max_batch: 64,
+            batch_wait_us: 200,
+            workers: 4,
+            queue_cap: 256,
+            default_steps: 10,
+            default_method: "unipc-3".into(),
+            spacing: TimeSpacing::LogSnr,
+            t_start: 1.0,
+            t_end: 1e-3,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Load from a JSON file; unknown keys are rejected (catch typos early).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = ServerConfig::default();
+        let obj = match v {
+            Value::Obj(m) => m,
+            _ => bail!("config root must be an object"),
+        };
+        for (k, val) in obj {
+            match k.as_str() {
+                "addr" => c.addr = req_str(val, k)?,
+                "artifacts_dir" => c.artifacts_dir = PathBuf::from(req_str(val, k)?),
+                "weights" => {
+                    c.weights = match val {
+                        Value::Null => None,
+                        _ => Some(PathBuf::from(req_str(val, k)?)),
+                    }
+                }
+                "max_batch" => c.max_batch = req_usize(val, k)?,
+                "batch_wait_us" => c.batch_wait_us = req_usize(val, k)? as u64,
+                "workers" => c.workers = req_usize(val, k)?,
+                "queue_cap" => c.queue_cap = req_usize(val, k)?,
+                "default_steps" => c.default_steps = req_usize(val, k)?,
+                "default_method" => c.default_method = req_str(val, k)?,
+                "spacing" => {
+                    let s = req_str(val, k)?;
+                    c.spacing = TimeSpacing::parse(&s)
+                        .ok_or_else(|| anyhow::anyhow!("unknown spacing '{s}'"))?;
+                }
+                "t_start" => c.t_start = req_f64(val, k)?,
+                "t_end" => c.t_end = req_f64(val, k)?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Apply CLI overrides on top.
+    pub fn apply_args(mut self, args: &Args) -> Result<Self> {
+        if let Some(a) = args.get("addr") {
+            self.addr = a.to_string();
+        }
+        if let Some(a) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(a);
+        }
+        if let Some(w) = args.get("weights") {
+            self.weights = Some(PathBuf::from(w));
+        }
+        self.max_batch = args.get_usize("max-batch", self.max_batch).map_err(anyhow::Error::msg)?;
+        self.workers = args.get_usize("workers", self.workers).map_err(anyhow::Error::msg)?;
+        self.queue_cap = args.get_usize("queue-cap", self.queue_cap).map_err(anyhow::Error::msg)?;
+        self.default_steps =
+            args.get_usize("steps", self.default_steps).map_err(anyhow::Error::msg)?;
+        if let Some(m) = args.get("method") {
+            self.default_method = m.to_string();
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            bail!("max_batch must be ≥ 1");
+        }
+        if self.workers == 0 {
+            bail!("workers must be ≥ 1");
+        }
+        if !(self.t_start > self.t_end && self.t_end > 0.0) {
+            bail!("need t_start > t_end > 0");
+        }
+        if crate::solver::Method::parse(&self.default_method).is_none() {
+            bail!("unknown default_method '{}'", self.default_method);
+        }
+        Ok(())
+    }
+}
+
+fn req_str(v: &Value, key: &str) -> Result<String> {
+    v.as_str().map(|s| s.to_string()).ok_or_else(|| anyhow::anyhow!("'{key}' must be a string"))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.as_usize().ok_or_else(|| anyhow::anyhow!("'{key}' must be a non-negative integer"))
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}' must be a number"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ServerConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides_defaults() {
+        let v = json::parse(
+            r#"{"addr": "0.0.0.0:9000", "max_batch": 8, "default_method": "dpmpp-2m",
+                "spacing": "time_uniform", "t_end": 0.01}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.addr, "0.0.0.0:9000");
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.spacing, TimeSpacing::Uniform);
+        assert_eq!(c.t_end, 0.01);
+        // Untouched defaults survive.
+        assert_eq!(c.workers, ServerConfig::default().workers);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let v = json::parse(r#"{"max_batchh": 8}"#).unwrap();
+        assert!(ServerConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        for bad in [
+            r#"{"max_batch": 0}"#,
+            r#"{"default_method": "wat"}"#,
+            r#"{"t_end": 2.0}"#,
+            r#"{"max_batch": "x"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(ServerConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn cli_overrides_apply() {
+        let args = crate::cli::Args::parse(&[
+            "--max-batch".to_string(),
+            "16".to_string(),
+            "--method".to_string(),
+            "ddim".to_string(),
+        ])
+        .unwrap();
+        let c = ServerConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.default_method, "ddim");
+    }
+}

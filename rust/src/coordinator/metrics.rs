@@ -1,0 +1,80 @@
+//! Serving metrics: counters + latency digests, snapshotted as JSON for the
+//! `stats` op and the bench harness.
+
+use crate::json::Value;
+use crate::stats::LatencyDigest;
+use std::time::Duration;
+
+/// Mutable metrics store (guarded by the service's mutex).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub submitted: u64,
+    pub rejected: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub samples_out: u64,
+    pub nfe_total: u64,
+    pub queue: LatencyDigest,
+    pub compute: LatencyDigest,
+    pub e2e: LatencyDigest,
+}
+
+impl Metrics {
+    pub fn record_completion(
+        &mut self,
+        n_samples: usize,
+        nfe: usize,
+        queue: Duration,
+        compute: Duration,
+    ) {
+        self.completed += 1;
+        self.samples_out += n_samples as u64;
+        self.nfe_total += nfe as u64;
+        self.queue.record(queue);
+        self.compute.record(compute);
+        self.e2e.record(queue + compute);
+    }
+
+    pub fn snapshot_json(&mut self) -> Value {
+        Value::obj(vec![
+            ("submitted", Value::from(self.submitted as f64)),
+            ("rejected", Value::from(self.rejected as f64)),
+            ("completed", Value::from(self.completed as f64)),
+            ("failed", Value::from(self.failed as f64)),
+            ("samples_out", Value::from(self.samples_out as f64)),
+            ("nfe_total", Value::from(self.nfe_total as f64)),
+            ("queue_p50_us", Value::from(self.queue.percentile_us(50.0) as f64)),
+            ("queue_p99_us", Value::from(self.queue.percentile_us(99.0) as f64)),
+            ("compute_p50_us", Value::from(self.compute.percentile_us(50.0) as f64)),
+            ("compute_p99_us", Value::from(self.compute.percentile_us(99.0) as f64)),
+            ("e2e_p50_us", Value::from(self.e2e.percentile_us(50.0) as f64)),
+            ("e2e_p95_us", Value::from(self.e2e.percentile_us(95.0) as f64)),
+            ("e2e_p99_us", Value::from(self.e2e.percentile_us(99.0) as f64)),
+            ("e2e_mean_us", Value::from(self.e2e.mean_us())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_updates_everything() {
+        let mut m = Metrics::default();
+        m.record_completion(4, 10, Duration::from_micros(50), Duration::from_micros(950));
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.samples_out, 4);
+        assert_eq!(m.nfe_total, 10);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("completed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("e2e_p50_us").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let mut m = Metrics::default();
+        let s = m.snapshot_json().to_string();
+        assert!(crate::json::parse(&s).is_ok());
+    }
+}

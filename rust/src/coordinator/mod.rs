@@ -1,0 +1,18 @@
+//! The serving coordinator: request admission, queueing/backpressure, a
+//! sampling worker pool, and per-request solver state. Together with the
+//! [`crate::runtime`] executor (which owns dynamic batching at the PJRT
+//! boundary) this is the L3 system the paper's technique plugs into: UniPC
+//! is just a `method` string on the request.
+//!
+//! * [`request`] — wire-level request/response types + JSON codecs.
+//! * [`service`] — the worker pool; blocking submit with queue-cap
+//!   backpressure; deterministic per-request seeds.
+//! * [`metrics`] — counters + latency digests, snapshotted as JSON.
+
+pub mod metrics;
+pub mod request;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use request::{SampleRequest, SampleResponse};
+pub use service::{ModelBackend, Service};

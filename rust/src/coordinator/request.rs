@@ -1,0 +1,240 @@
+//! Wire-level request/response types (newline-delimited JSON protocol).
+
+use crate::json::Value;
+use crate::solver::Method;
+use anyhow::{anyhow, bail, Result};
+
+/// A sampling request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SampleRequest {
+    /// Number of samples (batch rows) to generate.
+    pub n: usize,
+    /// Solver steps (multistep) / NFE budget (singlestep).
+    pub steps: usize,
+    /// Method id, e.g. `unipc-3`, `dpmpp-3m`, `ddim` (see [`Method::parse`]).
+    pub method: String,
+    /// Apply the UniC corrector after every step (UniPC when the base is
+    /// UniP; "+UniC" for any other solver).
+    pub unic: bool,
+    /// Class label for conditional sampling (None = unconditional).
+    pub class: Option<usize>,
+    /// Classifier-free guidance scale (requires `class`).
+    pub guidance: Option<f64>,
+    /// RNG seed for x_T (deterministic replay).
+    pub seed: u64,
+    /// Include the generated samples in the response (off for pure
+    /// load-testing).
+    pub return_samples: bool,
+}
+
+impl Default for SampleRequest {
+    fn default() -> Self {
+        SampleRequest {
+            n: 1,
+            steps: 10,
+            method: "unipc-3".into(),
+            unic: true,
+            class: None,
+            guidance: None,
+            seed: 0,
+            return_samples: true,
+        }
+    }
+}
+
+impl SampleRequest {
+    /// Parse + validate the configured method.
+    pub fn parsed_method(&self) -> Result<Method> {
+        Method::parse(&self.method).ok_or_else(|| anyhow!("unknown method '{}'", self.method))
+    }
+
+    pub fn validate(&self, max_n: usize) -> Result<()> {
+        if self.n == 0 || self.n > max_n {
+            bail!("n must be in 1..={max_n}");
+        }
+        if self.steps == 0 || self.steps > 1000 {
+            bail!("steps must be in 1..=1000");
+        }
+        if self.guidance.is_some() && self.class.is_none() {
+            bail!("guidance requires a class");
+        }
+        self.parsed_method()?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("op", Value::from("sample")),
+            ("n", Value::from(self.n)),
+            ("steps", Value::from(self.steps)),
+            ("method", Value::from(self.method.as_str())),
+            ("unic", Value::from(self.unic)),
+            ("seed", Value::from(self.seed as f64)),
+            ("return_samples", Value::from(self.return_samples)),
+        ];
+        if let Some(c) = self.class {
+            pairs.push(("class", Value::from(c)));
+        }
+        if let Some(g) = self.guidance {
+            pairs.push(("guidance", Value::from(g)));
+        }
+        Value::obj(pairs)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut r = SampleRequest::default();
+        if let Some(n) = v.get("n") {
+            r.n = n.as_usize().ok_or_else(|| anyhow!("bad 'n'"))?;
+        }
+        if let Some(s) = v.get("steps") {
+            r.steps = s.as_usize().ok_or_else(|| anyhow!("bad 'steps'"))?;
+        }
+        if let Some(m) = v.get("method") {
+            r.method = m.as_str().ok_or_else(|| anyhow!("bad 'method'"))?.to_string();
+        }
+        if let Some(u) = v.get("unic") {
+            r.unic = u.as_bool().ok_or_else(|| anyhow!("bad 'unic'"))?;
+        }
+        if let Some(c) = v.get("class") {
+            r.class = Some(c.as_usize().ok_or_else(|| anyhow!("bad 'class'"))?);
+        }
+        if let Some(g) = v.get("guidance") {
+            r.guidance = Some(g.as_f64().ok_or_else(|| anyhow!("bad 'guidance'"))?);
+        }
+        if let Some(s) = v.get("seed") {
+            r.seed = s.as_f64().ok_or_else(|| anyhow!("bad 'seed'"))? as u64;
+        }
+        if let Some(rs) = v.get("return_samples") {
+            r.return_samples = rs.as_bool().ok_or_else(|| anyhow!("bad 'return_samples'"))?;
+        }
+        Ok(r)
+    }
+}
+
+/// A completed (or failed) sampling response.
+#[derive(Clone, Debug)]
+pub struct SampleResponse {
+    pub ok: bool,
+    pub error: Option<String>,
+    pub nfe: usize,
+    /// Time spent waiting in the queue.
+    pub queue_us: u64,
+    /// Time spent inside the solver (includes batched PJRT waits).
+    pub compute_us: u64,
+    /// Flattened samples `[n * dim]` when requested.
+    pub samples: Option<Vec<f64>>,
+    pub dim: usize,
+}
+
+impl SampleResponse {
+    pub fn failure(msg: String) -> Self {
+        SampleResponse {
+            ok: false,
+            error: Some(msg),
+            nfe: 0,
+            queue_us: 0,
+            compute_us: 0,
+            samples: None,
+            dim: 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut pairs = vec![
+            ("ok", Value::from(self.ok)),
+            ("nfe", Value::from(self.nfe)),
+            ("queue_us", Value::from(self.queue_us as f64)),
+            ("compute_us", Value::from(self.compute_us as f64)),
+            ("dim", Value::from(self.dim)),
+        ];
+        if let Some(e) = &self.error {
+            pairs.push(("error", Value::from(e.as_str())));
+        }
+        if let Some(s) = &self.samples {
+            pairs.push((
+                "samples",
+                Value::Arr(s.iter().map(|&v| Value::Num(v)).collect()),
+            ));
+        }
+        Value::obj(pairs)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let ok = v.get("ok").and_then(Value::as_bool).unwrap_or(false);
+        Ok(SampleResponse {
+            ok,
+            error: v.get("error").and_then(Value::as_str).map(str::to_string),
+            nfe: v.get("nfe").and_then(Value::as_usize).unwrap_or(0),
+            queue_us: v.get("queue_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            compute_us: v.get("compute_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            samples: v.get("samples").and_then(Value::as_arr).map(|a| {
+                a.iter().filter_map(Value::as_f64).collect()
+            }),
+            dim: v.get("dim").and_then(Value::as_usize).unwrap_or(0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = SampleRequest {
+            n: 4,
+            steps: 7,
+            method: "dpmpp-2m".into(),
+            unic: true,
+            class: Some(3),
+            guidance: Some(2.0),
+            seed: 99,
+            return_samples: false,
+        };
+        let v = json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = SampleRequest::from_json(&v).unwrap();
+        assert_eq!(r, r2);
+    }
+
+    #[test]
+    fn validation() {
+        let mut r = SampleRequest::default();
+        r.validate(64).unwrap();
+        r.n = 0;
+        assert!(r.validate(64).is_err());
+        r.n = 128;
+        assert!(r.validate(64).is_err());
+        r = SampleRequest { guidance: Some(1.0), ..Default::default() };
+        assert!(r.validate(64).is_err(), "guidance without class");
+        r = SampleRequest { method: "bogus".into(), ..Default::default() };
+        assert!(r.validate(64).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip_with_samples() {
+        let resp = SampleResponse {
+            ok: true,
+            error: None,
+            nfe: 10,
+            queue_us: 12,
+            compute_us: 345,
+            samples: Some(vec![0.5, -1.0]),
+            dim: 2,
+        };
+        let v = json::parse(&resp.to_json().to_string()).unwrap();
+        let r2 = SampleResponse::from_json(&v).unwrap();
+        assert!(r2.ok);
+        assert_eq!(r2.samples.unwrap(), vec![0.5, -1.0]);
+        assert_eq!(r2.compute_us, 345);
+    }
+
+    #[test]
+    fn failure_response() {
+        let r = SampleResponse::failure("queue full".into());
+        let v = json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = SampleResponse::from_json(&v).unwrap();
+        assert!(!r2.ok);
+        assert_eq!(r2.error.as_deref(), Some("queue full"));
+    }
+}

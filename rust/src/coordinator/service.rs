@@ -1,0 +1,392 @@
+//! The sampling service: a bounded queue + worker pool running solver loops.
+//!
+//! Each worker pops a request, builds a per-request model view (class /
+//! guidance) over the shared backend, draws x_T from the request seed, and
+//! runs the configured solver. With the PJRT backend, concurrent workers'
+//! model evaluations coalesce inside the runtime executor — step-level
+//! dynamic batching across requests.
+
+use super::metrics::Metrics;
+use super::request::{SampleRequest, SampleResponse};
+use crate::analytic::GaussianMixture;
+use crate::config::ServerConfig;
+use crate::rng::Rng;
+use crate::runtime::{PjrtHandle, PjrtModel};
+use crate::sched::VpLinear;
+use crate::solver::unipc::CoeffVariant;
+use crate::solver::{sample, Model, Prediction, SampleOptions};
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// What evaluates ε_θ for the service.
+#[derive(Clone)]
+pub enum ModelBackend {
+    /// The learned model through the PJRT executor (production path).
+    Pjrt(PjrtHandle),
+    /// The analytic mixture (exact score; used for tests/benches and when
+    /// no artifacts are available).
+    Analytic {
+        gm: Arc<GaussianMixture>,
+        /// Component indices per class (classifier-free guidance support).
+        class_components: Arc<Vec<Vec<usize>>>,
+    },
+}
+
+impl ModelBackend {
+    pub fn dim(&self) -> usize {
+        match self {
+            ModelBackend::Pjrt(h) => h.dim,
+            ModelBackend::Analytic { gm, .. } => gm.dim,
+        }
+    }
+}
+
+/// Per-request model view over a backend.
+struct RequestModel<'a> {
+    backend: &'a ModelBackend,
+    sched: &'a VpLinear,
+    class: Option<usize>,
+    guidance: Option<f64>,
+    pjrt: Option<PjrtModel>,
+}
+
+impl<'a> RequestModel<'a> {
+    fn new(backend: &'a ModelBackend, sched: &'a VpLinear, req: &SampleRequest) -> Self {
+        let pjrt = match backend {
+            ModelBackend::Pjrt(h) => {
+                let mut m = PjrtModel::new(h.clone());
+                if let Some(c) = req.class {
+                    m = m.with_class(c, req.guidance);
+                }
+                Some(m)
+            }
+            ModelBackend::Analytic { .. } => None,
+        };
+        RequestModel { backend, sched, class: req.class, guidance: req.guidance, pjrt }
+    }
+}
+
+impl Model for RequestModel<'_> {
+    fn prediction(&self) -> Prediction {
+        Prediction::Noise
+    }
+
+    fn eval(&self, x: &Tensor, t: f64) -> Tensor {
+        match self.backend {
+            ModelBackend::Pjrt(_) => self.pjrt.as_ref().unwrap().eval(x, t),
+            ModelBackend::Analytic { gm, class_components } => {
+                let subset = self.class.map(|c| class_components[c].as_slice());
+                let cond = gm.eps_star(self.sched, x, t, subset);
+                match (self.guidance, subset) {
+                    (Some(s), Some(_)) if s != 0.0 => {
+                        let uncond = gm.eps_star(self.sched, x, t, None);
+                        Tensor::lincomb(1.0 + s, &cond, -s, &uncond)
+                    }
+                    _ => cond,
+                }
+            }
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.backend.dim()
+    }
+}
+
+struct QueuedJob {
+    req: SampleRequest,
+    reply: mpsc::Sender<SampleResponse>,
+    enqueued: Instant,
+}
+
+struct Inner {
+    queue: Mutex<VecDeque<QueuedJob>>,
+    cv: Condvar,
+    cfg: ServerConfig,
+    backend: ModelBackend,
+    sched: VpLinear,
+    metrics: Mutex<Metrics>,
+    shutdown: AtomicBool,
+}
+
+/// The running service (clone to share).
+#[derive(Clone)]
+pub struct Service {
+    inner: Arc<Inner>,
+}
+
+impl Service {
+    /// Start the worker pool.
+    pub fn start(cfg: ServerConfig, backend: ModelBackend) -> Service {
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            cfg,
+            backend,
+            sched: VpLinear::default(),
+            metrics: Mutex::new(Metrics::default()),
+            shutdown: AtomicBool::new(false),
+        });
+        for i in 0..inner.cfg.workers {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("sampler-{i}"))
+                .spawn(move || worker_loop(inner))
+                .expect("spawn sampler worker");
+        }
+        Service { inner }
+    }
+
+    /// Submit a request. Applies admission control: invalid requests and a
+    /// full queue are rejected immediately (backpressure).
+    pub fn submit(&self, req: SampleRequest) -> Result<mpsc::Receiver<SampleResponse>> {
+        let mut metrics = self.inner.metrics.lock().unwrap();
+        metrics.submitted += 1;
+        if let Err(e) = req.validate(self.inner.cfg.max_batch) {
+            metrics.rejected += 1;
+            return Err(e);
+        }
+        drop(metrics);
+
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            if q.len() >= self.inner.cfg.queue_cap {
+                self.inner.metrics.lock().unwrap().rejected += 1;
+                return Err(anyhow!("queue full ({} pending)", q.len()));
+            }
+            q.push_back(QueuedJob { req, reply: tx, enqueued: Instant::now() });
+        }
+        self.inner.cv.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and wait for the result.
+    pub fn sample_blocking(&self, req: SampleRequest) -> SampleResponse {
+        match self.submit(req) {
+            Ok(rx) => rx
+                .recv()
+                .unwrap_or_else(|_| SampleResponse::failure("worker dropped request".into())),
+            Err(e) => SampleResponse::failure(format!("{e:#}")),
+        }
+    }
+
+    pub fn metrics_json(&self) -> crate::json::Value {
+        self.inner.metrics.lock().unwrap().snapshot_json()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.inner.backend.dim()
+    }
+
+    /// Stop the workers (queued jobs are drained first).
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    loop {
+        let job = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = inner.cv.wait(q).unwrap();
+            }
+        };
+        let queue_time = job.enqueued.elapsed();
+        let started = Instant::now();
+        let resp = run_request(&inner, &job.req);
+        let compute_time = started.elapsed();
+
+        let mut m = inner.metrics.lock().unwrap();
+        match &resp {
+            r if r.ok => m.record_completion(job.req.n, r.nfe, queue_time, compute_time),
+            _ => m.failed += 1,
+        }
+        drop(m);
+
+        let mut resp = resp;
+        resp.queue_us = queue_time.as_micros() as u64;
+        resp.compute_us = compute_time.as_micros() as u64;
+        let _ = job.reply.send(resp);
+    }
+}
+
+fn run_request(inner: &Inner, req: &SampleRequest) -> SampleResponse {
+    let method = match req.parsed_method() {
+        Ok(m) => m,
+        Err(e) => return SampleResponse::failure(format!("{e:#}")),
+    };
+    let model = RequestModel::new(&inner.backend, &inner.sched, req);
+    let dim = model.dim();
+
+    let mut opts = SampleOptions::new(method, req.steps);
+    opts.spacing = inner.cfg.spacing;
+    opts.t_start = inner.cfg.t_start;
+    opts.t_end = inner.cfg.t_end;
+    if req.unic {
+        // UniC inherits the base method's coefficient variant when the base
+        // is UniP (UniPC proper); B₂ otherwise.
+        let variant = match &opts.method {
+            crate::solver::Method::UniP { variant, .. } => *variant,
+            _ => CoeffVariant::Bh(crate::numerics::vandermonde::BFunction::Bh2),
+        };
+        opts = opts.with_unic(variant, false);
+    }
+
+    let mut rng = Rng::seed_from(req.seed);
+    let x_t = rng.normal_tensor(&[req.n, dim]);
+    let result = sample(&model, &inner.sched, &x_t, &opts);
+
+    SampleResponse {
+        ok: true,
+        error: None,
+        nfe: result.nfe,
+        queue_us: 0,
+        compute_us: 0,
+        samples: req.return_samples.then(|| result.x.data().to_vec()),
+        dim,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::datasets::{dataset, DatasetSpec};
+
+    fn analytic_service(workers: usize, queue_cap: usize) -> Service {
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        let mut cfg = ServerConfig { workers, queue_cap, ..Default::default() };
+        cfg.default_steps = 5;
+        Service::start(
+            cfg,
+            ModelBackend::Analytic { gm, class_components: Arc::new(classes) },
+        )
+    }
+
+    #[test]
+    fn sample_roundtrip_deterministic() {
+        let svc = analytic_service(2, 16);
+        let req = SampleRequest { n: 3, steps: 6, seed: 42, ..Default::default() };
+        let a = svc.sample_blocking(req.clone());
+        let b = svc.sample_blocking(req);
+        assert!(a.ok, "{:?}", a.error);
+        assert_eq!(a.nfe, 6);
+        assert_eq!(a.samples, b.samples, "same seed ⇒ same samples");
+        assert_eq!(a.samples.as_ref().unwrap().len(), 3 * svc.dim());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_rejected() {
+        let svc = analytic_service(1, 4);
+        let bad = SampleRequest { n: 0, ..Default::default() };
+        let r = svc.sample_blocking(bad);
+        assert!(!r.ok);
+        let bad2 = SampleRequest { method: "nope".into(), ..Default::default() };
+        assert!(!svc.sample_blocking(bad2).ok);
+        let m = svc.metrics_json();
+        assert_eq!(m.get("rejected").unwrap().as_f64(), Some(2.0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn guided_requests_differ_from_unconditional() {
+        let svc = analytic_service(2, 16);
+        let base = SampleRequest { n: 2, steps: 5, seed: 7, ..Default::default() };
+        let uncond = svc.sample_blocking(base.clone());
+        let guided = svc.sample_blocking(SampleRequest {
+            class: Some(1),
+            guidance: Some(4.0),
+            ..base
+        });
+        assert!(uncond.ok && guided.ok);
+        assert_ne!(uncond.samples, guided.samples);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_load_all_complete() {
+        let svc = analytic_service(4, 64);
+        let handles: Vec<_> = (0..16)
+            .map(|i| {
+                let svc = svc.clone();
+                std::thread::spawn(move || {
+                    svc.sample_blocking(SampleRequest {
+                        n: 2,
+                        steps: 5,
+                        seed: i,
+                        return_samples: false,
+                        ..Default::default()
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            assert!(h.join().unwrap().ok);
+        }
+        let m = svc.metrics_json();
+        assert_eq!(m.get("completed").unwrap().as_f64(), Some(16.0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // 1 worker, tiny queue, slow-ish requests: eventually rejects.
+        let svc = analytic_service(1, 2);
+        let mut rejected = 0;
+        let mut receivers = Vec::new();
+        for i in 0..20 {
+            match svc.submit(SampleRequest {
+                n: 4,
+                steps: 40,
+                seed: i,
+                return_samples: false,
+                ..Default::default()
+            }) {
+                Ok(rx) => receivers.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "queue cap must reject under overload");
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn methods_dispatch_through_service() {
+        let svc = analytic_service(2, 16);
+        for method in ["ddim", "dpmpp-2m", "dpmpp-3m", "unipc-2-bh1", "pndm", "deis-2"] {
+            let r = svc.sample_blocking(SampleRequest {
+                n: 1,
+                steps: 6,
+                method: method.into(),
+                unic: false,
+                seed: 1,
+                ..Default::default()
+            });
+            assert!(r.ok, "{method}: {:?}", r.error);
+            assert!(r.samples.unwrap().iter().all(|v| v.is_finite()), "{method}");
+        }
+        svc.shutdown();
+    }
+}

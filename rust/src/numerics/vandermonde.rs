@@ -1,0 +1,200 @@
+//! Theorem 3.1 coefficient systems.
+//!
+//! UniPC chooses its combination weights a_p by solving
+//!     R_p(h) a_p B(h) = φ_p(h)                      (Eq. 5)
+//! where R_p(h) is the Vandermonde matrix with entries (r_m h)^{k−1} and
+//! φ_p(h) stacks φ_n(h) = hⁿ n! φ_{n+1}(h). Dividing row k by h^{k−1}
+//! removes h from the matrix:
+//!     Σ_m r_m^{k−1} a_m = h · k! · φ_{k+1}(h) / B(h)   for k = 1..p,
+//! which is the form solved here (it matches the official implementation).
+//! The data-prediction system (Proposition A.1, Eq. 11) is identical after
+//! the substitution h → −h (because ψ_k(h) = φ_k(−h)); callers pass the
+//! *signed* step `hh` (+h for noise prediction, −h for data prediction).
+
+use super::lu;
+use super::phi::{factorial, phi};
+
+/// The paper's two instantiations of B(h) (§3.1; Table 1 ablates them).
+/// Any non-degenerate B(h) = O(h) is admissible; these are the ones the
+/// paper evaluates. Applied to the signed step `hh`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BFunction {
+    /// B₁(h) = h.
+    Bh1,
+    /// B₂(h) = e^h − 1.
+    Bh2,
+}
+
+impl BFunction {
+    /// Evaluate B at the signed step.
+    pub fn eval(self, hh: f64) -> f64 {
+        match self {
+            BFunction::Bh1 => hh,
+            BFunction::Bh2 => hh.exp_m1(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BFunction::Bh1 => "bh1",
+            BFunction::Bh2 => "bh2",
+        }
+    }
+}
+
+/// Row-major q×q Vandermonde matrix V[k][m] = r_m^k (k = 0..q-1).
+pub fn vandermonde_matrix(rks: &[f64]) -> Vec<f64> {
+    let q = rks.len();
+    let mut v = vec![0.0; q * q];
+    for (m, &r) in rks.iter().enumerate() {
+        let mut p = 1.0;
+        for k in 0..q {
+            v[k * q + m] = p;
+            p *= r;
+        }
+    }
+    v
+}
+
+/// Right-hand side b_k = hh · k! · φ_{k+1}(hh) / B(hh) for k = 1..q.
+pub fn unipc_b_vector(q: usize, hh: f64, b: BFunction) -> Vec<f64> {
+    let bh = b.eval(hh);
+    (1..=q)
+        .map(|k| hh * factorial(k) * phi(k + 1, hh) / bh)
+        .collect()
+}
+
+/// Solve for the UniPC combination coefficients a (length q) given the
+/// normalized node positions r_1..r_q and the signed step hh.
+///
+/// For the corrector of order p: q = p with r_q = 1.
+/// For the predictor of order p: q = p − 1 (the D_p term is dropped,
+/// Corollary 3.2).
+///
+/// Panics on duplicate r values (the paper requires strict monotonicity,
+/// which guarantees invertibility of the Vandermonde matrix).
+pub fn unipc_coeffs(rks: &[f64], hh: f64, b: BFunction) -> Vec<f64> {
+    let q = rks.len();
+    assert!(q > 0, "unipc_coeffs needs at least one node");
+    if q == 1 {
+        // Degenerate case (UniP-2 / UniC-1): the paper shows a₁ = 1/2
+        // satisfies the order condition for both B₁ and B₂ independent of h
+        // (Appendix F), and the reference implementation hardcodes it. This
+        // is also *why* B(h) is a real knob: with a₁ fixed, the update term
+        // a₁·B(h)·D differs between B₁ and B₂ at O(h²), whereas an exact
+        // 1×1 solve would cancel B entirely.
+        return vec![0.5];
+    }
+    let v = vandermonde_matrix(rks);
+    let rhs = unipc_b_vector(q, hh, b);
+    lu::solve(&v, &rhs, q)
+        .unwrap_or_else(|| panic!("singular Vandermonde system for r = {rks:?}"))
+}
+
+/// Residual of the order condition |R_p(h) a B(h) − φ_p(h)| (l1 norm over
+/// rows, in the *unscaled* form of Eq. 5). Used by tests to verify the
+/// O(h^{p+1}) bound of Theorem 3.1 empirically.
+pub fn order_condition_residual(rks: &[f64], a: &[f64], hh: f64, b: BFunction) -> f64 {
+    let q = rks.len();
+    let bh = b.eval(hh);
+    let mut res = 0.0;
+    for k in 1..=q {
+        // Row k of Eq. 5: Σ_m (r_m hh)^{k−1} a_m B − hh^k k! φ_{k+1}(hh).
+        let mut lhs = 0.0;
+        for (m, &r) in rks.iter().enumerate() {
+            lhs += (r * hh).powi(k as i32 - 1) * a[m];
+        }
+        lhs *= bh;
+        let rhs = hh.powi(k as i32) * factorial(k) * phi(k + 1, hh);
+        res += (lhs - rhs).abs();
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vandermonde_shape_and_values() {
+        let v = vandermonde_matrix(&[-2.0, -1.0, 1.0]);
+        // Row 0: ones. Row 1: r. Row 2: r².
+        assert_eq!(&v[0..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&v[3..6], &[-2.0, -1.0, 1.0]);
+        assert_eq!(&v[6..9], &[4.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn degenerate_a1_is_exactly_half() {
+        // Appendix F: UniP-2 / UniC-1 degenerate to a₁ = 1/2 for both B's,
+        // independent of h (the reference-implementation convention).
+        for b in [BFunction::Bh1, BFunction::Bh2] {
+            for &h in &[1e-4, -1e-4, 0.7] {
+                let a = unipc_coeffs(&[1.0], h, b);
+                assert_eq!(a, vec![0.5], "{b:?} h={h}");
+            }
+        }
+    }
+
+    #[test]
+    fn b_function_matters_beyond_degenerate_order() {
+        // With a₁ fixed at 1/2, the effective residual coefficient
+        // a₁·B(h) differs between B₁ and B₂ — the Table 1 ablation knob.
+        let h = 0.5;
+        assert_ne!(BFunction::Bh1.eval(h), BFunction::Bh2.eval(h));
+        // For q ≥ 2 the exact solve makes B(h)·a_m independent of B.
+        let a1 = unipc_coeffs(&[-1.0, 1.0], h, BFunction::Bh1);
+        let a2 = unipc_coeffs(&[-1.0, 1.0], h, BFunction::Bh2);
+        let c1: Vec<f64> = a1.iter().map(|a| a * BFunction::Bh1.eval(h)).collect();
+        let c2: Vec<f64> = a2.iter().map(|a| a * BFunction::Bh2.eval(h)).collect();
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-12, "{c1:?} vs {c2:?}");
+        }
+    }
+
+    #[test]
+    fn exact_solution_satisfies_rows() {
+        let rks = [-1.5, -0.5, 1.0];
+        let hh = 0.4;
+        for b in [BFunction::Bh1, BFunction::Bh2] {
+            let a = unipc_coeffs(&rks, hh, b);
+            let v = vandermonde_matrix(&rks);
+            let rhs = unipc_b_vector(3, hh, b);
+            for k in 0..3 {
+                let lhs: f64 = (0..3).map(|m| v[k * 3 + m] * a[m]).sum();
+                assert!((lhs - rhs[k]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn order_condition_residual_is_zero_for_exact_solve() {
+        // We solve Eq. 5 exactly (not just to O(h^{p+1})), so the residual
+        // must vanish to rounding.
+        let rks = [-2.0, -1.0, 1.0];
+        for &hh in &[0.3, -0.25] {
+            for b in [BFunction::Bh1, BFunction::Bh2] {
+                let a = unipc_coeffs(&rks, hh, b);
+                let res = order_condition_residual(&rks, &a, hh, b);
+                assert!(res < 1e-12, "residual {res}");
+            }
+        }
+    }
+
+    #[test]
+    fn taylor_coefficients_recovered_as_h_to_zero() {
+        // As h→0 the system becomes Σ r^{k−1} a_m = k! φ_{k+1}(0) = 1/(k+1)
+        // × k!·1/(k+1)!… i.e. b_k → k!/(k+1)! = 1/(k+1) for B₁.
+        let rks = [-1.0, 1.0];
+        let a = unipc_coeffs(&rks, 1e-9, BFunction::Bh1);
+        // Solve by hand: a1+a2 = 1/2, -a1+a2 = 1/3 → a2 = 5/12, a1 = 1/12.
+        assert!((a[0] - 1.0 / 12.0).abs() < 1e-6, "{a:?}");
+        assert!((a[1] - 5.0 / 12.0).abs() < 1e-6, "{a:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn duplicate_nodes_panic() {
+        let _ = unipc_coeffs(&[1.0, 1.0], 0.1, BFunction::Bh1);
+    }
+}

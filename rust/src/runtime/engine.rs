@@ -1,0 +1,614 @@
+//! The PJRT executor thread + dynamic batcher.
+//!
+//! One OS thread owns the (non-`Send`) PJRT client, the compiled
+//! executables, and the weight literals. Everyone else talks to it through
+//! a cloneable [`PjrtHandle`]. The executor drains its queue with a short
+//! batching window: compatible evaluation jobs (same entry-point kind and
+//! guidance scale) are coalesced into one padded call against the smallest
+//! compiled batch size that fits — the serving paper's dynamic batching,
+//! applied per diffusion step. Per-row timestep/label vectors mean
+//! requests at *different* solver steps still share a call.
+
+use super::manifest::Manifest;
+use crate::solver::{Model, Prediction};
+use crate::tensor::Tensor;
+use crate::weights::WeightsFile;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Executor tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOptions {
+    /// Maximum rows coalesced into one PJRT call.
+    pub max_batch: usize,
+    /// How long to wait for more compatible jobs once one is pending.
+    pub batch_wait: Duration,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions { max_batch: 64, batch_wait: Duration::from_micros(200) }
+    }
+}
+
+/// Executor-side statistics (batching effectiveness, §Perf-L3).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub calls: u64,
+    pub rows: u64,
+    pub coalesced_jobs: u64,
+    pub padded_rows: u64,
+    /// Histogram over executed batch sizes (index = compiled batch).
+    pub batch_hist: Vec<(usize, u64)>,
+}
+
+impl EngineStats {
+    pub fn mean_rows_per_call(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.calls as f64
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum EvalKind {
+    Eps,
+    /// Guidance scale carried as bits so it can be a hash/eq key.
+    EpsCfg { scale_bits: u32 },
+}
+
+struct EvalJob {
+    kind: EvalKind,
+    rows: usize,
+    x: Vec<f32>,
+    t: Vec<f32>,
+    y: Vec<i32>,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+}
+
+#[allow(clippy::large_enum_variant)]
+enum Job {
+    Eval(EvalJob),
+    Correct {
+        rows: usize,
+        x_pred: Vec<f32>,
+        t: Vec<f32>,
+        y: Vec<i32>,
+        x_prev: Vec<f32>,
+        m0: Vec<f32>,
+        d1s: Vec<f32>,
+        coeffs: Vec<f32>,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>)>>,
+    },
+    Stats(mpsc::Sender<EngineStats>),
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the executor thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Job>,
+    pub dim: usize,
+    pub n_classes: usize,
+    pub fused_p: usize,
+}
+
+impl PjrtHandle {
+    /// Start the executor: loads the manifest + weights, creates the PJRT
+    /// CPU client on a dedicated thread, and compiles entry points lazily.
+    pub fn spawn(artifacts_dir: &Path, weights: Option<&Path>, opts: EngineOptions) -> Result<PjrtHandle> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights_path =
+            weights.map(PathBuf::from).unwrap_or_else(|| artifacts_dir.join(&manifest.weights_file));
+        let weights = WeightsFile::load(&weights_path)?;
+        // Validate against the manifest before starting the thread.
+        for name in &manifest.param_names {
+            let t = weights
+                .get(name)
+                .ok_or_else(|| anyhow!("weights missing parameter '{name}'"))?;
+            let want = &manifest.param_shapes[name];
+            if &t.dims != want {
+                bail!("param '{name}': weights shape {:?} != manifest {:?}", t.dims, want);
+            }
+        }
+
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let dim = manifest.model.dim;
+        let n_classes = manifest.model.n_classes;
+        let fused_p = manifest.fused_p;
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_main(manifest, weights, opts, rx, init_tx))
+            .context("spawn pjrt executor")?;
+        init_rx
+            .recv()
+            .context("pjrt executor died during init")??;
+        Ok(PjrtHandle { tx, dim, n_classes, fused_p })
+    }
+
+    /// Unconditional/conditional ε evaluation (rows share nothing; per-row t, y).
+    pub fn eps(&self, x: Vec<f32>, t: Vec<f32>, y: Vec<i32>) -> Result<Vec<f32>> {
+        self.eval(EvalKind::Eps, x, t, y)
+    }
+
+    /// Classifier-free-guided ε.
+    pub fn eps_cfg(&self, x: Vec<f32>, t: Vec<f32>, y: Vec<i32>, scale: f32) -> Result<Vec<f32>> {
+        self.eval(EvalKind::EpsCfg { scale_bits: scale.to_bits() }, x, t, y)
+    }
+
+    fn eval(&self, kind: EvalKind, x: Vec<f32>, t: Vec<f32>, y: Vec<i32>) -> Result<Vec<f32>> {
+        let rows = t.len();
+        if rows == 0 || x.len() != rows * self.dim || y.len() != rows {
+            bail!("eval: inconsistent input lengths");
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job::Eval(EvalJob { kind, rows, x, t, y, reply: reply_tx }))
+            .map_err(|_| anyhow!("pjrt executor is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt executor dropped reply"))?
+    }
+
+    /// Fused model-eval + UniC correction (one PJRT call; §Perf).
+    /// `d1s` is `[fused_p, rows, dim]` flattened; `coeffs` is
+    /// `[c_1..c_P, c_{P+1}, a, b, s]` (see aot.py `lower_correct`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fused_correct(
+        &self,
+        x_pred: Vec<f32>,
+        t: Vec<f32>,
+        y: Vec<i32>,
+        x_prev: Vec<f32>,
+        m0: Vec<f32>,
+        d1s: Vec<f32>,
+        coeffs: Vec<f32>,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let rows = t.len();
+        if coeffs.len() != self.fused_p + 4 || d1s.len() != self.fused_p * rows * self.dim {
+            bail!("fused_correct: inconsistent coeff/buffer lengths");
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job::Correct {
+                rows,
+                x_pred,
+                t,
+                y,
+                x_prev,
+                m0,
+                d1s,
+                coeffs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("pjrt executor is gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("pjrt executor dropped reply"))?
+    }
+
+    pub fn stats(&self) -> Result<EngineStats> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Job::Stats(tx)).map_err(|_| anyhow!("pjrt executor is gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt executor dropped reply"))
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Job::Shutdown);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor thread
+// ---------------------------------------------------------------------------
+
+struct Executor {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    params: Vec<xla::Literal>,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: EngineStats,
+    hist: HashMap<usize, u64>,
+}
+
+fn executor_main(
+    manifest: Manifest,
+    weights: WeightsFile,
+    opts: EngineOptions,
+    rx: mpsc::Receiver<Job>,
+    init_tx: mpsc::Sender<Result<()>>,
+) {
+    let mut exec = match Executor::new(manifest, weights) {
+        Ok(e) => {
+            let _ = init_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+
+    let mut backlog: Vec<Job> = Vec::new();
+    loop {
+        let job = if let Some(j) = pop_front(&mut backlog) {
+            j
+        } else {
+            match rx.recv() {
+                Ok(j) => j,
+                Err(_) => break,
+            }
+        };
+        match job {
+            Job::Shutdown => break,
+            Job::Stats(reply) => {
+                let mut s = exec.stats.clone();
+                let mut hist: Vec<(usize, u64)> = exec.hist.iter().map(|(&k, &v)| (k, v)).collect();
+                hist.sort_unstable();
+                s.batch_hist = hist;
+                let _ = reply.send(s);
+            }
+            Job::Correct { rows, x_pred, t, y, x_prev, m0, d1s, coeffs, reply } => {
+                let r = exec.run_correct(rows, &x_pred, &t, &y, &x_prev, &m0, &d1s, &coeffs);
+                let _ = reply.send(r);
+            }
+            Job::Eval(first) => {
+                // Batching window: gather compatible eval jobs.
+                let mut group = vec![first];
+                let mut rows: usize = group[0].rows;
+                let kind = group[0].kind;
+                let deadline = Instant::now() + opts.batch_wait;
+                // Drain backlog first (older jobs), then the live queue.
+                let mut i = 0;
+                while i < backlog.len() {
+                    if rows >= opts.max_batch {
+                        break;
+                    }
+                    let compatible = matches!(&backlog[i], Job::Eval(j)
+                        if j.kind == kind && rows + j.rows <= opts.max_batch);
+                    if compatible {
+                        if let Job::Eval(j) = backlog.remove(i) {
+                            rows += j.rows;
+                            group.push(j);
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                while rows < opts.max_batch {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        break;
+                    }
+                    match rx.recv_timeout(left) {
+                        Ok(Job::Eval(j))
+                            if j.kind == kind && rows + j.rows <= opts.max_batch =>
+                        {
+                            rows += j.rows;
+                            group.push(j);
+                        }
+                        Ok(other) => backlog.push(other),
+                        Err(mpsc::RecvTimeoutError::Timeout) => break,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                exec.run_eval_group(kind, group, rows);
+            }
+        }
+    }
+}
+
+fn pop_front(v: &mut Vec<Job>) -> Option<Job> {
+    if v.is_empty() {
+        None
+    } else {
+        Some(v.remove(0))
+    }
+}
+
+impl Executor {
+    fn new(manifest: Manifest, weights: WeightsFile) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let ordered = weights.ordered(&manifest.param_names)?;
+        let params = ordered
+            .iter()
+            .map(|t| {
+                let lit = xla::Literal::vec1(&t.data);
+                if t.dims.len() == 1 {
+                    Ok(lit)
+                } else {
+                    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                    lit.reshape(&dims).map_err(|e| anyhow!("reshape {}: {e:?}", t.name))
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Executor {
+            manifest,
+            client,
+            params,
+            exes: HashMap::new(),
+            stats: EngineStats::default(),
+            hist: HashMap::new(),
+        })
+    }
+
+    /// Compile (once) and cache the executable for (kind, batch); returns
+    /// its cache key so callers can re-borrow immutably alongside params.
+    fn ensure_exe(&mut self, kind: &str, batch: usize) -> Result<String> {
+        let key = format!("{kind}_b{batch}");
+        if !self.exes.contains_key(&key) {
+            let info = self.manifest.artifact(kind, batch)?;
+            let path = self.manifest.dir.join(&info.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("load {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+            log::info!("compiled artifact {key}");
+            self.exes.insert(key.clone(), exe);
+        }
+        Ok(key)
+    }
+
+    /// Execute one coalesced eval group, scattering per-job replies.
+    fn run_eval_group(&mut self, kind: EvalKind, group: Vec<EvalJob>, rows: usize) {
+        let dim = self.manifest.model.dim;
+        let mut x = Vec::with_capacity(rows * dim);
+        let mut t = Vec::with_capacity(rows);
+        let mut y = Vec::with_capacity(rows);
+        for j in &group {
+            x.extend_from_slice(&j.x);
+            t.extend_from_slice(&j.t);
+            y.extend_from_slice(&j.y);
+        }
+        let result = self.run_eval(kind, rows, &x, &t, &y);
+        match result {
+            Ok(out) => {
+                let mut off = 0;
+                for j in &group {
+                    let slice = out[off * dim..(off + j.rows) * dim].to_vec();
+                    off += j.rows;
+                    let _ = j.reply.send(Ok(slice));
+                }
+                self.stats.coalesced_jobs += group.len() as u64;
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for j in &group {
+                    let _ = j.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        }
+    }
+
+    fn run_eval(&mut self, kind: EvalKind, rows: usize, x: &[f32], t: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let dim = self.manifest.model.dim;
+        let max_compiled = *self.manifest.batches.last().unwrap();
+        let mut out = Vec::with_capacity(rows * dim);
+        let mut start = 0;
+        while start < rows {
+            let chunk = (rows - start).min(max_compiled);
+            let part = self.run_eval_chunk(
+                kind,
+                chunk,
+                &x[start * dim..(start + chunk) * dim],
+                &t[start..start + chunk],
+                &y[start..start + chunk],
+            )?;
+            out.extend_from_slice(&part);
+            start += chunk;
+        }
+        Ok(out)
+    }
+
+    fn run_eval_chunk(&mut self, kind: EvalKind, rows: usize, x: &[f32], t: &[f32], y: &[i32]) -> Result<Vec<f32>> {
+        let dim = self.manifest.model.dim;
+        let batch = self.manifest.batch_for(rows)?;
+        let (kind_str, scale) = match kind {
+            EvalKind::Eps => ("eps", None),
+            EvalKind::EpsCfg { scale_bits } => ("eps_cfg", Some(f32::from_bits(scale_bits))),
+        };
+
+        // Pad to the compiled batch by repeating the last row.
+        let (xp, tp, yp) = pad_inputs(x, t, y, rows, batch, dim);
+        let x_lit = xla::Literal::vec1(&xp)
+            .reshape(&[batch as i64, dim as i64])
+            .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+        let t_lit = xla::Literal::vec1(&tp);
+        let y_lit = xla::Literal::vec1(&yp);
+
+        let key = self.ensure_exe(kind_str, batch)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&x_lit);
+        inputs.push(&t_lit);
+        inputs.push(&y_lit);
+        let scale_lit;
+        if let Some(s) = scale {
+            scale_lit = xla::Literal::scalar(s);
+            inputs.push(&scale_lit);
+        }
+
+        let exe = &self.exes[&key];
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {kind_str}_b{batch}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let tup = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut data = tup.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        data.truncate(rows * dim);
+
+        self.stats.calls += 1;
+        self.stats.rows += rows as u64;
+        self.stats.padded_rows += (batch - rows) as u64;
+        *self.hist.entry(batch).or_default() += 1;
+        Ok(data)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_correct(
+        &mut self,
+        rows: usize,
+        x_pred: &[f32],
+        t: &[f32],
+        y: &[i32],
+        x_prev: &[f32],
+        m0: &[f32],
+        d1s: &[f32],
+        coeffs: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let dim = self.manifest.model.dim;
+        let p = self.manifest.fused_p;
+        let batch = self.manifest.batch_for(rows)?;
+
+        let (xp, tp, yp) = pad_inputs(x_pred, t, y, rows, batch, dim);
+        let (xv, _, _) = pad_inputs(x_prev, t, y, rows, batch, dim);
+        let (m0p, _, _) = pad_inputs(m0, t, y, rows, batch, dim);
+        // Pad the buffer per plane.
+        let mut d1sp = Vec::with_capacity(p * batch * dim);
+        for plane in 0..p {
+            let src = &d1s[plane * rows * dim..(plane + 1) * rows * dim];
+            let (pp, _, _) = pad_inputs(src, t, y, rows, batch, dim);
+            d1sp.extend_from_slice(&pp);
+        }
+
+        let mk = |v: &[f32], dims: &[i64]| -> Result<xla::Literal> {
+            xla::Literal::vec1(v)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape: {e:?}"))
+        };
+        let x_lit = mk(&xp, &[batch as i64, dim as i64])?;
+        let t_lit = xla::Literal::vec1(&tp);
+        let y_lit = xla::Literal::vec1(&yp);
+        let xprev_lit = mk(&xv, &[batch as i64, dim as i64])?;
+        let m0_lit = mk(&m0p, &[batch as i64, dim as i64])?;
+        let d1s_lit = mk(&d1sp, &[p as i64, batch as i64, dim as i64])?;
+        let coef_lit = xla::Literal::vec1(coeffs);
+
+        let key = self.ensure_exe("correct", batch)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.extend([&x_lit, &t_lit, &y_lit, &xprev_lit, &m0_lit, &d1s_lit, &coef_lit]);
+
+        let exe = &self.exes[&key];
+        let result = exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute correct_b{batch}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let (xc, mt) = lit.to_tuple2().map_err(|e| anyhow!("untuple2: {e:?}"))?;
+        let mut xc = xc.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let mut mt = mt.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        xc.truncate(rows * dim);
+        mt.truncate(rows * dim);
+
+        self.stats.calls += 1;
+        self.stats.rows += rows as u64;
+        self.stats.padded_rows += (batch - rows) as u64;
+        *self.hist.entry(batch).or_default() += 1;
+        Ok((xc, mt))
+    }
+}
+
+fn pad_inputs(
+    x: &[f32],
+    t: &[f32],
+    y: &[i32],
+    rows: usize,
+    batch: usize,
+    dim: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+    let mut xp = x.to_vec();
+    let mut tp = t.to_vec();
+    let mut yp = y.to_vec();
+    for _ in rows..batch {
+        let last = (rows - 1) * dim;
+        xp.extend_from_within(last..last + dim);
+        tp.push(t[rows - 1]);
+        yp.push(y[rows - 1]);
+    }
+    (xp, tp, yp)
+}
+
+// ---------------------------------------------------------------------------
+// Model adapter
+// ---------------------------------------------------------------------------
+
+/// Adapts a [`PjrtHandle`] to the [`Model`] trait so all solvers run
+/// against the learned network. Each request holds its own adapter with its
+/// class/guidance configuration; concurrent adapters batch together inside
+/// the executor.
+pub struct PjrtModel {
+    pub handle: PjrtHandle,
+    /// Class label; `None` = unconditional (the null class).
+    pub class: Option<usize>,
+    /// Classifier-free guidance scale; `None` or 0.0 = plain conditional.
+    pub guidance: Option<f64>,
+}
+
+impl PjrtModel {
+    pub fn new(handle: PjrtHandle) -> Self {
+        PjrtModel { handle, class: None, guidance: None }
+    }
+
+    pub fn with_class(mut self, class: usize, guidance: Option<f64>) -> Self {
+        self.class = Some(class);
+        self.guidance = guidance;
+        self
+    }
+}
+
+impl Model for PjrtModel {
+    fn prediction(&self) -> Prediction {
+        Prediction::Noise
+    }
+
+    fn eval(&self, x: &Tensor, t: f64) -> Tensor {
+        let rows = x.batch();
+        let xf = x.to_f32();
+        let tf = vec![t as f32; rows];
+        let label = self.class.unwrap_or(self.handle.n_classes) as i32;
+        let yf = vec![label; rows];
+        let out = match self.guidance {
+            Some(s) if s != 0.0 => self.handle.eps_cfg(xf, tf, yf, s as f32),
+            _ => self.handle.eps(xf, tf, yf),
+        }
+        .expect("pjrt eval failed");
+        Tensor::from_f32(x.shape(), &out)
+    }
+
+    fn dim(&self) -> usize {
+        self.handle.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_repeats_last_row() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let t = [0.5f32, 0.6];
+        let y = [1i32, 2];
+        let (xp, tp, yp) = pad_inputs(&x, &t, &y, 2, 4, 2);
+        assert_eq!(xp, vec![1.0, 2.0, 3.0, 4.0, 3.0, 4.0, 3.0, 4.0]);
+        assert_eq!(tp, vec![0.5, 0.6, 0.6, 0.6]);
+        assert_eq!(yp, vec![1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn eval_kind_compat_keys() {
+        let a = EvalKind::EpsCfg { scale_bits: 1.5f32.to_bits() };
+        let b = EvalKind::EpsCfg { scale_bits: 1.5f32.to_bits() };
+        let c = EvalKind::EpsCfg { scale_bits: 2.0f32.to_bits() };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, EvalKind::Eps);
+    }
+}

@@ -1,0 +1,243 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Model hyper-parameters (mirrors python `ModelConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub dim: usize,
+    pub width: usize,
+    pub depth: usize,
+    pub tokens: usize,
+    pub n_classes: usize,
+    pub temb_dim: usize,
+}
+
+/// One lowered entry point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub kind: String,
+    pub batch: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelCfg,
+    pub param_names: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<usize>>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub batches: Vec<usize>,
+    pub fused_p: usize,
+    pub beta_0: f64,
+    pub beta_1: f64,
+    pub weights_file: String,
+    pub mixture_file: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(dir, &v)
+    }
+
+    pub fn from_json(dir: &Path, v: &Value) -> Result<Self> {
+        let model = v.get("model").ok_or_else(|| anyhow!("manifest missing 'model'"))?;
+        let g = |k: &str| -> Result<usize> {
+            model
+                .get(k)
+                .and_then(Value::as_usize)
+                .ok_or_else(|| anyhow!("model.{k} missing/invalid"))
+        };
+        let model = ModelCfg {
+            dim: g("dim")?,
+            width: g("width")?,
+            depth: g("depth")?,
+            tokens: g("tokens")?,
+            n_classes: g("n_classes")?,
+            temb_dim: g("temb_dim")?,
+        };
+
+        let param_names: Vec<String> = v
+            .get("param_names")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'param_names'"))?
+            .iter()
+            .map(|n| n.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad param name")))
+            .collect::<Result<_>>()?;
+
+        let mut param_shapes = BTreeMap::new();
+        if let Some(Value::Obj(m)) = v.get("param_shapes") {
+            for (k, s) in m {
+                let dims = s
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("param_shapes.{k} not an array"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?;
+                param_shapes.insert(k.clone(), dims);
+            }
+        } else {
+            bail!("manifest missing 'param_shapes'");
+        }
+        for n in &param_names {
+            if !param_shapes.contains_key(n) {
+                bail!("param '{n}' has no shape entry");
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        if let Some(Value::Obj(m)) = v.get("artifacts") {
+            for (k, a) in m {
+                artifacts.insert(
+                    k.clone(),
+                    ArtifactInfo {
+                        file: a
+                            .get("file")
+                            .and_then(Value::as_str)
+                            .ok_or_else(|| anyhow!("artifact {k} missing file"))?
+                            .to_string(),
+                        kind: a
+                            .get("kind")
+                            .and_then(Value::as_str)
+                            .unwrap_or_default()
+                            .to_string(),
+                        batch: a
+                            .get("batch")
+                            .and_then(Value::as_usize)
+                            .ok_or_else(|| anyhow!("artifact {k} missing batch"))?,
+                    },
+                );
+            }
+        } else {
+            bail!("manifest missing 'artifacts'");
+        }
+
+        let mut batches: Vec<usize> = v
+            .get("batches")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'batches'"))?
+            .iter()
+            .map(|b| b.as_usize().ok_or_else(|| anyhow!("bad batch")))
+            .collect::<Result<_>>()?;
+        batches.sort_unstable();
+
+        let sched = v.get("schedule").ok_or_else(|| anyhow!("manifest missing 'schedule'"))?;
+        let beta_0 = sched.get("beta_0").and_then(Value::as_f64).unwrap_or(0.1);
+        let beta_1 = sched.get("beta_1").and_then(Value::as_f64).unwrap_or(20.0);
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            param_names,
+            param_shapes,
+            artifacts,
+            batches,
+            fused_p: v.get("fused_p").and_then(Value::as_usize).unwrap_or(3),
+            beta_0,
+            beta_1,
+            weights_file: v
+                .get("weights")
+                .and_then(Value::as_str)
+                .unwrap_or("model.upw")
+                .to_string(),
+            mixture_file: v
+                .get("mixture")
+                .and_then(Value::as_str)
+                .unwrap_or("mixture.json")
+                .to_string(),
+        })
+    }
+
+    /// Smallest compiled batch size that fits `rows`.
+    pub fn batch_for(&self, rows: usize) -> Result<usize> {
+        self.batches
+            .iter()
+            .copied()
+            .find(|&b| b >= rows)
+            .ok_or_else(|| anyhow!("no artifact batch fits {rows} rows (max {:?})", self.batches.last()))
+    }
+
+    /// Artifact name for (kind, batch).
+    pub fn artifact(&self, kind: &str, batch: usize) -> Result<&ArtifactInfo> {
+        let key = format!("{kind}_b{batch}");
+        self.artifacts
+            .get(&key)
+            .ok_or_else(|| anyhow!("manifest has no artifact '{key}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Value {
+        json::parse(
+            r#"{
+          "model": {"dim": 4, "width": 16, "depth": 1, "tokens": 2, "n_classes": 3, "temb_dim": 8},
+          "param_names": ["a", "b"],
+          "param_shapes": {"a": [4, 16], "b": [16]},
+          "schedule": {"kind": "vp_linear", "beta_0": 0.1, "beta_1": 20},
+          "fused_p": 3,
+          "batches": [4, 1, 16],
+          "artifacts": {
+            "eps_b1": {"file": "eps_b1.hlo.txt", "kind": "eps", "batch": 1},
+            "eps_b4": {"file": "eps_b4.hlo.txt", "kind": "eps", "batch": 4}
+          },
+          "weights": "model.upw",
+          "mixture": "mixture.json"
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_sorts_batches() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample_json()).unwrap();
+        assert_eq!(m.batches, vec![1, 4, 16]);
+        assert_eq!(m.model.dim, 4);
+        assert_eq!(m.param_names, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn batch_selection() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample_json()).unwrap();
+        assert_eq!(m.batch_for(1).unwrap(), 1);
+        assert_eq!(m.batch_for(3).unwrap(), 4);
+        assert_eq!(m.batch_for(16).unwrap(), 16);
+        assert!(m.batch_for(17).is_err());
+    }
+
+    #[test]
+    fn artifact_lookup() {
+        let m = Manifest::from_json(Path::new("/tmp"), &sample_json()).unwrap();
+        assert_eq!(m.artifact("eps", 4).unwrap().file, "eps_b4.hlo.txt");
+        assert!(m.artifact("eps", 2).is_err());
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let v = json::parse(r#"{"model": {}}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp"), &v).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // When `make artifacts` has run, validate the real file end-to-end.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.param_names.is_empty());
+            assert!(m.artifacts.contains_key("eps_b1"));
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT runtime: executes the AOT-compiled JAX/Pallas artifacts from Rust.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so all PJRT
+//! state lives on one dedicated **executor thread** ([`engine`]). That
+//! thread is also the serving stack's *dynamic batcher*: concurrent model
+//! evaluations from all in-flight sampling requests funnel into its queue
+//! and are coalesced into one padded PJRT call (the artifacts take a
+//! per-row timestep vector, so requests at different diffusion steps share
+//! a batch — continuous batching for diffusion).
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (parameter order,
+//!   artifact registry, schedule constants).
+//! * [`engine`] — executor thread + cloneable [`engine::PjrtHandle`];
+//!   [`engine::PjrtModel`] adapts a handle to the [`crate::solver::Model`]
+//!   trait so every solver in this crate can run against the learned model.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{EngineOptions, PjrtHandle, PjrtModel};
+pub use manifest::Manifest;

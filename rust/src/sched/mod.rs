@@ -1,0 +1,202 @@
+//! Noise schedules and timestep selection.
+//!
+//! A diffusion forward process q(x_t|x_0) = N(α_t x_0, σ_t² I) is described
+//! by a [`NoiseSchedule`]: the log-mean coefficient log α_t, the noise level
+//! σ_t, the half log-SNR λ_t = log(α_t/σ_t), and the inverse map t_λ(λ)
+//! used by singlestep solvers to place intermediate nodes (paper §3.1).
+//!
+//! Implementations mirror the schedules of the paper's pre-trained models:
+//! the VP linear-β schedule (ScoreSDE / DDPM / guided-diffusion /
+//! stable-diffusion) and the VP cosine schedule (improved DDPM). The python
+//! mirror (`python/compile/sde.py`) is held to golden-value parity with
+//! this module by `python/tests/test_sde_parity.py`.
+
+pub mod timesteps;
+
+pub use timesteps::{timesteps, TimeSpacing};
+
+/// Continuous-time noise schedule for a VP diffusion.
+pub trait NoiseSchedule: Send + Sync {
+    /// log α_t (the log-mean coefficient of q(x_t | x_0)), t ∈ [0, 1].
+    fn log_alpha(&self, t: f64) -> f64;
+
+    /// α_t.
+    fn alpha(&self, t: f64) -> f64 {
+        self.log_alpha(t).exp()
+    }
+
+    /// σ_t = sqrt(1 − α_t²).
+    fn sigma(&self, t: f64) -> f64 {
+        // Compute in log space to stay accurate as α_t → 1 (t → 0).
+        let la = self.log_alpha(t);
+        (-((2.0 * la).exp_m1())).max(0.0).sqrt()
+    }
+
+    /// Half log-SNR λ_t = log α_t − log σ_t. Strictly decreasing in t.
+    fn lambda(&self, t: f64) -> f64 {
+        let la = self.log_alpha(t);
+        let log_sigma = 0.5 * (-((2.0 * la).exp_m1())).max(f64::MIN_POSITIVE).ln();
+        la - log_sigma
+    }
+
+    /// Inverse of [`NoiseSchedule::lambda`]: the t with λ_t = λ.
+    fn t_of_lambda(&self, lam: f64) -> f64;
+
+    /// Human-readable name (manifests, logs).
+    fn name(&self) -> &'static str;
+}
+
+/// VP SDE with linear β(t) = β₀ + t(β₁ − β₀):
+/// log α_t = −t²(β₁−β₀)/4 − tβ₀/2 (ScoreSDE continuous-time convention).
+#[derive(Clone, Debug)]
+pub struct VpLinear {
+    pub beta_0: f64,
+    pub beta_1: f64,
+}
+
+impl Default for VpLinear {
+    fn default() -> Self {
+        // The DDPM/ScoreSDE defaults used by every checkpoint in the paper.
+        VpLinear { beta_0: 0.1, beta_1: 20.0 }
+    }
+}
+
+impl NoiseSchedule for VpLinear {
+    fn log_alpha(&self, t: f64) -> f64 {
+        -t * t * (self.beta_1 - self.beta_0) / 4.0 - t * self.beta_0 / 2.0
+    }
+
+    fn t_of_lambda(&self, lam: f64) -> f64 {
+        // Closed form (DPM-Solver Appendix): with L = logaddexp(−2λ, 0),
+        //   t = 2L / (sqrt(β₀² + 2(β₁−β₀)L) + β₀).
+        let l = log1p_exp(-2.0 * lam);
+        let tmp = 2.0 * (self.beta_1 - self.beta_0) * l;
+        let delta = self.beta_0 * self.beta_0 + tmp;
+        tmp / ((delta.sqrt() + self.beta_0) * (self.beta_1 - self.beta_0))
+    }
+
+    fn name(&self) -> &'static str {
+        "vp_linear"
+    }
+}
+
+/// VP cosine schedule (Nichol & Dhariwal 2021):
+/// log α_t = log cos(π/2 · (t+s)/(1+s)) − log cos(π/2 · s/(1+s)).
+#[derive(Clone, Debug)]
+pub struct VpCosine {
+    pub s: f64,
+    /// Clip t to [0, t_max] so λ stays finite (cos → 0 at t → 1).
+    pub t_max: f64,
+}
+
+impl Default for VpCosine {
+    fn default() -> Self {
+        VpCosine { s: 0.008, t_max: 0.9946 }
+    }
+}
+
+impl NoiseSchedule for VpCosine {
+    fn log_alpha(&self, t: f64) -> f64 {
+        let t = t.min(self.t_max);
+        let f = |u: f64| (std::f64::consts::FRAC_PI_2 * (u + self.s) / (1.0 + self.s)).cos().ln();
+        f(t) - f(0.0)
+    }
+
+    fn t_of_lambda(&self, lam: f64) -> f64 {
+        // λ = log α − log σ with α = cos(...) / cos(f0). Invert:
+        // log α_t(λ) = −½ log1p(e^{−2λ}) + log cos(f0·π/2-normalized)…
+        // Following the DPM-Solver reference implementation:
+        let log_alpha = -0.5 * log1p_exp(-2.0 * lam);
+        let f0 = (std::f64::consts::FRAC_PI_2 * self.s / (1.0 + self.s)).cos().ln();
+        let inner = (log_alpha + f0).exp().clamp(-1.0, 1.0);
+        let t = 2.0 * (1.0 + self.s) / std::f64::consts::PI * inner.acos() - self.s;
+        t.clamp(0.0, self.t_max)
+    }
+
+    fn name(&self) -> &'static str {
+        "vp_cosine"
+    }
+}
+
+/// log(1 + e^x), overflow-safe.
+fn log1p_exp(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn vp_linear_boundaries() {
+        let s = VpLinear::default();
+        close(s.alpha(0.0), 1.0, 1e-12);
+        close(s.sigma(0.0), 0.0, 1e-9);
+        // At t=1 the marginal is ~N(0, I): α ≈ 0, σ ≈ 1.
+        assert!(s.alpha(1.0) < 0.01);
+        assert!(s.sigma(1.0) > 0.999);
+    }
+
+    #[test]
+    fn lambda_strictly_decreasing() {
+        for sched in [&VpLinear::default() as &dyn NoiseSchedule, &VpCosine::default()] {
+            let mut prev = f64::INFINITY;
+            let mut t = 1e-3;
+            while t <= 0.99 {
+                let l = sched.lambda(t);
+                assert!(l < prev, "{} λ not decreasing at t={t}", sched.name());
+                prev = l;
+                t += 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn vp_linear_lambda_roundtrip() {
+        let s = VpLinear::default();
+        for &t in &[1e-3, 0.05, 0.2, 0.5, 0.8, 1.0] {
+            let lam = s.lambda(t);
+            let t2 = s.t_of_lambda(lam);
+            close(t2, t, 1e-9);
+        }
+    }
+
+    #[test]
+    fn vp_cosine_lambda_roundtrip() {
+        let s = VpCosine::default();
+        for &t in &[1e-3, 0.05, 0.2, 0.5, 0.8, 0.97] {
+            let lam = s.lambda(t);
+            let t2 = s.t_of_lambda(lam);
+            close(t2, t, 1e-6);
+        }
+    }
+
+    #[test]
+    fn alpha_sq_plus_sigma_sq_is_one() {
+        let s = VpLinear::default();
+        for &t in &[0.01, 0.3, 0.7, 1.0] {
+            let a = s.alpha(t);
+            let g = s.sigma(t);
+            close(a * a + g * g, 1.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn golden_values_vp_linear() {
+        // Golden values shared with python/tests/test_sde_parity.py — keep in
+        // sync with python/compile/sde.py.
+        let s = VpLinear::default();
+        close(s.log_alpha(0.5), -0.5 * 0.5 * 19.9 / 4.0 - 0.5 * 0.05, 1e-15);
+        close(s.lambda(1e-3), 4.557714932729898, 1e-9);
+        close(s.lambda(1.0), -5.024978406659204, 1e-9);
+        close(s.lambda(0.5), -1.2275677344107871, 1e-9);
+    }
+}

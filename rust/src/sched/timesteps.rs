@@ -1,0 +1,133 @@
+//! Timestep selection for the sampling loop.
+//!
+//! The paper (following DPM-Solver) places the M+1 grid points uniformly in
+//! half log-SNR λ by default; uniform-in-t and quadratic spacings are kept
+//! for the DDIM/PNDM baselines that traditionally use them.
+
+use super::NoiseSchedule;
+
+/// How to space the sampling grid t_0 = t_start > … > t_M = t_end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeSpacing {
+    /// Uniform in λ (logSNR) — the DPM-Solver/UniPC default.
+    LogSnr,
+    /// Uniform in t.
+    Uniform,
+    /// Quadratic in t (denser near t_end).
+    Quadratic,
+}
+
+impl TimeSpacing {
+    pub fn name(self) -> &'static str {
+        match self {
+            TimeSpacing::LogSnr => "logsnr",
+            TimeSpacing::Uniform => "time_uniform",
+            TimeSpacing::Quadratic => "time_quadratic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "logsnr" => Some(TimeSpacing::LogSnr),
+            "time_uniform" => Some(TimeSpacing::Uniform),
+            "time_quadratic" => Some(TimeSpacing::Quadratic),
+            _ => None,
+        }
+    }
+}
+
+/// Decreasing grid of M+1 timesteps from `t_start` down to `t_end`.
+///
+/// `steps` = M is the number of solver steps, so the returned vector has
+/// `steps + 1` entries with `ts[0] = t_start` and `ts[steps] = t_end`.
+pub fn timesteps(
+    sched: &dyn NoiseSchedule,
+    spacing: TimeSpacing,
+    t_start: f64,
+    t_end: f64,
+    steps: usize,
+) -> Vec<f64> {
+    assert!(steps >= 1, "need at least one step");
+    assert!(t_start > t_end && t_end > 0.0, "need t_start > t_end > 0");
+    let m = steps;
+    let mut ts: Vec<f64> = match spacing {
+        TimeSpacing::LogSnr => {
+            let l0 = sched.lambda(t_start);
+            let l1 = sched.lambda(t_end);
+            (0..=m)
+                .map(|i| {
+                    let lam = l0 + (l1 - l0) * i as f64 / m as f64;
+                    if i == 0 {
+                        t_start
+                    } else if i == m {
+                        t_end
+                    } else {
+                        sched.t_of_lambda(lam)
+                    }
+                })
+                .collect()
+        }
+        TimeSpacing::Uniform => (0..=m)
+            .map(|i| t_start + (t_end - t_start) * i as f64 / m as f64)
+            .collect(),
+        TimeSpacing::Quadratic => {
+            let (a, b) = (t_start.sqrt(), t_end.sqrt());
+            (0..=m)
+                .map(|i| {
+                    let s = a + (b - a) * i as f64 / m as f64;
+                    s * s
+                })
+                .collect()
+        }
+    };
+    // Pin the endpoints bit-exactly (sqrt/exp round-trips drift by ~1 ulp,
+    // and callers key reference solutions on exact t_start/t_end).
+    ts[0] = t_start;
+    ts[m] = t_end;
+    ts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::VpLinear;
+
+    #[test]
+    fn endpoints_and_monotonicity() {
+        let s = VpLinear::default();
+        for spacing in [TimeSpacing::LogSnr, TimeSpacing::Uniform, TimeSpacing::Quadratic] {
+            let ts = timesteps(&s, spacing, 1.0, 1e-3, 10);
+            assert_eq!(ts.len(), 11);
+            assert_eq!(ts[0], 1.0);
+            assert!((ts[10] - 1e-3).abs() < 1e-12);
+            for w in ts.windows(2) {
+                assert!(w[1] < w[0], "{spacing:?} not decreasing: {ts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn logsnr_spacing_is_uniform_in_lambda() {
+        let s = VpLinear::default();
+        let ts = timesteps(&s, TimeSpacing::LogSnr, 1.0, 1e-3, 8);
+        let lams: Vec<f64> = ts.iter().map(|&t| s.lambda(t)).collect();
+        let h0 = lams[1] - lams[0];
+        for w in lams.windows(2) {
+            assert!(((w[1] - w[0]) - h0).abs() < 1e-6, "{lams:?}");
+        }
+    }
+
+    #[test]
+    fn single_step_grid() {
+        let s = VpLinear::default();
+        let ts = timesteps(&s, TimeSpacing::LogSnr, 1.0, 1e-3, 1);
+        assert_eq!(ts.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "t_start > t_end")]
+    fn rejects_bad_range() {
+        let s = VpLinear::default();
+        let _ = timesteps(&s, TimeSpacing::Uniform, 0.5, 0.9, 4);
+    }
+}

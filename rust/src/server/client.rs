@@ -1,0 +1,47 @@
+//! Blocking client for the newline-JSON protocol.
+
+use crate::coordinator::{SampleRequest, SampleResponse};
+use crate::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+/// One connection to a unipc server.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one raw line, get one parsed reply.
+    pub fn raw(&mut self, line: &str) -> Result<Value> {
+        self.stream.write_all(line.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            return Err(anyhow!("server closed connection"));
+        }
+        json::parse(reply.trim()).map_err(|e| anyhow!("bad reply: {e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<bool> {
+        let v = self.raw(r#"{"op":"ping"}"#)?;
+        Ok(v.get("ok").and_then(Value::as_bool).unwrap_or(false))
+    }
+
+    pub fn stats(&mut self) -> Result<Value> {
+        self.raw(r#"{"op":"stats"}"#)
+    }
+
+    pub fn sample(&mut self, req: &SampleRequest) -> Result<SampleResponse> {
+        let v = self.raw(&req.to_json().to_string())?;
+        SampleResponse::from_json(&v)
+    }
+}

@@ -1,0 +1,162 @@
+//! Open-loop Poisson load generator for serving benchmarks.
+//!
+//! Spawns client threads that fire requests at exponentially distributed
+//! inter-arrival times (open-loop: arrivals don't wait for completions, so
+//! queueing behaviour under overload is observable — the honest way to
+//! measure a serving system).
+
+use super::client::Client;
+use crate::coordinator::SampleRequest;
+use crate::rng::Rng;
+use crate::stats::LatencyDigest;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Workload shape.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Target offered load, requests/second (across all connections).
+    pub rps: f64,
+    /// Total requests to send.
+    pub total: usize,
+    /// Client connections (each runs its own arrival process at rps/conns).
+    pub connections: usize,
+    /// Request template; seed is varied per request.
+    pub template: SampleRequest,
+    pub seed: u64,
+}
+
+/// Aggregate results.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub ok: usize,
+    pub rejected: usize,
+    pub wall: Duration,
+    pub latency: LatencyDigest,
+    /// Achieved throughput in samples (images)/second.
+    pub samples_per_sec: f64,
+}
+
+impl LoadReport {
+    pub fn summary(&mut self) -> String {
+        format!(
+            "sent={} ok={} rejected={} wall={:.2}s thpt={:.1} samples/s lat[{}]",
+            self.sent,
+            self.ok,
+            self.rejected,
+            self.wall.as_secs_f64(),
+            self.samples_per_sec,
+            self.latency.summary()
+        )
+    }
+}
+
+/// Run the workload against `addr`.
+pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
+    let started = Instant::now();
+    let ok = Arc::new(AtomicU64::new(0));
+    let rejected = Arc::new(AtomicU64::new(0));
+    let samples = Arc::new(AtomicU64::new(0));
+    let latency = Arc::new(Mutex::new(LatencyDigest::new()));
+
+    let per_conn = cfg.total / cfg.connections;
+    let conn_rps = cfg.rps / cfg.connections as f64;
+    let mut handles = Vec::new();
+    for c in 0..cfg.connections {
+        let addr = addr.to_string();
+        let template = cfg.template.clone();
+        let ok = Arc::clone(&ok);
+        let rejected = Arc::clone(&rejected);
+        let samples = Arc::clone(&samples);
+        let latency = Arc::clone(&latency);
+        let seed = cfg.seed;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut client = Client::connect(&addr)?;
+            let mut rng = Rng::seed_from(seed).split(c as u64 + 1);
+            let t0 = Instant::now();
+            let mut next_at = Duration::ZERO;
+            for i in 0..per_conn {
+                // Open-loop pacing.
+                next_at += Duration::from_secs_f64(rng.exponential(conn_rps));
+                let now = t0.elapsed();
+                if next_at > now {
+                    std::thread::sleep(next_at - now);
+                }
+                let mut req = template.clone();
+                req.seed = seed ^ ((c as u64) << 32) ^ i as u64;
+                let sent = Instant::now();
+                match client.sample(&req) {
+                    Ok(resp) if resp.ok => {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                        samples.fetch_add(req.n as u64, Ordering::Relaxed);
+                        latency.lock().unwrap().record(sent.elapsed());
+                    }
+                    Ok(_) => {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("load thread panicked")?;
+    }
+    let wall = started.elapsed();
+    let latency = Arc::try_unwrap(latency)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+    Ok(LoadReport {
+        sent: per_conn * cfg.connections,
+        ok: ok.load(Ordering::Relaxed) as usize,
+        rejected: rejected.load(Ordering::Relaxed) as usize,
+        wall,
+        samples_per_sec: samples.load(Ordering::Relaxed) as f64 / wall.as_secs_f64(),
+        latency,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::datasets::{dataset, DatasetSpec};
+    use crate::config::ServerConfig;
+    use crate::coordinator::{ModelBackend, Service};
+    use crate::server::Server;
+
+    #[test]
+    fn load_generator_end_to_end() {
+        let gm = Arc::new(dataset(DatasetSpec::BedroomLike));
+        let svc = Service::start(
+            ServerConfig { workers: 2, ..Default::default() },
+            ModelBackend::Analytic {
+                gm,
+                class_components: Arc::new(vec![(0..4).collect()]),
+            },
+        );
+        let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+        let cfg = LoadConfig {
+            rps: 200.0,
+            total: 24,
+            connections: 2,
+            template: SampleRequest {
+                n: 1,
+                steps: 5,
+                return_samples: false,
+                ..Default::default()
+            },
+            seed: 1,
+        };
+        let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
+        assert_eq!(report.sent, 24);
+        assert_eq!(report.ok, 24);
+        assert!(report.samples_per_sec > 0.0);
+        assert!(!report.summary().is_empty());
+        server.stop();
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,199 @@
+//! TCP front end: newline-delimited JSON over a thread-per-connection
+//! listener, a blocking client, and an open-loop Poisson load generator for
+//! the serving benches.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"sample", "n":4, "steps":10, "method":"unipc-3", ...}
+//!   ← {"ok":true, "nfe":10, "samples":[...], ...}
+//!   → {"op":"stats"}   ← metrics snapshot
+//!   → {"op":"ping"}    ← {"ok":true}
+
+pub mod client;
+pub mod loadgen;
+
+pub use client::Client;
+pub use loadgen::{run_load, LoadConfig, LoadReport};
+
+use crate::coordinator::{SampleRequest, Service};
+use crate::json::{self, Value};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running server (owns the listener thread).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind and serve in background threads. `addr` may use port 0 to pick
+    /// a free port (the chosen address is in `self.addr`).
+    pub fn spawn(service: Service, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("unipc-server".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let svc = service.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, svc);
+                            });
+                        }
+                        Err(e) => log::warn!("accept error: {e}"),
+                    }
+                }
+            })
+            .context("spawn server thread")?;
+        log::info!("serving on {local}");
+        Ok(Server { addr: local, stop })
+    }
+
+    /// Ask the accept loop to stop (takes effect on the next connection).
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+fn handle_conn(stream: TcpStream, service: Service) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let reply = dispatch(trimmed, &service);
+        stream.write_all(reply.to_string().as_bytes())?;
+        stream.write_all(b"\n")?;
+    }
+}
+
+fn dispatch(line: &str, service: &Service) -> Value {
+    let parsed = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return Value::obj(vec![
+                ("ok", Value::from(false)),
+                ("error", Value::from(format!("bad json: {e}"))),
+            ])
+        }
+    };
+    match parsed.get("op").and_then(Value::as_str) {
+        Some("ping") => Value::obj(vec![("ok", Value::from(true))]),
+        Some("stats") => service.metrics_json(),
+        Some("sample") => match SampleRequest::from_json(&parsed) {
+            Ok(req) => service.sample_blocking(req).to_json(),
+            Err(e) => Value::obj(vec![
+                ("ok", Value::from(false)),
+                ("error", Value::from(format!("{e:#}"))),
+            ]),
+        },
+        other => Value::obj(vec![
+            ("ok", Value::from(false)),
+            ("error", Value::from(format!("unknown op {other:?}"))),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytic::datasets::{dataset, DatasetSpec};
+    use crate::config::ServerConfig;
+    use crate::coordinator::ModelBackend;
+
+    fn test_server() -> (Server, Service) {
+        let spec = DatasetSpec::BedroomLike;
+        let gm = Arc::new(dataset(spec));
+        let svc = Service::start(
+            ServerConfig { workers: 2, ..Default::default() },
+            ModelBackend::Analytic {
+                gm,
+                class_components: Arc::new(vec![(0..4).collect()]),
+            },
+        );
+        let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+        (server, svc)
+    }
+
+    #[test]
+    fn ping_stats_sample_over_tcp() {
+        let (server, svc) = test_server();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        assert!(client.ping().unwrap());
+
+        let resp = client
+            .sample(&SampleRequest { n: 2, steps: 5, seed: 3, ..Default::default() })
+            .unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.nfe, 5);
+        assert_eq!(resp.samples.unwrap().len(), 2 * svc.dim());
+
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("completed").unwrap().as_f64(), Some(1.0));
+        server.stop();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn malformed_lines_get_error_replies() {
+        let (server, svc) = test_server();
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        let v = c.raw("{not json").unwrap();
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(false));
+        let v = c.raw(r#"{"op":"wat"}"#).unwrap();
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+        // The connection stays usable.
+        assert!(c.ping().unwrap());
+        server.stop();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (server, svc) = test_server();
+        let addr = server.addr.to_string();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    let r = c
+                        .sample(&SampleRequest {
+                            n: 1,
+                            steps: 5,
+                            seed: i,
+                            return_samples: false,
+                            ..Default::default()
+                        })
+                        .unwrap();
+                    assert!(r.ok);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,166 @@
+//! DPM-Solver (Lu et al. 2022a) — singlestep exponential-integrator solvers
+//! for the *noise-prediction* model, orders 2 and 3. Baseline for Tables 5
+//! and 6. DPM-Solver-2 coincides with UniP-2 using B₂(h) = e^h − 1 (§3.3).
+//!
+//! Formulas follow the official reference implementation
+//! (`singlestep_dpm_solver_{second,third}_update`, solver_type="dpmsolver").
+
+use super::{Evaluator, Prediction};
+use crate::numerics::phi::phi;
+use crate::sched::NoiseSchedule;
+use crate::tensor::Tensor;
+
+/// One singlestep DPM-Solver-2 update s → t with intermediate node at
+/// λ_s + r1·h. Costs 1 extra NFE beyond the boundary evaluation `eps_s`.
+pub fn dpm_solver_2_step(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    x: &Tensor,
+    s: f64,
+    t: f64,
+    eps_s: &Tensor,
+    r1: f64,
+) -> Tensor {
+    assert_eq!(ev.prediction(), Prediction::Noise, "DPM-Solver is noise-prediction");
+    let (ls, lt) = (sched.lambda(s), sched.lambda(t));
+    let h = lt - ls;
+    let s1 = sched.t_of_lambda(ls + r1 * h);
+
+    // x_{s1} = (α_{s1}/α_s) x − σ_{s1} (e^{r1 h} − 1) ε_s
+    let x_s1 = Tensor::lincomb(
+        sched.alpha(s1) / sched.alpha(s),
+        x,
+        -sched.sigma(s1) * (r1 * h).exp_m1(),
+        eps_s,
+    );
+    let eps_s1 = ev.eval(&x_s1, s1);
+
+    // x_t = (α_t/α_s) x − σ_t (e^h−1) ε_s − σ_t (e^h−1)/(2 r1) (ε_{s1} − ε_s)
+    let mut out = Tensor::lincomb(
+        sched.alpha(t) / sched.alpha(s),
+        x,
+        -sched.sigma(t) * h.exp_m1(),
+        eps_s,
+    );
+    let d = eps_s1.sub(eps_s);
+    out.axpy(-sched.sigma(t) * h.exp_m1() / (2.0 * r1), &d);
+    out
+}
+
+/// One singlestep DPM-Solver-3 update s → t with nodes at r1, r2 of the λ
+/// interval. Costs 2 extra NFE.
+#[allow(clippy::too_many_arguments)]
+pub fn dpm_solver_3_step(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    x: &Tensor,
+    s: f64,
+    t: f64,
+    eps_s: &Tensor,
+    r1: f64,
+    r2: f64,
+) -> Tensor {
+    assert_eq!(ev.prediction(), Prediction::Noise, "DPM-Solver is noise-prediction");
+    let (ls, lt) = (sched.lambda(s), sched.lambda(t));
+    let h = lt - ls;
+    let s1 = sched.t_of_lambda(ls + r1 * h);
+    let s2 = sched.t_of_lambda(ls + r2 * h);
+
+    let phi_11 = (r1 * h).exp_m1();
+    let phi_12 = (r2 * h).exp_m1();
+    let phi_1 = h.exp_m1();
+    // φ₂-type terms (the reference writes them as expm1 ratios; we use the
+    // stable φ evaluations: e.g. phi_22 = expm1(r2 h)/(r2 h) − 1 = r2 h φ₂(r2 h)).
+    let phi_22 = r2 * h * phi(2, r2 * h);
+    let phi_2 = h * phi(2, h);
+
+    let x_s1 = Tensor::lincomb(
+        sched.alpha(s1) / sched.alpha(s),
+        x,
+        -sched.sigma(s1) * phi_11,
+        eps_s,
+    );
+    let eps_s1 = ev.eval(&x_s1, s1);
+    let d1 = eps_s1.sub(eps_s);
+
+    let mut x_s2 = Tensor::lincomb(
+        sched.alpha(s2) / sched.alpha(s),
+        x,
+        -sched.sigma(s2) * phi_12,
+        eps_s,
+    );
+    x_s2.axpy(-sched.sigma(s2) * (r2 / r1) * phi_22, &d1);
+    let eps_s2 = ev.eval(&x_s2, s2);
+    let d2 = eps_s2.sub(eps_s);
+
+    let mut out = Tensor::lincomb(
+        sched.alpha(t) / sched.alpha(s),
+        x,
+        -sched.sigma(t) * phi_1,
+        eps_s,
+    );
+    out.axpy(-sched.sigma(t) * phi_2 / r2, &d2);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::VpLinear;
+    use crate::solver::history::History;
+    use crate::solver::unipc::{unip_predict, CoeffVariant};
+    use crate::numerics::vandermonde::BFunction;
+    use crate::solver::Model;
+
+    #[test]
+    fn order2_reduces_to_ddim_for_constant_eps() {
+        // With a constant model the correction term vanishes.
+        let sched = VpLinear::default();
+        let m: (Prediction, usize, _) = (
+            Prediction::Noise,
+            2,
+            |x: &Tensor, _t: f64| Tensor::full(x.shape(), 0.3),
+        );
+        let ev = Evaluator::new(&m, &sched, Prediction::Noise, None);
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, -0.5]);
+        let (s, t) = (0.8, 0.5);
+        let eps_s = ev.eval(&x, s);
+        let out = dpm_solver_2_step(&ev, &sched, &x, s, t, &eps_s, 0.5);
+        let h = sched.lambda(t) - sched.lambda(s);
+        let expect = Tensor::lincomb(
+            sched.alpha(t) / sched.alpha(s),
+            &x,
+            -sched.sigma(t) * h.exp_m1(),
+            &eps_s,
+        );
+        for (o, e) in out.data().iter().zip(expect.data()) {
+            assert!((o - e).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn singlestep2_close_to_multistep_unip2_small_h() {
+        // Both are 2nd-order; for the same step they agree to O(h³).
+        let sched = VpLinear::default();
+        let c = 0.45;
+        let m: (Prediction, usize, _) =
+            (Prediction::Noise, 2, move |x: &Tensor, _t: f64| x.scaled(c));
+        let ev = Evaluator::new(&m, &sched, Prediction::Noise, None);
+
+        let (t2, t1, t) = (0.62, 0.6, 0.58);
+        let x_at = |_tv: f64| Tensor::from_vec(&[1, 2], vec![0.7, -0.2]);
+        let x1 = x_at(t1);
+
+        // Multistep UniP-2 with history at t2, t1.
+        let mut hist = History::new(4);
+        hist.push(t2, sched.lambda(t2), ev.eval(&x_at(t2), t2));
+        hist.push(t1, sched.lambda(t1), ev.eval(&x1, t1));
+        let ms = unip_predict(&ev, &sched, &hist, &x1, t, 2, CoeffVariant::Bh(BFunction::Bh2));
+
+        let eps1 = ev.eval(&x1, t1);
+        let ss = dpm_solver_2_step(&ev, &sched, &x1, t1, t, &eps1, 0.5);
+        let h = sched.lambda(t) - sched.lambda(t1);
+        let diff = ms.sub(&ss).max_abs();
+        assert!(diff < 10.0 * h.abs().powi(3), "diff {diff} h {h}");
+    }
+}

@@ -1,0 +1,125 @@
+//! The multistep buffer Q of Algorithms 5–8.
+//!
+//! Stores the last `cap` model outputs with their timesteps and half
+//! log-SNRs, oldest first. Multistep methods read `back(m)` to reach the
+//! output at t_{i−m−1}.
+
+use crate::tensor::Tensor;
+use std::collections::VecDeque;
+
+/// One buffered model evaluation.
+#[derive(Clone, Debug)]
+pub struct HistoryEntry {
+    pub t: f64,
+    pub lambda: f64,
+    /// Model output (in the evaluator's parametrization) at `t`.
+    pub m: Tensor,
+}
+
+/// Ring buffer of the most recent model outputs.
+#[derive(Clone, Debug)]
+pub struct History {
+    entries: VecDeque<HistoryEntry>,
+    cap: usize,
+}
+
+impl History {
+    /// A buffer retaining the `cap` most recent entries (cap ≥ max order).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        History { entries: VecDeque::with_capacity(cap + 1), cap }
+    }
+
+    pub fn push(&mut self, t: f64, lambda: f64, m: Tensor) {
+        if let Some(last) = self.entries.back() {
+            debug_assert!(t < last.t, "history timesteps must strictly decrease");
+        }
+        self.entries.push_back(HistoryEntry { t, lambda, m });
+        while self.entries.len() > self.cap {
+            self.entries.pop_front();
+        }
+    }
+
+    /// Number of buffered entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The most recent entry (at t_{i−1} when stepping to t_i).
+    pub fn last(&self) -> &HistoryEntry {
+        self.entries.back().expect("empty history")
+    }
+
+    /// Entry `m` steps back from the most recent: `back(0) == last()`,
+    /// `back(1)` is at t_{i−2}, etc.
+    pub fn back(&self, m: usize) -> &HistoryEntry {
+        let n = self.entries.len();
+        assert!(m < n, "history back({m}) with only {n} entries");
+        &self.entries[n - 1 - m]
+    }
+
+    /// Replace the most recent entry's model output (oracle corrector:
+    /// re-evaluated at the corrected point).
+    pub fn replace_last(&mut self, m: Tensor) {
+        let last = self.entries.back_mut().expect("empty history");
+        last.m = m;
+    }
+
+    /// Clear all entries (engine reuse between requests).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t1(v: f64) -> Tensor {
+        Tensor::from_slice(&[v])
+    }
+
+    #[test]
+    fn push_and_back_indexing() {
+        let mut h = History::new(3);
+        h.push(0.9, -1.0, t1(1.0));
+        h.push(0.8, -0.5, t1(2.0));
+        h.push(0.7, 0.0, t1(3.0));
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.last().m.data(), &[3.0]);
+        assert_eq!(h.back(0).m.data(), &[3.0]);
+        assert_eq!(h.back(2).m.data(), &[1.0]);
+        assert_eq!(h.back(2).t, 0.9);
+    }
+
+    #[test]
+    fn capacity_evicts_oldest() {
+        let mut h = History::new(2);
+        h.push(0.9, 0.0, t1(1.0));
+        h.push(0.8, 0.1, t1(2.0));
+        h.push(0.7, 0.2, t1(3.0));
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.back(1).m.data(), &[2.0]);
+    }
+
+    #[test]
+    fn replace_last_swaps_output() {
+        let mut h = History::new(2);
+        h.push(0.9, 0.0, t1(1.0));
+        h.replace_last(t1(5.0));
+        assert_eq!(h.last().m.data(), &[5.0]);
+        assert_eq!(h.last().t, 0.9);
+    }
+
+    #[test]
+    #[should_panic(expected = "back(1)")]
+    fn back_out_of_range_panics() {
+        let mut h = History::new(2);
+        h.push(0.9, 0.0, t1(1.0));
+        let _ = h.back(1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Sampling-method registry: every solver the paper evaluates, with a
+//! stable string form used by the CLI, the server protocol, and the bench
+//! harness.
+
+use super::unipc::CoeffVariant;
+use super::Prediction;
+use crate::numerics::vandermonde::BFunction;
+
+pub use super::unipc::CoeffVariant as UniPcCoeffs;
+
+/// A base sampling method (the optional UniC corrector is orthogonal — see
+/// [`super::runner::SampleOptions::unic`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// DDIM (Song et al. 2021a); first-order, either parametrization.
+    Ddim { pred: Prediction },
+    /// UniP-p multistep predictor (this paper). UniPC-p = UniP-p + UniC.
+    /// `schedule`: optional per-step order schedule (Table 4); entries are
+    /// clipped to what the warm-up buffer allows.
+    UniP {
+        order: usize,
+        variant: CoeffVariant,
+        pred: Prediction,
+        schedule: Option<Vec<usize>>,
+    },
+    /// DPM-Solver (2022a) singlestep, order 2 or 3, noise prediction.
+    DpmSolverSingle { order: usize },
+    /// DPM-Solver++ multistep (2M for order 2, 3M for order 3), data
+    /// prediction. Order 1 is DDIM-in-data-space.
+    DpmSolverPp { order: usize },
+    /// DPM-Solver++ singlestep order 3 (3S), data prediction.
+    DpmSolverPp3S,
+    /// PNDM/PLMS pseudo linear multistep, noise prediction.
+    Plms,
+    /// tAB-DEIS of the given order, noise prediction.
+    Deis { order: usize },
+}
+
+impl Method {
+    /// The standard UniPC-p configuration used in the paper's main results
+    /// (pair with `SampleOptions::with_unic`).
+    pub fn unip(order: usize, b: BFunction, pred: Prediction) -> Method {
+        Method::UniP { order, variant: CoeffVariant::Bh(b), pred, schedule: None }
+    }
+
+    /// Which parametrization the evaluator must produce for this method.
+    pub fn prediction(&self) -> Prediction {
+        match self {
+            Method::Ddim { pred } => *pred,
+            Method::UniP { pred, .. } => *pred,
+            Method::DpmSolverSingle { .. } => Prediction::Noise,
+            Method::DpmSolverPp { .. } | Method::DpmSolverPp3S => Prediction::Data,
+            Method::Plms => Prediction::Noise,
+            Method::Deis { .. } => Prediction::Noise,
+        }
+    }
+
+    /// Singlestep methods interpret `steps` as an NFE budget and take
+    /// several model evaluations per solver step.
+    pub fn is_singlestep(&self) -> bool {
+        matches!(self, Method::DpmSolverSingle { .. } | Method::DpmSolverPp3S)
+    }
+
+    /// Nominal order of accuracy of the *base* method (UniC adds one).
+    pub fn order(&self) -> usize {
+        match self {
+            Method::Ddim { .. } => 1,
+            Method::UniP { order, .. } => *order,
+            Method::DpmSolverSingle { order } => *order,
+            Method::DpmSolverPp { order } => *order,
+            Method::DpmSolverPp3S => 3,
+            Method::Plms => 4,
+            Method::Deis { order } => *order,
+        }
+    }
+
+    /// How many history entries the base step can consume.
+    pub fn history_needed(&self) -> usize {
+        match self {
+            Method::Plms => 4,
+            m => m.order().max(1),
+        }
+    }
+
+    /// Stable string form, e.g. `unipc-3-bh2`, `dpmpp-3m`, `deis-2`.
+    pub fn id(&self) -> String {
+        match self {
+            Method::Ddim { pred } => format!("ddim-{}", pred.name()),
+            Method::UniP { order, variant, pred, schedule } => {
+                let base = format!("unip-{order}-{}-{}", variant.name(), pred.name());
+                if schedule.is_some() {
+                    format!("{base}-sched")
+                } else {
+                    base
+                }
+            }
+            Method::DpmSolverSingle { order } => format!("dpm-solver-{order}s"),
+            Method::DpmSolverPp { order } => format!("dpmpp-{order}m"),
+            Method::DpmSolverPp3S => "dpmpp-3s".to_string(),
+            Method::Plms => "pndm".to_string(),
+            Method::Deis { order } => format!("deis-{order}"),
+        }
+    }
+
+    /// Parse the string form produced by [`Method::id`] (plus a few aliases
+    /// used in configs: `ddim`, `unipc-3`, `dpmpp-2m`, …).
+    pub fn parse(s: &str) -> Option<Method> {
+        let parts: Vec<&str> = s.split('-').collect();
+        match parts.as_slice() {
+            ["ddim"] => Some(Method::Ddim { pred: Prediction::Noise }),
+            ["ddim", "noise"] => Some(Method::Ddim { pred: Prediction::Noise }),
+            ["ddim", "data"] => Some(Method::Ddim { pred: Prediction::Data }),
+            ["pndm"] | ["plms"] => Some(Method::Plms),
+            ["dpmpp", "3s"] => Some(Method::DpmSolverPp3S),
+            ["dpmpp", om] if om.ends_with('m') => {
+                let order: usize = om.trim_end_matches('m').parse().ok()?;
+                (1..=3).contains(&order).then_some(Method::DpmSolverPp { order })
+            }
+            ["dpm", "solver", os] if os.ends_with('s') => {
+                let order: usize = os.trim_end_matches('s').parse().ok()?;
+                (2..=3).contains(&order).then_some(Method::DpmSolverSingle { order })
+            }
+            ["deis", o] => Some(Method::Deis { order: o.parse().ok()? }),
+            ["unip", rest @ ..] | ["unipc", rest @ ..] => {
+                let order: usize = rest.first()?.parse().ok()?;
+                let mut variant = CoeffVariant::Bh(BFunction::Bh2);
+                let mut pred = Prediction::Noise;
+                for tok in &rest[1..] {
+                    match *tok {
+                        "bh1" => variant = CoeffVariant::Bh(BFunction::Bh1),
+                        "bh2" => variant = CoeffVariant::Bh(BFunction::Bh2),
+                        "vary" => variant = CoeffVariant::Varying,
+                        "noise" => pred = Prediction::Noise,
+                        "data" => pred = Prediction::Data,
+                        _ => return None,
+                    }
+                }
+                Some(Method::UniP { order, variant, pred, schedule: None })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Split an NFE budget into singlestep group orders, following the official
+/// DPM-Solver `get_orders_and_timesteps_for_singlestep_solver`.
+pub fn singlestep_orders(max_order: usize, nfe: usize) -> Vec<usize> {
+    assert!(nfe >= 1);
+    match max_order {
+        3 => match nfe % 3 {
+            0 => {
+                let mut v = vec![3; nfe / 3 - 1];
+                v.extend([2, 1]);
+                v
+            }
+            1 => {
+                let mut v = vec![3; nfe / 3];
+                v.push(1);
+                v
+            }
+            _ => {
+                let mut v = vec![3; nfe / 3];
+                v.push(2);
+                v
+            }
+        },
+        2 => {
+            if nfe % 2 == 0 {
+                vec![2; nfe / 2]
+            } else {
+                let mut v = vec![2; nfe / 2];
+                v.push(1);
+                v
+            }
+        }
+        1 => vec![1; nfe],
+        _ => panic!("singlestep orders supported up to 3"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_parse_roundtrip() {
+        let methods = [
+            Method::Ddim { pred: Prediction::Noise },
+            Method::unip(3, BFunction::Bh1, Prediction::Noise),
+            Method::unip(2, BFunction::Bh2, Prediction::Data),
+            Method::UniP {
+                order: 3,
+                variant: CoeffVariant::Varying,
+                pred: Prediction::Noise,
+                schedule: None,
+            },
+            Method::DpmSolverSingle { order: 3 },
+            Method::DpmSolverPp { order: 2 },
+            Method::DpmSolverPp3S,
+            Method::Plms,
+            Method::Deis { order: 2 },
+        ];
+        for m in methods {
+            let parsed = Method::parse(&m.id()).unwrap_or_else(|| panic!("parse {}", m.id()));
+            assert_eq!(parsed, m, "{}", m.id());
+        }
+    }
+
+    #[test]
+    fn aliases_parse() {
+        assert_eq!(Method::parse("ddim").unwrap(), Method::Ddim { pred: Prediction::Noise });
+        assert_eq!(
+            Method::parse("unipc-3").unwrap(),
+            Method::unip(3, BFunction::Bh2, Prediction::Noise)
+        );
+        assert!(Method::parse("nope").is_none());
+    }
+
+    #[test]
+    fn singlestep_orders_sum_to_nfe() {
+        for nfe in 1..=30 {
+            for order in 1..=3 {
+                let v = singlestep_orders(order, nfe);
+                assert_eq!(v.iter().sum::<usize>(), nfe, "order {order} nfe {nfe}: {v:?}");
+                assert!(v.iter().all(|&k| k >= 1 && k <= order));
+            }
+        }
+    }
+
+    #[test]
+    fn predictions_match_paper_conventions() {
+        assert_eq!(Method::DpmSolverSingle { order: 2 }.prediction(), Prediction::Noise);
+        assert_eq!(Method::DpmSolverPp { order: 3 }.prediction(), Prediction::Data);
+        assert_eq!(Method::Plms.prediction(), Prediction::Noise);
+    }
+}

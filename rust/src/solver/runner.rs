@@ -1,0 +1,572 @@
+//! The sampling loop: drives any [`Method`] over a timestep grid, optionally
+//! wrapping every step with the UniC corrector (Algorithm 5/7), with warm-up,
+//! order schedules, oracle mode, NFE accounting, and trajectory capture.
+//!
+//! NFE conventions (paper §4, Appendix F.1):
+//! * multistep methods: `steps` solver steps cost exactly `steps` NFE
+//!   (one evaluation at t_0..t_{M−1}; none at t_M);
+//! * UniC adds **no** NFE: the evaluation at the predicted point is reused
+//!   as the next step's buffer entry, and the corrector is skipped after the
+//!   final predictor step;
+//! * UniC-oracle re-evaluates at the corrected point (≈2× NFE, Table 3);
+//! * singlestep methods interpret `steps` as an NFE budget, split into
+//!   groups via [`super::method::singlestep_orders`].
+
+use super::ddim::{ddim_step, ddim_transfer};
+use super::deis::deis_step;
+use super::dpm_solver::{dpm_solver_2_step, dpm_solver_3_step};
+use super::dpm_solverpp::{dpmpp_2m_step, dpmpp_3m_step, dpmpp_3s_step};
+use super::history::History;
+use super::method::{singlestep_orders, Method};
+use super::pndm::plms_step;
+use super::thresholding::DynamicThresholding;
+use super::unipc::{unic_correct_with, unip_predict, CoeffVariant};
+use super::{Evaluator, Model, Prediction};
+use crate::numerics::vandermonde::BFunction;
+use crate::sched::{timesteps, NoiseSchedule, TimeSpacing};
+use crate::tensor::Tensor;
+
+/// UniC configuration (applied after any base method).
+#[derive(Clone, Copy, Debug)]
+pub struct UniCOptions {
+    pub variant: CoeffVariant,
+    /// Re-evaluate the model at the corrected point for the buffer
+    /// (UniC-oracle, Table 3). Costs one extra NFE per corrected step.
+    pub oracle: bool,
+}
+
+impl Default for UniCOptions {
+    fn default() -> Self {
+        UniCOptions { variant: CoeffVariant::Bh(BFunction::Bh2), oracle: false }
+    }
+}
+
+/// Full sampling configuration.
+#[derive(Clone, Debug)]
+pub struct SampleOptions {
+    /// Solver steps (multistep) or NFE budget (singlestep).
+    pub steps: usize,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub spacing: TimeSpacing,
+    pub method: Method,
+    /// Apply UniC after every base step ("+UniC" / UniPC).
+    pub unic: Option<UniCOptions>,
+    /// Dynamic thresholding for data-prediction evaluations (§3.4).
+    pub thresholding: Option<DynamicThresholding>,
+    /// Record (t, x_t) after every step.
+    pub capture_trajectory: bool,
+    /// Replace the first p−1 steps with a high-accuracy RK4 sub-integration
+    /// (Assumption D.4's O(h^k)-accurate starting values). Production
+    /// sampling uses the standard low-order warm-up exactly like the
+    /// official implementation; this mode exists for the order-of-convergence
+    /// experiments, where warm-up error would otherwise dominate the slope.
+    /// RK4 sub-steps are not counted in `nfe`.
+    pub exact_warmup: bool,
+}
+
+impl SampleOptions {
+    pub fn new(method: Method, steps: usize) -> Self {
+        SampleOptions {
+            steps,
+            t_start: 1.0,
+            t_end: 1e-3,
+            spacing: TimeSpacing::LogSnr,
+            method,
+            unic: None,
+            thresholding: None,
+            capture_trajectory: false,
+            exact_warmup: false,
+        }
+    }
+
+    /// The paper's UniPC-p: UniP-p + UniC-p with the same coefficients.
+    pub fn unipc(order: usize, b: BFunction, pred: Prediction, steps: usize) -> Self {
+        let mut o = SampleOptions::new(Method::unip(order, b, pred), steps);
+        o.unic = Some(UniCOptions { variant: CoeffVariant::Bh(b), oracle: false });
+        o
+    }
+
+    pub fn with_unic(mut self, variant: CoeffVariant, oracle: bool) -> Self {
+        self.unic = Some(UniCOptions { variant, oracle });
+        self
+    }
+
+    pub fn with_range(mut self, t_start: f64, t_end: f64) -> Self {
+        self.t_start = t_start;
+        self.t_end = t_end;
+        self
+    }
+
+    /// A descriptive id for logs/benches, e.g. `unip-3-bh2-noise+unic`.
+    pub fn id(&self) -> String {
+        let mut s = self.method.id();
+        if let Some(u) = &self.unic {
+            s.push_str(if u.oracle { "+unic-oracle" } else { "+unic" });
+        }
+        s
+    }
+}
+
+/// Result of a sampling run.
+#[derive(Clone, Debug)]
+pub struct SampleResult {
+    /// State at t_end.
+    pub x: Tensor,
+    /// Model evaluations actually performed.
+    pub nfe: usize,
+    /// (t, x_t) after every solver step, if requested.
+    pub trajectory: Option<Vec<(f64, Tensor)>>,
+}
+
+/// Run the configured sampler from `x_init` (at `t_start`) down to `t_end`.
+pub fn sample(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    x_init: &Tensor,
+    opts: &SampleOptions,
+) -> SampleResult {
+    let ev = Evaluator::new(model, sched, opts.method.prediction(), opts.thresholding);
+    if opts.method.is_singlestep() {
+        sample_singlestep(&ev, sched, x_init, opts)
+    } else {
+        sample_multistep(model, &ev, sched, x_init, opts)
+    }
+}
+
+/// Effective UniP order at step `i` (1-based) given warm-up and an optional
+/// custom order schedule (Table 4). The final-step damping to lower orders
+/// follows the DPM-Solver++ convention: the default schedule keeps `order`
+/// until the last steps where fewer future steps remain.
+fn effective_order(
+    method_order: usize,
+    schedule: Option<&[usize]>,
+    i: usize,
+    hist_len: usize,
+) -> usize {
+    let want = schedule
+        .and_then(|s| s.get(i - 1).copied())
+        .unwrap_or(method_order);
+    want.max(1).min(hist_len).min(i)
+}
+
+fn sample_multistep(
+    model: &dyn Model,
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    x_init: &Tensor,
+    opts: &SampleOptions,
+) -> SampleResult {
+    let m_steps = opts.steps;
+    let ts = timesteps(sched, opts.spacing, opts.t_start, opts.t_end, m_steps);
+    let mut hist = History::new(opts.method.history_needed().max(
+        opts.unic.map(|_| opts.method.order()).unwrap_or(0),
+    ));
+    let mut traj = opts.capture_trajectory.then(Vec::new);
+
+    let mut x = x_init.clone();
+    hist.push(ts[0], sched.lambda(ts[0]), ev.eval(&x, ts[0]));
+
+    // Exact warm-up (order experiments): advance the first p−1 steps along a
+    // high-accuracy trajectory so the multistep buffer starts O(h^p)-accurate.
+    let mut start = 1usize;
+    if opts.exact_warmup && model.prediction() == Prediction::Noise {
+        let p = opts.method.order().min(m_steps);
+        for i in 1..p {
+            x = crate::analytic::reference_solution(model, sched, &x, ts[i - 1], ts[i], 64);
+            hist.push(ts[i], sched.lambda(ts[i]), ev.eval(&x, ts[i]));
+            if let Some(tr) = traj.as_mut() {
+                tr.push((ts[i], x.clone()));
+            }
+        }
+        start = p;
+    }
+
+    for i in start..=m_steps {
+        let t = ts[i];
+        let last_step = i == m_steps;
+
+        let p_i = effective_order(
+            opts.method.order(),
+            match &opts.method {
+                Method::UniP { schedule, .. } => schedule.as_deref(),
+                _ => None,
+            },
+            i,
+            hist.len(),
+        );
+
+        let x_pred = match &opts.method {
+            Method::Ddim { .. } => ddim_step(ev, sched, &hist, &x, t),
+            Method::UniP { variant, .. } => unip_predict(ev, sched, &hist, &x, t, p_i, *variant),
+            Method::DpmSolverPp { .. } => match p_i {
+                1 => ddim_step(ev, sched, &hist, &x, t),
+                2 => dpmpp_2m_step(ev, sched, &hist, &x, t),
+                _ => dpmpp_3m_step(ev, sched, &hist, &x, t),
+            },
+            Method::Plms => plms_step(ev, sched, &hist, &x, t),
+            Method::Deis { order } => deis_step(ev, sched, &hist, &x, t, (*order).min(i)),
+            m => unreachable!("singlestep method {m:?} in multistep loop"),
+        };
+
+        x = match (&opts.unic, last_step) {
+            (Some(unic), false) => {
+                // Corrector order matches the base step's effective order
+                // (Theorem 3.1 then gives accuracy p_i + 1).
+                let m_t = ev.eval(&x_pred, t);
+                let x_c =
+                    unic_correct_with(ev, sched, &hist, &x, &m_t, t, p_i, unic.variant);
+                let m_buf = if unic.oracle { ev.eval(&x_c, t) } else { m_t };
+                hist.push(t, sched.lambda(t), m_buf);
+                x_c
+            }
+            _ => {
+                if !last_step {
+                    hist.push(t, sched.lambda(t), ev.eval(&x_pred, t));
+                }
+                x_pred
+            }
+        };
+
+        if let Some(tr) = traj.as_mut() {
+            tr.push((t, x.clone()));
+        }
+    }
+
+    SampleResult { x, nfe: ev.nfe(), trajectory: traj }
+}
+
+fn sample_singlestep(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    x_init: &Tensor,
+    opts: &SampleOptions,
+) -> SampleResult {
+    let nfe_budget = opts.steps;
+    let max_order = opts.method.order();
+    let orders = singlestep_orders(max_order, nfe_budget);
+    // Fine grid with one interval per NFE; groups span `k` intervals, so the
+    // interior nodes coincide with fine-grid points (λ-uniform spacing gives
+    // the canonical r1 = 1/3, r2 = 2/3).
+    let fine = timesteps(sched, opts.spacing, opts.t_start, opts.t_end, nfe_budget);
+    let mut traj = opts.capture_trajectory.then(Vec::new);
+
+    let mut x = x_init.clone();
+    let mut hist = History::new(max_order + 1); // group-boundary outputs for UniC
+    let mut idx = 0usize;
+    let mut m_s: Option<Tensor> = None;
+
+    for (g, &k) in orders.iter().enumerate() {
+        let t_s = fine[idx];
+        let t_t = fine[idx + k];
+        let last_group = g + 1 == orders.len();
+
+        let m_start = match m_s.take() {
+            Some(m) => m,
+            None => ev.eval(&x, t_s),
+        };
+        if hist.is_empty() || hist.last().t > t_s {
+            hist.push(t_s, sched.lambda(t_s), m_start.clone());
+        }
+
+        let h = sched.lambda(t_t) - sched.lambda(t_s);
+        let rs: Vec<f64> = (1..k)
+            .map(|j| (sched.lambda(fine[idx + j]) - sched.lambda(t_s)) / h)
+            .collect();
+
+        let x_pred = match (&opts.method, k) {
+            (_, 1) => ddim_transfer(ev.prediction(), sched, &x, t_s, t_t, &m_start),
+            (Method::DpmSolverSingle { .. }, 2) => {
+                dpm_solver_2_step(ev, sched, &x, t_s, t_t, &m_start, rs[0])
+            }
+            (Method::DpmSolverSingle { .. }, _) => {
+                dpm_solver_3_step(ev, sched, &x, t_s, t_t, &m_start, rs[0], rs[1])
+            }
+            (Method::DpmSolverPp3S, 2) => {
+                // 2-interval tail group: second-order singlestep via the
+                // data-prediction midpoint form (reference 2S with r1 = rs[0]).
+                dpmpp_2s_step(ev, sched, &x, t_s, t_t, &m_start, rs[0])
+            }
+            (Method::DpmSolverPp3S, _) => {
+                dpmpp_3s_step(ev, sched, &x, t_s, t_t, &m_start, rs[0], rs[1])
+            }
+            (m, _) => unreachable!("multistep method {m:?} in singlestep loop"),
+        };
+
+        x = match (&opts.unic, last_group) {
+            (Some(unic), false) => {
+                let p = k.min(hist.len());
+                let m_t = ev.eval(&x_pred, t_t);
+                let x_c =
+                    unic_correct_with(ev, sched, &hist, &x, &m_t, t_t, p, unic.variant);
+                let m_next = if unic.oracle { ev.eval(&x_c, t_t) } else { m_t };
+                hist.push(t_t, sched.lambda(t_t), m_next.clone());
+                m_s = Some(m_next);
+                x_c
+            }
+            _ => {
+                if !last_group {
+                    let m_next = ev.eval(&x_pred, t_t);
+                    hist.push(t_t, sched.lambda(t_t), m_next.clone());
+                    m_s = Some(m_next);
+                }
+                x_pred
+            }
+        };
+
+        if let Some(tr) = traj.as_mut() {
+            tr.push((t_t, x.clone()));
+        }
+        idx += k;
+    }
+
+    SampleResult { x, nfe: ev.nfe(), trajectory: traj }
+}
+
+/// DPM-Solver++ singlestep second-order update (reference `2S`): used for
+/// 2-interval tail groups of the 3S budget split.
+fn dpmpp_2s_step(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    x: &Tensor,
+    s: f64,
+    t: f64,
+    m_s: &Tensor,
+    r1: f64,
+) -> Tensor {
+    let (ls, lt) = (sched.lambda(s), sched.lambda(t));
+    let h = lt - ls;
+    let s1 = sched.t_of_lambda(ls + r1 * h);
+    let phi_11 = (-r1 * h).exp_m1();
+    let phi_1 = (-h).exp_m1();
+
+    let x_s1 = Tensor::lincomb(
+        sched.sigma(s1) / sched.sigma(s),
+        x,
+        -sched.alpha(s1) * phi_11,
+        m_s,
+    );
+    let m_s1 = ev.eval(&x_s1, s1);
+    let d1 = m_s1.sub(m_s);
+    let mut out = Tensor::lincomb(
+        sched.sigma(t) / sched.sigma(s),
+        x,
+        -sched.alpha(t) * phi_1,
+        m_s,
+    );
+    out.axpy(-sched.alpha(t) * phi_1 / (2.0 * r1), &d1);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ε(x,t) = c·x keeps the ODE linear so every method must land near the
+    /// exact solution for enough steps.
+    fn linear_model(c: f64) -> impl Model {
+        (Prediction::Noise, 2, move |x: &Tensor, _t: f64| x.scaled(c))
+    }
+
+    fn x0() -> Tensor {
+        Tensor::from_vec(&[1, 2], vec![0.8, -0.6])
+    }
+
+    #[test]
+    fn multistep_nfe_equals_steps() {
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.3);
+        for steps in [1usize, 2, 5, 10] {
+            let opts = SampleOptions::new(
+                Method::unip(3, BFunction::Bh2, Prediction::Noise),
+                steps,
+            );
+            let r = sample(&m, &sched, &x0(), &opts);
+            assert_eq!(r.nfe, steps, "steps {steps}");
+        }
+    }
+
+    #[test]
+    fn unic_adds_no_nfe() {
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.3);
+        let steps = 8;
+        let base = SampleOptions::new(Method::unip(3, BFunction::Bh2, Prediction::Noise), steps);
+        let with_c = base.clone().with_unic(CoeffVariant::Bh(BFunction::Bh2), false);
+        assert_eq!(sample(&m, &sched, &x0(), &base).nfe, steps);
+        assert_eq!(sample(&m, &sched, &x0(), &with_c).nfe, steps);
+    }
+
+    #[test]
+    fn oracle_roughly_doubles_nfe() {
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.3);
+        let steps = 6;
+        let opts = SampleOptions::new(Method::unip(2, BFunction::Bh2, Prediction::Noise), steps)
+            .with_unic(CoeffVariant::Bh(BFunction::Bh2), true);
+        let r = sample(&m, &sched, &x0(), &opts);
+        assert_eq!(r.nfe, 2 * steps - 1, "oracle re-evaluates all but the last step");
+    }
+
+    #[test]
+    fn singlestep_nfe_equals_budget() {
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.3);
+        for nfe in [3usize, 5, 6, 8, 10] {
+            for method in [Method::DpmSolverSingle { order: 3 }, Method::DpmSolverPp3S] {
+                let opts = SampleOptions::new(method.clone(), nfe);
+                let r = sample(&m, &sched, &x0(), &opts);
+                assert_eq!(r.nfe, nfe, "{} nfe {nfe}", method.id());
+            }
+        }
+    }
+
+    #[test]
+    fn all_methods_run_and_stay_finite() {
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.4);
+        let methods = [
+            Method::Ddim { pred: Prediction::Noise },
+            Method::Ddim { pred: Prediction::Data },
+            Method::unip(2, BFunction::Bh1, Prediction::Noise),
+            Method::unip(3, BFunction::Bh2, Prediction::Data),
+            Method::UniP {
+                order: 3,
+                variant: CoeffVariant::Varying,
+                pred: Prediction::Noise,
+                schedule: None,
+            },
+            Method::DpmSolverSingle { order: 2 },
+            Method::DpmSolverSingle { order: 3 },
+            Method::DpmSolverPp { order: 2 },
+            Method::DpmSolverPp { order: 3 },
+            Method::DpmSolverPp3S,
+            Method::Plms,
+            Method::Deis { order: 2 },
+        ];
+        for method in methods {
+            let opts = SampleOptions::new(method.clone(), 8);
+            let r = sample(&m, &sched, &x0(), &opts);
+            assert!(
+                r.x.data().iter().all(|v| v.is_finite()),
+                "{} produced non-finite output",
+                method.id()
+            );
+        }
+    }
+
+    #[test]
+    fn order_schedule_is_respected_via_trajectory_shape() {
+        // A schedule of all-ones must reproduce DDIM exactly.
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.35);
+        let steps = 6;
+        let sched_opts = SampleOptions::new(
+            Method::UniP {
+                order: 3,
+                variant: CoeffVariant::Bh(BFunction::Bh2),
+                pred: Prediction::Noise,
+                schedule: Some(vec![1; steps]),
+            },
+            steps,
+        );
+        let ddim_opts = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, steps);
+        let a = sample(&m, &sched, &x0(), &sched_opts);
+        let b = sample(&m, &sched, &x0(), &ddim_opts);
+        for (av, bv) in a.x.data().iter().zip(b.x.data()) {
+            assert!((av - bv).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trajectory_capture_length() {
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.3);
+        let mut opts = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 5);
+        opts.capture_trajectory = true;
+        let r = sample(&m, &sched, &x0(), &opts);
+        assert_eq!(r.trajectory.unwrap().len(), 5);
+    }
+
+    #[test]
+    fn linear_ode_exact_solution_reached() {
+        // For ε = c·x the λ-domain ODE is linear; the RK4 reference is
+        // machine-precision truth. UniPC-3 @ 32 steps must beat DDIM @ 32
+        // by a wide margin.
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.5);
+        let truth = crate::analytic::reference_solution(&m, &sched, &x0(), 1.0, 1e-3, 4000);
+        let ddim32 = sample(
+            &m,
+            &sched,
+            &x0(),
+            &SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 32),
+        )
+        .x;
+        let unipc32 = sample(
+            &m,
+            &sched,
+            &x0(),
+            &SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 32),
+        )
+        .x;
+        let e_ddim = ddim32.sub(&truth).norm();
+        let e_unipc = unipc32.sub(&truth).norm();
+        assert!(
+            e_unipc < e_ddim / 25.0,
+            "unipc {e_unipc} should beat ddim {e_ddim} by ≫"
+        );
+    }
+
+    #[test]
+    fn empirical_convergence_orders() {
+        // Thm 3.1 / Cor 3.2 / Prop D.5–D.6: with exact warm-up, doubling the
+        // step count should shrink the error by ~2^p (UniP-p) and ~2^{p+1}
+        // (UniPC-p). Slopes are measured over a dyadic sweep in the
+        // asymptotic regime.
+        let sched = crate::sched::VpLinear::default();
+        let m = linear_model(0.5);
+        let truth = crate::analytic::reference_solution(&m, &sched, &x0(), 1.0, 1e-3, 8000);
+
+        let err = |opts: &SampleOptions| sample(&m, &sched, &x0(), opts).x.sub(&truth).norm();
+        let slope = |mk: &dyn Fn(usize) -> SampleOptions| -> f64 {
+            let grid = [160usize, 320, 640, 1280];
+            let es: Vec<f64> = grid.iter().map(|&s| err(&mk(s))).collect();
+            // Least-squares slope of log2(e) against log2(steps).
+            let n = grid.len() as f64;
+            let xs: Vec<f64> = grid.iter().map(|&s| (s as f64).log2()).collect();
+            let ys: Vec<f64> = es.iter().map(|e| e.log2()).collect();
+            let mx = xs.iter().sum::<f64>() / n;
+            let my = ys.iter().sum::<f64>() / n;
+            let num: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+            let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+            -num / den
+        };
+
+        let unip = |p: usize| {
+            move |steps: usize| {
+                let mut o = SampleOptions::new(
+                    Method::unip(p, BFunction::Bh2, Prediction::Noise),
+                    steps,
+                );
+                o.exact_warmup = true;
+                o
+            }
+        };
+        let unipc = |p: usize| {
+            move |steps: usize| {
+                let mut o = SampleOptions::unipc(p, BFunction::Bh2, Prediction::Noise, steps);
+                o.exact_warmup = true;
+                o
+            }
+        };
+
+        let s_p2 = slope(&unip(2));
+        let s_p3 = slope(&unip(3));
+        let s_pc2 = slope(&unipc(2));
+        assert!((1.6..=2.6).contains(&s_p2), "UniP-2 slope {s_p2}");
+        assert!((2.5..=3.7).contains(&s_p3), "UniP-3 slope {s_p3}");
+        assert!((2.5..=3.8).contains(&s_pc2), "UniPC-2 slope {s_pc2}");
+        assert!(s_pc2 > s_p2 + 0.5, "corrector must raise the order: {s_p2} -> {s_pc2}");
+    }
+}

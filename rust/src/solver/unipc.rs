@@ -1,0 +1,395 @@
+//! UniP-p / UniC-p / UniPC-p — the paper's unified predictor-corrector
+//! (§3.1–3.2, Eq. 3/8/9, Algorithms 5–8), plus the varying-coefficient
+//! variant UniPC_v (Appendix C).
+//!
+//! Both prediction parametrizations share one implementation through the
+//! signed step `hh` (+h for noise prediction, −h for data prediction):
+//! ψ_k(h) = φ_k(−h), so the data-prediction system of Proposition A.1 is
+//! the noise-prediction system evaluated at −h, with the (α, σ) prefactors
+//! swapped. This mirrors the official reference implementation and is
+//! verified against the paper's explicit formulas in the tests below.
+//!
+//! Multistep node placement (§3.4): r_m = (λ_{t_{i−m−1}} − λ_{t_{i−1}})/h_i
+//! for m = 1..p−1 (all negative), and r_p = 1 for the corrector.
+
+use super::history::History;
+use super::{Evaluator, Prediction};
+use crate::numerics::phi::phi;
+use crate::numerics::vandermonde::{unipc_coeffs, BFunction};
+use crate::numerics::lu;
+use crate::sched::NoiseSchedule;
+use crate::tensor::{weighted_sum, Tensor};
+
+/// How the combination coefficients are derived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CoeffVariant {
+    /// Theorem 3.1: a_p = R_p⁻¹(h) φ_p(h) / B(h).
+    Bh(BFunction),
+    /// Appendix C (UniPC_v): A_p = C_p⁻¹, coefficients independent of h.
+    Varying,
+}
+
+impl CoeffVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoeffVariant::Bh(BFunction::Bh1) => "bh1",
+            CoeffVariant::Bh(BFunction::Bh2) => "bh2",
+            CoeffVariant::Varying => "vary",
+        }
+    }
+}
+
+/// Effective residual coefficients c_m such that the update subtracts
+/// (σ_t or α_t) · Σ_m c_m · (D_m / r_m):
+/// * Bh variant: c_m = B(hh) · a_m with a from Theorem 3.1;
+/// * Varying variant: c_m = Σ_n hh φ_{n+1}(hh) A_p[n][m] with A_p = C_p⁻¹.
+pub fn residual_coeffs(rks: &[f64], hh: f64, variant: CoeffVariant) -> Vec<f64> {
+    let q = rks.len();
+    match variant {
+        CoeffVariant::Bh(b) => {
+            let bh = b.eval(hh);
+            unipc_coeffs(rks, hh, b).into_iter().map(|a| a * bh).collect()
+        }
+        CoeffVariant::Varying => {
+            // C_p[k][m] = r_m^k / (k+1)!  for k = 0..q-1 (1-indexed: r^{k−1}/k!).
+            let mut c = vec![0.0; q * q];
+            let mut fact = 1.0;
+            for k in 0..q {
+                fact *= (k + 1) as f64;
+                for (m, &r) in rks.iter().enumerate() {
+                    c[k * q + m] = r.powi(k as i32) / fact;
+                }
+            }
+            let a = lu::invert(&c, q).expect("C_p is invertible for distinct r");
+            // Eq. 12 / Appendix E.5: the D_m/r_m coefficient is
+            // Σ_n hh φ_{n+1}(hh) A_{m,n} with A = C_p⁻¹ indexed (row m,
+            // column n) — note the order: node index first, derivative
+            // order second (the E.5 expansion needs Σ_m A_{m,k} r_m^{n−1}/n!
+            // = δ_{kn}, i.e. Cᵀ-orientation of the identity).
+            (0..q)
+                .map(|m| {
+                    (0..q)
+                        .map(|n| hh * phi(n + 2, hh) * a[m * q + n])
+                        .sum()
+                })
+                .collect()
+        }
+    }
+}
+
+/// Shared per-step geometry for a multistep UniPC update t_prev → t.
+struct StepGeometry {
+    /// Signed step: +h for noise prediction, −h for data prediction.
+    hh: f64,
+    /// Normalized previous-node positions r_1..r_{p−1} (negative), then 1.
+    rks: Vec<f64>,
+    /// D_m / r_m for the historical nodes (m = 1..p−1).
+    d1s: Vec<Tensor>,
+    /// The linear part x_t^{(1)} of Algorithms 5–8.
+    x_linear: Tensor,
+    /// −σ_t (noise) or −α_t (data): multiplies the residual sum.
+    residual_scale: f64,
+}
+
+fn step_geometry(
+    sched: &dyn NoiseSchedule,
+    pred: Prediction,
+    hist: &History,
+    x: &Tensor,
+    t: f64,
+    p: usize,
+) -> StepGeometry {
+    assert!(p >= 1);
+    assert!(hist.len() >= p, "order {p} needs {p} buffered evaluations");
+    let prev = hist.last();
+    let (t0, l0) = (prev.t, prev.lambda);
+    let lt = sched.lambda(t);
+    let h = lt - l0;
+    debug_assert!(h > 0.0, "sampling must increase λ");
+
+    let mut rks = Vec::with_capacity(p);
+    let mut d1s = Vec::with_capacity(p - 1);
+    for m in 1..p {
+        let e = hist.back(m);
+        let r = (e.lambda - l0) / h;
+        rks.push(r);
+        // D_m / r_m = (m_{i−m−1} − m₀) / r_m
+        let mut d = e.m.sub(&prev.m);
+        d.scale(1.0 / r);
+        d1s.push(d);
+    }
+    rks.push(1.0);
+
+    let (hh, x_linear, residual_scale) = match pred {
+        Prediction::Noise => {
+            let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
+            let a0 = sched.alpha(t0);
+            // x^{(1)} = (α_t/α_s) x − σ_t (e^h − 1) ε₀     (Alg. 6)
+            let xl = Tensor::lincomb(a_t / a0, x, -s_t * h.exp_m1(), &prev.m);
+            (h, xl, -s_t)
+        }
+        Prediction::Data => {
+            let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
+            let s0 = sched.sigma(t0);
+            // x^{(1)} = (σ_t/σ_s) x + α_t (1 − e^{−h}) x₀  (Alg. 8)
+            let xl = Tensor::lincomb(s_t / s0, x, a_t * (-(-h).exp_m1()), &prev.m);
+            (-h, xl, -a_t)
+        }
+    };
+    StepGeometry { hh, rks, d1s, x_linear, residual_scale }
+}
+
+/// UniP-p multistep predictor (Algorithm 6/8): one step t_prev → t using
+/// only the buffered history. `p = 1` reduces exactly to DDIM (§3.3).
+pub fn unip_predict(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    hist: &History,
+    x: &Tensor,
+    t: f64,
+    p: usize,
+    variant: CoeffVariant,
+) -> Tensor {
+    let g = step_geometry(sched, ev.prediction(), hist, x, t, p);
+    if p == 1 {
+        return g.x_linear;
+    }
+    // Corollary 3.2: drop D_p — solve the (p−1)-node system.
+    let coeffs = residual_coeffs(&g.rks[..p - 1], g.hh, variant);
+    let refs: Vec<&Tensor> = g.d1s.iter().collect();
+    let res = weighted_sum(&coeffs, &refs);
+    let mut out = g.x_linear;
+    out.axpy(g.residual_scale, &res);
+    out
+}
+
+/// UniC-p corrector (Algorithm 5/7): refine `x_pred` (produced by *any*
+/// p-order solver) using the model output at the current point. Returns the
+/// corrected state and the model output `m_t` (evaluated at the predicted
+/// point — feed it to the buffer, per §4.2's no-extra-NFE rule).
+pub fn unic_correct(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    hist: &History,
+    x: &Tensor,
+    x_pred: &Tensor,
+    t: f64,
+    p: usize,
+    variant: CoeffVariant,
+) -> (Tensor, Tensor) {
+    let m_t = ev.eval(x_pred, t);
+    let x_c = unic_correct_with(ev, sched, hist, x, &m_t, t, p, variant);
+    (x_c, m_t)
+}
+
+/// UniC-p given a precomputed model output at the current point (used by the
+/// oracle variant and by tests).
+pub fn unic_correct_with(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    hist: &History,
+    x: &Tensor,
+    m_t: &Tensor,
+    t: f64,
+    p: usize,
+    variant: CoeffVariant,
+) -> Tensor {
+    let g = step_geometry(sched, ev.prediction(), hist, x, t, p);
+    // Full p-node system with r_p = 1; D_p / r_p = m_t − m₀.
+    let coeffs = residual_coeffs(&g.rks, g.hh, variant);
+    let d1t = m_t.sub(&hist.last().m);
+    let mut tensors: Vec<&Tensor> = g.d1s.iter().collect();
+    tensors.push(&d1t);
+    let res = weighted_sum(&coeffs, &tensors);
+    let mut out = g.x_linear;
+    out.axpy(g.residual_scale, &res);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{timesteps, TimeSpacing, VpLinear};
+    use crate::solver::Model;
+
+    /// Model ε(x,t) = c·x, which keeps everything analytic.
+    fn linear_model(c: f64) -> impl Model {
+        (Prediction::Noise, 2, move |x: &Tensor, _t: f64| x.scaled(c))
+    }
+
+    fn seeded_hist(
+        ev: &Evaluator,
+        sched: &dyn NoiseSchedule,
+        xs: &[(f64, Tensor)],
+    ) -> History {
+        let mut h = History::new(8);
+        for (t, x) in xs {
+            h.push(*t, sched.lambda(*t), ev.eval(x, *t));
+        }
+        h
+    }
+
+    #[test]
+    fn unip1_equals_ddim_formula() {
+        // §3.3: UniP-1 is exactly DDIM.
+        let sched = VpLinear::default();
+        let m = linear_model(0.7);
+        let ev = Evaluator::new(&m, &sched, Prediction::Noise, None);
+        let x = Tensor::from_vec(&[1, 2], vec![0.3, -1.1]);
+        let (t0, t) = (0.6, 0.5);
+        let hist = seeded_hist(&ev, &sched, &[(t0, x.clone())]);
+        let out = unip_predict(&ev, &sched, &hist, &x, t, 1, CoeffVariant::Bh(BFunction::Bh2));
+
+        let h = sched.lambda(t) - sched.lambda(t0);
+        let expect = Tensor::lincomb(
+            sched.alpha(t) / sched.alpha(t0),
+            &x,
+            -sched.sigma(t) * h.exp_m1() * 0.7,
+            &x,
+        );
+        for (o, e) in out.data().iter().zip(expect.data()) {
+            assert!((o - e).abs() < 1e-12, "{o} vs {e}");
+        }
+    }
+
+    #[test]
+    fn unip2_matches_paper_closed_form() {
+        // For p=2 the predictor is x⁽¹⁾ − σ_t B(h) a₁ D₁/r₁ with the
+        // degenerate a₁ = 1/2 (Appendix F) → residual = −σ_t·½·B(h)·D₁/r₁.
+        let sched = VpLinear::default();
+        let m = linear_model(0.4);
+        let ev = Evaluator::new(&m, &sched, Prediction::Noise, None);
+        let x1 = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let x0 = Tensor::from_vec(&[1, 2], vec![0.9, 1.8]);
+        let (ta, tb, t) = (0.7, 0.6, 0.5);
+        let hist = seeded_hist(&ev, &sched, &[(ta, x1.clone()), (tb, x0.clone())]);
+
+        for b in [BFunction::Bh1, BFunction::Bh2] {
+            let out = unip_predict(&ev, &sched, &hist, &x0, t, 2, CoeffVariant::Bh(b));
+            // Hand-computed reference.
+            let (l_a, l_b, l_t) = (sched.lambda(ta), sched.lambda(tb), sched.lambda(t));
+            let h = l_t - l_b;
+            let r1 = (l_a - l_b) / h;
+            let eps_b = x0.scaled(0.4);
+            let eps_a = x1.scaled(0.4);
+            let d1 = eps_a.sub(&eps_b).scaled(1.0 / r1);
+            let mut expect = Tensor::lincomb(
+                sched.alpha(t) / sched.alpha(tb),
+                &x0,
+                -sched.sigma(t) * h.exp_m1(),
+                &eps_b,
+            );
+            // a₁ B = ½ B(h)
+            expect.axpy(-sched.sigma(t) * 0.5 * b.eval(h), &d1);
+            for (o, e) in out.data().iter().zip(expect.data()) {
+                assert!((o - e).abs() < 1e-10, "{b:?}: {o} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn bh_variants_agree_to_leading_order() {
+        // Different B(h) change the update only at O(h^{p+1}).
+        let sched = VpLinear::default();
+        let m = linear_model(0.5);
+        let ev = Evaluator::new(&m, &sched, Prediction::Noise, None);
+        let ts = timesteps(&sched, TimeSpacing::LogSnr, 0.9, 0.2, 64);
+        let x0 = Tensor::from_vec(&[1, 2], vec![0.5, -0.5]);
+        let x1 = Tensor::from_vec(&[1, 2], vec![0.49, -0.49]);
+        let hist = seeded_hist(&ev, &sched, &[(ts[0], x0), (ts[1], x1.clone())]);
+        let a = unip_predict(&ev, &sched, &hist, &x1, ts[2], 2, CoeffVariant::Bh(BFunction::Bh1));
+        let b = unip_predict(&ev, &sched, &hist, &x1, ts[2], 2, CoeffVariant::Bh(BFunction::Bh2));
+        let diff = a.sub(&b).max_abs();
+        let h = sched.lambda(ts[2]) - sched.lambda(ts[1]);
+        assert!(diff < h.powi(3), "diff {diff} vs h³ {}", h.powi(3));
+    }
+
+    #[test]
+    fn varying_coeffs_match_bh_to_leading_order() {
+        let sched = VpLinear::default();
+        let m = linear_model(0.5);
+        let ev = Evaluator::new(&m, &sched, Prediction::Noise, None);
+        let ts = timesteps(&sched, TimeSpacing::LogSnr, 0.9, 0.2, 64);
+        let x0 = Tensor::from_vec(&[1, 2], vec![0.5, -0.5]);
+        let x1 = Tensor::from_vec(&[1, 2], vec![0.49, -0.49]);
+        let hist = seeded_hist(&ev, &sched, &[(ts[0], x0), (ts[1], x1.clone())]);
+        let a = unip_predict(&ev, &sched, &hist, &x1, ts[2], 2, CoeffVariant::Bh(BFunction::Bh1));
+        let v = unip_predict(&ev, &sched, &hist, &x1, ts[2], 2, CoeffVariant::Varying);
+        let h = sched.lambda(ts[2]) - sched.lambda(ts[1]);
+        let diff = a.sub(&v).max_abs();
+        assert!(diff < h.powi(3), "diff {diff}");
+    }
+
+    #[test]
+    fn corrector_uses_current_point() {
+        // With a constant model, D terms vanish and corrector == predictor.
+        let sched = VpLinear::default();
+        let dim = 2;
+        let m: (Prediction, usize, _) = (
+            Prediction::Noise,
+            dim,
+            |x: &Tensor, _t: f64| Tensor::full(x.shape(), 0.25),
+        );
+        let ev = Evaluator::new(&m, &sched, Prediction::Noise, None);
+        let x0 = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
+        let x1 = Tensor::from_vec(&[1, 2], vec![0.9, 0.9]);
+        let hist = seeded_hist(&ev, &sched, &[(0.7, x0), (0.6, x1.clone())]);
+        let pred = unip_predict(&ev, &sched, &hist, &x1, 0.5, 2, CoeffVariant::Bh(BFunction::Bh2));
+        let (corr, _) = unic_correct(
+            &ev, &sched, &hist, &x1, &pred, 0.5, 2, CoeffVariant::Bh(BFunction::Bh2),
+        );
+        for (p, c) in pred.data().iter().zip(corr.data()) {
+            assert!((p - c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn data_prediction_path_matches_eq8() {
+        // Hand-check Eq. 8 for p=1 (pure linear part).
+        let sched = VpLinear::default();
+        let m: (Prediction, usize, _) =
+            (Prediction::Data, 2, |x: &Tensor, _t: f64| x.scaled(0.3));
+        let ev = Evaluator::new(&m, &sched, Prediction::Data, None);
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, -1.0]);
+        let (t0, t) = (0.6, 0.45);
+        let hist = seeded_hist(&ev, &sched, &[(t0, x.clone())]);
+        let out = unip_predict(&ev, &sched, &hist, &x, t, 1, CoeffVariant::Bh(BFunction::Bh2));
+        let h = sched.lambda(t) - sched.lambda(t0);
+        let expect = Tensor::lincomb(
+            sched.sigma(t) / sched.sigma(t0),
+            &x,
+            sched.alpha(t) * (1.0 - (-h).exp()) * 0.3,
+            &x,
+        );
+        for (o, e) in out.data().iter().zip(expect.data()) {
+            assert!((o - e).abs() < 1e-12, "{o} vs {e}");
+        }
+    }
+
+    #[test]
+    fn varying_coeffs_hand_derived_q2() {
+        // Asymmetric nodes expose the A_{m,n} orientation (regression test
+        // for a transpose bug): r = [-2, 1] ⇒ C = [[1,1],[-1,1/2]],
+        // C⁻¹ = [[1/3,-2/3],[2/3,2/3]], c_m = hh(φ₂ A_{m,1} + φ₃ A_{m,2}).
+        let hh = 0.37;
+        let c = residual_coeffs(&[-2.0, 1.0], hh, CoeffVariant::Varying);
+        let (p2, p3) = (phi(2, hh), phi(3, hh));
+        let expect0 = hh * (p2 / 3.0 - 2.0 * p3 / 3.0);
+        let expect1 = hh * (2.0 * p2 / 3.0 + 2.0 * p3 / 3.0);
+        assert!((c[0] - expect0).abs() < 1e-12, "{} vs {expect0}", c[0]);
+        assert!((c[1] - expect1).abs() < 1e-12, "{} vs {expect1}", c[1]);
+    }
+
+    #[test]
+    fn residual_coeffs_varying_independent_of_model() {
+        // Appendix C: A_p depends only on {r_m}; effective coefficients are
+        // hh φ_{n+1}(hh)-weighted rows of C_p⁻¹ — spot check q=1: c = hhφ₂.
+        let c = residual_coeffs(&[1.0], 0.3, CoeffVariant::Varying);
+        assert!((c[0] - 0.3 * phi(2, 0.3)).abs() < 1e-12);
+        // The Bh variants use the degenerate a₁ = ½ at q=1, so c = ½B(hh);
+        // all three agree to O(hh²) but not exactly.
+        let cb = residual_coeffs(&[1.0], 0.3, CoeffVariant::Bh(BFunction::Bh1));
+        assert!((cb[0] - 0.5 * 0.3).abs() < 1e-12);
+        assert!((cb[0] - c[0]).abs() < 0.3 * 0.3, "agreement to O(h²)");
+    }
+}

@@ -1,0 +1,226 @@
+//! Distribution distances used as FID stand-ins on analytic benchmarks
+//! (DESIGN.md §2): sliced 2-Wasserstein, Gaussian Fréchet distance (the
+//! literal FID formula in data space), and RBF MMD.
+
+use super::linalg::{matmul, sym_sqrt, trace};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Sliced 2-Wasserstein distance between two `[n, d]` sample sets:
+/// average over random unit projections of the 1-d W₂ (quantile matching).
+pub fn sliced_wasserstein2(a: &Tensor, b: &Tensor, n_proj: usize, rng: &mut Rng) -> f64 {
+    assert_eq!(a.shape().len(), 2);
+    assert_eq!(b.shape().len(), 2);
+    assert_eq!(a.shape()[1], b.shape()[1]);
+    let d = a.shape()[1];
+    let (na, nb) = (a.shape()[0], b.shape()[0]);
+    let q = 256.min(na.min(nb)); // quantile grid
+
+    let mut total = 0.0;
+    let mut pa = vec![0.0; na];
+    let mut pb = vec![0.0; nb];
+    for _ in 0..n_proj {
+        // Random unit direction.
+        let mut dir = rng.normal_vec(d);
+        let norm = dir.iter().map(|v| v * v).sum::<f64>().sqrt();
+        dir.iter_mut().for_each(|v| *v /= norm);
+
+        for i in 0..na {
+            pa[i] = a.row(i).iter().zip(&dir).map(|(x, w)| x * w).sum();
+        }
+        for i in 0..nb {
+            pb[i] = b.row(i).iter().zip(&dir).map(|(x, w)| x * w).sum();
+        }
+        pa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        pb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+
+        // W₂² over a shared quantile grid.
+        let mut w2 = 0.0;
+        for k in 0..q {
+            let frac = (k as f64 + 0.5) / q as f64;
+            let qa = quantile_sorted(&pa, frac);
+            let qb = quantile_sorted(&pb, frac);
+            w2 += (qa - qb) * (qa - qb);
+        }
+        total += w2 / q as f64;
+    }
+    (total / n_proj as f64).sqrt()
+}
+
+fn quantile_sorted(xs: &[f64], q: f64) -> f64 {
+    let pos = q * (xs.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        xs[lo]
+    } else {
+        xs[lo] * (hi as f64 - pos) + xs[hi] * (pos - lo as f64)
+    }
+}
+
+/// Fit (mean, covariance) of an `[n, d]` sample set; covariance row-major.
+pub fn gaussian_fit(x: &Tensor) -> (Vec<f64>, Vec<f64>) {
+    let n = x.shape()[0];
+    let d = x.shape()[1];
+    assert!(n >= 2);
+    let mut mu = vec![0.0; d];
+    for i in 0..n {
+        for (j, v) in x.row(i).iter().enumerate() {
+            mu[j] += v;
+        }
+    }
+    mu.iter_mut().for_each(|v| *v /= n as f64);
+    let mut cov = vec![0.0; d * d];
+    for i in 0..n {
+        let row = x.row(i);
+        for a in 0..d {
+            let da = row[a] - mu[a];
+            for b in a..d {
+                cov[a * d + b] += da * (row[b] - mu[b]);
+            }
+        }
+    }
+    for a in 0..d {
+        for b in a..d {
+            let v = cov[a * d + b] / (n as f64 - 1.0);
+            cov[a * d + b] = v;
+            cov[b * d + a] = v;
+        }
+    }
+    (mu, cov)
+}
+
+/// Fréchet distance between two Gaussians — the FID formula evaluated in
+/// data space: ‖μ₁−μ₂‖² + tr(C₁ + C₂ − 2(C₁^{1/2} C₂ C₁^{1/2})^{1/2}).
+pub fn frechet_distance(mu1: &[f64], c1: &[f64], mu2: &[f64], c2: &[f64]) -> f64 {
+    let d = mu1.len();
+    assert_eq!(mu2.len(), d);
+    let dm: f64 = mu1.iter().zip(mu2).map(|(a, b)| (a - b) * (a - b)).sum();
+    let s1 = sym_sqrt(c1, d);
+    let inner = matmul(&matmul(&s1, c2, d), &s1, d);
+    // Symmetrize against rounding before the second sqrt.
+    let mut sym = inner.clone();
+    for i in 0..d {
+        for j in 0..d {
+            sym[i * d + j] = 0.5 * (inner[i * d + j] + inner[j * d + i]);
+        }
+    }
+    let cross = sym_sqrt(&sym, d);
+    (dm + trace(c1, d) + trace(c2, d) - 2.0 * trace(&cross, d)).max(0.0)
+}
+
+/// RBF-kernel MMD² (biased estimator) with bandwidth by the median
+/// heuristic over a subsample.
+pub fn mmd_rbf(a: &Tensor, b: &Tensor) -> f64 {
+    let (na, nb) = (a.shape()[0], b.shape()[0]);
+    let d = a.shape()[1];
+    assert_eq!(b.shape()[1], d);
+
+    let sq = |x: &[f64], y: &[f64]| -> f64 {
+        x.iter().zip(y).map(|(p, q)| (p - q) * (p - q)).sum()
+    };
+
+    // Median heuristic over cross pairs (capped subsample).
+    let cap = 200.min(na).min(nb);
+    let mut d2s = Vec::with_capacity(cap * cap);
+    for i in 0..cap {
+        for j in 0..cap {
+            d2s.push(sq(a.row(i * na / cap), b.row(j * nb / cap)));
+        }
+    }
+    d2s.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let med = d2s[d2s.len() / 2].max(1e-12);
+    let gamma = 1.0 / med;
+
+    let mut kaa = 0.0;
+    for i in 0..na {
+        for j in 0..na {
+            kaa += (-gamma * sq(a.row(i), a.row(j))).exp();
+        }
+    }
+    let mut kbb = 0.0;
+    for i in 0..nb {
+        for j in 0..nb {
+            kbb += (-gamma * sq(b.row(i), b.row(j))).exp();
+        }
+    }
+    let mut kab = 0.0;
+    for i in 0..na {
+        for j in 0..nb {
+            kab += (-gamma * sq(a.row(i), b.row(j))).exp();
+        }
+    }
+    (kaa / (na * na) as f64 + kbb / (nb * nb) as f64 - 2.0 * kab / (na * nb) as f64).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_samples(rng: &mut Rng, n: usize, d: usize, mu: f64, s: f64) -> Tensor {
+        let data = (0..n * d).map(|_| mu + s * rng.normal()).collect();
+        Tensor::from_vec(&[n, d], data)
+    }
+
+    #[test]
+    fn sw2_zero_for_identical_samples() {
+        let mut rng = Rng::seed_from(1);
+        let a = gaussian_samples(&mut rng, 500, 3, 0.0, 1.0);
+        let mut rng2 = Rng::seed_from(99);
+        let d = sliced_wasserstein2(&a, &a.clone(), 16, &mut rng2);
+        assert!(d < 1e-12, "{d}");
+    }
+
+    #[test]
+    fn sw2_detects_mean_shift() {
+        // SW2 between shifted Gaussians must dwarf the same-distribution
+        // estimator noise, and sit near sqrt(‖shift‖²/d) = 2 up to
+        // finite-sample/tail-quantile bias.
+        let mut rng = Rng::seed_from(2);
+        let a = gaussian_samples(&mut rng, 2000, 3, 0.0, 1.0);
+        let a2 = gaussian_samples(&mut rng, 2000, 3, 0.0, 1.0);
+        let b = gaussian_samples(&mut rng, 2000, 3, 2.0, 1.0);
+        let mut prng = Rng::seed_from(3);
+        let d_same = sliced_wasserstein2(&a, &a2, 64, &mut prng);
+        let mut prng = Rng::seed_from(3);
+        let d_shift = sliced_wasserstein2(&a, &b, 64, &mut prng);
+        assert!(d_shift > 10.0 * d_same, "shift {d_shift} vs same {d_same}");
+        assert!((1.4..=2.8).contains(&d_shift), "{d_shift}");
+    }
+
+    #[test]
+    fn frechet_zero_for_same_gaussian() {
+        let mu = vec![1.0, -1.0];
+        let c = vec![2.0, 0.3, 0.3, 1.0];
+        let f = frechet_distance(&mu, &c, &mu, &c);
+        assert!(f < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn frechet_matches_univariate_formula() {
+        // d=1: F = (μ1−μ2)² + (σ1−σ2)².
+        let f = frechet_distance(&[0.0], &[4.0], &[3.0], &[1.0]);
+        assert!((f - (9.0 + 1.0)).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn gaussian_fit_recovers_moments() {
+        let mut rng = Rng::seed_from(7);
+        let x = gaussian_samples(&mut rng, 30_000, 2, 0.5, 2.0);
+        let (mu, cov) = gaussian_fit(&x);
+        assert!((mu[0] - 0.5).abs() < 0.05);
+        assert!((cov[0] - 4.0).abs() < 0.15);
+        assert!(cov[1].abs() < 0.1);
+    }
+
+    #[test]
+    fn mmd_orders_distributions() {
+        let mut rng = Rng::seed_from(11);
+        let a = gaussian_samples(&mut rng, 300, 2, 0.0, 1.0);
+        let near = gaussian_samples(&mut rng, 300, 2, 0.2, 1.0);
+        let far = gaussian_samples(&mut rng, 300, 2, 3.0, 1.0);
+        let d_near = mmd_rbf(&a, &near);
+        let d_far = mmd_rbf(&a, &far);
+        assert!(d_near < d_far, "{d_near} vs {d_far}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Latency statistics for the serving benches: a simple sorted-sample digest
+//! with exact percentiles (request volumes here are small enough that an
+//! approximate sketch would be over-engineering).
+
+use std::time::Duration;
+
+/// Collects latency samples and reports count/mean/percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyDigest {
+    samples_us: Vec<u64>,
+    sorted: bool,
+}
+
+impl LatencyDigest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+        self.sorted = false;
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+        self.sorted = false;
+    }
+
+    pub fn merge(&mut self, other: &LatencyDigest) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    /// Exact percentile (nearest-rank), `p` in [0, 100].
+    pub fn percentile_us(&mut self, p: f64) -> u64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        if !self.sorted {
+            self.samples_us.sort_unstable();
+            self.sorted = true;
+        }
+        let rank = ((p / 100.0) * (self.samples_us.len() - 1) as f64).round() as usize;
+        self.samples_us[rank]
+    }
+
+    /// "p50/p95/p99 (mean) over n" one-liner for logs.
+    pub fn summary(&mut self) -> String {
+        let n = self.count();
+        if n == 0 {
+            return "no samples".into();
+        }
+        let (p50, p95, p99) = (
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+        );
+        format!(
+            "p50={:.2}ms p95={:.2}ms p99={:.2}ms mean={:.2}ms n={}",
+            p50 as f64 / 1e3,
+            p95 as f64 / 1e3,
+            p99 as f64 / 1e3,
+            self.mean_us() / 1e3,
+            n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_sequence() {
+        let mut d = LatencyDigest::new();
+        for v in 1..=100u64 {
+            d.record_us(v * 1000);
+        }
+        assert_eq!(d.count(), 100);
+        assert_eq!(d.percentile_us(0.0), 1000);
+        assert_eq!(d.percentile_us(100.0), 100_000);
+        let p50 = d.percentile_us(50.0);
+        assert!((49_000..=51_000).contains(&p50), "{p50}");
+    }
+
+    #[test]
+    fn merge_combines_samples() {
+        let mut a = LatencyDigest::new();
+        a.record_us(10);
+        let mut b = LatencyDigest::new();
+        b.record_us(20);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean_us() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_digest_is_safe() {
+        let mut d = LatencyDigest::new();
+        assert_eq!(d.percentile_us(99.0), 0);
+        assert_eq!(d.summary(), "no samples");
+    }
+}

@@ -1,0 +1,156 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) for the small (dim ≤ 64)
+//! covariance matrices used by the Fréchet metric. No LAPACK offline, so we
+//! roll the classic O(d³ · sweeps) rotation scheme; Jacobi is backward
+//! stable and precise for symmetric matrices of this size.
+
+/// Eigendecomposition of a symmetric matrix (row-major d×d).
+/// Returns (eigenvalues, eigenvectors-as-columns row-major).
+pub fn sym_eigen(a: &[f64], d: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), d * d);
+    let mut m = a.to_vec();
+    // v starts as identity; accumulates rotations.
+    let mut v = vec![0.0; d * d];
+    for i in 0..d {
+        v[i * d + i] = 1.0;
+    }
+
+    for _sweep in 0..100 {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += m[i * d + j] * m[i * d + j];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m[p * d + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * d + p];
+                let aqq = m[q * d + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Rows/cols p and q of m.
+                for k in 0..d {
+                    let mkp = m[k * d + p];
+                    let mkq = m[k * d + q];
+                    m[k * d + p] = c * mkp - s * mkq;
+                    m[k * d + q] = s * mkp + c * mkq;
+                }
+                for k in 0..d {
+                    let mpk = m[p * d + k];
+                    let mqk = m[q * d + k];
+                    m[p * d + k] = c * mpk - s * mqk;
+                    m[q * d + k] = s * mpk + c * mqk;
+                }
+                for k in 0..d {
+                    let vkp = v[k * d + p];
+                    let vkq = v[k * d + q];
+                    v[k * d + p] = c * vkp - s * vkq;
+                    v[k * d + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let evals = (0..d).map(|i| m[i * d + i]).collect();
+    (evals, v)
+}
+
+/// Symmetric PSD matrix square root via eigendecomposition (negative
+/// eigenvalues from rounding are clamped to zero).
+pub fn sym_sqrt(a: &[f64], d: usize) -> Vec<f64> {
+    let (evals, v) = sym_eigen(a, d);
+    let roots: Vec<f64> = evals.iter().map(|&e| e.max(0.0).sqrt()).collect();
+    // V diag(sqrt) Vᵀ
+    let mut out = vec![0.0; d * d];
+    for i in 0..d {
+        for j in 0..d {
+            let mut s = 0.0;
+            for k in 0..d {
+                s += v[i * d + k] * roots[k] * v[j * d + k];
+            }
+            out[i * d + j] = s;
+        }
+    }
+    out
+}
+
+/// C = A·B for row-major d×d matrices.
+pub fn matmul(a: &[f64], b: &[f64], d: usize) -> Vec<f64> {
+    let mut c = vec![0.0; d * d];
+    for i in 0..d {
+        for k in 0..d {
+            let aik = a[i * d + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..d {
+                c[i * d + j] += aik * b[k * d + j];
+            }
+        }
+    }
+    c
+}
+
+/// Trace.
+pub fn trace(a: &[f64], d: usize) -> f64 {
+    (0..d).map(|i| a[i * d + i]).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eigen_of_diagonal() {
+        let a = [3.0, 0.0, 0.0, 7.0];
+        let (mut e, _) = sym_eigen(&a, 2);
+        e.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((e[0] - 3.0).abs() < 1e-12);
+        assert!((e[1] - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eigen_reconstructs_matrix() {
+        let a = [2.0, 1.0, 0.5, 1.0, 3.0, -0.2, 0.5, -0.2, 1.5];
+        let d = 3;
+        let (e, v) = sym_eigen(&a, d);
+        // A = V diag(e) Vᵀ
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += v[i * d + k] * e[k] * v[j * d + k];
+                }
+                assert!((s - a[i * d + j]).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let a = [4.0, 2.0, 2.0, 5.0];
+        let r = sym_sqrt(&a, 2);
+        let sq = matmul(&r, &r, 2);
+        for (x, y) in sq.iter().zip(a.iter()) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn trace_and_matmul() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [0.0, 1.0, 1.0, 0.0];
+        let c = matmul(&a, &b, 2);
+        assert_eq!(c, vec![2.0, 1.0, 4.0, 3.0]);
+        assert_eq!(trace(&a, 2), 5.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Metrics substrates: distribution distances (the FID stand-ins of
+//! DESIGN.md §2) and serving-side latency statistics.
+
+pub mod distances;
+pub mod latency;
+pub mod linalg;
+
+pub use distances::{frechet_distance, gaussian_fit, mmd_rbf, sliced_wasserstein2};
+pub use latency::LatencyDigest;
+pub use linalg::sym_eigen;

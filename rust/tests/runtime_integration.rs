@@ -1,0 +1,229 @@
+//! End-to-end runtime tests against the real AOT artifacts.
+//!
+//! These run only when `make artifacts` has produced `artifacts/` (they are
+//! skipped otherwise so `cargo test` stays green on a fresh checkout).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use unipc::json;
+use unipc::runtime::{EngineOptions, PjrtHandle, PjrtModel};
+use unipc::solver::{sample, Method, Model, Prediction, SampleOptions};
+use unipc::tensor::Tensor;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    (dir.join("manifest.json").exists() && dir.join("model.upw").exists()).then_some(dir)
+}
+
+fn spawn(dir: &Path) -> PjrtHandle {
+    PjrtHandle::spawn(dir, None, EngineOptions::default()).expect("spawn engine")
+}
+
+#[test]
+fn golden_eps_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let golden_path = dir.join("golden.json");
+    if !golden_path.exists() {
+        return;
+    }
+    let g = json::parse(&std::fs::read_to_string(&golden_path).unwrap()).unwrap();
+    // Golden is only valid when it was generated with the trained weights.
+    if g.get("weights").and_then(json::Value::as_str) != Some("trained") {
+        return;
+    }
+    let b = g.get("batch").unwrap().as_usize().unwrap();
+    let xs: Vec<f32> = g
+        .get("x")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let want: Vec<f32> = g
+        .get("eps")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let want_cfg: Vec<f32> = g
+        .get("eps_cfg")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as f32)
+        .collect();
+    let scale = g.get("cfg_scale").unwrap().as_f64().unwrap() as f32;
+
+    let h = spawn(&dir);
+    let t = vec![0.5f32; b];
+    let y = vec![0i32; b];
+    let got = h.eps(xs.clone(), t.clone(), y.clone()).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (a, w) in got.iter().zip(&want) {
+        assert!((a - w).abs() < 2e-4, "eps mismatch: {a} vs {w}");
+    }
+    let got_cfg = h.eps_cfg(xs, t, y, scale).unwrap();
+    for (a, w) in got_cfg.iter().zip(&want_cfg) {
+        assert!((a - w).abs() < 5e-4, "cfg mismatch: {a} vs {w}");
+    }
+    h.shutdown();
+}
+
+#[test]
+fn batching_is_transparent() {
+    // One call with 3 rows == three 1-row calls (same weights, same math).
+    let Some(dir) = artifacts_dir() else { return };
+    let h = spawn(&dir);
+    let d = h.dim;
+    let x: Vec<f32> = (0..3 * d).map(|i| (i as f32 / (3 * d) as f32) - 0.5).collect();
+    let t = vec![0.7f32, 0.5, 0.3];
+    let y = vec![0i32, 1, 2];
+    let joint = h.eps(x.clone(), t.clone(), y.clone()).unwrap();
+    for r in 0..3 {
+        let solo = h
+            .eps(x[r * d..(r + 1) * d].to_vec(), vec![t[r]], vec![y[r]])
+            .unwrap();
+        for (a, b) in solo.iter().zip(&joint[r * d..(r + 1) * d]) {
+            assert!((a - b).abs() < 1e-5, "row {r}: {a} vs {b}");
+        }
+    }
+    h.shutdown();
+}
+
+#[test]
+fn concurrent_evals_coalesce() {
+    let Some(dir) = artifacts_dir() else { return };
+    let h = PjrtHandle::spawn(
+        &dir,
+        None,
+        EngineOptions { max_batch: 64, batch_wait: Duration::from_millis(5) },
+    )
+    .unwrap();
+    let d = h.dim;
+    // Warm up/compile outside the measured region.
+    let _ = h.eps(vec![0.0; d], vec![0.5], vec![0]).unwrap();
+    let before = h.stats().unwrap();
+
+    let threads: Vec<_> = (0..8)
+        .map(|i| {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                let x = vec![0.1 * i as f32; d];
+                h.eps(x, vec![0.5], vec![0]).unwrap()
+            })
+        })
+        .collect();
+    for th in threads {
+        th.join().unwrap();
+    }
+    let after = h.stats().unwrap();
+    let calls = after.calls - before.calls;
+    let jobs = after.coalesced_jobs - before.coalesced_jobs;
+    assert!(jobs >= 8, "jobs {jobs}");
+    assert!(calls < 8, "batching should coalesce 8 jobs into <8 calls, got {calls}");
+    h.shutdown();
+}
+
+#[test]
+fn pjrt_model_runs_unipc_sampler() {
+    // The full stack: UniPC-3 against the learned model via PJRT.
+    let Some(dir) = artifacts_dir() else { return };
+    let h = spawn(&dir);
+    let model = PjrtModel::new(h.clone()).with_class(3, Some(1.5));
+    assert_eq!(model.prediction(), Prediction::Noise);
+
+    let mut rng = unipc::rng::Rng::seed_from(7);
+    let x_t = rng.normal_tensor(&[4, model.dim()]);
+    let opts = SampleOptions::unipc(
+        3,
+        unipc::numerics::vandermonde::BFunction::Bh2,
+        Prediction::Noise,
+        8,
+    );
+    let r = sample(&model, &unipc::sched::VpLinear::default(), &x_t, &opts);
+    assert_eq!(r.nfe, 8);
+    assert!(r.x.data().iter().all(|v| v.is_finite()));
+    // Samples should be in the data region (mixture radius 3 ± spread),
+    // not at noise scale.
+    // (guidance pushes samples outward, so allow a generous upper bound).
+    let rms = r.x.rms();
+    assert!(rms > 0.2 && rms < 6.0, "rms {rms}");
+    h.shutdown();
+}
+
+#[test]
+fn fused_correct_matches_host_math() {
+    // The fused correct artifact must equal: m_t = eps(x_pred); then the
+    // affine combination done on the host.
+    let Some(dir) = artifacts_dir() else { return };
+    let h = spawn(&dir);
+    let d = h.dim;
+    let p = h.fused_p;
+    let rows = 2;
+    let mut rng = unipc::rng::Rng::seed_from(3);
+    let rnd = |rng: &mut unipc::rng::Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * 0.3).collect()
+    };
+    let x_pred = rnd(&mut rng, rows * d);
+    let t = vec![0.5f32; rows];
+    let y = vec![1i32; rows];
+    let x_prev = rnd(&mut rng, rows * d);
+    let m0 = rnd(&mut rng, rows * d);
+    let d1s = rnd(&mut rng, p * rows * d);
+    // coeffs: c_1..c_p, c_{p+1} (current point), a, b, s
+    let mut coeffs = vec![0.2f32, -0.1, 0.05, 0.3];
+    coeffs.extend([1.1f32, -0.4, 0.9]);
+
+    let (x_c, m_t) = h
+        .fused_correct(
+            x_pred.clone(),
+            t.clone(),
+            y.clone(),
+            x_prev.clone(),
+            m0.clone(),
+            d1s.clone(),
+            coeffs.clone(),
+        )
+        .unwrap();
+
+    // m_t must equal a plain eps call at the same point.
+    let m_ref = h.eps(x_pred, t, y).unwrap();
+    for (a, b) in m_t.iter().zip(&m_ref) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+    // x_c = a*x_prev + b*m0 + s*(sum_i c_i d1s_i + c_{p+1} (m_t - m0)).
+    for r in 0..rows {
+        for j in 0..d {
+            let idx = r * d + j;
+            let mut res = 0.0f32;
+            for i in 0..p {
+                res += coeffs[i] * d1s[i * rows * d + idx];
+            }
+            res += coeffs[p] * (m_t[idx] - m0[idx]);
+            let want = coeffs[p + 1] * x_prev[idx] + coeffs[p + 2] * m0[idx]
+                + coeffs[p + 3] * res;
+            assert!((x_c[idx] - want).abs() < 1e-4, "{} vs {want}", x_c[idx]);
+        }
+    }
+    h.shutdown();
+}
+
+#[test]
+fn oversized_batch_chunks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let h = spawn(&dir);
+    let d = h.dim;
+    let rows = 70; // > max compiled batch (64) -> two chunks
+    let x: Vec<f32> = (0..rows * d).map(|i| ((i % 17) as f32) * 0.01).collect();
+    let t = vec![0.4f32; rows];
+    let y = vec![0i32; rows];
+    let out = h.eps(x, t, y).unwrap();
+    assert_eq!(out.len(), rows * d);
+    assert!(out.iter().all(|v| v.is_finite()));
+    h.shutdown();
+}
