@@ -1,0 +1,21 @@
+# Entry points for the Rust serving stack. `make perf` is the one-command
+# perf-regression check: release build + the hot-path and serving benches,
+# run headlessly (their PJRT-dependent sections self-skip when AOT
+# artifacts are absent, so this works on any machine).
+
+CARGO ?= cargo
+MANIFEST := rust/Cargo.toml
+
+.PHONY: build test perf
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+# Hot-path microbenches (emits rust/BENCH_hot_path.json: name -> ns/iter)
+# followed by the end-to-end serving load sweep.
+perf: build
+	$(CARGO) bench --bench perf_hot_path --manifest-path $(MANIFEST)
+	$(CARGO) bench --bench serving_load --manifest-path $(MANIFEST)

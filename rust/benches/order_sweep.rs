@@ -32,15 +32,21 @@ fn main() {
 
     let grid = [160usize, 320, 640, 1280];
     let mut table = ResultTable::new("Order sweep (global error; slope = order)", &grid);
-    let mut slopes: Vec<(String, f64, f64)> = Vec::new(); // (name, slope, expected)
+    let mut slopes: Vec<(String, f64, f64, bool)> = Vec::new(); // (name, slope, expected, assert)
 
-    for (name, order, corrector, expected) in [
-        ("UniP-1 (DDIM)", 1usize, false, 1.0),
-        ("UniP-2", 2, false, 2.0),
-        ("UniP-3", 3, false, 3.0),
-        ("UniPC-1", 1, true, 2.0),
-        ("UniPC-2", 2, true, 3.0),
-        ("UniPC-3", 3, true, 4.0),
+    // Orders ≥ 5 exercise the arity-5/6 fused weighted_sum paths, but their
+    // global errors sit at/below the f64 noise floor of the RK4 reference on
+    // this grid, so their slopes are reported without assertion.
+    for (name, order, corrector, expected, check) in [
+        ("UniP-1 (DDIM)", 1usize, false, 1.0, true),
+        ("UniP-2", 2, false, 2.0, true),
+        ("UniP-3", 3, false, 3.0, true),
+        ("UniPC-1", 1, true, 2.0, true),
+        ("UniPC-2", 2, true, 3.0, true),
+        ("UniPC-3", 3, true, 4.0, true),
+        ("UniP-5", 5, false, 5.0, false),
+        ("UniPC-5", 5, true, 6.0, false),
+        ("UniPC-6", 6, true, 7.0, false),
     ] {
         let errs: Vec<f64> = grid
             .iter()
@@ -58,17 +64,18 @@ fn main() {
             })
             .collect();
         let s = slope(&grid, &errs);
-        slopes.push((name.to_string(), s, expected));
+        slopes.push((name.to_string(), s, expected, check));
         table.push(&format!("{name} (slope {s:.2})"), errs);
     }
     table.emit("order_sweep.json");
 
     println!("{:<16} {:>8} {:>9}", "method", "slope", "expected");
-    for (name, s, exp) in &slopes {
-        println!("{name:<16} {s:>8.2} {exp:>9.1}");
+    for (name, s, exp, check) in &slopes {
+        let note = if *check { "" } else { "  (noise floor — not asserted)" };
+        println!("{name:<16} {s:>8.2} {exp:>9.1}{note}");
         // Allow generous tolerance near the f64 noise floor for UniPC-3.
         assert!(
-            (s - exp).abs() < 0.9,
+            !check || (s - exp).abs() < 0.9,
             "{name}: measured slope {s:.2}, expected ~{exp}"
         );
     }

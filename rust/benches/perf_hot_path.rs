@@ -1,9 +1,15 @@
 //! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
-//!   L3-a  solver arithmetic per step (weighted_sum fusion vs naive axpy)
+//!   L3-a  solver arithmetic per step (weighted_sum fusion vs naive axpy,
+//!         arity 3 and the order-5/6 sweep arity 6, plus the in-place form)
 //!   L3-b  coefficient solve (Vandermonde) cost per step
-//!   L3-c  full UniPC-3 step on an analytic model (batch 64, dim 16)
+//!   L3-c  full UniPC-3 run, reference on-the-fly loop
+//!   L3-d  full UniPC-3 run executed from a cached SamplePlan (+ the
+//!         one-time plan-construction cost)
 //!   RT-a  PJRT ε call latency vs batch size (batching amortization)
 //!   RT-b  fused correct artifact vs eval + host update (round-trip saving)
+//!
+//! Emits `BENCH_hot_path.json` (bench name → ns/iter) so the perf
+//! trajectory is machine-trackable across PRs.
 
 use std::hint::black_box;
 use std::path::Path;
@@ -11,14 +17,23 @@ use std::time::{Duration, Instant};
 
 use unipc::analytic::datasets::{dataset, DatasetSpec};
 use unipc::analytic::GmmModel;
+use unipc::json::Value;
 use unipc::numerics::vandermonde::{unipc_coeffs, BFunction};
 use unipc::rng::Rng;
 use unipc::runtime::{EngineOptions, PjrtHandle};
 use unipc::sched::VpLinear;
-use unipc::solver::{sample, SampleOptions, Prediction};
-use unipc::tensor::{weighted_sum, Tensor};
+use unipc::solver::{
+    sample_unplanned, sample_with_plan, Method, Model, Prediction, SampleOptions, SamplePlan,
+    UniPcCoeffs,
+};
+use unipc::tensor::{weighted_sum, weighted_sum_into, Tensor};
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Duration {
+fn bench<F: FnMut()>(
+    results: &mut Vec<(String, Duration)>,
+    name: &str,
+    iters: usize,
+    mut f: F,
+) -> Duration {
     // Warmup.
     for _ in 0..3 {
         f();
@@ -28,22 +43,41 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> Duration {
         f();
     }
     let per = t0.elapsed() / iters as u32;
-    println!("{name:<44} {per:>12.2?}/iter  ({iters} iters)");
+    println!("{name:<48} {per:>12.2?}/iter  ({iters} iters)");
+    results.push((name.to_string(), per));
     per
 }
 
+fn emit_json(results: &[(String, Duration)]) {
+    let pairs: Vec<(&str, Value)> = results
+        .iter()
+        .map(|(n, d)| (n.as_str(), Value::from(d.as_nanos() as f64)))
+        .collect();
+    let _ = std::fs::write("BENCH_hot_path.json", Value::obj(pairs).to_string());
+    println!("wrote BENCH_hot_path.json ({} entries)", results.len());
+}
+
+fn unipc3_opts(variant: UniPcCoeffs, steps: usize) -> SampleOptions {
+    SampleOptions::new(
+        Method::UniP { order: 3, variant, pred: Prediction::Noise, schedule: None },
+        steps,
+    )
+    .with_unic(variant, false)
+}
+
 fn main() {
+    let mut results: Vec<(String, Duration)> = Vec::new();
     let mut rng = Rng::seed_from(1);
     let (b, d, p) = (64usize, 16usize, 3usize);
     let tensors: Vec<Tensor> = (0..p).map(|_| rng.normal_tensor(&[b, d])).collect();
     let coeffs = [0.4, -0.2, 0.1];
 
     // L3-a: fused weighted sum vs naive repeated axpy.
-    bench("L3-a weighted_sum fused (64x16, p=3)", 20_000, || {
+    bench(&mut results, "L3-a weighted_sum fused (64x16, p=3)", 20_000, || {
         let refs: Vec<&Tensor> = tensors.iter().collect();
         black_box(weighted_sum(&coeffs, &refs));
     });
-    bench("L3-a naive axpy chain   (64x16, p=3)", 20_000, || {
+    bench(&mut results, "L3-a naive axpy chain   (64x16, p=3)", 20_000, || {
         let mut acc = tensors[0].scaled(coeffs[0]);
         for i in 1..p {
             acc.axpy(coeffs[i], &tensors[i]);
@@ -51,11 +85,25 @@ fn main() {
         black_box(acc);
     });
 
+    // L3-a: order-5/6 sweep arity (previously the slow generic loop) and
+    // the zero-allocation workspace form.
+    let six: Vec<Tensor> = (0..6).map(|_| rng.normal_tensor(&[b, d])).collect();
+    let c6 = [0.4, -0.2, 0.1, 0.05, -0.03, 0.02];
+    bench(&mut results, "L3-a weighted_sum fused (64x16, p=6)", 20_000, || {
+        let refs: Vec<&Tensor> = six.iter().collect();
+        black_box(weighted_sum(&c6, &refs));
+    });
+    let mut ws_out = Tensor::zeros(&[b, d]);
+    bench(&mut results, "L3-a weighted_sum_into  (64x16, p=6)", 20_000, || {
+        weighted_sum_into(&mut ws_out, &c6, &six);
+        black_box(&ws_out);
+    });
+
     // L3-b: coefficient solve.
-    bench("L3-b unipc_coeffs p=3", 100_000, || {
+    bench(&mut results, "L3-b unipc_coeffs p=3", 100_000, || {
         black_box(unipc_coeffs(&[-2.0, -1.0, 1.0], black_box(0.3), BFunction::Bh2));
     });
-    bench("L3-b unipc_coeffs p=6", 50_000, || {
+    bench(&mut results, "L3-b unipc_coeffs p=6", 50_000, || {
         black_box(unipc_coeffs(
             &[-5.0, -4.0, -3.0, -2.0, -1.0, 1.0],
             black_box(0.3),
@@ -63,15 +111,65 @@ fn main() {
         ));
     });
 
-    // L3-c: a full 8-step UniPC-3 sampling run on the analytic model.
+    // L3-c/d: full 8-step UniPC-3 runs — the on-the-fly reference loop vs
+    // plan-cached execution. `vary` pays a per-step LU inversion on the
+    // reference path, so the plan win there is the headline number. The
+    // linear-model rows isolate solver arithmetic (the GMM ε* dominates the
+    // analytic rows).
     let gm = dataset(DatasetSpec::Cifar10Like);
     let sched = VpLinear::default();
-    let model = GmmModel { gm: &gm, sched: &sched };
+    let gmm_model = GmmModel { gm: &gm, sched: &sched };
+    let lin_model: (Prediction, usize, fn(&Tensor, f64) -> Tensor) =
+        (Prediction::Noise, d, |x, _t| x.scaled(0.3));
     let x_t = rng.normal_tensor(&[b, d]);
-    let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
-    bench("L3-c UniPC-3 x8 steps, analytic (64x16)", 200, || {
-        black_box(sample(&model, &sched, &x_t, &opts));
-    });
+
+    for (model, model_tag) in [(&gmm_model as &dyn Model, "gmm"), (&lin_model, "linear")] {
+        for (tag, variant) in
+            [("bh2", UniPcCoeffs::Bh(BFunction::Bh2)), ("vary", UniPcCoeffs::Varying)]
+        {
+            let opts = unipc3_opts(variant, 8);
+            let naive = bench(
+                &mut results,
+                &format!("L3-c UniPC-3 x8 naive ({tag}, {model_tag} 64x16)"),
+                200,
+                || {
+                    black_box(sample_unplanned(model, &sched, &x_t, &opts));
+                },
+            );
+            let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+            let planned = bench(
+                &mut results,
+                &format!("L3-d UniPC-3 x8 plan-cached ({tag}, {model_tag})"),
+                200,
+                || {
+                    black_box(sample_with_plan(model, &sched, &x_t, &opts, &plan));
+                },
+            );
+            println!(
+                "{:<48} {:>11.2}x",
+                format!("L3-d   speedup vs naive ({tag}, {model_tag})"),
+                naive.as_secs_f64() / planned.as_secs_f64()
+            );
+        }
+    }
+
+    // L3-d: one-time plan-construction cost (what the coordinator's cache
+    // amortizes across requests).
+    for (tag, variant) in
+        [("bh2", UniPcCoeffs::Bh(BFunction::Bh2)), ("vary", UniPcCoeffs::Varying)]
+    {
+        let opts = unipc3_opts(variant, 8);
+        bench(
+            &mut results,
+            &format!("L3-d SamplePlan::build UniPC-3 x8 ({tag})"),
+            5_000,
+            || {
+                black_box(SamplePlan::build(&sched, &opts));
+            },
+        );
+    }
+
+    emit_json(&results);
 
     // RT: PJRT path (requires artifacts).
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -85,10 +183,14 @@ fn main() {
         let x = vec![0.1f32; rows * dim];
         let t = vec![0.5f32; rows];
         let y = vec![0i32; rows];
-        let per = bench(&format!("RT-a pjrt eps rows={rows}"), 50, || {
+        let per = bench(&mut results, &format!("RT-a pjrt eps rows={rows}"), 50, || {
             black_box(h.eps(x.clone(), t.clone(), y.clone()).unwrap());
         });
-        println!("{:<44} {:>12.2?}/row", format!("RT-a   per-row at rows={rows}"), per / rows as u32);
+        println!(
+            "{:<48} {:>12.2?}/row",
+            format!("RT-a   per-row at rows={rows}"),
+            per / rows as u32
+        );
     }
 
     // RT-b: fused correct vs eval + host combination.
@@ -100,7 +202,7 @@ fn main() {
     let m0 = vec![0.0f32; rows * dim];
     let d1s = vec![0.05f32; 3 * rows * dim];
     let coeffs = vec![0.2f32, -0.1, 0.05, 0.3, 1.1, -0.4, 0.9];
-    bench("RT-b fused correct (rows=16)", 50, || {
+    bench(&mut results, "RT-b fused correct (rows=16)", 50, || {
         black_box(
             h.fused_correct(
                 x_pred.clone(),
@@ -114,7 +216,7 @@ fn main() {
             .unwrap(),
         );
     });
-    bench("RT-b eval + host update (rows=16)", 50, || {
+    bench(&mut results, "RT-b eval + host update (rows=16)", 50, || {
         let m_t = h.eps(x_pred.clone(), t.clone(), y.clone()).unwrap();
         // Host-side combination (what the fused artifact replaces).
         let mut out = vec![0.0f32; rows * dim];
@@ -129,4 +231,7 @@ fn main() {
         black_box(out);
     });
     h.shutdown();
+
+    // Re-emit with the RT rows included.
+    emit_json(&results);
 }

@@ -14,6 +14,10 @@ pub struct Metrics {
     pub failed: u64,
     pub samples_out: u64,
     pub nfe_total: u64,
+    /// Sampling plans built (one per distinct solver config).
+    pub plan_builds: u64,
+    /// Requests served from a cached `Arc<SamplePlan>`.
+    pub plan_hits: u64,
     pub queue: LatencyDigest,
     pub compute: LatencyDigest,
     pub e2e: LatencyDigest,
@@ -43,6 +47,8 @@ impl Metrics {
             ("failed", Value::from(self.failed as f64)),
             ("samples_out", Value::from(self.samples_out as f64)),
             ("nfe_total", Value::from(self.nfe_total as f64)),
+            ("plan_builds", Value::from(self.plan_builds as f64)),
+            ("plan_hits", Value::from(self.plan_hits as f64)),
             ("queue_p50_us", Value::from(self.queue.percentile_us(50.0) as f64)),
             ("queue_p99_us", Value::from(self.queue.percentile_us(99.0) as f64)),
             ("compute_p50_us", Value::from(self.compute.percentile_us(50.0) as f64)),

@@ -14,10 +14,12 @@ use crate::rng::Rng;
 use crate::runtime::{PjrtHandle, PjrtModel};
 use crate::sched::VpLinear;
 use crate::solver::unipc::CoeffVariant;
-use crate::solver::{sample, Model, Prediction, SampleOptions};
+use crate::solver::{
+    plan_key, sample, sample_with_plan, Model, Prediction, SampleOptions, SamplePlan,
+};
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -103,6 +105,10 @@ struct QueuedJob {
     enqueued: Instant,
 }
 
+/// Distinct solver configs are few in practice; the cap only guards against
+/// a hostile client cycling order schedules to grow the map unboundedly.
+const PLAN_CACHE_CAP: usize = 256;
+
 struct Inner {
     queue: Mutex<VecDeque<QueuedJob>>,
     cv: Condvar,
@@ -110,6 +116,10 @@ struct Inner {
     backend: ModelBackend,
     sched: VpLinear,
     metrics: Mutex<Metrics>,
+    /// Shared sampling plans keyed by [`plan_key`]: concurrent workers
+    /// serving identically-configured requests execute from one
+    /// `Arc<SamplePlan>` instead of re-deriving coefficients per request.
+    plans: Mutex<HashMap<String, Arc<SamplePlan>>>,
     shutdown: AtomicBool,
 }
 
@@ -129,6 +139,7 @@ impl Service {
             backend,
             sched: VpLinear::default(),
             metrics: Mutex::new(Metrics::default()),
+            plans: Mutex::new(HashMap::new()),
             shutdown: AtomicBool::new(false),
         });
         for i in 0..inner.cfg.workers {
@@ -227,6 +238,56 @@ fn worker_loop(inner: Arc<Inner>) {
     }
 }
 
+/// Fetch (or build and cache) the shared plan for this solver config.
+/// Returns `None` for configurations plans don't cover; those run the
+/// reference loop.
+fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
+    if !SamplePlan::supports(opts) {
+        return None;
+    }
+    let key = plan_key(&inner.sched, opts);
+    {
+        let plans = inner.plans.lock().unwrap();
+        if let Some(p) = plans.get(&key) {
+            let p = Arc::clone(p);
+            drop(plans);
+            inner.metrics.lock().unwrap().plan_hits += 1;
+            return Some(p);
+        }
+    }
+    let built = Arc::new(SamplePlan::build(&inner.sched, opts)?);
+    let (shared, inserted) = {
+        let mut plans = inner.plans.lock().unwrap();
+        // Two workers may race to build the same plan; keep the first so
+        // later requests all share one allocation, and count the loser as
+        // a hit (plan_builds = distinct configs actually cached). Only a
+        // genuinely new config evicts: a lost race must not shrink the
+        // cache.
+        if let Some(p) = plans.get(&key) {
+            (Arc::clone(p), false)
+        } else {
+            if plans.len() >= PLAN_CACHE_CAP {
+                // Evict one arbitrary entry: bounds memory without dumping
+                // every hot plan the way a wholesale clear would under a
+                // client churning distinct schedules.
+                if let Some(stale) = plans.keys().next().cloned() {
+                    plans.remove(&stale);
+                }
+            }
+            plans.insert(key, Arc::clone(&built));
+            (built, true)
+        }
+    };
+    let mut m = inner.metrics.lock().unwrap();
+    if inserted {
+        m.plan_builds += 1;
+    } else {
+        m.plan_hits += 1;
+    }
+    drop(m);
+    Some(shared)
+}
+
 fn run_request(inner: &Inner, req: &SampleRequest) -> SampleResponse {
     let method = match req.parsed_method() {
         Ok(m) => m,
@@ -251,7 +312,10 @@ fn run_request(inner: &Inner, req: &SampleRequest) -> SampleResponse {
 
     let mut rng = Rng::seed_from(req.seed);
     let x_t = rng.normal_tensor(&[req.n, dim]);
-    let result = sample(&model, &inner.sched, &x_t, &opts);
+    let result = match lookup_plan(inner, &opts) {
+        Some(plan) => sample_with_plan(&model, &inner.sched, &x_t, &opts, &plan),
+        None => sample(&model, &inner.sched, &x_t, &opts),
+    };
 
     SampleResponse {
         ok: true,
@@ -369,6 +433,34 @@ mod tests {
         for rx in receivers {
             let _ = rx.recv();
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_shared_across_same_config_requests() {
+        let svc = analytic_service(2, 16);
+        let req = SampleRequest { n: 2, steps: 6, seed: 1, ..Default::default() };
+        assert!(svc.sample_blocking(req.clone()).ok);
+        // Same solver config, different seed: must hit the cached plan.
+        assert!(svc.sample_blocking(SampleRequest { seed: 2, ..req.clone() }).ok);
+        let m = svc.metrics_json();
+        assert_eq!(m.get("plan_builds").unwrap().as_f64(), Some(1.0));
+        assert_eq!(m.get("plan_hits").unwrap().as_f64(), Some(1.0));
+        // A different config builds its own plan.
+        assert!(svc.sample_blocking(SampleRequest { steps: 7, seed: 3, ..req }).ok);
+        let m = svc.metrics_json();
+        assert_eq!(m.get("plan_builds").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.get("plan_hits").unwrap().as_f64(), Some(1.0));
+        // Unplannable methods bypass the cache entirely.
+        let r = svc.sample_blocking(SampleRequest {
+            method: "dpmpp-2m".into(),
+            unic: false,
+            seed: 4,
+            ..Default::default()
+        });
+        assert!(r.ok, "{:?}", r.error);
+        let m = svc.metrics_json();
+        assert_eq!(m.get("plan_builds").unwrap().as_f64(), Some(2.0));
         svc.shutdown();
     }
 

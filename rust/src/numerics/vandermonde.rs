@@ -91,6 +91,28 @@ pub fn unipc_coeffs(rks: &[f64], hh: f64, b: BFunction) -> Vec<f64> {
         .unwrap_or_else(|| panic!("singular Vandermonde system for r = {rks:?}"))
 }
 
+/// Appendix C (UniPC_v): the varying-coefficient matrix A_p = C_p⁻¹ with
+/// C_p[k][m] = r_m^k / (k+1)! for k = 0..q−1 (1-indexed: r^{k−1}/k!),
+/// returned row-major. A_p depends only on the node ratios {r_m} — not on
+/// the step size — which is why [`crate::solver::plan::SamplePlan`] can
+/// precompute the (otherwise per-step) LU inversion once per run.
+///
+/// Panics on duplicate r values (C_p is a scaled Vandermonde matrix, so
+/// distinct nodes guarantee invertibility).
+pub fn varying_coeff_matrix(rks: &[f64]) -> Vec<f64> {
+    let q = rks.len();
+    assert!(q > 0, "varying_coeff_matrix needs at least one node");
+    let mut c = vec![0.0; q * q];
+    let mut fact = 1.0;
+    for k in 0..q {
+        fact *= (k + 1) as f64;
+        for (m, &r) in rks.iter().enumerate() {
+            c[k * q + m] = r.powi(k as i32) / fact;
+        }
+    }
+    lu::invert(&c, q).expect("C_p is invertible for distinct r")
+}
+
 /// Residual of the order condition |R_p(h) a B(h) − φ_p(h)| (l1 norm over
 /// rows, in the *unscaled* form of Eq. 5). Used by tests to verify the
 /// O(h^{p+1}) bound of Theorem 3.1 empirically.
@@ -196,5 +218,31 @@ mod tests {
     #[should_panic(expected = "singular")]
     fn duplicate_nodes_panic() {
         let _ = unipc_coeffs(&[1.0, 1.0], 0.1, BFunction::Bh1);
+    }
+
+    #[test]
+    fn varying_coeff_matrix_inverts_cp() {
+        // A_p · C_p = I for asymmetric nodes (q = 3).
+        let rks = [-2.0, -0.5, 1.0];
+        let q = rks.len();
+        let a = varying_coeff_matrix(&rks);
+        let mut c = vec![0.0; q * q];
+        let mut fact = 1.0;
+        for k in 0..q {
+            fact *= (k + 1) as f64;
+            for (m, &r) in rks.iter().enumerate() {
+                c[k * q + m] = r.powi(k as i32) / fact;
+            }
+        }
+        for i in 0..q {
+            for j in 0..q {
+                let mut v = 0.0;
+                for k in 0..q {
+                    v += a[i * q + k] * c[k * q + j];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 1e-10, "A·C [{i},{j}] = {v}");
+            }
+        }
     }
 }

@@ -44,6 +44,15 @@ pub trait NoiseSchedule: Send + Sync {
 
     /// Human-readable name (manifests, logs).
     fn name(&self) -> &'static str;
+
+    /// Cache discriminator for schedule-derived caches (the solver's plan
+    /// cache): the name plus every parameter that changes the λ/α/σ maps.
+    /// The default is the bare name; parameterized implementations must
+    /// fold their parameters in, or same-name schedules with different
+    /// parameters would silently share cached plans.
+    fn cache_key(&self) -> String {
+        self.name().to_string()
+    }
 }
 
 /// VP SDE with linear β(t) = β₀ + t(β₁ − β₀):
@@ -77,6 +86,14 @@ impl NoiseSchedule for VpLinear {
 
     fn name(&self) -> &'static str {
         "vp_linear"
+    }
+
+    fn cache_key(&self) -> String {
+        format!(
+            "vp_linear:{:x}:{:x}",
+            self.beta_0.to_bits(),
+            self.beta_1.to_bits()
+        )
     }
 }
 
@@ -115,6 +132,10 @@ impl NoiseSchedule for VpCosine {
 
     fn name(&self) -> &'static str {
         "vp_cosine"
+    }
+
+    fn cache_key(&self) -> String {
+        format!("vp_cosine:{:x}:{:x}", self.s.to_bits(), self.t_max.to_bits())
     }
 }
 
@@ -187,6 +208,20 @@ mod tests {
             let g = s.sigma(t);
             close(a * a + g * g, 1.0, 1e-12);
         }
+    }
+
+    #[test]
+    fn cache_key_folds_in_parameters() {
+        // Same-name schedules with different parameters must not share
+        // plan-cache entries (solver::plan_key relies on this).
+        let a = VpLinear::default();
+        let b = VpLinear { beta_0: 0.2, beta_1: 25.0 };
+        assert_eq!(a.name(), b.name());
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_eq!(a.cache_key(), VpLinear::default().cache_key());
+        let c = VpCosine::default();
+        let d = VpCosine { s: 0.01, t_max: 0.9946 };
+        assert_ne!(c.cache_key(), d.cache_key());
     }
 
     #[test]

@@ -62,6 +62,18 @@ impl History {
         &self.entries[n - 1 - m]
     }
 
+    /// Model output of the most recent entry (the m₀ of Algorithms 5–8).
+    pub fn last_m(&self) -> &Tensor {
+        &self.last().m
+    }
+
+    /// Model output `m` steps back (`m_back(0) == last_m()`). Plan-executed
+    /// steps read only the buffered outputs — timesteps and λ's live in the
+    /// precomputed [`super::plan::SamplePlan`].
+    pub fn m_back(&self, m: usize) -> &Tensor {
+        &self.back(m).m
+    }
+
     /// Replace the most recent entry's model output (oracle corrector:
     /// re-evaluated at the corrected point).
     pub fn replace_last(&mut self, m: Tensor) {

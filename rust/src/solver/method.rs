@@ -102,6 +102,28 @@ impl Method {
         }
     }
 
+    /// Canonical form for plan-cache keys: like [`Method::id`], but with the
+    /// order-schedule contents spelled out — two different Table-4 schedules
+    /// produce different timestep-wise coefficients and must not collide in
+    /// the coordinator's plan cache.
+    pub fn cache_key(&self) -> String {
+        match self {
+            Method::UniP { schedule: Some(s), .. } => {
+                let mut key = self.id();
+                key.push('[');
+                for (i, o) in s.iter().enumerate() {
+                    if i > 0 {
+                        key.push(',');
+                    }
+                    key.push_str(&o.to_string());
+                }
+                key.push(']');
+                key
+            }
+            _ => self.id(),
+        }
+    }
+
     /// Parse the string form produced by [`Method::id`] (plus a few aliases
     /// used in configs: `ddim`, `unipc-3`, `dpmpp-2m`, …).
     pub fn parse(s: &str) -> Option<Method> {
@@ -204,6 +226,23 @@ mod tests {
             let parsed = Method::parse(&m.id()).unwrap_or_else(|| panic!("parse {}", m.id()));
             assert_eq!(parsed, m, "{}", m.id());
         }
+    }
+
+    #[test]
+    fn cache_key_distinguishes_schedules() {
+        let mk = |schedule: Option<Vec<usize>>| Method::UniP {
+            order: 3,
+            variant: CoeffVariant::Bh(BFunction::Bh2),
+            pred: Prediction::Noise,
+            schedule,
+        };
+        let a = mk(Some(vec![1, 2, 3]));
+        let b = mk(Some(vec![1, 2, 2]));
+        let c = mk(None);
+        assert_eq!(a.id(), b.id(), "id() alone cannot tell schedules apart");
+        assert_ne!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+        assert_eq!(c.cache_key(), c.id());
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! * [`runner`] — drives any method over a timestep grid, optionally
 //!   wrapping it with UniC ("+UniC" rows of Table 2/3), with NFE accounting
 //!   and trajectory capture.
+//! * [`plan`] — precomputed sampling plans for the UniPC hot path: one
+//!   [`SamplePlan`] per `(schedule, options)` resolves every per-step
+//!   scalar and coefficient up front, and [`sample_with_plan`] executes it
+//!   with zero solver-side heap allocations in steady state. The
+//!   coordinator caches plans by [`plan_key`] across requests.
 
 pub mod ddim;
 pub mod deis;
@@ -23,6 +28,7 @@ pub mod dpm_solver;
 pub mod dpm_solverpp;
 pub mod history;
 pub mod method;
+pub mod plan;
 pub mod pndm;
 pub mod runner;
 pub mod thresholding;
@@ -30,7 +36,8 @@ pub mod unipc;
 
 pub use history::History;
 pub use method::{Method, UniPcCoeffs};
-pub use runner::{sample, SampleOptions, SampleResult};
+pub use plan::{plan_key, sample_with_plan, SamplePlan, StepWorkspace};
+pub use runner::{sample, sample_unplanned, SampleOptions, SampleResult};
 pub use thresholding::DynamicThresholding;
 
 use crate::sched::NoiseSchedule;

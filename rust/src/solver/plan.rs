@@ -1,0 +1,588 @@
+//! Precomputed sampling plans + zero-allocation step execution for the
+//! UniPC hot path.
+//!
+//! # Why plans
+//!
+//! Every scalar a multistep UniPC run needs — the timestep grid, the
+//! per-step effective order (warm-up ramp + optional Table-4 schedule), the
+//! signed step `hh`, the node ratios r_m, the linear-part scalars
+//! (α_t/α_s, −σ_t·(eʰ−1), …) and the Theorem-3.1 / Appendix-C combination
+//! coefficients — is a pure function of `(NoiseSchedule, SampleOptions)`.
+//! The reference loop ([`super::runner::sample_unplanned`]) re-derives all
+//! of it at every step; the `Varying` coefficient variant even re-runs a
+//! full LU inversion per step. A [`SamplePlan`] hoists that work out of the
+//! loop: built once, it reduces the steady-state step to pure tensor
+//! arithmetic with zero coefficient math.
+//!
+//! # Lifecycle: build → cache → execute
+//!
+//! 1. **Build** — [`SamplePlan::build`] resolves the whole run up front.
+//!    It covers the multistep UniP/UniPC family (any order, both
+//!    coefficient variants, both parametrizations, optional order schedule,
+//!    optional UniC/oracle); it returns `None` for singlestep methods,
+//!    non-UniP baselines, and `exact_warmup` runs, which keep using the
+//!    reference loop.
+//! 2. **Cache** — a plan is immutable and model-independent, so identically
+//!    configured requests share one `Arc<SamplePlan>`. The coordinator
+//!    ([`crate::coordinator`]) keys its cache by [`plan_key`], which folds
+//!    in every input the plan depends on: the noise schedule's name, the
+//!    canonical method form including order-schedule contents
+//!    ([`Method::cache_key`]), step count, spacing, the exact
+//!    `t_start`/`t_end` bits, and the UniC variant / oracle flag.
+//!    Execute-time settings the plan does not bake in (thresholding,
+//!    trajectory capture) deliberately don't key it.
+//! 3. **Execute** — [`sample_with_plan`] drives the run from the plan using
+//!    a [`StepWorkspace`] of preallocated buffers. It is bit-identical to
+//!    the reference loop (asserted by the tests below and by
+//!    `tests/plan_alloc.rs`): same operations, same accumulation order,
+//!    same NFE accounting.
+//!
+//! # The zero-allocation invariant
+//!
+//! A steady-state planned step performs **zero heap allocations** in the
+//! solver arithmetic: [`SamplePlan::predict_into`] and
+//! [`SamplePlan::correct_into`] write only into the workspace and the state
+//! tensor (`assign_*` kernels + [`crate::tensor::weighted_sum_into`]), the
+//! history ring buffer is preallocated and merely rotates ownership of the
+//! model-output tensors, and the state advance is a pointer swap. The only
+//! allocations left in the loop are the model evaluations themselves, which
+//! by contract produce a fresh output tensor. `tests/plan_alloc.rs` proves
+//! the invariant with a counting global allocator.
+
+use super::history::History;
+use super::method::Method;
+use super::runner::{effective_order, SampleOptions, SampleResult};
+use super::unipc::residual_coeffs;
+use super::{Evaluator, Model, Prediction};
+use crate::sched::{timesteps, NoiseSchedule};
+use crate::tensor::{weighted_sum_into, Tensor};
+
+/// Cache key for a plan: every input [`SamplePlan::build`] reads, and
+/// nothing else. Two requests with equal keys can share one plan — in
+/// particular, options that differ only in execute-time settings the plan
+/// does not bake in (thresholding, trajectory capture) share a plan.
+///
+/// The schedule enters through [`NoiseSchedule::cache_key`], which folds
+/// in the schedule's parameters, so same-name schedules with different
+/// parameters never share a plan.
+pub fn plan_key(sched: &dyn NoiseSchedule, opts: &SampleOptions) -> String {
+    use std::fmt::Write;
+    let mut key = String::new();
+    let _ = write!(
+        key,
+        "{}|{}|steps={}|{}|{:x}..{:x}|{}",
+        sched.cache_key(),
+        opts.method.cache_key(),
+        opts.steps,
+        opts.spacing.name(),
+        opts.t_start.to_bits(),
+        opts.t_end.to_bits(),
+        match &opts.unic {
+            Some(u) => format!(
+                "unic-{}{}",
+                u.variant.name(),
+                if u.oracle { "-oracle" } else { "" }
+            ),
+            None => "nounic".to_string(),
+        },
+    );
+    key
+}
+
+/// Everything step `i` needs that does not depend on the model outputs.
+#[derive(Clone, Debug)]
+pub struct PlannedStep {
+    /// Target timestep t_i.
+    pub t: f64,
+    /// λ_{t_i} (pushed into the history buffer with the step's output).
+    pub lambda: f64,
+    /// Effective UniP order p_i (warm-up ramp / order schedule applied).
+    pub order: usize,
+    /// 1/r_m for the historical nodes m = 1..p_i−1 (D_m/r_m scaling).
+    pub inv_r: Vec<f64>,
+    /// α_t/α_s (noise prediction) or σ_t/σ_s (data prediction).
+    pub a_ratio: f64,
+    /// −σ_t·(eʰ−1) (noise) or α_t·(1−e^{−h}) (data): multiplies m₀ in the
+    /// linear part x^{(1)}.
+    pub m0_coef: f64,
+    /// −σ_t (noise) or −α_t (data): multiplies the residual combination.
+    pub residual_scale: f64,
+    /// Fully-resolved predictor coefficients c_m (Corollary 3.2 system,
+    /// p_i−1 nodes). Empty iff p_i = 1 (the DDIM-degenerate step).
+    pub pred_coeffs: Vec<f64>,
+    /// Fully-resolved corrector coefficients (full p_i-node system with
+    /// r_p = 1). Empty iff the corrector is skipped at this step (no UniC
+    /// configured, or the final step).
+    pub corr_coeffs: Vec<f64>,
+}
+
+/// A complete precomputed run: grid, orders, and coefficients for every
+/// step. Immutable and model-independent — share via `Arc` across requests.
+#[derive(Clone, Debug)]
+pub struct SamplePlan {
+    key: String,
+    prediction: Prediction,
+    oracle: bool,
+    history_cap: usize,
+    max_order: usize,
+    t0: f64,
+    lambda0: f64,
+    steps: Vec<PlannedStep>,
+}
+
+/// Preallocated buffers for plan execution. One workspace serves a whole
+/// run (or any number of runs with the same batch shape); steady-state
+/// steps write into it without touching the allocator.
+pub struct StepWorkspace {
+    /// D_m/r_m rows (index m−1); slot `p−1` doubles as the corrector's
+    /// D_p = m_t − m₀ row.
+    d: Vec<Tensor>,
+    /// The residual combination Σ_m c_m · D_m/r_m.
+    res: Tensor,
+    /// The linear part x^{(1)}, shared by predictor and corrector.
+    lin: Tensor,
+    /// Predictor output x_pred (swapped into the state when no corrector
+    /// applies).
+    pred: Tensor,
+}
+
+impl StepWorkspace {
+    /// Buffers for batch shape `shape` and plans up to `max_order`.
+    pub fn new(shape: &[usize], max_order: usize) -> StepWorkspace {
+        StepWorkspace {
+            d: (0..max_order.max(1)).map(|_| Tensor::zeros(shape)).collect(),
+            res: Tensor::zeros(shape),
+            lin: Tensor::zeros(shape),
+            pred: Tensor::zeros(shape),
+        }
+    }
+
+    /// The predictor output written by [`SamplePlan::predict_into`].
+    pub fn pred(&self) -> &Tensor {
+        &self.pred
+    }
+}
+
+impl SamplePlan {
+    /// Whether this configuration is plannable: the multistep UniP/UniPC
+    /// hot path. Everything else runs the reference loop.
+    pub fn supports(opts: &SampleOptions) -> bool {
+        matches!(opts.method, Method::UniP { .. }) && !opts.exact_warmup && opts.steps >= 1
+    }
+
+    /// Resolve the whole run: grid, warm-up order ramp, node ratios,
+    /// linear-part scalars, and predictor/corrector coefficients for every
+    /// step. Returns `None` for configurations plans don't cover.
+    pub fn build(sched: &dyn NoiseSchedule, opts: &SampleOptions) -> Option<SamplePlan> {
+        if !Self::supports(opts) {
+            return None;
+        }
+        let (order, variant, pred, schedule) = match &opts.method {
+            Method::UniP { order, variant, pred, schedule } => {
+                (*order, *variant, *pred, schedule.as_deref())
+            }
+            _ => return None,
+        };
+        let m_steps = opts.steps;
+        let ts = timesteps(sched, opts.spacing, opts.t_start, opts.t_end, m_steps);
+        let lams: Vec<f64> = ts.iter().map(|&t| sched.lambda(t)).collect();
+        // Mirrors the reference loop's buffer sizing exactly: in steady
+        // state the history holds min(i, cap) entries when stepping to t_i.
+        let cap = opts
+            .method
+            .history_needed()
+            .max(opts.unic.map(|_| order).unwrap_or(0))
+            .max(1);
+
+        let mut steps = Vec::with_capacity(m_steps);
+        let mut max_order = 1usize;
+        for i in 1..=m_steps {
+            let hist_len = i.min(cap);
+            let p = effective_order(order, schedule, i, hist_len);
+            max_order = max_order.max(p);
+
+            let (t0, t) = (ts[i - 1], ts[i]);
+            let (l0, lt) = (lams[i - 1], lams[i]);
+            let h = lt - l0;
+            debug_assert!(h > 0.0, "sampling must increase λ");
+
+            let mut rks = Vec::with_capacity(p);
+            let mut inv_r = Vec::with_capacity(p - 1);
+            for m in 1..p {
+                let r = (lams[i - 1 - m] - l0) / h;
+                rks.push(r);
+                inv_r.push(1.0 / r);
+            }
+            rks.push(1.0);
+
+            let (hh, a_ratio, m0_coef, residual_scale) = match pred {
+                Prediction::Noise => {
+                    let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
+                    (h, a_t / sched.alpha(t0), -s_t * h.exp_m1(), -s_t)
+                }
+                Prediction::Data => {
+                    let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
+                    (-h, s_t / sched.sigma(t0), a_t * (-(-h).exp_m1()), -a_t)
+                }
+            };
+
+            let pred_coeffs = if p >= 2 {
+                residual_coeffs(&rks[..p - 1], hh, variant)
+            } else {
+                Vec::new()
+            };
+            let corr_coeffs = match (&opts.unic, i == m_steps) {
+                (Some(u), false) => residual_coeffs(&rks, hh, u.variant),
+                _ => Vec::new(),
+            };
+
+            steps.push(PlannedStep {
+                t,
+                lambda: lt,
+                order: p,
+                inv_r,
+                a_ratio,
+                m0_coef,
+                residual_scale,
+                pred_coeffs,
+                corr_coeffs,
+            });
+        }
+
+        Some(SamplePlan {
+            key: plan_key(sched, opts),
+            prediction: pred,
+            oracle: opts.unic.map(|u| u.oracle).unwrap_or(false),
+            history_cap: cap,
+            max_order,
+            t0: ts[0],
+            lambda0: lams[0],
+            steps,
+        })
+    }
+
+    /// The cache key this plan was built under (equals [`plan_key`] of the
+    /// originating options).
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Number of solver steps.
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Largest effective order across the run (sizes the workspace).
+    pub fn max_order(&self) -> usize {
+        self.max_order
+    }
+
+    /// The resolved per-step schedule (read-only; benches and tests).
+    pub fn steps(&self) -> &[PlannedStep] {
+        &self.steps
+    }
+
+    /// Whether the corrector applies at step `k` (0-based).
+    pub fn has_corrector(&self, k: usize) -> bool {
+        !self.steps[k].corr_coeffs.is_empty()
+    }
+
+    /// Stage 1 of step `k`: fill the workspace with the shared linear part
+    /// x^{(1)}, the D_m/r_m rows, and the predictor output (`ws.pred`).
+    /// Zero heap allocations.
+    pub fn predict_into(&self, k: usize, hist: &History, x: &Tensor, ws: &mut StepWorkspace) {
+        let sp = &self.steps[k];
+        let m0 = hist.last_m();
+        ws.lin.assign_lincomb(sp.a_ratio, x, sp.m0_coef, m0);
+        for m in 1..sp.order {
+            ws.d[m - 1].assign_sub_scaled(hist.m_back(m), m0, sp.inv_r[m - 1]);
+        }
+        if sp.order >= 2 {
+            weighted_sum_into(&mut ws.res, &sp.pred_coeffs, &ws.d[..sp.order - 1]);
+            ws.pred.assign_lincomb(1.0, &ws.lin, sp.residual_scale, &ws.res);
+        } else {
+            // p = 1 degenerates to DDIM: the linear part is the step.
+            ws.pred.copy_from(&ws.lin);
+        }
+    }
+
+    /// Stage 2 of step `k`: given the model output `m_t` at the predicted
+    /// point, write the UniC-corrected state into `x`. Returns `false`
+    /// (leaving `x` untouched) when the plan has no corrector at this step.
+    /// Zero heap allocations. Requires a prior [`SamplePlan::predict_into`]
+    /// for the same step (reuses the workspace's linear part and D rows).
+    pub fn correct_into(
+        &self,
+        k: usize,
+        hist: &History,
+        m_t: &Tensor,
+        ws: &mut StepWorkspace,
+        x: &mut Tensor,
+    ) -> bool {
+        let sp = &self.steps[k];
+        if sp.corr_coeffs.is_empty() {
+            return false;
+        }
+        // Full p-node system with r_p = 1; D_p / r_p = m_t − m₀.
+        ws.d[sp.order - 1].assign_sub(m_t, hist.last_m());
+        weighted_sum_into(&mut ws.res, &sp.corr_coeffs, &ws.d[..sp.order]);
+        x.assign_lincomb(1.0, &ws.lin, sp.residual_scale, &ws.res);
+        true
+    }
+}
+
+/// Run the sampler from a precomputed plan. Bit-identical to
+/// [`super::runner::sample_unplanned`] on the same options, but with all
+/// per-step coefficient math already resolved and zero solver-side heap
+/// allocations in steady state.
+pub fn sample_with_plan(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    x_init: &Tensor,
+    opts: &SampleOptions,
+    plan: &SamplePlan,
+) -> SampleResult {
+    debug_assert_eq!(
+        plan.key(),
+        plan_key(sched, opts),
+        "plan built for a different schedule/config"
+    );
+    let ev = Evaluator::new(model, sched, plan.prediction, opts.thresholding);
+    let mut traj = opts.capture_trajectory.then(Vec::new);
+
+    let mut x = x_init.clone();
+    let mut hist = History::new(plan.history_cap);
+    hist.push(plan.t0, plan.lambda0, ev.eval(&x, plan.t0));
+    let mut ws = StepWorkspace::new(x.shape(), plan.max_order);
+
+    let n = plan.steps.len();
+    for k in 0..n {
+        let sp = &plan.steps[k];
+        plan.predict_into(k, &hist, &x, &mut ws);
+        if plan.has_corrector(k) {
+            let m_t = ev.eval(&ws.pred, sp.t);
+            plan.correct_into(k, &hist, &m_t, &mut ws, &mut x);
+            let m_buf = if plan.oracle { ev.eval(&x, sp.t) } else { m_t };
+            hist.push(sp.t, sp.lambda, m_buf);
+        } else {
+            if k + 1 < n {
+                let m_next = ev.eval(&ws.pred, sp.t);
+                hist.push(sp.t, sp.lambda, m_next);
+            }
+            std::mem::swap(&mut x, &mut ws.pred);
+        }
+        if let Some(tr) = traj.as_mut() {
+            tr.push((sp.t, x.clone()));
+        }
+    }
+
+    SampleResult { x, nfe: ev.nfe(), trajectory: traj }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::vandermonde::BFunction;
+    use crate::rng::Rng;
+    use crate::sched::VpLinear;
+    use crate::solver::runner::{sample, sample_unplanned, UniCOptions};
+    use crate::solver::unipc::CoeffVariant;
+
+    fn bits(t: &Tensor) -> Vec<u64> {
+        t.data().iter().map(|v| v.to_bits()).collect()
+    }
+
+    /// Nonlinear, t-dependent toy model (noise-native).
+    fn toy_model() -> impl Model {
+        (Prediction::Noise, 3, |x: &Tensor, t: f64| {
+            let mut m = x.scaled(0.3 + 0.1 * t);
+            for v in m.data_mut() {
+                *v += (*v * 0.7).sin() * 0.05;
+            }
+            m
+        })
+    }
+
+    #[test]
+    fn planned_path_is_bit_identical_to_reference() {
+        let sched = VpLinear::default();
+        let model = toy_model();
+        let x0 = Rng::seed_from(11).normal_tensor(&[4, 3]);
+        let variants = [
+            CoeffVariant::Bh(BFunction::Bh1),
+            CoeffVariant::Bh(BFunction::Bh2),
+            CoeffVariant::Varying,
+        ];
+        for order in [1usize, 2, 3, 4] {
+            for variant in variants {
+                for pred in [Prediction::Noise, Prediction::Data] {
+                    for with_unic in [false, true] {
+                        for steps in [1usize, 2, 3, 8] {
+                            let mut opts = SampleOptions::new(
+                                Method::UniP { order, variant, pred, schedule: None },
+                                steps,
+                            );
+                            if with_unic {
+                                opts.unic = Some(UniCOptions { variant, oracle: false });
+                            }
+                            let a = sample_unplanned(&model, &sched, &x0, &opts);
+                            let plan =
+                                SamplePlan::build(&sched, &opts).expect("plannable config");
+                            let b = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+                            let tag = format!(
+                                "order {order} {variant:?} {pred:?} unic {with_unic} steps {steps}"
+                            );
+                            assert_eq!(a.nfe, b.nfe, "nfe: {tag}");
+                            assert_eq!(bits(&a.x), bits(&b.x), "state bits: {tag}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gmm_model_bit_equivalence() {
+        // The ISSUE's acceptance setting: the analytic GMM model, every
+        // variant, through the public `sample` entry point (which routes
+        // plannable configs through the plan).
+        let gm = crate::analytic::datasets::dataset(
+            crate::analytic::datasets::DatasetSpec::Cifar10Like,
+        );
+        let sched = VpLinear::default();
+        let model = crate::analytic::GmmModel { gm: &gm, sched: &sched };
+        let x0 = Rng::seed_from(3).normal_tensor(&[6, gm.dim]);
+        for variant in [CoeffVariant::Bh(BFunction::Bh2), CoeffVariant::Varying] {
+            for with_unic in [false, true] {
+                let mut opts = SampleOptions::new(
+                    Method::UniP {
+                        order: 3,
+                        variant,
+                        pred: Prediction::Noise,
+                        schedule: None,
+                    },
+                    7,
+                );
+                if with_unic {
+                    opts.unic = Some(UniCOptions { variant, oracle: false });
+                }
+                let a = sample_unplanned(&model, &sched, &x0, &opts);
+                let b = sample(&model, &sched, &x0, &opts);
+                assert_eq!(a.nfe, b.nfe);
+                assert_eq!(bits(&a.x), bits(&b.x), "{variant:?} unic {with_unic}");
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_and_order_schedule_match_reference() {
+        let sched = VpLinear::default();
+        let model = toy_model();
+        let x0 = Rng::seed_from(7).normal_tensor(&[2, 3]);
+
+        let mut oracle_opts = SampleOptions::new(
+            Method::unip(2, BFunction::Bh2, Prediction::Noise),
+            6,
+        );
+        oracle_opts.unic =
+            Some(UniCOptions { variant: CoeffVariant::Bh(BFunction::Bh2), oracle: true });
+
+        let sched_opts = SampleOptions::new(
+            Method::UniP {
+                order: 3,
+                variant: CoeffVariant::Bh(BFunction::Bh2),
+                pred: Prediction::Noise,
+                schedule: Some(vec![1, 2, 3, 3, 2, 1]),
+            },
+            6,
+        );
+
+        for opts in [oracle_opts, sched_opts] {
+            let a = sample_unplanned(&model, &sched, &x0, &opts);
+            let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+            let b = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+            assert_eq!(a.nfe, b.nfe);
+            assert_eq!(bits(&a.x), bits(&b.x));
+        }
+    }
+
+    #[test]
+    fn trajectory_capture_matches_reference() {
+        let sched = VpLinear::default();
+        let model = toy_model();
+        let x0 = Rng::seed_from(9).normal_tensor(&[2, 3]);
+        let mut opts =
+            SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 5);
+        opts.capture_trajectory = true;
+        let a = sample_unplanned(&model, &sched, &x0, &opts);
+        let plan = SamplePlan::build(&sched, &opts).unwrap();
+        let b = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+        let (ta, tb) = (a.trajectory.unwrap(), b.trajectory.unwrap());
+        assert_eq!(ta.len(), tb.len());
+        for ((t1, x1), (t2, x2)) in ta.iter().zip(&tb) {
+            assert_eq!(t1, t2);
+            assert_eq!(bits(x1), bits(x2));
+        }
+    }
+
+    #[test]
+    fn unsupported_configs_do_not_build() {
+        let sched = VpLinear::default();
+        let ddim = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 5);
+        assert!(SamplePlan::build(&sched, &ddim).is_none());
+        let single = SampleOptions::new(Method::DpmSolverSingle { order: 3 }, 6);
+        assert!(SamplePlan::build(&sched, &single).is_none());
+        let mut warm = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
+        warm.exact_warmup = true;
+        assert!(SamplePlan::build(&sched, &warm).is_none());
+    }
+
+    #[test]
+    fn plan_key_separates_configs() {
+        let sched = VpLinear::default();
+        let key = |o: &SampleOptions| plan_key(&sched, o);
+        let base = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
+        let mut other = base.clone();
+        other.steps = 9;
+        assert_ne!(key(&base), key(&other));
+        let mut nounic = base.clone();
+        nounic.unic = None;
+        assert_ne!(key(&base), key(&nounic));
+        let mut range = base.clone();
+        range.t_end = 2e-3;
+        assert_ne!(key(&base), key(&range));
+        // Execute-time settings the plan does not bake in share a plan.
+        let mut thr = base.clone();
+        thr.thresholding = Some(crate::solver::DynamicThresholding::default());
+        assert_eq!(key(&base), key(&thr));
+        assert_eq!(key(&base), key(&base.clone()));
+        // Different schedules never share a key.
+        let cosine = crate::sched::VpCosine::default();
+        assert_ne!(key(&base), plan_key(&cosine, &base));
+    }
+
+    #[test]
+    fn plan_resolves_warmup_orders_and_coeff_lengths() {
+        let sched = VpLinear::default();
+        let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 6);
+        let plan = SamplePlan::build(&sched, &opts).unwrap();
+        assert_eq!(plan.len(), 6);
+        assert_eq!(plan.max_order(), 3);
+        let orders: Vec<usize> = plan.steps().iter().map(|s| s.order).collect();
+        assert_eq!(orders, vec![1, 2, 3, 3, 3, 3], "warm-up ramp then steady state");
+        for (k, sp) in plan.steps().iter().enumerate() {
+            assert_eq!(sp.pred_coeffs.len(), sp.order - 1);
+            assert_eq!(sp.inv_r.len(), sp.order - 1);
+            if k + 1 < plan.len() {
+                assert_eq!(sp.corr_coeffs.len(), sp.order);
+                assert!(plan.has_corrector(k));
+            } else {
+                assert!(!plan.has_corrector(k), "corrector skipped after final step");
+            }
+        }
+    }
+}

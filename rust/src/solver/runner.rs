@@ -18,6 +18,7 @@ use super::dpm_solver::{dpm_solver_2_step, dpm_solver_3_step};
 use super::dpm_solverpp::{dpmpp_2m_step, dpmpp_3m_step, dpmpp_3s_step};
 use super::history::History;
 use super::method::{singlestep_orders, Method};
+use super::plan::{sample_with_plan, SamplePlan};
 use super::pndm::plms_step;
 use super::thresholding::DynamicThresholding;
 use super::unipc::{unic_correct_with, unip_predict, CoeffVariant};
@@ -120,7 +121,33 @@ pub struct SampleResult {
 }
 
 /// Run the configured sampler from `x_init` (at `t_start`) down to `t_end`.
+///
+/// Plannable configurations (the multistep UniP/UniPC family — see
+/// [`SamplePlan::supports`]) execute from a [`SamplePlan`]: all per-step
+/// coefficient math is resolved up front and the steady-state step is pure
+/// in-place tensor arithmetic. The result is bit-identical to
+/// [`sample_unplanned`]. Callers issuing many identically-configured runs
+/// (the coordinator) should build/cache the plan themselves and call
+/// [`sample_with_plan`] directly to amortize even the one-time build.
 pub fn sample(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    x_init: &Tensor,
+    opts: &SampleOptions,
+) -> SampleResult {
+    if let Some(plan) = SamplePlan::build(sched, opts) {
+        return sample_with_plan(model, sched, x_init, opts, &plan);
+    }
+    sample_unplanned(model, sched, x_init, opts)
+}
+
+/// The on-the-fly reference loop: step geometry and combination
+/// coefficients recomputed at every step. Kept (a) as the only path for
+/// configurations a [`SamplePlan`] does not cover — singlestep methods,
+/// non-UniP baselines, `exact_warmup` runs — and (b) as the reference
+/// implementation the planned path is tested bit-identical against
+/// (`solver::plan` tests).
+pub fn sample_unplanned(
     model: &dyn Model,
     sched: &dyn NoiseSchedule,
     x_init: &Tensor,
@@ -138,7 +165,11 @@ pub fn sample(
 /// custom order schedule (Table 4). The final-step damping to lower orders
 /// follows the DPM-Solver++ convention: the default schedule keeps `order`
 /// until the last steps where fewer future steps remain.
-fn effective_order(
+///
+/// Shared with [`SamplePlan::build`], which resolves the same clamping for
+/// the whole run up front — a single definition keeps the planned path's
+/// bit-identical contract with this loop from drifting.
+pub(super) fn effective_order(
     method_order: usize,
     schedule: Option<&[usize]>,
     i: usize,

@@ -15,8 +15,7 @@
 use super::history::History;
 use super::{Evaluator, Prediction};
 use crate::numerics::phi::phi;
-use crate::numerics::vandermonde::{unipc_coeffs, BFunction};
-use crate::numerics::lu;
+use crate::numerics::vandermonde::{unipc_coeffs, varying_coeff_matrix, BFunction};
 use crate::sched::NoiseSchedule;
 use crate::tensor::{weighted_sum, Tensor};
 
@@ -51,16 +50,7 @@ pub fn residual_coeffs(rks: &[f64], hh: f64, variant: CoeffVariant) -> Vec<f64> 
             unipc_coeffs(rks, hh, b).into_iter().map(|a| a * bh).collect()
         }
         CoeffVariant::Varying => {
-            // C_p[k][m] = r_m^k / (k+1)!  for k = 0..q-1 (1-indexed: r^{k−1}/k!).
-            let mut c = vec![0.0; q * q];
-            let mut fact = 1.0;
-            for k in 0..q {
-                fact *= (k + 1) as f64;
-                for (m, &r) in rks.iter().enumerate() {
-                    c[k * q + m] = r.powi(k as i32) / fact;
-                }
-            }
-            let a = lu::invert(&c, q).expect("C_p is invertible for distinct r");
+            let a = varying_coeff_matrix(rks);
             // Eq. 12 / Appendix E.5: the D_m/r_m coefficient is
             // Σ_n hh φ_{n+1}(hh) A_{m,n} with A = C_p⁻¹ indexed (row m,
             // column n) — note the order: node index first, derivative
@@ -113,10 +103,9 @@ fn step_geometry(
         let e = hist.back(m);
         let r = (e.lambda - l0) / h;
         rks.push(r);
-        // D_m / r_m = (m_{i−m−1} − m₀) / r_m
-        let mut d = e.m.sub(&prev.m);
-        d.scale(1.0 / r);
-        d1s.push(d);
+        // D_m / r_m = (m_{i−m−1} − m₀) / r_m — fused single pass instead of
+        // the old sub-then-scale pair (one traversal, one allocation).
+        d1s.push(Tensor::sub_scaled(&e.m, &prev.m, 1.0 / r));
     }
     rks.push(1.0);
 

@@ -136,6 +136,56 @@ impl Tensor {
         Tensor { shape: x.shape.clone(), data }
     }
 
+    /// `self <- a * x + b * y`, reusing this tensor's buffer (the
+    /// zero-allocation mirror of [`Tensor::lincomb`]; same accumulation
+    /// order, so results are bit-identical).
+    pub fn assign_lincomb(&mut self, a: f64, x: &Tensor, b: f64, y: &Tensor) {
+        assert_eq!(x.shape, y.shape, "lincomb shape mismatch");
+        assert_eq!(self.shape, x.shape, "assign_lincomb output shape mismatch");
+        for ((o, xv), yv) in self.data.iter_mut().zip(&x.data).zip(&y.data) {
+            *o = a * xv + b * yv;
+        }
+    }
+
+    /// Fused `(x − y) * s` as a new tensor: one traversal instead of the
+    /// sub-then-scale pair (bit-identical to it, since `1·a + (−1)·b` and
+    /// `a − b` round the same way).
+    pub fn sub_scaled(x: &Tensor, y: &Tensor, s: f64) -> Tensor {
+        assert_eq!(x.shape, y.shape, "sub_scaled shape mismatch");
+        let data = x
+            .data
+            .iter()
+            .zip(&y.data)
+            .map(|(xv, yv)| (xv - yv) * s)
+            .collect();
+        Tensor { shape: x.shape.clone(), data }
+    }
+
+    /// `self <- (x − y) * s`, reusing this tensor's buffer (workspace form
+    /// of [`Tensor::sub_scaled`]; the solver's D_m/r_m rows).
+    pub fn assign_sub_scaled(&mut self, x: &Tensor, y: &Tensor, s: f64) {
+        assert_eq!(x.shape, y.shape, "sub_scaled shape mismatch");
+        assert_eq!(self.shape, x.shape, "assign_sub_scaled output shape mismatch");
+        for ((o, xv), yv) in self.data.iter_mut().zip(&x.data).zip(&y.data) {
+            *o = (xv - yv) * s;
+        }
+    }
+
+    /// `self <- x − y`, reusing this tensor's buffer.
+    pub fn assign_sub(&mut self, x: &Tensor, y: &Tensor) {
+        assert_eq!(x.shape, y.shape, "sub shape mismatch");
+        assert_eq!(self.shape, x.shape, "assign_sub output shape mismatch");
+        for ((o, xv), yv) in self.data.iter_mut().zip(&x.data).zip(&y.data) {
+            *o = xv - yv;
+        }
+    }
+
+    /// `self <- x` without allocating (shapes must match).
+    pub fn copy_from(&mut self, x: &Tensor) {
+        assert_eq!(self.shape, x.shape, "copy_from shape mismatch");
+        self.data.copy_from_slice(&x.data);
+    }
+
     /// Elementwise difference `self - other` as a new tensor.
     pub fn sub(&self, other: &Tensor) -> Tensor {
         Tensor::lincomb(1.0, self, -1.0, other)
@@ -256,6 +306,30 @@ pub fn weighted_sum(coeffs: &[f64], ts: &[&Tensor]) -> Tensor {
             let (a, b, c, d) = (ts[0].data(), ts[1].data(), ts[2].data(), ts[3].data());
             out.extend((0..n).map(|i| c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i]));
         }
+        5 => {
+            let (c0, c1, c2, c3, c4) =
+                (coeffs[0], coeffs[1], coeffs[2], coeffs[3], coeffs[4]);
+            let (a, b, c, d, e) =
+                (ts[0].data(), ts[1].data(), ts[2].data(), ts[3].data(), ts[4].data());
+            out.extend(
+                (0..n).map(|i| c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i] + c4 * e[i]),
+            );
+        }
+        6 => {
+            let (c0, c1, c2, c3, c4, c5) =
+                (coeffs[0], coeffs[1], coeffs[2], coeffs[3], coeffs[4], coeffs[5]);
+            let (a, b, c, d, e, f) = (
+                ts[0].data(),
+                ts[1].data(),
+                ts[2].data(),
+                ts[3].data(),
+                ts[4].data(),
+                ts[5].data(),
+            );
+            out.extend((0..n).map(|i| {
+                c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i] + c4 * e[i] + c5 * f[i]
+            }));
+        }
         _ => {
             out.resize(n, 0.0);
             for (&cm, t) in coeffs.iter().zip(ts) {
@@ -270,6 +344,88 @@ pub fn weighted_sum(coeffs: &[f64], ts: &[&Tensor]) -> Tensor {
         }
     }
     Tensor { shape, data: out }
+}
+
+/// In-place variant of [`weighted_sum`]: writes `Σ_m c_m * ts[m]` into
+/// `out`'s existing buffer — zero allocations, for the plan-executed step
+/// path where `ts` are workspace rows. The unrolled fast paths use the same
+/// accumulation order as [`weighted_sum`], so results are bit-identical.
+pub fn weighted_sum_into(out: &mut Tensor, coeffs: &[f64], ts: &[Tensor]) {
+    assert_eq!(coeffs.len(), ts.len());
+    assert!(!ts.is_empty(), "weighted_sum_into of zero tensors");
+    let n = ts[0].len();
+    assert_eq!(out.shape(), ts[0].shape(), "weighted_sum_into output shape mismatch");
+    for t in ts {
+        assert_eq!(t.shape(), ts[0].shape(), "weighted_sum_into shape mismatch");
+    }
+    let o = out.data_mut();
+    match ts.len() {
+        1 => {
+            let (c0, a) = (coeffs[0], ts[0].data());
+            for i in 0..n {
+                o[i] = c0 * a[i];
+            }
+        }
+        2 => {
+            let (c0, c1) = (coeffs[0], coeffs[1]);
+            let (a, b) = (ts[0].data(), ts[1].data());
+            for i in 0..n {
+                o[i] = c0 * a[i] + c1 * b[i];
+            }
+        }
+        3 => {
+            let (c0, c1, c2) = (coeffs[0], coeffs[1], coeffs[2]);
+            let (a, b, c) = (ts[0].data(), ts[1].data(), ts[2].data());
+            for i in 0..n {
+                o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i];
+            }
+        }
+        4 => {
+            let (c0, c1, c2, c3) = (coeffs[0], coeffs[1], coeffs[2], coeffs[3]);
+            let (a, b, c, d) = (ts[0].data(), ts[1].data(), ts[2].data(), ts[3].data());
+            for i in 0..n {
+                o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i];
+            }
+        }
+        5 => {
+            let (c0, c1, c2, c3, c4) =
+                (coeffs[0], coeffs[1], coeffs[2], coeffs[3], coeffs[4]);
+            let (a, b, c, d, e) =
+                (ts[0].data(), ts[1].data(), ts[2].data(), ts[3].data(), ts[4].data());
+            for i in 0..n {
+                o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i] + c4 * e[i];
+            }
+        }
+        6 => {
+            let (c0, c1, c2, c3, c4, c5) =
+                (coeffs[0], coeffs[1], coeffs[2], coeffs[3], coeffs[4], coeffs[5]);
+            let (a, b, c, d, e, f) = (
+                ts[0].data(),
+                ts[1].data(),
+                ts[2].data(),
+                ts[3].data(),
+                ts[4].data(),
+                ts[5].data(),
+            );
+            for i in 0..n {
+                o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i] + c4 * e[i] + c5 * f[i];
+            }
+        }
+        _ => {
+            for v in o.iter_mut() {
+                *v = 0.0;
+            }
+            for (&cm, t) in coeffs.iter().zip(ts) {
+                if cm == 0.0 {
+                    continue;
+                }
+                let src = t.data();
+                for i in 0..n {
+                    o[i] += cm * src[i];
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -331,6 +487,62 @@ mod tests {
         let b = Tensor::from_slice(&[0.0, 1.0]);
         let w = weighted_sum(&[2.0, -3.0], &[&a, &b]);
         assert_eq!(w.data(), &[2.0, -3.0]);
+    }
+
+    #[test]
+    fn weighted_sum_all_arities_match_generic() {
+        // The unrolled fast paths (1..=6) and the generic loop must agree;
+        // `weighted_sum_into` must be bit-identical to `weighted_sum`.
+        let ts: Vec<Tensor> = (0..7)
+            .map(|k| {
+                Tensor::from_slice(
+                    &(0..5).map(|i| ((k * 5 + i) as f64).sin()).collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        let coeffs = [0.4, -0.2, 0.1, 0.05, -0.03, 0.02, 0.7];
+        for q in 1..=7usize {
+            let refs: Vec<&Tensor> = ts[..q].iter().collect();
+            let fused = weighted_sum(&coeffs[..q], &refs);
+            // Generic reference: per-coefficient accumulation passes.
+            let mut acc = ts[0].scaled(coeffs[0]);
+            for m in 1..q {
+                acc.axpy(coeffs[m], &ts[m]);
+            }
+            for (f, g) in fused.data().iter().zip(acc.data()) {
+                assert!((f - g).abs() < 1e-14, "arity {q}: {f} vs {g}");
+            }
+            let mut out = Tensor::zeros(&[5]);
+            weighted_sum_into(&mut out, &coeffs[..q], &ts[..q]);
+            for (a, b) in out.data().iter().zip(fused.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "arity {q} into mismatch");
+            }
+        }
+    }
+
+    #[test]
+    fn assign_kernels_match_allocating_forms() {
+        let x = Tensor::from_slice(&[1.0, -2.0, 3.5]);
+        let y = Tensor::from_slice(&[0.5, 4.0, -1.25]);
+        let mut out = Tensor::zeros(&[3]);
+
+        out.assign_lincomb(2.0, &x, -0.5, &y);
+        let expect = Tensor::lincomb(2.0, &x, -0.5, &y);
+        assert_eq!(out, expect);
+
+        out.assign_sub(&x, &y);
+        assert_eq!(out, x.sub(&y));
+
+        out.assign_sub_scaled(&x, &y, 0.25);
+        let mut ref_d = x.sub(&y);
+        ref_d.scale(0.25);
+        for (a, b) in out.data().iter().zip(ref_d.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(out, Tensor::sub_scaled(&x, &y, 0.25));
+
+        out.copy_from(&y);
+        assert_eq!(out, y);
     }
 
     #[test]

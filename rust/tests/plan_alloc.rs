@@ -1,0 +1,101 @@
+//! Counting-allocator proof of the plan executor's zero-allocation
+//! invariant: a steady-state UniPC step driven by a [`SamplePlan`] +
+//! [`StepWorkspace`] must not touch the heap in the solver arithmetic
+//! (model evaluations are outside the claim — they produce fresh output
+//! tensors by contract).
+//!
+//! This lives in its own integration-test binary so no concurrently
+//! running test can allocate inside the counting window; the counter is
+//! additionally thread-local so harness threads cannot pollute it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ARMED.try_with(|armed| {
+            if armed.get() {
+                let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            }
+        });
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+use unipc::numerics::vandermonde::BFunction;
+use unipc::rng::Rng;
+use unipc::sched::{NoiseSchedule, VpLinear};
+use unipc::solver::{
+    History, Method, Prediction, SampleOptions, SamplePlan, StepWorkspace, UniPcCoeffs,
+};
+
+#[test]
+fn steady_state_unipc_step_is_allocation_free() {
+    let sched = VpLinear::default();
+    let configs = [
+        SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8),
+        SampleOptions::new(
+            Method::UniP {
+                order: 3,
+                variant: UniPcCoeffs::Varying,
+                pred: Prediction::Noise,
+                schedule: None,
+            },
+            8,
+        )
+        .with_unic(UniPcCoeffs::Varying, false),
+    ];
+    for opts in configs {
+        let plan = SamplePlan::build(&sched, &opts).expect("plannable config");
+        let shape = [16usize, 8];
+        let mut rng = Rng::seed_from(9);
+
+        // Seed a full-order history, as the warm-up steps would have.
+        let mut hist = History::new(3);
+        for t in [0.9f64, 0.8, 0.7] {
+            hist.push(t, sched.lambda(t), rng.normal_tensor(&shape));
+        }
+        let mut x = rng.normal_tensor(&shape);
+        let m_t = rng.normal_tensor(&shape);
+        let mut ws = StepWorkspace::new(&shape, plan.max_order());
+
+        // A steady-state step: order-3 predictor + corrector, mid-run.
+        let k = 5;
+        assert_eq!(plan.steps()[k].order, 3);
+        assert!(plan.has_corrector(k));
+
+        // Warm once outside the window (nothing should allocate even here,
+        // but the claim is about steady state).
+        plan.predict_into(k, &hist, &x, &mut ws);
+        plan.correct_into(k, &hist, &m_t, &mut ws, &mut x);
+
+        ALLOCS.with(|c| c.set(0));
+        ARMED.with(|a| a.set(true));
+        for _ in 0..64 {
+            plan.predict_into(k, &hist, &x, &mut ws);
+            let applied = plan.correct_into(k, &hist, &m_t, &mut ws, &mut x);
+            assert!(applied);
+        }
+        ARMED.with(|a| a.set(false));
+        let n = ALLOCS.with(|c| c.get());
+        assert_eq!(
+            n, 0,
+            "steady-state planned step allocated {n} times ({})",
+            plan.key()
+        );
+    }
+}
