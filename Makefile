@@ -6,13 +6,25 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test perf
+.PHONY: build test docs check perf
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 
 test:
 	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+# API docs for the crate (README.md links into these module docs).
+docs:
+	$(CARGO) doc --no-deps --manifest-path $(MANIFEST)
+
+# The CI gate: build, full test suite (incl. doctests and the equivalence /
+# allocation proofs), and rustdoc with warnings promoted to errors so doc
+# rot fails fast.
+check:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
 # Hot-path microbenches (emits rust/BENCH_hot_path.json: name -> ns/iter)
 # followed by the end-to-end serving load sweep.

@@ -1,7 +1,10 @@
-//! Qualitative comparison (Fig. 2/5/6 stand-in): generate samples per
-//! method from the trained model at very low NFE and report how close each
-//! population sits to the true mixture — plus a per-sample "nearest mode"
-//! readout (the analog of eyeballing which samples are crisp vs blurry).
+//! Qualitative comparison: generate samples per method from the trained
+//! model at very low NFE and report how close each population sits to the
+//! true mixture — plus a per-sample "nearest mode" readout (the analog of
+//! eyeballing which samples are crisp vs blurry).
+//!
+//! Demonstrates: the paper's Fig. 2/5/6 qualitative galleries, recast as
+//! population-quality metrics the analytic substrate can score exactly.
 //!
 //!   make artifacts && cargo run --release --offline --example gallery
 

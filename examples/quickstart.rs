@@ -1,5 +1,10 @@
 //! Quickstart: sample from a diffusion model with UniPC in ~30 lines.
 //!
+//! Demonstrates: the paper's headline low-NFE setting — UniPC-3 with B₂(h)
+//! at 10 NFE (the Table 1/2 configuration that reaches 3.87 FID on CIFAR10
+//! in the paper) — driven through the public build→cache→execute sampling
+//! API (`SamplePlan` resolution happens inside `solver::sample`).
+//!
 //!   cargo run --release --offline --example quickstart
 //!
 //! Uses the trained PJRT model when `make artifacts` has run, otherwise the

@@ -1,7 +1,10 @@
 //! Order-schedule search (paper §4.2 "Customizing order schedule"): exhausts
 //! all monotone-start order schedules at a small NFE budget and reports the
-//! best ones — the experiment behind Table 4, extended into an actual
-//! search tool.
+//! best ones.
+//!
+//! Demonstrates: the experiment behind Table 4 — custom per-step order
+//! schedules beating the fixed warm-up ramp at very low NFE — extended into
+//! an actual search tool over the schedule space.
 //!
 //!   cargo run --release --offline --example schedule_search -- [--nfe 6]
 

@@ -1,12 +1,14 @@
-//! **End-to-end driver** (DESIGN.md §4): boots the full serving stack on the
-//! trained model — PJRT executor → coordinator → TCP server — drives a
-//! Poisson workload of batched sampling requests with mixed NFE budgets and
+//! **End-to-end driver**: boots the full serving stack on the trained
+//! model — PJRT executor → coordinator → TCP server — drives a Poisson
+//! workload of batched sampling requests with mixed NFE budgets and
 //! methods, reports latency/throughput, and cross-checks one request's
 //! output against a directly-computed reference.
 //!
-//!   make artifacts && cargo run --release --offline --example serve_e2e
+//! Demonstrates: the production serving scenario the paper's NFE claims
+//! translate into — admission control, the shared plan cache, lockstep
+//! request batching, and per-request determinism under concurrent load.
 //!
-//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!   make artifacts && cargo run --release --offline --example serve_e2e
 
 use std::path::Path;
 use std::sync::Arc;

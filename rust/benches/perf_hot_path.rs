@@ -5,6 +5,8 @@
 //!   L3-c  full UniPC-3 run, reference on-the-fly loop
 //!   L3-d  full UniPC-3 run executed from a cached SamplePlan (+ the
 //!         one-time plan-construction cost)
+//!   L3-e  batched execution across requests sharing a plan
+//!         (sample_batch_with_plan) vs the same requests run sequentially
 //!   RT-a  PJRT ε call latency vs batch size (batching amortization)
 //!   RT-b  fused correct artifact vs eval + host update (round-trip saving)
 //!
@@ -23,8 +25,8 @@ use unipc::rng::Rng;
 use unipc::runtime::{EngineOptions, PjrtHandle};
 use unipc::sched::VpLinear;
 use unipc::solver::{
-    sample_unplanned, sample_with_plan, Method, Model, Prediction, SampleOptions, SamplePlan,
-    UniPcCoeffs,
+    sample_batch_with_plan, sample_unplanned, sample_with_plan, BatchWorkspace, Method, Model,
+    Prediction, SampleOptions, SamplePlan, UniPcCoeffs,
 };
 use unipc::tensor::{weighted_sum, weighted_sum_into, Tensor};
 
@@ -149,6 +151,49 @@ fn main() {
                 "{:<48} {:>11.2}x",
                 format!("L3-d   speedup vs naive ({tag}, {model_tag})"),
                 naive.as_secs_f64() / planned.as_secs_f64()
+            );
+        }
+    }
+
+    // L3-e: plan-aware batched execution across requests (serving-shaped
+    // single-sample requests sharing one cached plan). The batched run
+    // stacks member states and evaluates the model once per step for the
+    // whole batch; sequential runs pay per-request model-call and
+    // per-request solver overhead. Rows land in BENCH_hot_path.json so the
+    // batched-vs-sequential ratio is tracked across PRs.
+    {
+        let opts = unipc3_opts(UniPcCoeffs::Bh(BFunction::Bh2), 8);
+        let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+        for members in [2usize, 4, 8] {
+            let inits: Vec<Tensor> = (0..members)
+                .map(|i| Rng::seed_from(400 + i as u64).normal_tensor(&[1, gm.dim]))
+                .collect();
+            let seq = bench(
+                &mut results,
+                &format!("L3-e sequential {members}x UniPC-3 x8 (gmm n=1)"),
+                500,
+                || {
+                    for x in &inits {
+                        black_box(sample_with_plan(&gmm_model, &sched, x, &opts, &plan));
+                    }
+                },
+            );
+            let refs: Vec<&Tensor> = inits.iter().collect();
+            let mut bw = BatchWorkspace::new();
+            let bat = bench(
+                &mut results,
+                &format!("L3-e batched batch={members} UniPC-3 x8 (gmm n=1)"),
+                500,
+                || {
+                    black_box(sample_batch_with_plan(
+                        &gmm_model, &sched, &refs, &opts, &plan, &mut bw,
+                    ));
+                },
+            );
+            println!(
+                "{:<48} {:>11.2}x",
+                format!("L3-e   batched throughput vs sequential (b={members})"),
+                seq.as_secs_f64() / bat.as_secs_f64()
             );
         }
     }

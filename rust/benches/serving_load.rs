@@ -41,14 +41,20 @@ fn backend(batch_wait_us: u64) -> (ModelBackend, &'static str) {
     }
 }
 
-fn run_point(rps: f64, total: usize, batch_wait_us: u64, workers: usize) -> String {
+fn run_point(
+    rps: f64,
+    total: usize,
+    batch_wait_us: u64,
+    workers: usize,
+    batch_linger_us: u64,
+) -> String {
     let (be, kind) = backend(batch_wait_us);
     let pjrt = match &be {
         ModelBackend::Pjrt(h) => Some(h.clone()),
         _ => None,
     };
     let svc = Service::start(
-        ServerConfig { workers, queue_cap: 512, ..Default::default() },
+        ServerConfig { workers, queue_cap: 512, batch_linger_us, ..Default::default() },
         be,
     );
     let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
@@ -70,9 +76,16 @@ fn run_point(rps: f64, total: usize, batch_wait_us: u64, workers: usize) -> Stri
     };
     let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
     let mut line = format!(
-        "[{kind}] rps={rps:<6} wait={batch_wait_us:>5}us workers={workers}: {}",
+        "[{kind}] rps={rps:<6} wait={batch_wait_us:>5}us linger={batch_linger_us:>5}us workers={workers}: {}",
         report.summary()
     );
+    let m = svc.metrics_json();
+    let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    line.push_str(&format!(
+        "  batched_runs={} ws_reuses={}",
+        counter("batched_runs"),
+        counter("workspace_reuses"),
+    ));
     if let Some(h) = pjrt {
         let s = h.stats().unwrap();
         line.push_str(&format!(
@@ -92,7 +105,7 @@ fn main() {
     println!("== serving load sweep (4 samples/request, UniPC-3 @ 8 NFE) ==");
     let mut lines = Vec::new();
     for rps in [4.0, 8.0, 16.0] {
-        lines.push(run_point(rps, 48, 200, 4));
+        lines.push(run_point(rps, 48, 200, 4, 0));
     }
     println!("-- offered-load sweep --");
     for l in &lines {
@@ -101,11 +114,19 @@ fn main() {
 
     println!("-- batching-window ablation (rps=16) --");
     for wait in [0u64, 200, 2000] {
-        println!("{}", run_point(16.0, 48, wait, 4));
+        println!("{}", run_point(16.0, 48, wait, 4, 0));
     }
 
     println!("-- worker-count ablation (rps=16) --");
     for workers in [1usize, 2, 8] {
-        println!("{}", run_point(16.0, 48, 200, workers));
+        println!("{}", run_point(16.0, 48, 200, workers, 0));
+    }
+
+    // Request batching (PR 2): same-plan requests coalesce into lockstep
+    // batched runs. linger=0 batches only what is already queued; larger
+    // windows trade first-token latency for bigger stacked batches.
+    println!("-- request-batching ablation (rps=16, 1 worker) --");
+    for linger in [0u64, 500, 5000] {
+        println!("{}", run_point(16.0, 48, 200, 1, linger));
     }
 }

@@ -83,48 +83,45 @@ impl GaussianMixture {
         c
     }
 
-    /// ε*(x, t) for one flattened row, writing into `out`.
-    /// Subset restricts to the given components (class-conditional score);
-    /// `None` uses all components.
+    /// ε*(x, t) for one flattened row, writing into `out`. The schedule
+    /// scalars `a`/`sg`, the component subset `ks`, the per-component
+    /// marginal variances `vks`, and the row-independent log-posterior
+    /// constants `logc` (log w_k − d/2·log v_k) are precomputed once per
+    /// call by [`GaussianMixture::eps_star`]; `logp`/`gammas` are
+    /// caller-provided scratch of length `ks.len()` shared across rows.
+    #[allow(clippy::too_many_arguments)]
     fn eps_row(
         &self,
-        sched: &dyn NoiseSchedule,
+        a: f64,
+        sg: f64,
         x: &[f64],
-        t: f64,
-        subset: Option<&[usize]>,
+        ks: &[usize],
+        vks: &[f64],
+        logc: &[f64],
+        logp: &mut [f64],
+        gammas: &mut [f64],
         out: &mut [f64],
     ) {
-        let a = sched.alpha(t);
-        let sg = sched.sigma(t);
         let d = self.dim;
-        let ks: Vec<usize> = match subset {
-            Some(s) => s.to_vec(),
-            None => (0..self.n_components()).collect(),
-        };
-
-        // log γ_k ∝ log w_k − d/2 log v_k − ‖x − α μ_k‖²/(2 v_k)
-        let mut logp = Vec::with_capacity(ks.len());
-        let mut vks = Vec::with_capacity(ks.len());
-        for &k in &ks {
-            let v = a * a * self.stds[k] * self.stds[k] + sg * sg;
+        // log γ_k ∝ log w_k − d/2 log v_k − ‖x − α μ_k‖²/(2 v_k), with the
+        // row-independent head precomputed in `logc` (same association as
+        // the inline form, so results are bit-identical).
+        for (i, &k) in ks.iter().enumerate() {
+            let v = vks[i];
             let mut sq = 0.0;
             for j in 0..d {
                 let r = x[j] - a * self.means[k][j];
                 sq += r * r;
             }
-            logp.push(self.weights[k].ln() - 0.5 * d as f64 * v.ln() - sq / (2.0 * v));
-            vks.push(v);
+            logp[i] = logc[i] - sq / (2.0 * v);
         }
         let mx = logp.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
         let mut total = 0.0;
-        let gammas: Vec<f64> = logp
-            .iter()
-            .map(|&lp| {
-                let g = (lp - mx).exp();
-                total += g;
-                g
-            })
-            .collect();
+        for i in 0..logp.len() {
+            let g = (logp[i] - mx).exp();
+            total += g;
+            gammas[i] = g;
+        }
 
         // ε* = σ Σ_k γ_k (x − α μ_k) / v_k
         out.iter_mut().for_each(|o| *o = 0.0);
@@ -140,7 +137,15 @@ impl GaussianMixture {
         }
     }
 
-    /// Batched ε*(x, t).
+    /// Batched ε*(x, t). Subset restricts to the given components
+    /// (class-conditional score); `None` uses all components.
+    ///
+    /// Rows are evaluated independently, so a stacked batch of requests
+    /// yields bit-identical rows to evaluating each request alone — the
+    /// property the serving layer's lockstep request batching relies on.
+    /// Per-call work (component subset, marginal variances, posterior
+    /// scratch) is hoisted out of the row loop, so batched calls also
+    /// amortize it across rows.
     pub fn eps_star(
         &self,
         sched: &dyn NoiseSchedule,
@@ -151,11 +156,39 @@ impl GaussianMixture {
         assert_eq!(x.shape().len(), 2);
         assert_eq!(x.shape()[1], self.dim);
         let n = x.shape()[0];
+        let a = sched.alpha(t);
+        let sg = sched.sigma(t);
+        let all;
+        let ks: &[usize] = match subset {
+            Some(s) => s,
+            None => {
+                all = (0..self.n_components()).collect::<Vec<usize>>();
+                &all
+            }
+        };
+        let d = self.dim;
+        let mut vks = Vec::with_capacity(ks.len());
+        let mut logc = Vec::with_capacity(ks.len());
+        for &k in ks {
+            let v = a * a * self.stds[k] * self.stds[k] + sg * sg;
+            vks.push(v);
+            logc.push(self.weights[k].ln() - 0.5 * d as f64 * v.ln());
+        }
+        let mut logp = vec![0.0; ks.len()];
+        let mut gammas = vec![0.0; ks.len()];
         let mut out = Tensor::zeros(x.shape());
         for i in 0..n {
-            // Split borrows: read row i of x, write row i of out.
-            let xi = x.row(i).to_vec();
-            self.eps_row(sched, &xi, t, subset, out.row_mut(i));
+            self.eps_row(
+                a,
+                sg,
+                x.row(i),
+                ks,
+                &vks,
+                &logc,
+                &mut logp,
+                &mut gammas,
+                out.row_mut(i),
+            );
         }
         out
     }

@@ -20,6 +20,11 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch before dispatching.
     pub batch_wait_us: u64,
+    /// How long a worker lingers for additional requests that share a
+    /// sampling plan before executing a batched run. 0 (the default)
+    /// batches opportunistically: only what is already queued coalesces,
+    /// and an idle service adds no latency.
+    pub batch_linger_us: u64,
     /// Worker threads running sampling loops.
     pub workers: usize,
     /// Queue capacity; requests beyond it are rejected (backpressure).
@@ -40,6 +45,7 @@ impl Default for ServerConfig {
             weights: None,
             max_batch: 64,
             batch_wait_us: 200,
+            batch_linger_us: 0,
             workers: 4,
             queue_cap: 256,
             default_steps: 10,
@@ -78,6 +84,7 @@ impl ServerConfig {
                 }
                 "max_batch" => c.max_batch = req_usize(val, k)?,
                 "batch_wait_us" => c.batch_wait_us = req_usize(val, k)? as u64,
+                "batch_linger_us" => c.batch_linger_us = req_usize(val, k)? as u64,
                 "workers" => c.workers = req_usize(val, k)?,
                 "queue_cap" => c.queue_cap = req_usize(val, k)?,
                 "default_steps" => c.default_steps = req_usize(val, k)?,
@@ -110,6 +117,9 @@ impl ServerConfig {
         self.max_batch = args.get_usize("max-batch", self.max_batch).map_err(anyhow::Error::msg)?;
         self.workers = args.get_usize("workers", self.workers).map_err(anyhow::Error::msg)?;
         self.queue_cap = args.get_usize("queue-cap", self.queue_cap).map_err(anyhow::Error::msg)?;
+        self.batch_linger_us = args
+            .get_usize("batch-linger-us", self.batch_linger_us as usize)
+            .map_err(anyhow::Error::msg)? as u64;
         self.default_steps =
             args.get_usize("steps", self.default_steps).map_err(anyhow::Error::msg)?;
         if let Some(m) = args.get("method") {
@@ -161,7 +171,7 @@ mod tests {
     fn json_overrides_defaults() {
         let v = json::parse(
             r#"{"addr": "0.0.0.0:9000", "max_batch": 8, "default_method": "dpmpp-2m",
-                "spacing": "time_uniform", "t_end": 0.01}"#,
+                "spacing": "time_uniform", "t_end": 0.01, "batch_linger_us": 500}"#,
         )
         .unwrap();
         let c = ServerConfig::from_json(&v).unwrap();
@@ -169,6 +179,7 @@ mod tests {
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.spacing, TimeSpacing::Uniform);
         assert_eq!(c.t_end, 0.01);
+        assert_eq!(c.batch_linger_us, 500);
         // Untouched defaults survive.
         assert_eq!(c.workers, ServerConfig::default().workers);
     }

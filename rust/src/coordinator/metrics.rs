@@ -18,6 +18,14 @@ pub struct Metrics {
     pub plan_builds: u64,
     /// Requests served from a cached `Arc<SamplePlan>`.
     pub plan_hits: u64,
+    /// Plan-executed runs that grouped ≥ 2 requests into one lockstep batch.
+    pub batched_runs: u64,
+    /// Histogram over batched-path run sizes: bucket `i` counts runs with
+    /// `i + 1` member requests; the last bucket collects runs with ≥ 8.
+    pub batch_size_hist: [u64; 8],
+    /// Runs served entirely from a worker's pooled `BatchWorkspace`
+    /// (no solver-side allocation to start the run).
+    pub workspace_reuses: u64,
     pub queue: LatencyDigest,
     pub compute: LatencyDigest,
     pub e2e: LatencyDigest,
@@ -39,6 +47,18 @@ impl Metrics {
         self.e2e.record(queue + compute);
     }
 
+    /// Record one plan-executed run that served `members` requests,
+    /// `reuses` of whose workspace acquisitions came from pooled capacity
+    /// (0 or 1 for a single run; passed as a delta so callers can batch).
+    pub fn record_batch(&mut self, members: usize, reuses: u64) {
+        debug_assert!(members >= 1);
+        self.batch_size_hist[members.min(8) - 1] += 1;
+        if members >= 2 {
+            self.batched_runs += 1;
+        }
+        self.workspace_reuses += reuses;
+    }
+
     pub fn snapshot_json(&mut self) -> Value {
         Value::obj(vec![
             ("submitted", Value::from(self.submitted as f64)),
@@ -49,6 +69,14 @@ impl Metrics {
             ("nfe_total", Value::from(self.nfe_total as f64)),
             ("plan_builds", Value::from(self.plan_builds as f64)),
             ("plan_hits", Value::from(self.plan_hits as f64)),
+            ("batched_runs", Value::from(self.batched_runs as f64)),
+            (
+                "batch_size_hist",
+                Value::Arr(
+                    self.batch_size_hist.iter().map(|&c| Value::Num(c as f64)).collect(),
+                ),
+            ),
+            ("workspace_reuses", Value::from(self.workspace_reuses as f64)),
             ("queue_p50_us", Value::from(self.queue.percentile_us(50.0) as f64)),
             ("queue_p99_us", Value::from(self.queue.percentile_us(99.0) as f64)),
             ("compute_p50_us", Value::from(self.compute.percentile_us(50.0) as f64)),
@@ -75,6 +103,24 @@ mod tests {
         let snap = m.snapshot_json();
         assert_eq!(snap.get("completed").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("e2e_p50_us").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn record_batch_updates_hist_and_counters() {
+        let mut m = Metrics::default();
+        m.record_batch(1, 1);
+        m.record_batch(4, 1);
+        m.record_batch(12, 0);
+        assert_eq!(m.batched_runs, 2, "singletons are not batched runs");
+        assert_eq!(m.batch_size_hist[0], 1);
+        assert_eq!(m.batch_size_hist[3], 1);
+        assert_eq!(m.batch_size_hist[7], 1, "oversize runs land in the last bucket");
+        assert_eq!(m.workspace_reuses, 2);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("batched_runs").unwrap().as_f64(), Some(2.0));
+        let hist = snap.get("batch_size_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 8);
+        assert_eq!(hist[3].as_f64(), Some(1.0));
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //!
 //! * [`request`] — wire-level request/response types + JSON codecs.
 //! * [`service`] — the worker pool; blocking submit with queue-cap
-//!   backpressure; deterministic per-request seeds.
+//!   backpressure; deterministic per-request seeds; the batch assembler
+//!   that coalesces same-plan requests into lockstep batched runs over a
+//!   shared `Arc<SamplePlan>` and per-worker pooled workspaces.
 //! * [`metrics`] — counters + latency digests, snapshotted as JSON.
 
 pub mod metrics;

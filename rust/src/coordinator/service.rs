@@ -1,10 +1,24 @@
 //! The sampling service: a bounded queue + worker pool running solver loops.
 //!
-//! Each worker pops a request, builds a per-request model view (class /
-//! guidance) over the shared backend, draws x_T from the request seed, and
-//! runs the configured solver. With the PJRT backend, concurrent workers'
-//! model evaluations coalesce inside the runtime executor — step-level
-//! dynamic batching across requests.
+//! Each worker pops a request and first tries the **batched plan path**:
+//! requests whose batch key matches — same [`plan_key`] *and* same model
+//! conditioning (class/guidance) — are pulled out of the queue into one
+//! lockstep run ([`crate::solver::sample_batch_with_plan`]) that shares a
+//! cached `Arc<SamplePlan>`, advances every member through the same
+//! timestep grid, and evaluates the model backend **once per step** on the
+//! stacked batch tensor. Each worker keeps one pooled
+//! [`crate::solver::BatchWorkspace`] reused across runs, so steady-state
+//! runs start without allocating. Batched output is bit-identical to
+//! running each request alone (`tests/batch_equiv.rs`).
+//!
+//! The batch assembler is bounded by `ServerConfig::max_batch` total rows
+//! and, optionally, lingers `ServerConfig::batch_linger_us` for more
+//! same-key arrivals (0 = coalesce only what is already queued).
+//!
+//! Requests plans don't cover (singlestep methods, non-UniP baselines) run
+//! the solo reference path. With the PJRT backend, concurrent workers'
+//! model evaluations additionally coalesce inside the runtime executor —
+//! step-level dynamic batching below this layer.
 
 use super::metrics::Metrics;
 use super::request::{SampleRequest, SampleResponse};
@@ -15,14 +29,15 @@ use crate::runtime::{PjrtHandle, PjrtModel};
 use crate::sched::VpLinear;
 use crate::solver::unipc::CoeffVariant;
 use crate::solver::{
-    plan_key, sample, sample_with_plan, Model, Prediction, SampleOptions, SamplePlan,
+    plan_key, sample, sample_batch_with_plan, BatchWorkspace, Model, Prediction,
+    SampleOptions, SamplePlan,
 };
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// What evaluates ε_θ for the service.
 #[derive(Clone)]
@@ -101,6 +116,15 @@ impl Model for RequestModel<'_> {
 
 struct QueuedJob {
     req: SampleRequest,
+    /// Fully-resolved solver options, derived once at admission (`None`
+    /// only if the method string fails to parse, which admission already
+    /// rejects — kept as an Option so the solo path can still produce the
+    /// failure response).
+    opts: Option<SampleOptions>,
+    /// Batch key (plan key + model conditioning), derived once at admission
+    /// so the assembler's queue scan is an allocation-free string compare.
+    /// `None` routes the job to the solo reference path.
+    batch_key: Option<String>,
     reply: mpsc::Sender<SampleResponse>,
     enqueued: Instant,
 }
@@ -164,15 +188,20 @@ impl Service {
         drop(metrics);
 
         let (tx, rx) = mpsc::channel();
+        let (opts, batch_key) = admission_setup(&self.inner, &req);
         {
             let mut q = self.inner.queue.lock().unwrap();
             if q.len() >= self.inner.cfg.queue_cap {
                 self.inner.metrics.lock().unwrap().rejected += 1;
                 return Err(anyhow!("queue full ({} pending)", q.len()));
             }
-            q.push_back(QueuedJob { req, reply: tx, enqueued: Instant::now() });
+            q.push_back(QueuedJob { req, opts, batch_key, reply: tx, enqueued: Instant::now() });
         }
-        self.inner.cv.notify_one();
+        // notify_all, not notify_one: a lingering batch assembler waits on
+        // this same condvar and would otherwise swallow the only wakeup
+        // meant for an idle worker, stranding a non-matching job for the
+        // rest of the linger window.
+        self.inner.cv.notify_all();
         Ok(rx)
     }
 
@@ -206,6 +235,9 @@ impl Service {
 }
 
 fn worker_loop(inner: Arc<Inner>) {
+    // One pooled workspace per worker, reused across every batched run it
+    // executes (the `workspace_reuses` metric counts successful reuse).
+    let mut scratch = BatchWorkspace::new();
     loop {
         let job = {
             let mut q = inner.queue.lock().unwrap();
@@ -219,23 +251,165 @@ fn worker_loop(inner: Arc<Inner>) {
                 q = inner.cv.wait(q).unwrap();
             }
         };
-        let queue_time = job.enqueued.elapsed();
-        let started = Instant::now();
-        let resp = run_request(&inner, &job.req);
-        let compute_time = started.elapsed();
-
-        let mut m = inner.metrics.lock().unwrap();
-        match &resp {
-            r if r.ok => m.record_completion(job.req.n, r.nfe, queue_time, compute_time),
-            _ => m.failed += 1,
+        match batch_setup(&inner, &job) {
+            Some((opts, plan, key)) => {
+                let mut jobs = vec![job];
+                gather_batch(&inner, &key, &mut jobs);
+                execute_batch(&inner, &mut scratch, jobs, &opts, &plan);
+            }
+            None => execute_solo(&inner, job),
         }
-        drop(m);
+    }
+}
 
-        let mut resp = resp;
-        resp.queue_us = queue_time.as_micros() as u64;
-        resp.compute_us = compute_time.as_micros() as u64;
+/// Resolve the batched-execution setup for a popped job from its
+/// admission-time fields: the solver options, the shared cached plan, and
+/// the batch key grouping requests able to run in one lockstep batch.
+/// `None` routes the job to the solo reference path (unplannable method).
+fn batch_setup(
+    inner: &Inner,
+    job: &QueuedJob,
+) -> Option<(SampleOptions, Arc<SamplePlan>, String)> {
+    let key = job.batch_key.clone()?;
+    let opts = job.opts.clone()?;
+    let plan = lookup_plan(inner, &opts)?;
+    Some((opts, plan, key))
+}
+
+/// Model-conditioning suffix of the batch key: batch members share one
+/// model view, so class and guidance must match exactly (guidance compared
+/// by bits).
+fn conditioning_key(req: &SampleRequest) -> String {
+    format!("|class={:?}|g={:?}", req.class, req.guidance.map(f64::to_bits))
+}
+
+/// Admission-time resolution, done once per request ([`Service::submit`])
+/// and stored on the queued job: the full solver options and, for
+/// plannable configurations, the batch key. The batch key is `None` for
+/// methods plans don't cover (they take the solo path).
+fn admission_setup(
+    inner: &Inner,
+    req: &SampleRequest,
+) -> (Option<SampleOptions>, Option<String>) {
+    let opts = build_opts(inner, req).ok();
+    let key = opts.as_ref().filter(|o| SamplePlan::supports(o)).map(|o| {
+        format!("{}{}", plan_key(&inner.sched, o), conditioning_key(req))
+    });
+    (opts, key)
+}
+
+/// Pull queued jobs whose batch key matches `key` into `jobs`, bounded by
+/// `max_batch` total rows. With a linger window configured, waits up to the
+/// deadline for more same-key arrivals; with the default of 0 this is a
+/// single opportunistic scan of what is already queued.
+fn gather_batch(inner: &Inner, key: &str, jobs: &mut Vec<QueuedJob>) {
+    let mut rows: usize = jobs.iter().map(|j| j.req.n).sum();
+    if rows >= inner.cfg.max_batch {
+        return;
+    }
+    let deadline = Instant::now() + Duration::from_micros(inner.cfg.batch_linger_us);
+    let mut q = inner.queue.lock().unwrap();
+    loop {
+        let mut i = 0;
+        while i < q.len() {
+            if rows + q[i].req.n <= inner.cfg.max_batch
+                && q[i].batch_key.as_deref() == Some(key)
+            {
+                let j = q.remove(i).expect("index in range");
+                rows += j.req.n;
+                jobs.push(j);
+                if rows >= inner.cfg.max_batch {
+                    return;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        // Jobs this batch can't absorb stay queued; they are picked up as
+        // soon as any worker finishes its current run (at worst one linger
+        // window from now). Deliberately no re-notify here: with every
+        // waiter lingering, a notify would just bounce between assemblers
+        // in a busy loop for the rest of the window.
+        let (guard, _timeout) = inner.cv.wait_timeout(q, deadline - now).unwrap();
+        q = guard;
+    }
+}
+
+/// Execute a batch of same-key jobs in lockstep from the shared plan,
+/// record per-request metrics, and reply to every member. A batch of one
+/// still runs here: it reuses the worker's pooled workspace.
+fn execute_batch(
+    inner: &Inner,
+    scratch: &mut BatchWorkspace,
+    jobs: Vec<QueuedJob>,
+    opts: &SampleOptions,
+    plan: &SamplePlan,
+) {
+    let queue_times: Vec<Duration> = jobs.iter().map(|j| j.enqueued.elapsed()).collect();
+    let started = Instant::now();
+    // All members share conditioning (the batch key guarantees it), so one
+    // model view serves the whole stacked batch.
+    let model = RequestModel::new(&inner.backend, &inner.sched, &jobs[0].req);
+    let dim = model.dim();
+    let inits: Vec<Tensor> = jobs
+        .iter()
+        .map(|j| Rng::seed_from(j.req.seed).normal_tensor(&[j.req.n, dim]))
+        .collect();
+    let refs: Vec<&Tensor> = inits.iter().collect();
+    let reuses_before = scratch.reuses();
+    let results = sample_batch_with_plan(&model, &inner.sched, &refs, opts, plan, scratch);
+    let compute_time = started.elapsed();
+
+    let mut m = inner.metrics.lock().unwrap();
+    // The leader's lookup_plan counted its own hit/build; followers were
+    // absorbed without a lookup but are equally served from the cached
+    // plan, so count them as hits to keep plan_hits per-request.
+    m.plan_hits += jobs.len() as u64 - 1;
+    m.record_batch(jobs.len(), scratch.reuses() - reuses_before);
+    for (job, (r, qt)) in jobs.iter().zip(results.iter().zip(&queue_times)) {
+        m.record_completion(job.req.n, r.nfe, *qt, compute_time);
+    }
+    drop(m);
+
+    for (job, (r, qt)) in jobs.into_iter().zip(results.into_iter().zip(queue_times)) {
+        let resp = SampleResponse {
+            ok: true,
+            error: None,
+            nfe: r.nfe,
+            queue_us: qt.as_micros() as u64,
+            compute_us: compute_time.as_micros() as u64,
+            samples: job.req.return_samples.then(|| r.x.data().to_vec()),
+            dim,
+        };
         let _ = job.reply.send(resp);
     }
+}
+
+/// The solo path: unplannable methods and parse failures.
+fn execute_solo(inner: &Inner, job: QueuedJob) {
+    let queue_time = job.enqueued.elapsed();
+    let started = Instant::now();
+    let resp = run_request(inner, &job.req, job.opts.as_ref());
+    let compute_time = started.elapsed();
+
+    let mut m = inner.metrics.lock().unwrap();
+    match &resp {
+        r if r.ok => m.record_completion(job.req.n, r.nfe, queue_time, compute_time),
+        _ => m.failed += 1,
+    }
+    drop(m);
+
+    let mut resp = resp;
+    resp.queue_us = queue_time.as_micros() as u64;
+    resp.compute_us = compute_time.as_micros() as u64;
+    let _ = job.reply.send(resp);
 }
 
 /// Fetch (or build and cache) the shared plan for this solver config.
@@ -288,14 +462,9 @@ fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
     Some(shared)
 }
 
-fn run_request(inner: &Inner, req: &SampleRequest) -> SampleResponse {
-    let method = match req.parsed_method() {
-        Ok(m) => m,
-        Err(e) => return SampleResponse::failure(format!("{e:#}")),
-    };
-    let model = RequestModel::new(&inner.backend, &inner.sched, req);
-    let dim = model.dim();
-
+/// Resolve a request's full solver options against the server defaults.
+fn build_opts(inner: &Inner, req: &SampleRequest) -> Result<SampleOptions> {
+    let method = req.parsed_method()?;
     let mut opts = SampleOptions::new(method, req.steps);
     opts.spacing = inner.cfg.spacing;
     opts.t_start = inner.cfg.t_start;
@@ -309,13 +478,30 @@ fn run_request(inner: &Inner, req: &SampleRequest) -> SampleResponse {
         };
         opts = opts.with_unic(variant, false);
     }
+    Ok(opts)
+}
+
+fn run_request(
+    inner: &Inner,
+    req: &SampleRequest,
+    opts: Option<&SampleOptions>,
+) -> SampleResponse {
+    // `opts` is the admission-time resolution; absent means the method
+    // failed to parse, so re-run the build to produce the error message.
+    let opts = match opts {
+        Some(o) => o.clone(),
+        None => match build_opts(inner, req) {
+            Ok(o) => o,
+            Err(e) => return SampleResponse::failure(format!("{e:#}")),
+        },
+    };
+    let model = RequestModel::new(&inner.backend, &inner.sched, req);
+    let dim = model.dim();
 
     let mut rng = Rng::seed_from(req.seed);
     let x_t = rng.normal_tensor(&[req.n, dim]);
-    let result = match lookup_plan(inner, &opts) {
-        Some(plan) => sample_with_plan(&model, &inner.sched, &x_t, &opts, &plan),
-        None => sample(&model, &inner.sched, &x_t, &opts),
-    };
+    // Plannable configs took the batched path; this runs the rest.
+    let result = sample(&model, &inner.sched, &x_t, &opts);
 
     SampleResponse {
         ok: true,
@@ -461,6 +647,52 @@ mod tests {
         assert!(r.ok, "{:?}", r.error);
         let m = svc.metrics_json();
         assert_eq!(m.get("plan_builds").unwrap().as_f64(), Some(2.0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batched_execution_matches_solo_and_counts_metrics() {
+        // One worker with a generous linger window: rapid-fire same-config
+        // submissions coalesce into a lockstep batched run; the serialized
+        // first pass runs each request as a batch of one. Both paths must
+        // produce bit-identical samples.
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        let cfg = ServerConfig {
+            workers: 1,
+            queue_cap: 64,
+            batch_linger_us: 50_000,
+            ..Default::default()
+        };
+        let svc = Service::start(
+            cfg,
+            ModelBackend::Analytic { gm, class_components: Arc::new(classes) },
+        );
+        let reqs: Vec<SampleRequest> = (0..6)
+            .map(|i| SampleRequest { n: 2, steps: 5, seed: i, ..Default::default() })
+            .collect();
+        let solo: Vec<Vec<f64>> = reqs
+            .iter()
+            .map(|r| svc.sample_blocking(r.clone()).samples.unwrap())
+            .collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+        let batched: Vec<Vec<f64>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().samples.unwrap())
+            .collect();
+        assert_eq!(solo, batched, "batched execution must be bit-identical to solo");
+
+        let m = svc.metrics_json();
+        assert_eq!(m.get("completed").unwrap().as_f64(), Some(12.0));
+        assert!(
+            m.get("batched_runs").unwrap().as_f64().unwrap() >= 1.0,
+            "concurrent same-config requests must coalesce: {m:?}"
+        );
+        assert!(
+            m.get("workspace_reuses").unwrap().as_f64().unwrap() >= 1.0,
+            "per-worker workspace must be reused across runs: {m:?}"
+        );
         svc.shutdown();
     }
 

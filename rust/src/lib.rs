@@ -17,15 +17,19 @@
 //!   error in the paper's experiments.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts
 //!   (HLO text) for the learned ε_θ models; python never runs at serve time.
-//! * [`coordinator`] + [`server`] — the serving layer: admission, dynamic
-//!   batching across concurrent sampling requests, per-request solver state,
-//!   metrics, and a TCP/JSON front end.
+//! * [`coordinator`] + [`server`] — the serving layer: admission and
+//!   backpressure, a shared sampling-plan cache, lockstep request batching
+//!   (same-plan requests stack into one batch-major run with one model
+//!   evaluation per step), per-request solver state, metrics, and a
+//!   TCP/JSON front end.
 //! * substrates built from scratch for the offline environment:
 //!   [`tensor`], [`rng`], [`stats`], [`json`], [`cli`], [`config`],
 //!   [`testing`].
 //!
-//! See `DESIGN.md` for the full inventory and the experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See the repository `README.md` for the architecture overview (the
+//! build→cache→execute plan pipeline, the batched serving path, and the
+//! paper-reproduction bench index), and `ROADMAP.md` for per-PR
+//! architecture notes.
 
 pub mod analytic;
 pub mod cli;

@@ -47,12 +47,10 @@ pub trait NoiseSchedule: Send + Sync {
 
     /// Cache discriminator for schedule-derived caches (the solver's plan
     /// cache): the name plus every parameter that changes the λ/α/σ maps.
-    /// The default is the bare name; parameterized implementations must
-    /// fold their parameters in, or same-name schedules with different
-    /// parameters would silently share cached plans.
-    fn cache_key(&self) -> String {
-        self.name().to_string()
-    }
+    /// Required (no default) so a new schedule cannot silently collide in
+    /// the plan cache: same-name schedules with different parameters must
+    /// never share cached plans.
+    fn cache_key(&self) -> String;
 }
 
 /// VP SDE with linear β(t) = β₀ + t(β₁ − β₀):

@@ -20,7 +20,10 @@
 //!   [`SamplePlan`] per `(schedule, options)` resolves every per-step
 //!   scalar and coefficient up front, and [`sample_with_plan`] executes it
 //!   with zero solver-side heap allocations in steady state. The
-//!   coordinator caches plans by [`plan_key`] across requests.
+//!   coordinator caches plans by [`plan_key`] across requests, and
+//!   [`sample_batch_with_plan`] executes many same-plan requests in
+//!   lockstep on one stacked batch (one model evaluation per step for the
+//!   whole batch), with a pooled [`BatchWorkspace`] reused across runs.
 
 pub mod ddim;
 pub mod deis;
@@ -36,8 +39,11 @@ pub mod unipc;
 
 pub use history::History;
 pub use method::{Method, UniPcCoeffs};
-pub use plan::{plan_key, sample_with_plan, SamplePlan, StepWorkspace};
-pub use runner::{sample, sample_unplanned, SampleOptions, SampleResult};
+pub use plan::{
+    plan_key, sample_batch_with_plan, sample_with_plan, BatchWorkspace, SamplePlan,
+    StepWorkspace,
+};
+pub use runner::{sample, sample_batch, sample_unplanned, SampleOptions, SampleResult};
 pub use thresholding::DynamicThresholding;
 
 use crate::sched::NoiseSchedule;

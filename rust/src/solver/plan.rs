@@ -48,6 +48,45 @@
 //! allocations left in the loop are the model evaluations themselves, which
 //! by contract produce a fresh output tensor. `tests/plan_alloc.rs` proves
 //! the invariant with a counting global allocator.
+//!
+//! # Batched execution across requests
+//!
+//! A plan is shared by every identically-configured request, so requests
+//! can also *execute* together: [`sample_batch_with_plan`] stacks member
+//! initial states into one batch-major tensor, advances all of them through
+//! the timestep grid in lockstep, and evaluates the model once per step on
+//! the stacked batch. Outputs are bit-identical to solo runs (all kernels
+//! are row-independent), and a per-worker [`BatchWorkspace`] pools the
+//! stacked state and the [`StepWorkspace`] across runs so steady-state
+//! batches start without allocating. The coordinator's batch assembler
+//! ([`crate::coordinator`]) groups queued requests by plan key + model
+//! conditioning and drives this entry point.
+//!
+//! # Example
+//!
+//! Build a plan once, then execute any number of runs from it:
+//!
+//! ```
+//! use unipc::analytic::datasets::{dataset, DatasetSpec};
+//! use unipc::analytic::GmmModel;
+//! use unipc::numerics::vandermonde::BFunction;
+//! use unipc::rng::Rng;
+//! use unipc::sched::VpLinear;
+//! use unipc::solver::{sample_with_plan, Prediction, SampleOptions, SamplePlan};
+//!
+//! let sched = VpLinear::default();
+//! let gm = dataset(DatasetSpec::Cifar10Like);
+//! let model = GmmModel { gm: &gm, sched: &sched };
+//!
+//! // UniPC-3 with the B2(h) choice at 8 steps — the paper's low-NFE regime.
+//! let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
+//! let plan = SamplePlan::build(&sched, &opts).expect("multistep UniPC is plannable");
+//!
+//! let x_t = Rng::seed_from(7).normal_tensor(&[4, gm.dim]);
+//! let result = sample_with_plan(&model, &sched, &x_t, &opts, &plan);
+//! assert_eq!(result.nfe, 8); // UniC reuses evaluations: steps == NFE
+//! assert!(result.x.data().iter().all(|v| v.is_finite()));
+//! ```
 
 use super::history::History;
 use super::method::Method;
@@ -160,6 +199,78 @@ impl StepWorkspace {
     /// The predictor output written by [`SamplePlan::predict_into`].
     pub fn pred(&self) -> &Tensor {
         &self.pred
+    }
+
+    /// Resize every buffer for `shape` and plans up to `max_order`, reusing
+    /// the existing allocations whenever their capacity allows
+    /// ([`Tensor::resize_to`]). This is what lets one workspace per worker
+    /// serve runs of varying batch size: after warm-up at the largest shape,
+    /// `ensure` never touches the allocator. Returns `true` when no buffer
+    /// had to grow.
+    pub fn ensure(&mut self, shape: &[usize], max_order: usize) -> bool {
+        let mut reused = true;
+        while self.d.len() < max_order.max(1) {
+            self.d.push(Tensor::zeros(shape));
+            reused = false;
+        }
+        for t in &mut self.d {
+            reused &= t.resize_to(shape);
+        }
+        reused &= self.res.resize_to(shape);
+        reused &= self.lin.resize_to(shape);
+        reused &= self.pred.resize_to(shape);
+        reused
+    }
+}
+
+/// Per-worker pooled execution state for [`sample_batch_with_plan`]: the
+/// stacked batch-major state tensor plus one [`StepWorkspace`], both reused
+/// across runs. After warm-up at a worker's largest batch shape, starting a
+/// new batched run performs no solver-side allocations (the
+/// `workspace_reuses` serving metric counts exactly this).
+pub struct BatchWorkspace {
+    x: Tensor,
+    ws: StepWorkspace,
+    allocs: u64,
+    reuses: u64,
+}
+
+impl BatchWorkspace {
+    /// An empty pool; buffers grow on first use.
+    pub fn new() -> BatchWorkspace {
+        BatchWorkspace {
+            x: Tensor::zeros(&[0, 1]),
+            ws: StepWorkspace::new(&[0, 1], 1),
+            allocs: 0,
+            reuses: 0,
+        }
+    }
+
+    /// Runs that had to grow at least one pooled buffer (including the
+    /// first run through an empty pool).
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Runs served entirely from pooled capacity — no allocator traffic.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    fn ensure(&mut self, shape: &[usize], max_order: usize) {
+        let mut reused = self.x.resize_to(shape);
+        reused &= self.ws.ensure(shape, max_order);
+        if reused {
+            self.reuses += 1;
+        } else {
+            self.allocs += 1;
+        }
+    }
+}
+
+impl Default for BatchWorkspace {
+    fn default() -> Self {
+        BatchWorkspace::new()
     }
 }
 
@@ -381,6 +492,94 @@ pub fn sample_with_plan(
     }
 
     SampleResult { x, nfe: ev.nfe(), trajectory: traj }
+}
+
+/// Run several same-configuration requests in lockstep from one shared
+/// plan: member initial states are stacked into a single batch-major
+/// `[Σnᵢ, d]` tensor, every solver step executes once on the stacked batch,
+/// and — crucially — the model backend is evaluated **once per step** for
+/// the whole batch instead of once per request.
+///
+/// Because every solver kernel is elementwise (row-independent) and all
+/// members share the plan's per-step scalars, each member's output is
+/// **bit-identical** to a solo [`sample_with_plan`] run from the same
+/// initial state whenever the model also evaluates rows independently
+/// (true for the analytic backends; asserted by `tests/batch_equiv.rs`).
+/// Per-member `nfe` equals the solo run's count: batching changes how many
+/// rows each evaluation carries, not how many evaluations the schedule
+/// performs.
+///
+/// `bw` is the caller's pooled workspace: the coordinator keeps one per
+/// worker so steady-state runs start without allocating. Trajectory capture
+/// is per-request by nature and not supported here — use
+/// [`sample_with_plan`] (the coordinator never requests it).
+///
+/// Returns one [`SampleResult`] per entry of `x_inits`, in order.
+pub fn sample_batch_with_plan(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    x_inits: &[&Tensor],
+    opts: &SampleOptions,
+    plan: &SamplePlan,
+    bw: &mut BatchWorkspace,
+) -> Vec<SampleResult> {
+    assert!(!x_inits.is_empty(), "sample_batch_with_plan: empty batch");
+    assert!(
+        !opts.capture_trajectory,
+        "trajectory capture is per-request; use sample_with_plan"
+    );
+    debug_assert_eq!(
+        plan.key(),
+        plan_key(sched, opts),
+        "plan built for a different schedule/config"
+    );
+    assert_eq!(x_inits[0].shape().len(), 2, "batch members must be [n, d]");
+    let d = x_inits[0].shape()[1];
+    let mut rows = 0usize;
+    for t in x_inits {
+        assert_eq!(t.shape().len(), 2, "batch members must be [n, d]");
+        assert_eq!(t.shape()[1], d, "batch members must share the feature dim");
+        rows += t.shape()[0];
+    }
+
+    bw.ensure(&[rows, d], plan.max_order());
+    let mut at = 0;
+    for t in x_inits {
+        bw.x.copy_rows_from(at, t);
+        at += t.shape()[0];
+    }
+
+    let ev = Evaluator::new(model, sched, plan.prediction, opts.thresholding);
+    let mut hist = History::new(plan.history_cap);
+    hist.push(plan.t0, plan.lambda0, ev.eval(&bw.x, plan.t0));
+
+    let n = plan.steps.len();
+    for k in 0..n {
+        let sp = &plan.steps[k];
+        plan.predict_into(k, &hist, &bw.x, &mut bw.ws);
+        if plan.has_corrector(k) {
+            let m_t = ev.eval(&bw.ws.pred, sp.t);
+            plan.correct_into(k, &hist, &m_t, &mut bw.ws, &mut bw.x);
+            let m_buf = if plan.oracle { ev.eval(&bw.x, sp.t) } else { m_t };
+            hist.push(sp.t, sp.lambda, m_buf);
+        } else {
+            if k + 1 < n {
+                let m_next = ev.eval(&bw.ws.pred, sp.t);
+                hist.push(sp.t, sp.lambda, m_next);
+            }
+            std::mem::swap(&mut bw.x, &mut bw.ws.pred);
+        }
+    }
+
+    let nfe = ev.nfe();
+    let mut out = Vec::with_capacity(x_inits.len());
+    let mut at = 0;
+    for t in x_inits {
+        let r = t.shape()[0];
+        out.push(SampleResult { x: bw.x.slice_rows(at, r), nfe, trajectory: None });
+        at += r;
+    }
+    out
 }
 
 #[cfg(test)]

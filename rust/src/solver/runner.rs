@@ -18,7 +18,7 @@ use super::dpm_solver::{dpm_solver_2_step, dpm_solver_3_step};
 use super::dpm_solverpp::{dpmpp_2m_step, dpmpp_3m_step, dpmpp_3s_step};
 use super::history::History;
 use super::method::{singlestep_orders, Method};
-use super::plan::{sample_with_plan, SamplePlan};
+use super::plan::{sample_batch_with_plan, sample_with_plan, BatchWorkspace, SamplePlan};
 use super::pndm::plms_step;
 use super::thresholding::DynamicThresholding;
 use super::unipc::{unic_correct_with, unip_predict, CoeffVariant};
@@ -139,6 +139,33 @@ pub fn sample(
         return sample_with_plan(model, sched, x_init, opts, &plan);
     }
     sample_unplanned(model, sched, x_init, opts)
+}
+
+/// Run several requests that share one configuration, in lockstep over a
+/// stacked batch ([`sample_batch_with_plan`]): one model evaluation per
+/// step for the whole batch. Results are bit-identical to calling
+/// [`sample`] once per entry of `x_inits` whenever the model evaluates
+/// batch rows independently (true for the analytic backends).
+///
+/// Configurations plans don't cover (singlestep methods, non-UniP
+/// baselines, `exact_warmup`) and trajectory-capture runs — which are
+/// inherently per-request — fall back to independent sequential runs.
+/// Callers issuing many batches (the coordinator) should build/cache the
+/// plan and keep a pooled [`BatchWorkspace`] themselves and call
+/// [`sample_batch_with_plan`] directly.
+pub fn sample_batch(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    x_inits: &[&Tensor],
+    opts: &SampleOptions,
+) -> Vec<SampleResult> {
+    if !opts.capture_trajectory {
+        if let Some(plan) = SamplePlan::build(sched, opts) {
+            let mut bw = BatchWorkspace::new();
+            return sample_batch_with_plan(model, sched, x_inits, opts, &plan, &mut bw);
+        }
+    }
+    x_inits.iter().map(|x| sample(model, sched, x, opts)).collect()
 }
 
 /// The on-the-fly reference loop: step geometry and combination

@@ -6,6 +6,19 @@
 //! local errors down to `O(h^5)`, which is below the `f32` noise floor.
 //! Conversion to/from `f32` happens only at the PJRT boundary
 //! ([`crate::runtime`]).
+//!
+//! Two families of kernels serve the solver hot path:
+//!
+//! * **In-place step kernels** ([`Tensor::assign_lincomb`],
+//!   [`Tensor::assign_sub_scaled`], [`weighted_sum_into`], …) — the
+//!   zero-allocation arithmetic behind plan-executed UniPC steps. Each is
+//!   bit-identical to its allocating counterpart.
+//! * **Batch-axis kernels** ([`Tensor::resize_to`],
+//!   [`Tensor::copy_rows_from`]) — assembly and workspace pooling for the
+//!   serving layer's lockstep request batching: member states stack into one
+//!   batch-major tensor, and pooled buffers change batch size without
+//!   reallocating. Every elementwise kernel is row-independent, which is
+//!   what makes batched execution bit-identical to per-request execution.
 
 use std::fmt;
 
@@ -184,6 +197,40 @@ impl Tensor {
     pub fn copy_from(&mut self, x: &Tensor) {
         assert_eq!(self.shape, x.shape, "copy_from shape mismatch");
         self.data.copy_from_slice(&x.data);
+    }
+
+    /// Reshape in place, reusing the existing allocation whenever the new
+    /// element count fits the buffer's capacity. This is the
+    /// workspace-pooling primitive behind the batched serving path: one
+    /// buffer serves runs of varying batch size without returning to the
+    /// allocator. Surviving elements keep their values, newly exposed
+    /// elements are zero. Returns `true` when no reallocation was needed.
+    pub fn resize_to(&mut self, shape: &[usize]) -> bool {
+        let n: usize = shape.iter().product();
+        let reused = n <= self.data.capacity();
+        self.data.resize(n, 0.0);
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+        reused
+    }
+
+    /// Copy every row of 2-D `src` into rows `[at, at + src_rows)` of this
+    /// 2-D tensor — the in-place, batch-axis counterpart of
+    /// [`Tensor::concat_rows`]. Batched runs assemble member states into one
+    /// batch-major tensor with repeated calls, allocation-free.
+    pub fn copy_rows_from(&mut self, at: usize, src: &Tensor) {
+        assert_eq!(self.shape.len(), 2, "copy_rows_from expects [n, d] destination");
+        assert_eq!(src.shape.len(), 2, "copy_rows_from expects [n, d] source");
+        assert_eq!(self.shape[1], src.shape[1], "copy_rows_from width mismatch");
+        let (d, rows) = (self.shape[1], src.shape[0]);
+        assert!(
+            at + rows <= self.shape[0],
+            "copy_rows_from rows {}..{} out of range for {} rows",
+            at,
+            at + rows,
+            self.shape[0]
+        );
+        self.data[at * d..(at + rows) * d].copy_from_slice(&src.data);
     }
 
     /// Elementwise difference `self - other` as a new tensor.
@@ -543,6 +590,43 @@ mod tests {
 
         out.copy_from(&y);
         assert_eq!(out, y);
+    }
+
+    #[test]
+    fn resize_to_reuses_capacity() {
+        let mut t = Tensor::from_vec(&[4, 3], (0..12).map(|v| v as f64).collect());
+        assert!(t.resize_to(&[2, 3]), "shrink must reuse the allocation");
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.data(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!(t.resize_to(&[4, 3]), "regrow within capacity must reuse");
+        assert_eq!(t.len(), 12);
+        // Surviving elements keep values, re-exposed ones are zeroed.
+        assert_eq!(t.data()[..6], [0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(t.data()[6..], [0.0; 6]);
+        assert!(!t.resize_to(&[8, 3]), "growth past capacity reallocates");
+        assert_eq!(t.shape(), &[8, 3]);
+        assert_eq!(t.len(), 24);
+    }
+
+    #[test]
+    fn copy_rows_from_matches_concat_rows() {
+        let a = Tensor::from_vec(&[1, 2], vec![1.0, 2.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![3.0, 4.0, 5.0, 6.0]);
+        let mut stacked = Tensor::zeros(&[3, 2]);
+        stacked.copy_rows_from(0, &a);
+        stacked.copy_rows_from(1, &b);
+        assert_eq!(stacked.data(), Tensor::concat_rows(&[&a, &b]).data());
+        // Round-trip through slice_rows recovers the members.
+        assert_eq!(stacked.slice_rows(0, 1).data(), a.data());
+        assert_eq!(stacked.slice_rows(1, 2).data(), b.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn copy_rows_from_width_mismatch_panics() {
+        let mut dst = Tensor::zeros(&[2, 3]);
+        let src = Tensor::zeros(&[1, 2]);
+        dst.copy_rows_from(0, &src);
     }
 
     #[test]

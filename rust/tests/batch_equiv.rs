@@ -1,0 +1,166 @@
+//! Equivalence proof for the batched execution layer (PR 2 tentpole):
+//! `sample_batch_with_plan` over a batch of N requests must be
+//! **bit-identical** to N sequential `sample_with_plan` runs with the same
+//! per-request initial states, across methods, coefficient variants,
+//! parametrizations, and UniC settings — plus the workspace-pool reuse
+//! contract (no per-run buffer growth after warm-up).
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::numerics::vandermonde::BFunction;
+use unipc::rng::Rng;
+use unipc::sched::VpLinear;
+use unipc::solver::unipc::CoeffVariant;
+use unipc::solver::{
+    sample, sample_batch, sample_batch_with_plan, sample_with_plan, BatchWorkspace, Method,
+    Prediction, SampleOptions, SamplePlan,
+};
+use unipc::tensor::Tensor;
+
+fn bits(t: &Tensor) -> Vec<u64> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Mixed-size members (n = 1, 2, 3, 1) with distinct seeds, like a real
+/// batch assembled from independent requests.
+fn member_inits(dim: usize) -> Vec<Tensor> {
+    [1usize, 2, 3, 1]
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| Rng::seed_from(40 + i as u64).normal_tensor(&[n, dim]))
+        .collect()
+}
+
+#[test]
+fn batched_run_is_bit_identical_to_sequential_across_variants() {
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let mut bw = BatchWorkspace::new();
+    for order in [2usize, 3] {
+        for variant in [
+            CoeffVariant::Bh(BFunction::Bh1),
+            CoeffVariant::Bh(BFunction::Bh2),
+            CoeffVariant::Varying,
+        ] {
+            for pred in [Prediction::Noise, Prediction::Data] {
+                for with_unic in [false, true] {
+                    let mut opts = SampleOptions::new(
+                        Method::UniP { order, variant, pred, schedule: None },
+                        6,
+                    );
+                    if with_unic {
+                        opts = opts.with_unic(variant, false);
+                    }
+                    let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+                    let inits = member_inits(gm.dim);
+                    let solo: Vec<_> = inits
+                        .iter()
+                        .map(|x| sample_with_plan(&model, &sched, x, &opts, &plan))
+                        .collect();
+                    let refs: Vec<&Tensor> = inits.iter().collect();
+                    let batched =
+                        sample_batch_with_plan(&model, &sched, &refs, &opts, &plan, &mut bw);
+                    assert_eq!(batched.len(), inits.len());
+                    let tag = format!(
+                        "order {order} {variant:?} {pred:?} unic {with_unic}"
+                    );
+                    for (i, (a, b)) in solo.iter().zip(&batched).enumerate() {
+                        assert_eq!(a.nfe, b.nfe, "nfe member {i}: {tag}");
+                        assert_eq!(a.x.shape(), b.x.shape(), "shape member {i}: {tag}");
+                        assert_eq!(bits(&a.x), bits(&b.x), "state bits member {i}: {tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_of_one_matches_sample_with_plan() {
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
+    let plan = SamplePlan::build(&sched, &opts).unwrap();
+    let x0 = Rng::seed_from(3).normal_tensor(&[2, gm.dim]);
+    let solo = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+    let mut bw = BatchWorkspace::new();
+    let batched = sample_batch_with_plan(&model, &sched, &[&x0], &opts, &plan, &mut bw);
+    assert_eq!(batched.len(), 1);
+    assert_eq!(solo.nfe, batched[0].nfe);
+    assert_eq!(bits(&solo.x), bits(&batched[0].x));
+}
+
+#[test]
+fn oracle_batches_match_sequential() {
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let opts = SampleOptions::new(
+        Method::unip(2, BFunction::Bh2, Prediction::Noise),
+        5,
+    )
+    .with_unic(CoeffVariant::Bh(BFunction::Bh2), true);
+    let plan = SamplePlan::build(&sched, &opts).unwrap();
+    let inits = member_inits(gm.dim);
+    let refs: Vec<&Tensor> = inits.iter().collect();
+    let mut bw = BatchWorkspace::new();
+    let batched = sample_batch_with_plan(&model, &sched, &refs, &opts, &plan, &mut bw);
+    for (x0, b) in inits.iter().zip(&batched) {
+        let a = sample_with_plan(&model, &sched, x0, &opts, &plan);
+        assert_eq!(a.nfe, b.nfe, "oracle doubles NFE identically");
+        assert_eq!(bits(&a.x), bits(&b.x));
+    }
+}
+
+#[test]
+fn workspace_pool_reuses_after_warmup() {
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 6);
+    let plan = SamplePlan::build(&sched, &opts).unwrap();
+    let inits = member_inits(gm.dim);
+    let refs: Vec<&Tensor> = inits.iter().collect();
+
+    let mut bw = BatchWorkspace::new();
+    for _ in 0..5 {
+        let _ = sample_batch_with_plan(&model, &sched, &refs, &opts, &plan, &mut bw);
+    }
+    assert_eq!(bw.allocs(), 1, "only the first run may grow the pool");
+    assert_eq!(bw.reuses(), 4, "identical shapes must reuse pooled buffers");
+
+    // A smaller batch fits the warmed pool.
+    let small = Rng::seed_from(9).normal_tensor(&[2, gm.dim]);
+    let _ = sample_batch_with_plan(&model, &sched, &[&small], &opts, &plan, &mut bw);
+    assert_eq!(bw.reuses(), 5, "smaller batches must reuse pooled capacity");
+
+    // Regrowing to the original size still fits (capacity was retained).
+    let _ = sample_batch_with_plan(&model, &sched, &refs, &opts, &plan, &mut bw);
+    assert_eq!(bw.reuses(), 6);
+
+    // A larger batch forces one growth, after which it too is pooled.
+    let big = Rng::seed_from(10).normal_tensor(&[32, gm.dim]);
+    let _ = sample_batch_with_plan(&model, &sched, &[&big], &opts, &plan, &mut bw);
+    assert_eq!(bw.allocs(), 2, "growth past pooled capacity allocates once");
+    let _ = sample_batch_with_plan(&model, &sched, &[&big], &opts, &plan, &mut bw);
+    assert_eq!(bw.reuses(), 7);
+}
+
+#[test]
+fn sample_batch_falls_back_for_unplannable_methods() {
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::Cifar10Like);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let opts = SampleOptions::new(Method::DpmSolverPp { order: 2 }, 6);
+    assert!(SamplePlan::build(&sched, &opts).is_none(), "dpmpp-2m has no plan");
+    let inits = member_inits(gm.dim);
+    let refs: Vec<&Tensor> = inits.iter().collect();
+    let batched = sample_batch(&model, &sched, &refs, &opts);
+    for (x0, b) in inits.iter().zip(&batched) {
+        let a = sample(&model, &sched, x0, &opts);
+        assert_eq!(a.nfe, b.nfe);
+        assert_eq!(bits(&a.x), bits(&b.x));
+    }
+}

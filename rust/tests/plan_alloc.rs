@@ -42,6 +42,7 @@ use unipc::sched::{NoiseSchedule, VpLinear};
 use unipc::solver::{
     History, Method, Prediction, SampleOptions, SamplePlan, StepWorkspace, UniPcCoeffs,
 };
+use unipc::tensor::Tensor;
 
 #[test]
 fn steady_state_unipc_step_is_allocation_free() {
@@ -98,4 +99,40 @@ fn steady_state_unipc_step_is_allocation_free() {
             plan.key()
         );
     }
+}
+
+/// The workspace-pooling contract behind batched serving: once a worker's
+/// buffers have warmed up at their largest batch shape, re-acquiring the
+/// workspace for equal or smaller batches ([`StepWorkspace::ensure`]) and
+/// assembling member states into the stacked batch tensor
+/// ([`Tensor::resize_to`] + [`Tensor::copy_rows_from`]) never touch the
+/// allocator — so a steady-state batched run starts allocation-free.
+#[test]
+fn pooled_workspace_and_batch_assembly_are_allocation_free_after_warmup() {
+    let mut rng = Rng::seed_from(17);
+    let member_a = rng.normal_tensor(&[4, 8]);
+    let member_b = rng.normal_tensor(&[8, 8]);
+
+    // Warm up at the largest shape this "worker" will see.
+    let mut ws = StepWorkspace::new(&[12, 8], 3);
+    let mut stacked = Tensor::zeros(&[12, 8]);
+
+    ALLOCS.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    for _ in 0..32 {
+        // Same-shape reacquisition (the common steady-state case)…
+        assert!(ws.ensure(&[12, 8], 3), "warm ensure must reuse");
+        assert!(stacked.resize_to(&[12, 8]));
+        stacked.copy_rows_from(0, &member_a);
+        stacked.copy_rows_from(4, &member_b);
+        // …and shrink + regrow within pooled capacity.
+        assert!(ws.ensure(&[4, 8], 3));
+        assert!(stacked.resize_to(&[4, 8]));
+        stacked.copy_rows_from(0, &member_a);
+        assert!(ws.ensure(&[12, 8], 3));
+        assert!(stacked.resize_to(&[12, 8]));
+    }
+    ARMED.with(|a| a.set(false));
+    let n = ALLOCS.with(|c| c.get());
+    assert_eq!(n, 0, "pooled workspace reacquisition allocated {n} times");
 }
