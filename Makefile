@@ -6,7 +6,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test docs check perf
+.PHONY: build test test-full docs check perf
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -14,16 +14,29 @@ build:
 test:
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 
+# Release-mode run of the numerically heavy suites: the cross-solver
+# conformance sweep (every method × prediction × spacing, planned vs
+# reference bit-identity) and the empirical convergence-order suite
+# (log-error regression against each method's order claim). Both suites
+# are sized to also pass inside plain `make test` (debug) so the tier-1
+# gate exercises them; this target re-runs just the two of them optimized,
+# which is the fast path when iterating on solver numerics (they integrate
+# thousands of solver steps against an 8000-step RK4 ground truth).
+test-full:
+	$(CARGO) test --release -q --manifest-path $(MANIFEST) \
+		--test solver_conformance --test solver_convergence
+
 # API docs for the crate (README.md links into these module docs).
 docs:
 	$(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
 # The CI gate: build, full test suite (incl. doctests and the equivalence /
-# allocation proofs), and rustdoc with warnings promoted to errors so doc
-# rot fails fast.
+# allocation proofs), the release-mode conformance + convergence suites,
+# and rustdoc with warnings promoted to errors so doc rot fails fast.
 check:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 	$(CARGO) test -q --manifest-path $(MANIFEST)
+	$(MAKE) test-full
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
 # Hot-path microbenches (emits rust/BENCH_hot_path.json: name -> ns/iter)

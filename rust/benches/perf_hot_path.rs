@@ -7,6 +7,10 @@
 //!         one-time plan-construction cost)
 //!   L3-e  batched execution across requests sharing a plan
 //!         (sample_batch_with_plan) vs the same requests run sequentially
+//!   L3-f  non-UniPC families through the generalized plan compiler:
+//!         naive reference loop vs plan-cached execution for the
+//!         DPM-Solver++ multistep and DEIS families (DEIS pays a per-step
+//!         Gauss–Legendre quadrature on the naive path)
 //!   RT-a  PJRT ε call latency vs batch size (batching amortization)
 //!   RT-b  fused correct artifact vs eval + host update (round-trip saving)
 //!
@@ -194,6 +198,45 @@ fn main() {
                 "{:<48} {:>11.2}x",
                 format!("L3-e   batched throughput vs sequential (b={members})"),
                 seq.as_secs_f64() / bat.as_secs_f64()
+            );
+        }
+    }
+
+    // L3-f: the plan compiler generalized to the whole zoo — naive
+    // (reference loop, per-step coefficient math) vs plan-cached execution
+    // for the DPM-Solver++ multistep and DEIS families. DEIS is the
+    // headline: the reference loop pays a 16-point Gauss–Legendre kernel
+    // quadrature per step, which the plan hoists to build time entirely.
+    {
+        let baselines: [(&str, Method); 4] = [
+            ("dpmpp-2m", Method::DpmSolverPp { order: 2 }),
+            ("dpmpp-3m", Method::DpmSolverPp { order: 3 }),
+            ("deis-2", Method::Deis { order: 2 }),
+            ("deis-3", Method::Deis { order: 3 }),
+        ];
+        for (tag, method) in baselines {
+            let opts = SampleOptions::new(method, 8);
+            let naive = bench(
+                &mut results,
+                &format!("L3-f {tag} x8 naive (gmm 64x16)"),
+                200,
+                || {
+                    black_box(sample_unplanned(&gmm_model, &sched, &x_t, &opts));
+                },
+            );
+            let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+            let planned = bench(
+                &mut results,
+                &format!("L3-f {tag} x8 plan-cached (gmm)"),
+                200,
+                || {
+                    black_box(sample_with_plan(&gmm_model, &sched, &x_t, &opts, &plan));
+                },
+            );
+            println!(
+                "{:<48} {:>11.2}x",
+                format!("L3-f   speedup vs naive ({tag})"),
+                naive.as_secs_f64() / planned.as_secs_f64()
             );
         }
     }

@@ -15,9 +15,13 @@
 //! and, optionally, lingers `ServerConfig::batch_linger_us` for more
 //! same-key arrivals (0 = coalesce only what is already queued).
 //!
-//! Requests plans don't cover (singlestep methods, non-UniP baselines) run
-//! the solo reference path. With the PJRT backend, concurrent workers'
-//! model evaluations additionally coalesce inside the runtime executor —
+//! Every method in the registry compiles to a plan, so **the entire
+//! workload is plan-cached and batchable** — UniPC, DPM-Solver++ (multistep
+//! and singlestep), DPM-Solver, DEIS, PNDM, and DDIM requests all group by
+//! batch key with no special-casing. The solo reference path only serves
+//! requests whose method string fails admission parsing (to produce the
+//! error response). With the PJRT backend, concurrent workers' model
+//! evaluations additionally coalesce inside the runtime executor —
 //! step-level dynamic batching below this layer.
 
 use super::metrics::Metrics;
@@ -637,16 +641,19 @@ mod tests {
         let m = svc.metrics_json();
         assert_eq!(m.get("plan_builds").unwrap().as_f64(), Some(2.0));
         assert_eq!(m.get("plan_hits").unwrap().as_f64(), Some(1.0));
-        // Unplannable methods bypass the cache entirely.
-        let r = svc.sample_blocking(SampleRequest {
+        // Non-UniPC methods are plan-cached too (the whole zoo compiles):
+        // the first dpmpp-2m request builds, the second hits.
+        let baseline = SampleRequest {
             method: "dpmpp-2m".into(),
             unic: false,
             seed: 4,
             ..Default::default()
-        });
-        assert!(r.ok, "{:?}", r.error);
+        };
+        assert!(svc.sample_blocking(baseline.clone()).ok);
+        assert!(svc.sample_blocking(SampleRequest { seed: 5, ..baseline }).ok);
         let m = svc.metrics_json();
-        assert_eq!(m.get("plan_builds").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.get("plan_builds").unwrap().as_f64(), Some(3.0));
+        assert_eq!(m.get("plan_hits").unwrap().as_f64(), Some(2.0));
         svc.shutdown();
     }
 

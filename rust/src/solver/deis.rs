@@ -55,6 +55,36 @@ fn beta_of(sched: &dyn NoiseSchedule, t: f64) -> f64 {
     -2.0 * (sched.log_alpha(t + dt) - sched.log_alpha(t - dt)) / (2.0 * dt)
 }
 
+/// The tAB-DEIS combination weights C_j for one step `t_prev → t`: the
+/// Lagrange basis over `nodes` (the previous `q` timesteps, newest first)
+/// integrated against the exponential kernel. Pure function of the timestep
+/// geometry — [`crate::solver::plan::SamplePlan::build`] precomputes these
+/// once per plan with exactly this function, so the planned path is
+/// bit-identical to [`deis_step`].
+pub fn deis_weights(
+    sched: &dyn NoiseSchedule,
+    nodes: &[f64],
+    t_prev: f64,
+    t: f64,
+) -> Vec<f64> {
+    let alpha_t = sched.alpha(t);
+    (0..nodes.len())
+        .map(|j| {
+            quad(t_prev, t, |tau| {
+                let mut l = 1.0;
+                for (k, &tk) in nodes.iter().enumerate() {
+                    if k != j {
+                        l *= (tau - tk) / (nodes[j] - tk);
+                    }
+                }
+                let kern = (alpha_t / sched.alpha(tau)) * beta_of(sched, tau)
+                    / (2.0 * sched.sigma(tau));
+                kern * l
+            })
+        })
+        .collect()
+}
+
 /// One tAB-DEIS step t_prev → t using `q+1 = min(order, hist.len())`
 /// previous ε outputs.
 pub fn deis_step(
@@ -70,23 +100,8 @@ pub fn deis_step(
     let t_prev = hist.last().t;
     let nodes: Vec<f64> = (0..q).map(|m| hist.back(m).t).collect();
 
-    // Lagrange basis L_j over `nodes`, integrated against the kernel.
     let alpha_t = sched.alpha(t);
-    let coeffs: Vec<f64> = (0..q)
-        .map(|j| {
-            quad(t_prev, t, |tau| {
-                let mut l = 1.0;
-                for (k, &tk) in nodes.iter().enumerate() {
-                    if k != j {
-                        l *= (tau - tk) / (nodes[j] - tk);
-                    }
-                }
-                let kern = (alpha_t / sched.alpha(tau)) * beta_of(sched, tau)
-                    / (2.0 * sched.sigma(tau));
-                kern * l
-            })
-        })
-        .collect();
+    let coeffs = deis_weights(sched, &nodes, t_prev, t);
 
     let tensors: Vec<&Tensor> = (0..q).map(|m| &hist.back(m).m).collect();
     let integral = weighted_sum(&coeffs, &tensors);

@@ -87,6 +87,42 @@ pub fn dpmpp_3m_step(
     out
 }
 
+/// DPM-Solver++ singlestep second-order update (reference `2S`) s → t with
+/// the interior node at r1 of the λ interval: used for 2-interval tail
+/// groups of the 3S budget split. Costs 1 extra NFE beyond `m_s`.
+pub fn dpmpp_2s_step(
+    ev: &Evaluator,
+    sched: &dyn NoiseSchedule,
+    x: &Tensor,
+    s: f64,
+    t: f64,
+    m_s: &Tensor,
+    r1: f64,
+) -> Tensor {
+    let (ls, lt) = (sched.lambda(s), sched.lambda(t));
+    let h = lt - ls;
+    let s1 = sched.t_of_lambda(ls + r1 * h);
+    let phi_11 = (-r1 * h).exp_m1();
+    let phi_1 = (-h).exp_m1();
+
+    let x_s1 = Tensor::lincomb(
+        sched.sigma(s1) / sched.sigma(s),
+        x,
+        -sched.alpha(s1) * phi_11,
+        m_s,
+    );
+    let m_s1 = ev.eval(&x_s1, s1);
+    let d1 = m_s1.sub(m_s);
+    let mut out = Tensor::lincomb(
+        sched.sigma(t) / sched.sigma(s),
+        x,
+        -sched.alpha(t) * phi_1,
+        m_s,
+    );
+    out.axpy(-sched.alpha(t) * phi_1 / (2.0 * r1), &d1);
+    out
+}
+
 /// Singlestep DPM-Solver++(3S) update s → t with interior nodes at r1, r2 of
 /// the λ interval (reference defaults r1 = 1/3, r2 = 2/3). Costs 2 extra NFE
 /// beyond the boundary output `m_s`.

@@ -62,6 +62,12 @@ impl Method {
     }
 
     /// Nominal order of accuracy of the *base* method (UniC adds one).
+    /// This is the global convergence order w.r.t. the probability-flow ODE,
+    /// which the convergence suite (`tests/solver_convergence.rs`) verifies
+    /// empirically. PNDM combines four ε outputs (see
+    /// [`Method::history_needed`]) but is second-order convergent — Liu et
+    /// al. (2022) prove exactly that for pseudo linear multistep, and the
+    /// DDIM-transfer kernel mismatch caps the observed slope at 2.
     pub fn order(&self) -> usize {
         match self {
             Method::Ddim { .. } => 1,
@@ -69,7 +75,7 @@ impl Method {
             Method::DpmSolverSingle { order } => *order,
             Method::DpmSolverPp { order } => *order,
             Method::DpmSolverPp3S => 3,
-            Method::Plms => 4,
+            Method::Plms => 2,
             Method::Deis { order } => *order,
         }
     }
@@ -124,8 +130,16 @@ impl Method {
         }
     }
 
-    /// Parse the string form produced by [`Method::id`] (plus a few aliases
-    /// used in configs: `ddim`, `unipc-3`, `dpmpp-2m`, …).
+    /// Parse the string form produced by [`Method::id`] / [`Method::cache_key`]
+    /// (plus a few aliases used in configs: `ddim`, `unipc-3`, `dpmpp-2m`,
+    /// `dpm-2s`, …).
+    ///
+    /// Round-trip contract (property-tested in `tests/property_suite.rs`):
+    /// `Method::parse(&m.cache_key()) == Some(m)` for every method, and
+    /// `Method::parse(&m.id()) == Some(m)` for every method without an order
+    /// schedule. A scheduled UniP's `id()` is display-lossy (`…-sched`
+    /// without the contents); its `cache_key()` spells the schedule out as
+    /// `…-sched[1,2,3]`, which parses back exactly.
     pub fn parse(s: &str) -> Option<Method> {
         let parts: Vec<&str> = s.split('-').collect();
         match parts.as_slice() {
@@ -138,15 +152,26 @@ impl Method {
                 let order: usize = om.trim_end_matches('m').parse().ok()?;
                 (1..=3).contains(&order).then_some(Method::DpmSolverPp { order })
             }
-            ["dpm", "solver", os] if os.ends_with('s') => {
+            // Canonical "dpm-solver-2s" and the short "dpm-2s" spelling.
+            ["dpm", "solver", os] | ["dpm", os] if os.ends_with('s') => {
                 let order: usize = os.trim_end_matches('s').parse().ok()?;
                 (2..=3).contains(&order).then_some(Method::DpmSolverSingle { order })
             }
-            ["deis", o] => Some(Method::Deis { order: o.parse().ok()? }),
+            ["deis", o] => {
+                let order: usize = o.parse().ok()?;
+                // tAB-DEIS is defined for small extrapolation windows; an
+                // unbounded order would demand unbounded history (and
+                // "deis-0" would be a zero-term quadrature).
+                (1..=4).contains(&order).then_some(Method::Deis { order })
+            }
             ["unip", rest @ ..] | ["unipc", rest @ ..] => {
                 let order: usize = rest.first()?.parse().ok()?;
+                if !(1..=6).contains(&order) {
+                    return None;
+                }
                 let mut variant = CoeffVariant::Bh(BFunction::Bh2);
                 let mut pred = Prediction::Noise;
+                let mut schedule = None;
                 for tok in &rest[1..] {
                     match *tok {
                         "bh1" => variant = CoeffVariant::Bh(BFunction::Bh1),
@@ -154,13 +179,80 @@ impl Method {
                         "vary" => variant = CoeffVariant::Varying,
                         "noise" => pred = Prediction::Noise,
                         "data" => pred = Prediction::Data,
+                        // The cache-key form spells the Table-4 schedule out
+                        // ("sched[1,2,3]"); the bare "-sched" id suffix is
+                        // display-only and cannot be reconstructed.
+                        t if t.starts_with("sched[") && t.ends_with(']') => {
+                            let inner = &t["sched[".len()..t.len() - 1];
+                            let parsed: Option<Vec<usize>> = if inner.is_empty() {
+                                Some(Vec::new())
+                            } else {
+                                inner.split(',').map(|o| o.parse().ok()).collect()
+                            };
+                            schedule = Some(parsed?);
+                        }
                         _ => return None,
                     }
                 }
-                Some(Method::UniP { order, variant, pred, schedule: None })
+                Some(Method::UniP { order, variant, pred, schedule })
             }
             _ => None,
         }
+    }
+
+    /// The full parseable solver zoo: every method family at **every order
+    /// `Method::parse` accepts** — both DDIM parametrizations, DPM-Solver
+    /// singlestep 2S/3S, DPM-Solver++ 1M/2M/3M/3S, PNDM, DEIS 1–4, the
+    /// full UniP order-1..3 × coefficient-variant × parametrization grid,
+    /// and one instance of each UniP order 4–6 (Bh and Varying). The
+    /// conformance suite sweeps exactly this list, so anything the parser
+    /// admits into the coordinator is covered by planned-vs-reference
+    /// bit-identity and id/cache-key round-trip tests.
+    pub fn zoo() -> Vec<Method> {
+        let mut v = vec![
+            Method::Ddim { pred: Prediction::Noise },
+            Method::Ddim { pred: Prediction::Data },
+            Method::Plms,
+            Method::DpmSolverSingle { order: 2 },
+            Method::DpmSolverSingle { order: 3 },
+            Method::DpmSolverPp { order: 1 },
+            Method::DpmSolverPp { order: 2 },
+            Method::DpmSolverPp { order: 3 },
+            Method::DpmSolverPp3S,
+            Method::Deis { order: 1 },
+            Method::Deis { order: 2 },
+            Method::Deis { order: 3 },
+            Method::Deis { order: 4 },
+        ];
+        for order in [1usize, 2, 3] {
+            for variant in [
+                CoeffVariant::Bh(BFunction::Bh1),
+                CoeffVariant::Bh(BFunction::Bh2),
+                CoeffVariant::Varying,
+            ] {
+                for pred in [Prediction::Noise, Prediction::Data] {
+                    v.push(Method::UniP { order, variant, pred, schedule: None });
+                }
+            }
+        }
+        // The high-order tail the parser admits (orders 4–6): one Bh and
+        // one Varying instance per order keeps the sweep bounded while
+        // covering the deep-history code paths (order_sweep's regime).
+        for order in [4usize, 5, 6] {
+            v.push(Method::UniP {
+                order,
+                variant: CoeffVariant::Bh(BFunction::Bh2),
+                pred: Prediction::Noise,
+                schedule: None,
+            });
+            v.push(Method::UniP {
+                order,
+                variant: CoeffVariant::Varying,
+                pred: Prediction::Data,
+                schedule: None,
+            });
+        }
+        v
     }
 }
 
@@ -206,26 +298,41 @@ mod tests {
 
     #[test]
     fn id_parse_roundtrip() {
-        let methods = [
-            Method::Ddim { pred: Prediction::Noise },
-            Method::unip(3, BFunction::Bh1, Prediction::Noise),
-            Method::unip(2, BFunction::Bh2, Prediction::Data),
-            Method::UniP {
-                order: 3,
-                variant: CoeffVariant::Varying,
-                pred: Prediction::Noise,
-                schedule: None,
-            },
-            Method::DpmSolverSingle { order: 3 },
-            Method::DpmSolverPp { order: 2 },
-            Method::DpmSolverPp3S,
-            Method::Plms,
-            Method::Deis { order: 2 },
-        ];
-        for m in methods {
+        // Every zoo entry round-trips through both string forms.
+        for m in Method::zoo() {
             let parsed = Method::parse(&m.id()).unwrap_or_else(|| panic!("parse {}", m.id()));
             assert_eq!(parsed, m, "{}", m.id());
+            let parsed = Method::parse(&m.cache_key())
+                .unwrap_or_else(|| panic!("parse {}", m.cache_key()));
+            assert_eq!(parsed, m, "{}", m.cache_key());
         }
+    }
+
+    #[test]
+    fn scheduled_unip_roundtrips_via_cache_key() {
+        let m = Method::UniP {
+            order: 3,
+            variant: CoeffVariant::Bh(BFunction::Bh2),
+            pred: Prediction::Data,
+            schedule: Some(vec![1, 2, 3, 3, 2, 1]),
+        };
+        assert_eq!(m.cache_key(), "unip-3-bh2-data-sched[1,2,3,3,2,1]");
+        assert_eq!(Method::parse(&m.cache_key()), Some(m.clone()));
+        // The display id stays lossy by design: no schedule to reconstruct.
+        assert_eq!(m.id(), "unip-3-bh2-data-sched");
+        assert_eq!(Method::parse(&m.id()), None);
+    }
+
+    #[test]
+    fn parse_rejects_out_of_range_orders() {
+        assert_eq!(Method::parse("deis-0"), None);
+        assert_eq!(Method::parse("deis-9"), None);
+        assert_eq!(Method::parse("unip-0"), None);
+        assert_eq!(Method::parse("unipc-7"), None);
+        assert_eq!(Method::parse("dpmpp-0m"), None);
+        assert_eq!(Method::parse("dpmpp-4m"), None);
+        assert_eq!(Method::parse("dpm-solver-1s"), None);
+        assert_eq!(Method::parse("dpm-solver-4s"), None);
     }
 
     #[test]
@@ -251,6 +358,15 @@ mod tests {
         assert_eq!(
             Method::parse("unipc-3").unwrap(),
             Method::unip(3, BFunction::Bh2, Prediction::Noise)
+        );
+        // Short DPM-Solver singlestep spelling.
+        assert_eq!(
+            Method::parse("dpm-2s").unwrap(),
+            Method::DpmSolverSingle { order: 2 }
+        );
+        assert_eq!(
+            Method::parse("dpm-3s").unwrap(),
+            Method::DpmSolverSingle { order: 3 }
         );
         assert!(Method::parse("nope").is_none());
     }

@@ -16,12 +16,15 @@
 //! * [`runner`] — drives any method over a timestep grid, optionally
 //!   wrapping it with UniC ("+UniC" rows of Table 2/3), with NFE accounting
 //!   and trajectory capture.
-//! * [`plan`] — precomputed sampling plans for the UniPC hot path: one
-//!   [`SamplePlan`] per `(schedule, options)` resolves every per-step
-//!   scalar and coefficient up front, and [`sample_with_plan`] executes it
-//!   with zero solver-side heap allocations in steady state. The
-//!   coordinator caches plans by [`plan_key`] across requests, and
-//!   [`sample_batch_with_plan`] executes many same-plan requests in
+//! * [`plan`] — the method-agnostic plan compiler: one [`SamplePlan`] per
+//!   `(schedule, options)` resolves every per-step scalar and coefficient
+//!   up front for **every method in the registry** (per-family
+//!   [`plan::CompileStep`] compilers lower each step to a
+//!   [`plan::StepOp`]), and [`sample_with_plan`] executes it with zero
+//!   solver-side heap allocations in steady state, bit-identical to the
+//!   per-method reference loops (`sample_unplanned` is the conformance
+//!   oracle). The coordinator caches plans by [`plan_key`] across requests,
+//!   and [`sample_batch_with_plan`] executes many same-plan requests in
 //!   lockstep on one stacked batch (one model evaluation per step for the
 //!   whole batch), with a pooled [`BatchWorkspace`] reused across runs.
 
@@ -40,8 +43,8 @@ pub mod unipc;
 pub use history::History;
 pub use method::{Method, UniPcCoeffs};
 pub use plan::{
-    plan_key, sample_batch_with_plan, sample_with_plan, BatchWorkspace, SamplePlan,
-    StepWorkspace,
+    plan_key, sample_batch_with_plan, sample_with_plan, BatchWorkspace, CompileStep,
+    PlannedStep, SamplePlan, StepCx, StepOp, StepWorkspace,
 };
 pub use runner::{sample, sample_batch, sample_unplanned, SampleOptions, SampleResult};
 pub use thresholding::DynamicThresholding;

@@ -1,26 +1,29 @@
 //! Precomputed sampling plans + zero-allocation step execution for the
-//! UniPC hot path.
+//! solver hot path — **every** method in the registry, not just UniPC.
 //!
 //! # Why plans
 //!
-//! Every scalar a multistep UniPC run needs — the timestep grid, the
-//! per-step effective order (warm-up ramp + optional Table-4 schedule), the
-//! signed step `hh`, the node ratios r_m, the linear-part scalars
-//! (α_t/α_s, −σ_t·(eʰ−1), …) and the Theorem-3.1 / Appendix-C combination
-//! coefficients — is a pure function of `(NoiseSchedule, SampleOptions)`.
-//! The reference loop ([`super::runner::sample_unplanned`]) re-derives all
-//! of it at every step; the `Varying` coefficient variant even re-runs a
-//! full LU inversion per step. A [`SamplePlan`] hoists that work out of the
-//! loop: built once, it reduces the steady-state step to pure tensor
-//! arithmetic with zero coefficient math.
+//! Every scalar a sampling run needs — the timestep grid, the per-step
+//! effective order (warm-up ramp + optional Table-4 schedule), the signed
+//! step `hh`, the node ratios r_m, the linear-part scalars (α_t/α_s,
+//! −σ_t·(eʰ−1), …) and the method's combination coefficients (Theorem-3.1 /
+//! Appendix-C systems for UniPC, φ-function coefficients for the
+//! DPM-Solver families, Adams–Bashforth weights for PNDM, kernel-quadrature
+//! integrals for DEIS) — is a pure function of `(NoiseSchedule,
+//! SampleOptions)`. The reference loop
+//! ([`super::runner::sample_unplanned`]) re-derives all of it at every
+//! step; DEIS even re-runs a 16-point Gauss–Legendre quadrature per step
+//! and the `Varying` UniPC variant a full LU inversion. A [`SamplePlan`]
+//! hoists that work out of the loop: built once, it reduces the
+//! steady-state step to pure tensor arithmetic with zero coefficient math.
 //!
 //! # Lifecycle: build → cache → execute
 //!
 //! 1. **Build** — [`SamplePlan::build`] resolves the whole run up front.
-//!    It covers the multistep UniP/UniPC family (any order, both
-//!    coefficient variants, both parametrizations, optional order schedule,
-//!    optional UniC/oracle); it returns `None` for singlestep methods,
-//!    non-UniP baselines, and `exact_warmup` runs, which keep using the
+//!    Each multistep family lowers through its [`CompileStep`] compiler
+//!    into per-step [`StepOp`]s; singlestep methods (DPM-Solver-2S/3S,
+//!    DPM-Solver++-3S) compile their NFE-budget group split the same way.
+//!    Only `exact_warmup` runs (an experiments-only mode) keep using the
 //!    reference loop.
 //! 2. **Cache** — a plan is immutable and model-independent, so identically
 //!    configured requests share one `Arc<SamplePlan>`. The coordinator
@@ -33,21 +36,24 @@
 //!    trajectory capture) deliberately don't key it.
 //! 3. **Execute** — [`sample_with_plan`] drives the run from the plan using
 //!    a [`StepWorkspace`] of preallocated buffers. It is bit-identical to
-//!    the reference loop (asserted by the tests below and by
-//!    `tests/plan_alloc.rs`): same operations, same accumulation order,
-//!    same NFE accounting.
+//!    the reference loop for every method (asserted per-family by the tests
+//!    below and exhaustively by `tests/solver_conformance.rs`): same
+//!    operations, same accumulation order, same NFE accounting.
 //!
 //! # The zero-allocation invariant
 //!
-//! A steady-state planned step performs **zero heap allocations** in the
-//! solver arithmetic: [`SamplePlan::predict_into`] and
+//! A steady-state planned multistep step performs **zero heap allocations**
+//! in the solver arithmetic: [`SamplePlan::predict_into`] and
 //! [`SamplePlan::correct_into`] write only into the workspace and the state
 //! tensor (`assign_*` kernels + [`crate::tensor::weighted_sum_into`]), the
 //! history ring buffer is preallocated and merely rotates ownership of the
 //! model-output tensors, and the state advance is a pointer swap. The only
 //! allocations left in the loop are the model evaluations themselves, which
-//! by contract produce a fresh output tensor. `tests/plan_alloc.rs` proves
-//! the invariant with a counting global allocator.
+//! by contract produce a fresh output tensor (singlestep groups additionally
+//! clone one boundary output into the history buffer, mirroring the
+//! reference loop). `tests/plan_alloc.rs` proves the invariant with a
+//! counting global allocator across the UniPC, DPM-Solver++, DEIS, and PNDM
+//! families.
 //!
 //! # Batched execution across requests
 //!
@@ -60,7 +66,8 @@
 //! stacked state and the [`StepWorkspace`] across runs so steady-state
 //! batches start without allocating. The coordinator's batch assembler
 //! ([`crate::coordinator`]) groups queued requests by plan key + model
-//! conditioning and drives this entry point.
+//! conditioning and drives this entry point — for every method in the
+//! registry, with no special-casing.
 //!
 //! # Example
 //!
@@ -80,7 +87,7 @@
 //!
 //! // UniPC-3 with the B2(h) choice at 8 steps — the paper's low-NFE regime.
 //! let opts = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
-//! let plan = SamplePlan::build(&sched, &opts).expect("multistep UniPC is plannable");
+//! let plan = SamplePlan::build(&sched, &opts).expect("plannable");
 //!
 //! let x_t = Rng::seed_from(7).normal_tensor(&[4, gm.dim]);
 //! let result = sample_with_plan(&model, &sched, &x_t, &opts, &plan);
@@ -88,13 +95,17 @@
 //! assert!(result.x.data().iter().all(|v| v.is_finite()));
 //! ```
 
+use super::deis::deis_weights;
 use super::history::History;
-use super::method::Method;
+use super::method::{singlestep_orders, Method};
+use super::pndm::ab_weights;
 use super::runner::{effective_order, SampleOptions, SampleResult};
-use super::unipc::residual_coeffs;
+use super::unipc::{residual_coeffs, CoeffVariant};
 use super::{Evaluator, Model, Prediction};
+use crate::numerics::phi::{phi, psi};
 use crate::sched::{timesteps, NoiseSchedule};
 use crate::tensor::{weighted_sum_into, Tensor};
+use std::collections::VecDeque;
 
 /// Cache key for a plan: every input [`SamplePlan::build`] reads, and
 /// nothing else. Two requests with equal keys can share one plan — in
@@ -128,31 +139,183 @@ pub fn plan_key(sched: &dyn NoiseSchedule, opts: &SampleOptions) -> String {
     key
 }
 
-/// Everything step `i` needs that does not depend on the model outputs.
+/// Grid geometry handed to a [`CompileStep`] implementation for one
+/// multistep solver step: the full resolved timestep grid plus this step's
+/// index and effective order. Compilers read `ts[i-1] → ts[i]` as the step
+/// and `lams[i-1-m]` as the history node λ's — exactly what the reference
+/// loop's `History` would hold at this point of the run.
+pub struct StepCx<'a> {
+    /// Noise schedule the run samples under.
+    pub sched: &'a dyn NoiseSchedule,
+    /// Decreasing grid `t_0 = t_start > … > t_M = t_end`.
+    pub ts: &'a [f64],
+    /// λ(t) for every grid point.
+    pub lams: &'a [f64],
+    /// 1-based step index: this step advances `ts[i-1] → ts[i]`.
+    pub i: usize,
+    /// Effective order p_i (warm-up ramp / order schedule applied).
+    pub order: usize,
+    /// Buffered history length at this step (`min(i, cap)`).
+    pub hist_len: usize,
+    /// The parametrization the method consumes.
+    pub pred: Prediction,
+}
+
+/// A per-family **plan compiler**: lowers one multistep solver step into
+/// the precomputed [`StepOp`] that [`sample_with_plan`] executes with zero
+/// solver-side allocations. One implementation exists per method family
+/// (UniP/UniPC, DDIM, DPM-Solver++ multistep, PNDM, DEIS); singlestep
+/// methods compile through the NFE-budget group compiler inside
+/// [`SamplePlan::build`] instead. The contract is **bit-identity**: the
+/// compiled op must perform the same floating-point operations in the same
+/// order as the family's reference step function, with every scalar
+/// resolved at build time.
+///
+/// # Example — planning a non-UniPC baseline
+///
+/// ```
+/// use unipc::sched::VpLinear;
+/// use unipc::solver::{
+///     sample_unplanned, sample_with_plan, Method, Prediction, SampleOptions, SamplePlan,
+/// };
+/// use unipc::tensor::Tensor;
+///
+/// let sched = VpLinear::default();
+/// // DPM-Solver++(2M) — the paper's strongest baseline — compiles to a
+/// // plan just like UniPC does.
+/// let opts = SampleOptions::new(Method::DpmSolverPp { order: 2 }, 8);
+/// let plan = SamplePlan::build(&sched, &opts).expect("every method is plannable");
+///
+/// let model = (Prediction::Noise, 2, |x: &Tensor, _t: f64| x.scaled(0.4));
+/// let x0 = Tensor::from_vec(&[1, 2], vec![0.6, -0.3]);
+/// let planned = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+/// let reference = sample_unplanned(&model, &sched, &x0, &opts);
+/// assert_eq!(planned.nfe, reference.nfe);
+/// assert_eq!(planned.x.data(), reference.x.data()); // bit-identical
+/// ```
+pub trait CompileStep {
+    /// Compile step `cx.i` into its precomputed op.
+    fn compile(&self, cx: &StepCx<'_>) -> StepOp;
+}
+
+/// One interior model evaluation of a singlestep group: the node state is
+/// `x_coef·x + m_coef·m_s` (plus `d_coef·D_prev` for the second node of a
+/// third-order group), evaluated at `t`.
+#[derive(Clone, Debug)]
+pub struct SingleNode {
+    pub t: f64,
+    pub x_coef: f64,
+    pub m_coef: f64,
+    /// Coefficient on the previous node's difference D (third-order groups).
+    pub d_coef: Option<f64>,
+}
+
+/// A compiled singlestep group (DPM-Solver-2S/3S, DPM-Solver++-2S/3S, or a
+/// first-order DDIM-transfer tail group): interior nodes plus the final
+/// combination `x_coef·x + m_coef·m_s (+ d_coef·D_last)`.
+#[derive(Clone, Debug)]
+pub struct SingleOp {
+    /// Group start t_s (the boundary the reused model output lives at).
+    pub t_s: f64,
+    /// λ(t_s).
+    pub lambda_s: f64,
+    /// Interior evaluations, in execution order (0, 1, or 2 of them).
+    pub nodes: Vec<SingleNode>,
+    pub x_coef: f64,
+    pub m_coef: f64,
+    /// Coefficient on the last interior difference, if any.
+    pub d_coef: Option<f64>,
+}
+
+/// The compiled base step of one plan entry — everything the executor needs
+/// that does not depend on the model outputs. Each variant mirrors its
+/// family's reference step function operation-for-operation.
+#[derive(Clone, Debug)]
+pub enum StepOp {
+    /// First-order exponential step `pred = x_coef·x + m0_coef·m₀`: DDIM,
+    /// UniP-1, DPM-Solver++(1M), and warm-up-clamped first steps.
+    FirstOrder { x_coef: f64, m0_coef: f64 },
+    /// UniP-p, p ≥ 2 (Corollary 3.2): linear part, D_m/r_m rows, and the
+    /// fully-solved residual combination coefficients.
+    UniP {
+        x_coef: f64,
+        m0_coef: f64,
+        /// −σ_t (noise) or −α_t (data): multiplies the residual combination.
+        residual_scale: f64,
+        /// 1/r_m for the historical nodes m = 1..p−1.
+        inv_r: Vec<f64>,
+        /// Residual coefficients c_m (p−1 entries).
+        coeffs: Vec<f64>,
+    },
+    /// Multistep DPM-Solver++(2M).
+    Dpmpp2M { x_coef: f64, m0_coef: f64, inv_r0: f64, d1_coef: f64 },
+    /// Multistep DPM-Solver++(3M).
+    Dpmpp3M {
+        x_coef: f64,
+        m0_coef: f64,
+        inv_r0: f64,
+        inv_r1: f64,
+        /// r0/(r0+r1): mixes D1_0 with (D1_0 − D1_1) into D1.
+        mix: f64,
+        /// 1/(r0+r1): scales (D1_0 − D1_1) into D2.
+        inv_r01: f64,
+        d1_coef: f64,
+        d2_coef: f64,
+    },
+    /// PNDM/PLMS: Adams–Bashforth combination of the last k ε outputs fed
+    /// through the DDIM transfer map.
+    Plms { x_coef: f64, comb_coef: f64, weights: Vec<f64> },
+    /// tAB-DEIS: precomputed kernel-quadrature weights on the last q
+    /// outputs, added to the rescaled state.
+    Deis { x_coef: f64, weights: Vec<f64> },
+    /// A singlestep NFE-budget group (executed by the singlestep driver,
+    /// not by [`SamplePlan::predict_into`]).
+    Single(SingleOp),
+}
+
+/// Scratch rows the op consumes at execution time (sizes the workspace).
+fn op_rows(op: &StepOp) -> usize {
+    match op {
+        StepOp::FirstOrder { .. } => 0,
+        StepOp::UniP { inv_r, .. } => inv_r.len(),
+        StepOp::Dpmpp2M { .. } => 1,
+        StepOp::Dpmpp3M { .. } => 5,
+        StepOp::Plms { .. } | StepOp::Deis { .. } => 0,
+        StepOp::Single(s) => s.nodes.len(),
+    }
+}
+
+/// The UniC corrector of one step, fully resolved: linear-part scalars,
+/// node ratios, and the full p-node system coefficients (r_p = 1). Applied
+/// after **any** base op — the §3.1 claim that UniC composes with any
+/// solver is structural here.
+#[derive(Clone, Debug)]
+pub struct CorrectorStep {
+    pub x_coef: f64,
+    pub m0_coef: f64,
+    pub residual_scale: f64,
+    /// 1/r_m for the historical nodes m = 1..p−1.
+    pub inv_r: Vec<f64>,
+    /// Full p-node system coefficients (`coeffs.len()` = corrector order p).
+    pub coeffs: Vec<f64>,
+}
+
+/// Everything step `k` needs that does not depend on the model outputs.
 #[derive(Clone, Debug)]
 pub struct PlannedStep {
-    /// Target timestep t_i.
+    /// Target timestep t (group end for singlestep methods).
     pub t: f64,
-    /// λ_{t_i} (pushed into the history buffer with the step's output).
+    /// λ_t (pushed into the history buffer with the step's output).
     pub lambda: f64,
-    /// Effective UniP order p_i (warm-up ramp / order schedule applied).
+    /// Effective order p_i of this step (warm-up ramp / order schedule /
+    /// singlestep group order applied); the corrector, if any, runs at this
+    /// order.
     pub order: usize,
-    /// 1/r_m for the historical nodes m = 1..p_i−1 (D_m/r_m scaling).
-    pub inv_r: Vec<f64>,
-    /// α_t/α_s (noise prediction) or σ_t/σ_s (data prediction).
-    pub a_ratio: f64,
-    /// −σ_t·(eʰ−1) (noise) or α_t·(1−e^{−h}) (data): multiplies m₀ in the
-    /// linear part x^{(1)}.
-    pub m0_coef: f64,
-    /// −σ_t (noise) or −α_t (data): multiplies the residual combination.
-    pub residual_scale: f64,
-    /// Fully-resolved predictor coefficients c_m (Corollary 3.2 system,
-    /// p_i−1 nodes). Empty iff p_i = 1 (the DDIM-degenerate step).
-    pub pred_coeffs: Vec<f64>,
-    /// Fully-resolved corrector coefficients (full p_i-node system with
-    /// r_p = 1). Empty iff the corrector is skipped at this step (no UniC
-    /// configured, or the final step).
-    pub corr_coeffs: Vec<f64>,
+    /// The compiled base step.
+    pub op: StepOp,
+    /// The compiled UniC corrector (`None` when no UniC is configured or on
+    /// the final step, which skips correction by convention).
+    pub corrector: Option<CorrectorStep>,
 }
 
 /// A complete precomputed run: grid, orders, and coefficients for every
@@ -162,8 +325,10 @@ pub struct SamplePlan {
     key: String,
     prediction: Prediction,
     oracle: bool,
+    singlestep: bool,
     history_cap: usize,
     max_order: usize,
+    ws_rows: usize,
     t0: f64,
     lambda0: f64,
     steps: Vec<PlannedStep>,
@@ -173,12 +338,16 @@ pub struct SamplePlan {
 /// run (or any number of runs with the same batch shape); steady-state
 /// steps write into it without touching the allocator.
 pub struct StepWorkspace {
-    /// D_m/r_m rows (index m−1); slot `p−1` doubles as the corrector's
-    /// D_p = m_t − m₀ row.
+    /// Scratch rows: D_m/r_m rows for the multistep families (slot `p−1`
+    /// doubles as the corrector's D_p = m_t − m₀ row), the derived
+    /// D1/D2/diff rows of DPM-Solver++(3M), and the interior-node
+    /// differences of singlestep groups.
     d: Vec<Tensor>,
-    /// The residual combination Σ_m c_m · D_m/r_m.
+    /// The residual combination Σ_m c_m · D_m/r_m (also the PLMS/DEIS
+    /// history combination).
     res: Tensor,
-    /// The linear part x^{(1)}, shared by predictor and corrector.
+    /// The linear part x^{(1)} shared by the corrector, and the interior
+    /// node state of singlestep groups.
     lin: Tensor,
     /// Predictor output x_pred (swapped into the state when no corrector
     /// applies).
@@ -186,10 +355,11 @@ pub struct StepWorkspace {
 }
 
 impl StepWorkspace {
-    /// Buffers for batch shape `shape` and plans up to `max_order`.
-    pub fn new(shape: &[usize], max_order: usize) -> StepWorkspace {
+    /// Buffers for batch shape `shape` with `rows` scratch rows (size with
+    /// [`SamplePlan::ws_rows`]).
+    pub fn new(shape: &[usize], rows: usize) -> StepWorkspace {
         StepWorkspace {
-            d: (0..max_order.max(1)).map(|_| Tensor::zeros(shape)).collect(),
+            d: (0..rows.max(1)).map(|_| Tensor::zeros(shape)).collect(),
             res: Tensor::zeros(shape),
             lin: Tensor::zeros(shape),
             pred: Tensor::zeros(shape),
@@ -201,15 +371,15 @@ impl StepWorkspace {
         &self.pred
     }
 
-    /// Resize every buffer for `shape` and plans up to `max_order`, reusing
+    /// Resize every buffer for `shape` and `rows` scratch rows, reusing
     /// the existing allocations whenever their capacity allows
     /// ([`Tensor::resize_to`]). This is what lets one workspace per worker
     /// serve runs of varying batch size: after warm-up at the largest shape,
     /// `ensure` never touches the allocator. Returns `true` when no buffer
     /// had to grow.
-    pub fn ensure(&mut self, shape: &[usize], max_order: usize) -> bool {
+    pub fn ensure(&mut self, shape: &[usize], rows: usize) -> bool {
         let mut reused = true;
-        while self.d.len() < max_order.max(1) {
+        while self.d.len() < rows.max(1) {
             self.d.push(Tensor::zeros(shape));
             reused = false;
         }
@@ -257,9 +427,9 @@ impl BatchWorkspace {
         self.reuses
     }
 
-    fn ensure(&mut self, shape: &[usize], max_order: usize) {
+    fn ensure(&mut self, shape: &[usize], rows: usize) {
         let mut reused = self.x.resize_to(shape);
-        reused &= self.ws.ensure(shape, max_order);
+        reused &= self.ws.ensure(shape, rows);
         if reused {
             self.reuses += 1;
         } else {
@@ -274,25 +444,370 @@ impl Default for BatchWorkspace {
     }
 }
 
+/// `pred = x_coef·x + m0_coef·m₀` scalars of a first-order exponential
+/// transfer (the DDIM map), in either parametrization. Shared by DDIM,
+/// UniP-1, warm-up-clamped DPM-Solver++ steps, and first-order singlestep
+/// tail groups — the expressions mirror `ddim_step`/`ddim_transfer` exactly.
+fn first_order_coefs(
+    sched: &dyn NoiseSchedule,
+    pred: Prediction,
+    t0: f64,
+    t: f64,
+    h: f64,
+) -> (f64, f64) {
+    match pred {
+        Prediction::Noise => (
+            sched.alpha(t) / sched.alpha(t0),
+            -sched.sigma(t) * h.exp_m1(),
+        ),
+        Prediction::Data => (
+            sched.sigma(t) / sched.sigma(t0),
+            sched.alpha(t) * (-(-h).exp_m1()),
+        ),
+    }
+}
+
+/// The shared per-step linear-part scalars of the UniP/UniC update
+/// (`step_geometry`'s `(hh, x^{(1)} coefficients, residual scale)`), in
+/// either parametrization. One definition serves both the UniP base-step
+/// compiler and the corrector compiler so their arithmetic cannot drift —
+/// the planned corrector must stay bit-identical to `unic_correct_with`.
+fn linear_part_coefs(
+    sched: &dyn NoiseSchedule,
+    pred: Prediction,
+    t0: f64,
+    t: f64,
+    h: f64,
+) -> (f64, f64, f64, f64) {
+    match pred {
+        Prediction::Noise => {
+            let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
+            (h, a_t / sched.alpha(t0), -s_t * h.exp_m1(), -s_t)
+        }
+        Prediction::Data => {
+            let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
+            (-h, s_t / sched.sigma(t0), a_t * (-(-h).exp_m1()), -a_t)
+        }
+    }
+}
+
+/// Plan compiler for DDIM (and any first-order exponential step).
+pub struct FirstOrderCompiler;
+
+impl CompileStep for FirstOrderCompiler {
+    fn compile(&self, cx: &StepCx<'_>) -> StepOp {
+        let (t0, t) = (cx.ts[cx.i - 1], cx.ts[cx.i]);
+        let h = cx.lams[cx.i] - cx.lams[cx.i - 1];
+        let (x_coef, m0_coef) = first_order_coefs(cx.sched, cx.pred, t0, t, h);
+        StepOp::FirstOrder { x_coef, m0_coef }
+    }
+}
+
+/// Plan compiler for the UniP/UniPC multistep family (both coefficient
+/// variants, both parametrizations).
+pub struct UniPCompiler {
+    pub variant: CoeffVariant,
+}
+
+impl CompileStep for UniPCompiler {
+    fn compile(&self, cx: &StepCx<'_>) -> StepOp {
+        let p = cx.order;
+        let (t0, t) = (cx.ts[cx.i - 1], cx.ts[cx.i]);
+        let (l0, lt) = (cx.lams[cx.i - 1], cx.lams[cx.i]);
+        let h = lt - l0;
+        debug_assert!(h > 0.0, "sampling must increase λ");
+        if p == 1 {
+            let (x_coef, m0_coef) = first_order_coefs(cx.sched, cx.pred, t0, t, h);
+            return StepOp::FirstOrder { x_coef, m0_coef };
+        }
+        let mut rks = Vec::with_capacity(p);
+        let mut inv_r = Vec::with_capacity(p - 1);
+        for m in 1..p {
+            let r = (cx.lams[cx.i - 1 - m] - l0) / h;
+            rks.push(r);
+            inv_r.push(1.0 / r);
+        }
+        rks.push(1.0);
+        let (hh, x_coef, m0_coef, residual_scale) =
+            linear_part_coefs(cx.sched, cx.pred, t0, t, h);
+        let coeffs = residual_coeffs(&rks[..p - 1], hh, self.variant);
+        StepOp::UniP { x_coef, m0_coef, residual_scale, inv_r, coeffs }
+    }
+}
+
+/// Plan compiler for multistep DPM-Solver++ (1M/2M/3M by effective order).
+pub struct DpmSolverPpCompiler;
+
+impl CompileStep for DpmSolverPpCompiler {
+    fn compile(&self, cx: &StepCx<'_>) -> StepOp {
+        let (t0, t) = (cx.ts[cx.i - 1], cx.ts[cx.i]);
+        let (l0, lt) = (cx.lams[cx.i - 1], cx.lams[cx.i]);
+        let h = lt - l0;
+        match cx.order {
+            1 => {
+                let (x_coef, m0_coef) = first_order_coefs(cx.sched, cx.pred, t0, t, h);
+                StepOp::FirstOrder { x_coef, m0_coef }
+            }
+            2 => {
+                let h0 = l0 - cx.lams[cx.i - 2];
+                let r0 = h0 / h;
+                let phi_1 = (-h).exp_m1();
+                StepOp::Dpmpp2M {
+                    x_coef: cx.sched.sigma(t) / cx.sched.sigma(t0),
+                    m0_coef: -cx.sched.alpha(t) * phi_1,
+                    inv_r0: 1.0 / r0,
+                    d1_coef: -0.5 * cx.sched.alpha(t) * phi_1,
+                }
+            }
+            _ => {
+                let h0 = l0 - cx.lams[cx.i - 2];
+                let h1 = cx.lams[cx.i - 2] - cx.lams[cx.i - 3];
+                let (r0, r1) = (h0 / h, h1 / h);
+                let phi_1 = (-h).exp_m1();
+                let phi_2 = h * psi(2, h);
+                let phi_3 = -h * psi(3, h);
+                StepOp::Dpmpp3M {
+                    x_coef: cx.sched.sigma(t) / cx.sched.sigma(t0),
+                    m0_coef: -cx.sched.alpha(t) * phi_1,
+                    inv_r0: 1.0 / r0,
+                    inv_r1: 1.0 / r1,
+                    mix: r0 / (r0 + r1),
+                    inv_r01: 1.0 / (r0 + r1),
+                    d1_coef: cx.sched.alpha(t) * phi_2,
+                    d2_coef: -cx.sched.alpha(t) * phi_3,
+                }
+            }
+        }
+    }
+}
+
+/// Plan compiler for PNDM/PLMS (Adams–Bashforth window of up to 4 outputs,
+/// independent of the corrector-facing effective order).
+pub struct PlmsCompiler;
+
+impl CompileStep for PlmsCompiler {
+    fn compile(&self, cx: &StepCx<'_>) -> StepOp {
+        let k = cx.hist_len.min(4);
+        let (t0, t) = (cx.ts[cx.i - 1], cx.ts[cx.i]);
+        let h = cx.lams[cx.i] - cx.lams[cx.i - 1];
+        // PLMS combines ε outputs: noise-prediction transfer map.
+        StepOp::Plms {
+            x_coef: cx.sched.alpha(t) / cx.sched.alpha(t0),
+            comb_coef: -cx.sched.sigma(t) * h.exp_m1(),
+            weights: ab_weights(k).to_vec(),
+        }
+    }
+}
+
+/// Plan compiler for tAB-DEIS: the per-step kernel quadrature (the costly
+/// part of the reference loop) runs once here, at build time.
+pub struct DeisCompiler;
+
+impl CompileStep for DeisCompiler {
+    fn compile(&self, cx: &StepCx<'_>) -> StepOp {
+        let q = cx.order;
+        let (t0, t) = (cx.ts[cx.i - 1], cx.ts[cx.i]);
+        let nodes: Vec<f64> = (0..q).map(|m| cx.ts[cx.i - 1 - m]).collect();
+        let weights = deis_weights(cx.sched, &nodes, t0, t);
+        StepOp::Deis { x_coef: cx.sched.alpha(t) / cx.sched.alpha(t0), weights }
+    }
+}
+
+/// The compiler for a multistep method (`None` for singlestep methods,
+/// which compile through the group compiler in [`SamplePlan::build`]).
+fn multistep_compiler(method: &Method) -> Option<Box<dyn CompileStep>> {
+    match method {
+        Method::Ddim { .. } => Some(Box::new(FirstOrderCompiler)),
+        Method::UniP { variant, .. } => Some(Box::new(UniPCompiler { variant: *variant })),
+        Method::DpmSolverPp { .. } => Some(Box::new(DpmSolverPpCompiler)),
+        Method::Plms => Some(Box::new(PlmsCompiler)),
+        Method::Deis { .. } => Some(Box::new(DeisCompiler)),
+        Method::DpmSolverSingle { .. } | Method::DpmSolverPp3S => None,
+    }
+}
+
+/// Resolve one UniC corrector: node ratios against the buffered history
+/// (λ's newest-first in `lam_back`), linear-part scalars, and the full
+/// p-node system coefficients. Mirrors `unic_correct_with`'s
+/// `step_geometry` expression-for-expression.
+#[allow(clippy::too_many_arguments)]
+fn compile_corrector(
+    sched: &dyn NoiseSchedule,
+    t: f64,
+    lt: f64,
+    t0: f64,
+    l0: f64,
+    lam_back: &[f64],
+    p: usize,
+    pred: Prediction,
+    variant: CoeffVariant,
+) -> CorrectorStep {
+    let h = lt - l0;
+    let mut rks = Vec::with_capacity(p);
+    let mut inv_r = Vec::with_capacity(p.saturating_sub(1));
+    for m in 1..p {
+        let r = (lam_back[m - 1] - l0) / h;
+        rks.push(r);
+        inv_r.push(1.0 / r);
+    }
+    rks.push(1.0);
+    let (hh, x_coef, m0_coef, residual_scale) = linear_part_coefs(sched, pred, t0, t, h);
+    let coeffs = residual_coeffs(&rks, hh, variant);
+    CorrectorStep { x_coef, m0_coef, residual_scale, inv_r, coeffs }
+}
+
+/// Compile one singlestep NFE-budget group (k fine-grid intervals) into a
+/// [`SingleOp`], mirroring `dpm_solver_{2,3}_step` / `dpmpp_{2s,3s}_step` /
+/// `ddim_transfer` scalar-for-scalar.
+#[allow(clippy::too_many_arguments)]
+fn compile_single_group(
+    sched: &dyn NoiseSchedule,
+    method: &Method,
+    pred: Prediction,
+    t_s: f64,
+    t_t: f64,
+    ls: f64,
+    h: f64,
+    rs: &[f64],
+    k: usize,
+) -> SingleOp {
+    match (method, k) {
+        (_, 1) => {
+            let (x_coef, m_coef) = first_order_coefs(sched, pred, t_s, t_t, h);
+            SingleOp { t_s, lambda_s: ls, nodes: Vec::new(), x_coef, m_coef, d_coef: None }
+        }
+        (Method::DpmSolverSingle { .. }, 2) => {
+            let r1 = rs[0];
+            let s1 = sched.t_of_lambda(ls + r1 * h);
+            SingleOp {
+                t_s,
+                lambda_s: ls,
+                nodes: vec![SingleNode {
+                    t: s1,
+                    x_coef: sched.alpha(s1) / sched.alpha(t_s),
+                    m_coef: -sched.sigma(s1) * (r1 * h).exp_m1(),
+                    d_coef: None,
+                }],
+                x_coef: sched.alpha(t_t) / sched.alpha(t_s),
+                m_coef: -sched.sigma(t_t) * h.exp_m1(),
+                d_coef: Some(-sched.sigma(t_t) * h.exp_m1() / (2.0 * r1)),
+            }
+        }
+        (Method::DpmSolverSingle { .. }, _) => {
+            let (r1, r2) = (rs[0], rs[1]);
+            let s1 = sched.t_of_lambda(ls + r1 * h);
+            let s2 = sched.t_of_lambda(ls + r2 * h);
+            let phi_11 = (r1 * h).exp_m1();
+            let phi_12 = (r2 * h).exp_m1();
+            let phi_1 = h.exp_m1();
+            let phi_22 = r2 * h * phi(2, r2 * h);
+            let phi_2 = h * phi(2, h);
+            SingleOp {
+                t_s,
+                lambda_s: ls,
+                nodes: vec![
+                    SingleNode {
+                        t: s1,
+                        x_coef: sched.alpha(s1) / sched.alpha(t_s),
+                        m_coef: -sched.sigma(s1) * phi_11,
+                        d_coef: None,
+                    },
+                    SingleNode {
+                        t: s2,
+                        x_coef: sched.alpha(s2) / sched.alpha(t_s),
+                        m_coef: -sched.sigma(s2) * phi_12,
+                        d_coef: Some(-sched.sigma(s2) * (r2 / r1) * phi_22),
+                    },
+                ],
+                x_coef: sched.alpha(t_t) / sched.alpha(t_s),
+                m_coef: -sched.sigma(t_t) * phi_1,
+                d_coef: Some(-sched.sigma(t_t) * phi_2 / r2),
+            }
+        }
+        (Method::DpmSolverPp3S, 2) => {
+            let r1 = rs[0];
+            let s1 = sched.t_of_lambda(ls + r1 * h);
+            let phi_11 = (-r1 * h).exp_m1();
+            let phi_1 = (-h).exp_m1();
+            SingleOp {
+                t_s,
+                lambda_s: ls,
+                nodes: vec![SingleNode {
+                    t: s1,
+                    x_coef: sched.sigma(s1) / sched.sigma(t_s),
+                    m_coef: -sched.alpha(s1) * phi_11,
+                    d_coef: None,
+                }],
+                x_coef: sched.sigma(t_t) / sched.sigma(t_s),
+                m_coef: -sched.alpha(t_t) * phi_1,
+                d_coef: Some(-sched.alpha(t_t) * phi_1 / (2.0 * r1)),
+            }
+        }
+        (Method::DpmSolverPp3S, _) => {
+            let (r1, r2) = (rs[0], rs[1]);
+            let s1 = sched.t_of_lambda(ls + r1 * h);
+            let s2 = sched.t_of_lambda(ls + r2 * h);
+            let phi_11 = (-r1 * h).exp_m1();
+            let phi_12 = (-r2 * h).exp_m1();
+            let phi_1 = (-h).exp_m1();
+            let phi_22 = phi_12 / (r2 * h) + 1.0;
+            let phi_2 = phi_1 / h + 1.0;
+            SingleOp {
+                t_s,
+                lambda_s: ls,
+                nodes: vec![
+                    SingleNode {
+                        t: s1,
+                        x_coef: sched.sigma(s1) / sched.sigma(t_s),
+                        m_coef: -sched.alpha(s1) * phi_11,
+                        d_coef: None,
+                    },
+                    SingleNode {
+                        t: s2,
+                        x_coef: sched.sigma(s2) / sched.sigma(t_s),
+                        m_coef: -sched.alpha(s2) * phi_12,
+                        d_coef: Some(sched.alpha(s2) * (r2 / r1) * phi_22),
+                    },
+                ],
+                x_coef: sched.sigma(t_t) / sched.sigma(t_s),
+                m_coef: -sched.alpha(t_t) * phi_1,
+                d_coef: Some(sched.alpha(t_t) * phi_2 / r2),
+            }
+        }
+        (m, _) => unreachable!("multistep method {m:?} in singlestep compiler"),
+    }
+}
+
 impl SamplePlan {
-    /// Whether this configuration is plannable: the multistep UniP/UniPC
-    /// hot path. Everything else runs the reference loop.
+    /// Whether this configuration is plannable. Every method in the
+    /// registry compiles to a plan; only `exact_warmup` runs (the
+    /// order-of-convergence experiment mode, which sub-integrates with RK4)
+    /// keep using the reference loop.
     pub fn supports(opts: &SampleOptions) -> bool {
-        matches!(opts.method, Method::UniP { .. }) && !opts.exact_warmup && opts.steps >= 1
+        opts.steps >= 1 && !opts.exact_warmup
     }
 
-    /// Resolve the whole run: grid, warm-up order ramp, node ratios,
-    /// linear-part scalars, and predictor/corrector coefficients for every
-    /// step. Returns `None` for configurations plans don't cover.
+    /// Resolve the whole run: grid, warm-up order ramp (or singlestep
+    /// NFE-budget group split), node ratios, linear-part scalars, and
+    /// per-method combination coefficients for every step. Returns `None`
+    /// for configurations plans don't cover (see [`SamplePlan::supports`]).
     pub fn build(sched: &dyn NoiseSchedule, opts: &SampleOptions) -> Option<SamplePlan> {
         if !Self::supports(opts) {
             return None;
         }
-        let (order, variant, pred, schedule) = match &opts.method {
-            Method::UniP { order, variant, pred, schedule } => {
-                (*order, *variant, *pred, schedule.as_deref())
-            }
-            _ => return None,
+        if opts.method.is_singlestep() {
+            Some(Self::build_singlestep(sched, opts))
+        } else {
+            Self::build_multistep(sched, opts)
+        }
+    }
+
+    fn build_multistep(sched: &dyn NoiseSchedule, opts: &SampleOptions) -> Option<SamplePlan> {
+        let compiler = multistep_compiler(&opts.method)?;
+        let pred = opts.method.prediction();
+        let schedule = match &opts.method {
+            Method::UniP { schedule, .. } => schedule.as_deref(),
+            _ => None,
         };
         let m_steps = opts.steps;
         let ts = timesteps(sched, opts.spacing, opts.t_start, opts.t_end, m_steps);
@@ -302,74 +817,142 @@ impl SamplePlan {
         let cap = opts
             .method
             .history_needed()
-            .max(opts.unic.map(|_| order).unwrap_or(0))
+            .max(opts.unic.map(|_| opts.method.order()).unwrap_or(0))
             .max(1);
 
         let mut steps = Vec::with_capacity(m_steps);
         let mut max_order = 1usize;
+        let mut ws_rows = 1usize;
         for i in 1..=m_steps {
             let hist_len = i.min(cap);
-            let p = effective_order(order, schedule, i, hist_len);
+            let p = effective_order(opts.method.order(), schedule, i, hist_len);
             max_order = max_order.max(p);
 
-            let (t0, t) = (ts[i - 1], ts[i]);
-            let (l0, lt) = (lams[i - 1], lams[i]);
-            let h = lt - l0;
-            debug_assert!(h > 0.0, "sampling must increase λ");
+            let cx = StepCx { sched, ts: &ts, lams: &lams, i, order: p, hist_len, pred };
+            let op = compiler.compile(&cx);
 
-            let mut rks = Vec::with_capacity(p);
-            let mut inv_r = Vec::with_capacity(p - 1);
-            for m in 1..p {
-                let r = (lams[i - 1 - m] - l0) / h;
-                rks.push(r);
-                inv_r.push(1.0 / r);
-            }
-            rks.push(1.0);
-
-            let (hh, a_ratio, m0_coef, residual_scale) = match pred {
-                Prediction::Noise => {
-                    let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
-                    (h, a_t / sched.alpha(t0), -s_t * h.exp_m1(), -s_t)
+            let corrector = match (&opts.unic, i == m_steps) {
+                (Some(u), false) => {
+                    let lam_back: Vec<f64> = (1..p).map(|m| lams[i - 1 - m]).collect();
+                    Some(compile_corrector(
+                        sched,
+                        ts[i],
+                        lams[i],
+                        ts[i - 1],
+                        lams[i - 1],
+                        &lam_back,
+                        p,
+                        pred,
+                        u.variant,
+                    ))
                 }
-                Prediction::Data => {
-                    let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
-                    (-h, s_t / sched.sigma(t0), a_t * (-(-h).exp_m1()), -a_t)
-                }
+                _ => None,
             };
 
-            let pred_coeffs = if p >= 2 {
-                residual_coeffs(&rks[..p - 1], hh, variant)
-            } else {
-                Vec::new()
-            };
-            let corr_coeffs = match (&opts.unic, i == m_steps) {
-                (Some(u), false) => residual_coeffs(&rks, hh, u.variant),
-                _ => Vec::new(),
-            };
-
-            steps.push(PlannedStep {
-                t,
-                lambda: lt,
-                order: p,
-                inv_r,
-                a_ratio,
-                m0_coef,
-                residual_scale,
-                pred_coeffs,
-                corr_coeffs,
-            });
+            ws_rows = ws_rows
+                .max(op_rows(&op))
+                .max(corrector.as_ref().map(|c| c.coeffs.len()).unwrap_or(0));
+            steps.push(PlannedStep { t: ts[i], lambda: lams[i], order: p, op, corrector });
         }
 
         Some(SamplePlan {
             key: plan_key(sched, opts),
             prediction: pred,
             oracle: opts.unic.map(|u| u.oracle).unwrap_or(false),
+            singlestep: false,
             history_cap: cap,
             max_order,
+            ws_rows,
             t0: ts[0],
             lambda0: lams[0],
             steps,
         })
+    }
+
+    /// Compile a singlestep method: split the NFE budget into groups
+    /// (mirroring `singlestep_orders`), resolve every group's interior-node
+    /// scalars, and simulate the group-boundary history timeline so UniC
+    /// correctors see exactly the λ's the reference loop's buffer holds.
+    fn build_singlestep(sched: &dyn NoiseSchedule, opts: &SampleOptions) -> SamplePlan {
+        let pred = opts.method.prediction();
+        let nfe = opts.steps;
+        let max = opts.method.order();
+        let orders = singlestep_orders(max, nfe);
+        let fine = timesteps(sched, opts.spacing, opts.t_start, opts.t_end, nfe);
+        let flams: Vec<f64> = fine.iter().map(|&t| sched.lambda(t)).collect();
+        let cap = max + 1; // group-boundary outputs for UniC
+
+        let mut steps = Vec::with_capacity(orders.len());
+        // Simulated group-boundary history: (t, λ) pairs, oldest first,
+        // evicted past `cap` exactly like the reference `History`.
+        let mut bounds: VecDeque<(f64, f64)> = VecDeque::new();
+        let mut max_order = 1usize;
+        let mut ws_rows = 1usize;
+        let mut idx = 0usize;
+        let n_groups = orders.len();
+        for (g, &k) in orders.iter().enumerate() {
+            let (t_s, t_t) = (fine[idx], fine[idx + k]);
+            let (ls, lt) = (flams[idx], flams[idx + k]);
+            let last = g + 1 == n_groups;
+            if bounds.back().map_or(true, |b| b.0 > t_s) {
+                bounds.push_back((t_s, ls));
+                while bounds.len() > cap {
+                    bounds.pop_front();
+                }
+            }
+            let h = lt - ls;
+            let rs: Vec<f64> = (1..k).map(|j| (flams[idx + j] - ls) / h).collect();
+            let op = StepOp::Single(compile_single_group(
+                sched,
+                &opts.method,
+                pred,
+                t_s,
+                t_t,
+                ls,
+                h,
+                &rs,
+                k,
+            ));
+
+            let corrector = match (&opts.unic, last) {
+                (Some(u), false) => {
+                    let p = k.min(bounds.len());
+                    let lam_back: Vec<f64> =
+                        (1..p).map(|m| bounds[bounds.len() - 1 - m].1).collect();
+                    Some(compile_corrector(
+                        sched, t_t, lt, t_s, ls, &lam_back, p, pred, u.variant,
+                    ))
+                }
+                _ => None,
+            };
+
+            max_order = max_order.max(k);
+            ws_rows = ws_rows
+                .max(op_rows(&op))
+                .max(corrector.as_ref().map(|c| c.coeffs.len()).unwrap_or(0));
+            steps.push(PlannedStep { t: t_t, lambda: lt, order: k, op, corrector });
+
+            if !last {
+                bounds.push_back((t_t, lt));
+                while bounds.len() > cap {
+                    bounds.pop_front();
+                }
+            }
+            idx += k;
+        }
+
+        SamplePlan {
+            key: plan_key(sched, opts),
+            prediction: pred,
+            oracle: opts.unic.map(|u| u.oracle).unwrap_or(false),
+            singlestep: true,
+            history_cap: cap,
+            max_order,
+            ws_rows,
+            t0: fine[0],
+            lambda0: flams[0],
+            steps,
+        }
     }
 
     /// The cache key this plan was built under (equals [`plan_key`] of the
@@ -378,7 +961,7 @@ impl SamplePlan {
         &self.key
     }
 
-    /// Number of solver steps.
+    /// Number of plan steps (solver steps, or singlestep groups).
     pub fn len(&self) -> usize {
         self.steps.len()
     }
@@ -387,9 +970,25 @@ impl SamplePlan {
         self.steps.is_empty()
     }
 
-    /// Largest effective order across the run (sizes the workspace).
+    /// Largest effective order across the run.
     pub fn max_order(&self) -> usize {
         self.max_order
+    }
+
+    /// Scratch rows a [`StepWorkspace`] needs to execute this plan.
+    pub fn ws_rows(&self) -> usize {
+        self.ws_rows
+    }
+
+    /// History-buffer capacity the executor allocates (mirrors the
+    /// reference loop's sizing exactly).
+    pub fn history_cap(&self) -> usize {
+        self.history_cap
+    }
+
+    /// Whether this plan drives the singlestep (NFE-budget group) executor.
+    pub fn is_singlestep(&self) -> bool {
+        self.singlestep
     }
 
     /// The resolved per-step schedule (read-only; benches and tests).
@@ -399,33 +998,92 @@ impl SamplePlan {
 
     /// Whether the corrector applies at step `k` (0-based).
     pub fn has_corrector(&self, k: usize) -> bool {
-        !self.steps[k].corr_coeffs.is_empty()
+        self.steps[k].corrector.is_some()
     }
 
-    /// Stage 1 of step `k`: fill the workspace with the shared linear part
-    /// x^{(1)}, the D_m/r_m rows, and the predictor output (`ws.pred`).
-    /// Zero heap allocations.
+    /// Stage 1 of multistep step `k`: compute the base method's predicted
+    /// state into `ws.pred` from the buffered history. Zero heap
+    /// allocations. Panics for singlestep plans, whose groups evaluate the
+    /// model at interior nodes and execute through
+    /// [`sample_with_plan`] directly.
     pub fn predict_into(&self, k: usize, hist: &History, x: &Tensor, ws: &mut StepWorkspace) {
         let sp = &self.steps[k];
-        let m0 = hist.last_m();
-        ws.lin.assign_lincomb(sp.a_ratio, x, sp.m0_coef, m0);
-        for m in 1..sp.order {
-            ws.d[m - 1].assign_sub_scaled(hist.m_back(m), m0, sp.inv_r[m - 1]);
-        }
-        if sp.order >= 2 {
-            weighted_sum_into(&mut ws.res, &sp.pred_coeffs, &ws.d[..sp.order - 1]);
-            ws.pred.assign_lincomb(1.0, &ws.lin, sp.residual_scale, &ws.res);
-        } else {
-            // p = 1 degenerates to DDIM: the linear part is the step.
-            ws.pred.copy_from(&ws.lin);
+        match &sp.op {
+            StepOp::FirstOrder { x_coef, m0_coef } => {
+                ws.pred.assign_lincomb(*x_coef, x, *m0_coef, hist.last_m());
+            }
+            StepOp::UniP { x_coef, m0_coef, residual_scale, inv_r, coeffs } => {
+                let m0 = hist.last_m();
+                ws.lin.assign_lincomb(*x_coef, x, *m0_coef, m0);
+                let p = inv_r.len() + 1;
+                for m in 1..p {
+                    ws.d[m - 1].assign_sub_scaled(hist.m_back(m), m0, inv_r[m - 1]);
+                }
+                weighted_sum_into(&mut ws.res, coeffs, &ws.d[..p - 1]);
+                ws.pred.assign_lincomb(1.0, &ws.lin, *residual_scale, &ws.res);
+            }
+            StepOp::Dpmpp2M { x_coef, m0_coef, inv_r0, d1_coef } => {
+                let m0 = hist.last_m();
+                ws.d[0].assign_sub_scaled(m0, hist.m_back(1), *inv_r0);
+                ws.pred.assign_lincomb(*x_coef, x, *m0_coef, m0);
+                ws.pred.axpy(*d1_coef, &ws.d[0]);
+            }
+            StepOp::Dpmpp3M {
+                x_coef,
+                m0_coef,
+                inv_r0,
+                inv_r1,
+                mix,
+                inv_r01,
+                d1_coef,
+                d2_coef,
+            } => {
+                let m0 = hist.last_m();
+                ws.d[0].assign_sub_scaled(m0, hist.m_back(1), *inv_r0); // D1_0
+                ws.d[1].assign_sub_scaled(hist.m_back(1), hist.m_back(2), *inv_r1); // D1_1
+                let (head, tail) = ws.d.split_at_mut(2);
+                tail[0].assign_sub(&head[0], &head[1]); // diff = D1_0 − D1_1
+                let (diff, rest) = tail.split_at_mut(1);
+                rest[0].copy_from(&head[0]);
+                rest[0].axpy(*mix, &diff[0]); // D1
+                rest[1].assign_scaled(&diff[0], *inv_r01); // D2
+                ws.pred.assign_lincomb(*x_coef, x, *m0_coef, m0);
+                ws.pred.axpy(*d1_coef, &rest[0]);
+                ws.pred.axpy(*d2_coef, &rest[1]);
+            }
+            StepOp::Plms { x_coef, comb_coef, weights } => {
+                let k_ = weights.len();
+                debug_assert!(k_ <= MAX_COMB);
+                let mut refs: [&Tensor; MAX_COMB] = [hist.last_m(); MAX_COMB];
+                for (m, slot) in refs.iter_mut().enumerate().take(k_).skip(1) {
+                    *slot = hist.m_back(m);
+                }
+                weighted_sum_into(&mut ws.res, weights, &refs[..k_]);
+                ws.pred.assign_lincomb(*x_coef, x, *comb_coef, &ws.res);
+            }
+            StepOp::Deis { x_coef, weights } => {
+                let q = weights.len();
+                debug_assert!(q <= MAX_COMB);
+                let mut refs: [&Tensor; MAX_COMB] = [hist.last_m(); MAX_COMB];
+                for (m, slot) in refs.iter_mut().enumerate().take(q).skip(1) {
+                    *slot = hist.m_back(m);
+                }
+                weighted_sum_into(&mut ws.res, weights, &refs[..q]);
+                ws.pred.assign_scaled(x, *x_coef);
+                ws.pred.axpy(1.0, &ws.res);
+            }
+            StepOp::Single(_) => {
+                panic!("singlestep groups evaluate interior nodes; use sample_with_plan")
+            }
         }
     }
 
     /// Stage 2 of step `k`: given the model output `m_t` at the predicted
     /// point, write the UniC-corrected state into `x`. Returns `false`
     /// (leaving `x` untouched) when the plan has no corrector at this step.
-    /// Zero heap allocations. Requires a prior [`SamplePlan::predict_into`]
-    /// for the same step (reuses the workspace's linear part and D rows).
+    /// Zero heap allocations. Self-contained: recomputes the corrector's
+    /// linear part and D rows from the history, so it composes with any
+    /// base op (UniC-after-anything, §3.1).
     pub fn correct_into(
         &self,
         k: usize,
@@ -435,21 +1093,137 @@ impl SamplePlan {
         x: &mut Tensor,
     ) -> bool {
         let sp = &self.steps[k];
-        if sp.corr_coeffs.is_empty() {
-            return false;
+        let c = match &sp.corrector {
+            Some(c) => c,
+            None => return false,
+        };
+        let p = c.coeffs.len();
+        let m0 = hist.last_m();
+        ws.lin.assign_lincomb(c.x_coef, x, c.m0_coef, m0);
+        for m in 1..p {
+            ws.d[m - 1].assign_sub_scaled(hist.m_back(m), m0, c.inv_r[m - 1]);
         }
         // Full p-node system with r_p = 1; D_p / r_p = m_t − m₀.
-        ws.d[sp.order - 1].assign_sub(m_t, hist.last_m());
-        weighted_sum_into(&mut ws.res, &sp.corr_coeffs, &ws.d[..sp.order]);
-        x.assign_lincomb(1.0, &ws.lin, sp.residual_scale, &ws.res);
+        ws.d[p - 1].assign_sub(m_t, m0);
+        weighted_sum_into(&mut ws.res, &c.coeffs, &ws.d[..p]);
+        x.assign_lincomb(1.0, &ws.lin, c.residual_scale, &ws.res);
         true
     }
 }
 
+/// Upper bound on history-combination arity (PLMS window 4, DEIS order ≤ 4,
+/// UniP order ≤ 6 via `Method::parse`): sizes the stack-allocated ref array
+/// the executor uses to combine history outputs without heap traffic.
+const MAX_COMB: usize = 8;
+
+/// Drive a full run from the plan, mutating `x` in place. Shared by the
+/// solo and batched entry points so their step arithmetic cannot drift.
+fn execute_plan(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    opts: &SampleOptions,
+    plan: &SamplePlan,
+    x: &mut Tensor,
+    ws: &mut StepWorkspace,
+    mut traj: Option<&mut Vec<(f64, Tensor)>>,
+) -> usize {
+    let ev = Evaluator::new(model, sched, plan.prediction, opts.thresholding);
+    if plan.singlestep {
+        return execute_singlestep_plan(&ev, plan, x, ws, traj);
+    }
+    let mut hist = History::new(plan.history_cap);
+    hist.push(plan.t0, plan.lambda0, ev.eval(x, plan.t0));
+
+    let n = plan.steps.len();
+    for k in 0..n {
+        let sp = &plan.steps[k];
+        plan.predict_into(k, &hist, x, ws);
+        if sp.corrector.is_some() {
+            let m_t = ev.eval(&ws.pred, sp.t);
+            plan.correct_into(k, &hist, &m_t, ws, x);
+            let m_buf = if plan.oracle { ev.eval(x, sp.t) } else { m_t };
+            hist.push(sp.t, sp.lambda, m_buf);
+        } else {
+            if k + 1 < n {
+                let m_next = ev.eval(&ws.pred, sp.t);
+                hist.push(sp.t, sp.lambda, m_next);
+            }
+            std::mem::swap(x, &mut ws.pred);
+        }
+        if let Some(tr) = &mut traj {
+            tr.push((sp.t, x.clone()));
+        }
+    }
+    ev.nfe()
+}
+
+/// The singlestep driver: NFE-budget groups with interior model
+/// evaluations, reusing each group's boundary output exactly like the
+/// reference loop (`sample_unplanned`'s singlestep branch).
+fn execute_singlestep_plan(
+    ev: &Evaluator,
+    plan: &SamplePlan,
+    x: &mut Tensor,
+    ws: &mut StepWorkspace,
+    mut traj: Option<&mut Vec<(f64, Tensor)>>,
+) -> usize {
+    let mut hist = History::new(plan.history_cap);
+    let mut m_s: Option<Tensor> = None;
+    let n = plan.steps.len();
+    for k in 0..n {
+        let sp = &plan.steps[k];
+        let op = match &sp.op {
+            StepOp::Single(op) => op,
+            other => unreachable!("non-singlestep op {other:?} in singlestep plan"),
+        };
+        let m_start = match m_s.take() {
+            Some(m) => m,
+            None => ev.eval(x, op.t_s),
+        };
+        if hist.is_empty() || hist.last().t > op.t_s {
+            hist.push(op.t_s, op.lambda_s, m_start.clone());
+        }
+
+        // Interior nodes, then the group's final combination into ws.pred.
+        for (j, node) in op.nodes.iter().enumerate() {
+            ws.lin.assign_lincomb(node.x_coef, x, node.m_coef, &m_start);
+            if let Some(c) = node.d_coef {
+                ws.lin.axpy(c, &ws.d[j - 1]);
+            }
+            let m_j = ev.eval(&ws.lin, node.t);
+            ws.d[j].assign_sub(&m_j, &m_start);
+        }
+        ws.pred.assign_lincomb(op.x_coef, x, op.m_coef, &m_start);
+        if let Some(c) = op.d_coef {
+            ws.pred.axpy(c, &ws.d[op.nodes.len() - 1]);
+        }
+
+        let last = k + 1 == n;
+        if sp.corrector.is_some() {
+            let m_t = ev.eval(&ws.pred, sp.t);
+            plan.correct_into(k, &hist, &m_t, ws, x);
+            let m_next = if plan.oracle { ev.eval(x, sp.t) } else { m_t };
+            hist.push(sp.t, sp.lambda, m_next.clone());
+            m_s = Some(m_next);
+        } else {
+            if !last {
+                let m_next = ev.eval(&ws.pred, sp.t);
+                hist.push(sp.t, sp.lambda, m_next.clone());
+                m_s = Some(m_next);
+            }
+            std::mem::swap(x, &mut ws.pred);
+        }
+        if let Some(tr) = &mut traj {
+            tr.push((sp.t, x.clone()));
+        }
+    }
+    ev.nfe()
+}
+
 /// Run the sampler from a precomputed plan. Bit-identical to
-/// [`super::runner::sample_unplanned`] on the same options, but with all
-/// per-step coefficient math already resolved and zero solver-side heap
-/// allocations in steady state.
+/// [`super::runner::sample_unplanned`] on the same options — for **every**
+/// method in the registry — but with all per-step coefficient math already
+/// resolved and zero solver-side heap allocations in steady state.
 pub fn sample_with_plan(
     model: &dyn Model,
     sched: &dyn NoiseSchedule,
@@ -462,36 +1236,11 @@ pub fn sample_with_plan(
         plan_key(sched, opts),
         "plan built for a different schedule/config"
     );
-    let ev = Evaluator::new(model, sched, plan.prediction, opts.thresholding);
-    let mut traj = opts.capture_trajectory.then(Vec::new);
-
     let mut x = x_init.clone();
-    let mut hist = History::new(plan.history_cap);
-    hist.push(plan.t0, plan.lambda0, ev.eval(&x, plan.t0));
-    let mut ws = StepWorkspace::new(x.shape(), plan.max_order);
-
-    let n = plan.steps.len();
-    for k in 0..n {
-        let sp = &plan.steps[k];
-        plan.predict_into(k, &hist, &x, &mut ws);
-        if plan.has_corrector(k) {
-            let m_t = ev.eval(&ws.pred, sp.t);
-            plan.correct_into(k, &hist, &m_t, &mut ws, &mut x);
-            let m_buf = if plan.oracle { ev.eval(&x, sp.t) } else { m_t };
-            hist.push(sp.t, sp.lambda, m_buf);
-        } else {
-            if k + 1 < n {
-                let m_next = ev.eval(&ws.pred, sp.t);
-                hist.push(sp.t, sp.lambda, m_next);
-            }
-            std::mem::swap(&mut x, &mut ws.pred);
-        }
-        if let Some(tr) = traj.as_mut() {
-            tr.push((sp.t, x.clone()));
-        }
-    }
-
-    SampleResult { x, nfe: ev.nfe(), trajectory: traj }
+    let mut ws = StepWorkspace::new(x.shape(), plan.ws_rows);
+    let mut traj = opts.capture_trajectory.then(Vec::new);
+    let nfe = execute_plan(model, sched, opts, plan, &mut x, &mut ws, traj.as_mut());
+    SampleResult { x, nfe, trajectory: traj }
 }
 
 /// Run several same-configuration requests in lockstep from one shared
@@ -504,10 +1253,10 @@ pub fn sample_with_plan(
 /// members share the plan's per-step scalars, each member's output is
 /// **bit-identical** to a solo [`sample_with_plan`] run from the same
 /// initial state whenever the model also evaluates rows independently
-/// (true for the analytic backends; asserted by `tests/batch_equiv.rs`).
-/// Per-member `nfe` equals the solo run's count: batching changes how many
-/// rows each evaluation carries, not how many evaluations the schedule
-/// performs.
+/// (true for the analytic backends; asserted by `tests/batch_equiv.rs`
+/// across the whole method zoo). Per-member `nfe` equals the solo run's
+/// count: batching changes how many rows each evaluation carries, not how
+/// many evaluations the schedule performs.
 ///
 /// `bw` is the caller's pooled workspace: the coordinator keeps one per
 /// worker so steady-state runs start without allocating. Trajectory capture
@@ -542,36 +1291,15 @@ pub fn sample_batch_with_plan(
         rows += t.shape()[0];
     }
 
-    bw.ensure(&[rows, d], plan.max_order());
+    bw.ensure(&[rows, d], plan.ws_rows);
     let mut at = 0;
     for t in x_inits {
         bw.x.copy_rows_from(at, t);
         at += t.shape()[0];
     }
 
-    let ev = Evaluator::new(model, sched, plan.prediction, opts.thresholding);
-    let mut hist = History::new(plan.history_cap);
-    hist.push(plan.t0, plan.lambda0, ev.eval(&bw.x, plan.t0));
+    let nfe = execute_plan(model, sched, opts, plan, &mut bw.x, &mut bw.ws, None);
 
-    let n = plan.steps.len();
-    for k in 0..n {
-        let sp = &plan.steps[k];
-        plan.predict_into(k, &hist, &bw.x, &mut bw.ws);
-        if plan.has_corrector(k) {
-            let m_t = ev.eval(&bw.ws.pred, sp.t);
-            plan.correct_into(k, &hist, &m_t, &mut bw.ws, &mut bw.x);
-            let m_buf = if plan.oracle { ev.eval(&bw.x, sp.t) } else { m_t };
-            hist.push(sp.t, sp.lambda, m_buf);
-        } else {
-            if k + 1 < n {
-                let m_next = ev.eval(&bw.ws.pred, sp.t);
-                hist.push(sp.t, sp.lambda, m_next);
-            }
-            std::mem::swap(&mut bw.x, &mut bw.ws.pred);
-        }
-    }
-
-    let nfe = ev.nfe();
     let mut out = Vec::with_capacity(x_inits.len());
     let mut at = 0;
     for t in x_inits {
@@ -645,10 +1373,52 @@ mod tests {
     }
 
     #[test]
+    fn baseline_methods_bit_identical_to_reference() {
+        // The tentpole claim at unit level: every non-UniP family — DDIM,
+        // DPM-Solver++ multistep, PNDM, DEIS, and both singlestep solvers —
+        // compiles to a plan whose execution is bit-identical to its
+        // hand-rolled reference loop, with and without UniC on top.
+        let sched = VpLinear::default();
+        let model = toy_model();
+        let x0 = Rng::seed_from(23).normal_tensor(&[3, 3]);
+        let methods = [
+            Method::Ddim { pred: Prediction::Noise },
+            Method::Ddim { pred: Prediction::Data },
+            Method::DpmSolverPp { order: 1 },
+            Method::DpmSolverPp { order: 2 },
+            Method::DpmSolverPp { order: 3 },
+            Method::Plms,
+            Method::Deis { order: 1 },
+            Method::Deis { order: 2 },
+            Method::Deis { order: 3 },
+            Method::DpmSolverSingle { order: 2 },
+            Method::DpmSolverSingle { order: 3 },
+            Method::DpmSolverPp3S,
+        ];
+        for method in methods {
+            for with_unic in [false, true] {
+                for steps in [1usize, 2, 5, 9] {
+                    let mut opts = SampleOptions::new(method.clone(), steps);
+                    if with_unic {
+                        opts.unic = Some(UniCOptions::default());
+                    }
+                    let a = sample_unplanned(&model, &sched, &x0, &opts);
+                    let plan = SamplePlan::build(&sched, &opts)
+                        .unwrap_or_else(|| panic!("{} must be plannable", opts.id()));
+                    let b = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+                    let tag = format!("{} steps {steps}", opts.id());
+                    assert_eq!(a.nfe, b.nfe, "nfe: {tag}");
+                    assert_eq!(bits(&a.x), bits(&b.x), "state bits: {tag}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn gmm_model_bit_equivalence() {
-        // The ISSUE's acceptance setting: the analytic GMM model, every
-        // variant, through the public `sample` entry point (which routes
-        // plannable configs through the plan).
+        // The analytic GMM model, every variant, through the public
+        // `sample` entry point (which routes plannable configs through the
+        // plan).
         let gm = crate::analytic::datasets::dataset(
             crate::analytic::datasets::DatasetSpec::Cifar10Like,
         );
@@ -700,12 +1470,18 @@ mod tests {
             6,
         );
 
-        for opts in [oracle_opts, sched_opts] {
+        // Oracle UniC after a singlestep solver exercises the simulated
+        // boundary-history timeline.
+        let mut single_oracle = SampleOptions::new(Method::DpmSolverSingle { order: 3 }, 7);
+        single_oracle.unic =
+            Some(UniCOptions { variant: CoeffVariant::Bh(BFunction::Bh2), oracle: true });
+
+        for opts in [oracle_opts, sched_opts, single_oracle] {
             let a = sample_unplanned(&model, &sched, &x0, &opts);
             let plan = SamplePlan::build(&sched, &opts).expect("plannable");
             let b = sample_with_plan(&model, &sched, &x0, &opts, &plan);
-            assert_eq!(a.nfe, b.nfe);
-            assert_eq!(bits(&a.x), bits(&b.x));
+            assert_eq!(a.nfe, b.nfe, "{}", opts.id());
+            assert_eq!(bits(&a.x), bits(&b.x), "{}", opts.id());
         }
     }
 
@@ -714,27 +1490,38 @@ mod tests {
         let sched = VpLinear::default();
         let model = toy_model();
         let x0 = Rng::seed_from(9).normal_tensor(&[2, 3]);
-        let mut opts =
-            SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 5);
-        opts.capture_trajectory = true;
-        let a = sample_unplanned(&model, &sched, &x0, &opts);
-        let plan = SamplePlan::build(&sched, &opts).unwrap();
-        let b = sample_with_plan(&model, &sched, &x0, &opts, &plan);
-        let (ta, tb) = (a.trajectory.unwrap(), b.trajectory.unwrap());
-        assert_eq!(ta.len(), tb.len());
-        for ((t1, x1), (t2, x2)) in ta.iter().zip(&tb) {
-            assert_eq!(t1, t2);
-            assert_eq!(bits(x1), bits(x2));
+        for method in [
+            Method::unip(3, BFunction::Bh2, Prediction::Noise),
+            Method::DpmSolverPp { order: 2 },
+            Method::DpmSolverPp3S,
+        ] {
+            let mut opts = SampleOptions::new(method, 5);
+            opts.capture_trajectory = true;
+            let a = sample_unplanned(&model, &sched, &x0, &opts);
+            let plan = SamplePlan::build(&sched, &opts).unwrap();
+            let b = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+            let (ta, tb) = (a.trajectory.unwrap(), b.trajectory.unwrap());
+            assert_eq!(ta.len(), tb.len());
+            for ((t1, x1), (t2, x2)) in ta.iter().zip(&tb) {
+                assert_eq!(t1, t2);
+                assert_eq!(bits(x1), bits(x2));
+            }
         }
     }
 
     #[test]
-    fn unsupported_configs_do_not_build() {
+    fn only_exact_warmup_is_unplannable() {
         let sched = VpLinear::default();
-        let ddim = SampleOptions::new(Method::Ddim { pred: Prediction::Noise }, 5);
-        assert!(SamplePlan::build(&sched, &ddim).is_none());
-        let single = SampleOptions::new(Method::DpmSolverSingle { order: 3 }, 6);
-        assert!(SamplePlan::build(&sched, &single).is_none());
+        // Everything in the zoo builds …
+        for method in Method::zoo() {
+            let opts = SampleOptions::new(method.clone(), 6);
+            assert!(
+                SamplePlan::build(&sched, &opts).is_some(),
+                "{} must be plannable",
+                method.id()
+            );
+        }
+        // … except the exact-warmup experiment mode.
         let mut warm = SampleOptions::unipc(3, BFunction::Bh2, Prediction::Noise, 8);
         warm.exact_warmup = true;
         assert!(SamplePlan::build(&sched, &warm).is_none());
@@ -762,6 +1549,9 @@ mod tests {
         // Different schedules never share a key.
         let cosine = crate::sched::VpCosine::default();
         assert_ne!(key(&base), plan_key(&cosine, &base));
+        // Different methods never share a key.
+        let dpmpp = SampleOptions::new(Method::DpmSolverPp { order: 2 }, 8);
+        assert_ne!(key(&base), key(&dpmpp));
     }
 
     #[test]
@@ -771,17 +1561,46 @@ mod tests {
         let plan = SamplePlan::build(&sched, &opts).unwrap();
         assert_eq!(plan.len(), 6);
         assert_eq!(plan.max_order(), 3);
+        assert!(!plan.is_singlestep());
         let orders: Vec<usize> = plan.steps().iter().map(|s| s.order).collect();
         assert_eq!(orders, vec![1, 2, 3, 3, 3, 3], "warm-up ramp then steady state");
         for (k, sp) in plan.steps().iter().enumerate() {
-            assert_eq!(sp.pred_coeffs.len(), sp.order - 1);
-            assert_eq!(sp.inv_r.len(), sp.order - 1);
+            match &sp.op {
+                StepOp::FirstOrder { .. } => assert_eq!(sp.order, 1),
+                StepOp::UniP { inv_r, coeffs, .. } => {
+                    assert_eq!(coeffs.len(), sp.order - 1);
+                    assert_eq!(inv_r.len(), sp.order - 1);
+                }
+                other => panic!("unexpected op {other:?} in a UniPC plan"),
+            }
             if k + 1 < plan.len() {
-                assert_eq!(sp.corr_coeffs.len(), sp.order);
+                let c = sp.corrector.as_ref().expect("corrector before final step");
+                assert_eq!(c.coeffs.len(), sp.order);
                 assert!(plan.has_corrector(k));
             } else {
                 assert!(!plan.has_corrector(k), "corrector skipped after final step");
             }
         }
+    }
+
+    #[test]
+    fn singlestep_plan_mirrors_budget_split() {
+        let sched = VpLinear::default();
+        let opts = SampleOptions::new(Method::DpmSolverSingle { order: 3 }, 10);
+        let plan = SamplePlan::build(&sched, &opts).unwrap();
+        assert!(plan.is_singlestep());
+        // 10 = 3+3+3+1 per the official split.
+        let orders: Vec<usize> = plan.steps().iter().map(|s| s.order).collect();
+        assert_eq!(orders, vec![3, 3, 3, 1]);
+        let evals: usize = plan
+            .steps()
+            .iter()
+            .map(|s| match &s.op {
+                StepOp::Single(op) => op.nodes.len(),
+                _ => panic!("singlestep plan must hold Single ops"),
+            })
+            .sum();
+        // Interior evals + one boundary eval per group boundary = NFE.
+        assert_eq!(evals, 10 - orders.len());
     }
 }

@@ -20,6 +20,13 @@ const AB: [&[f64]; 4] = [
     &[55.0 / 24.0, -59.0 / 24.0, 37.0 / 24.0, -9.0 / 24.0],
 ];
 
+/// The Adams–Bashforth combination weights [`plms_step`] applies at window
+/// size `k ∈ 1..=4` (newest-first). Exposed so the plan compiler bakes the
+/// exact same table into [`crate::solver::plan::SamplePlan`]s.
+pub fn ab_weights(k: usize) -> &'static [f64] {
+    AB[k - 1]
+}
+
 /// One PLMS step t_prev → t with the effective order `min(4, hist.len())`.
 pub fn plms_step(
     ev: &Evaluator,

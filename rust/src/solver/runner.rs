@@ -15,7 +15,7 @@
 use super::ddim::{ddim_step, ddim_transfer};
 use super::deis::deis_step;
 use super::dpm_solver::{dpm_solver_2_step, dpm_solver_3_step};
-use super::dpm_solverpp::{dpmpp_2m_step, dpmpp_3m_step, dpmpp_3s_step};
+use super::dpm_solverpp::{dpmpp_2m_step, dpmpp_2s_step, dpmpp_3m_step, dpmpp_3s_step};
 use super::history::History;
 use super::method::{singlestep_orders, Method};
 use super::plan::{sample_batch_with_plan, sample_with_plan, BatchWorkspace, SamplePlan};
@@ -122,13 +122,15 @@ pub struct SampleResult {
 
 /// Run the configured sampler from `x_init` (at `t_start`) down to `t_end`.
 ///
-/// Plannable configurations (the multistep UniP/UniPC family — see
-/// [`SamplePlan::supports`]) execute from a [`SamplePlan`]: all per-step
-/// coefficient math is resolved up front and the steady-state step is pure
-/// in-place tensor arithmetic. The result is bit-identical to
-/// [`sample_unplanned`]. Callers issuing many identically-configured runs
-/// (the coordinator) should build/cache the plan themselves and call
-/// [`sample_with_plan`] directly to amortize even the one-time build.
+/// Plannable configurations — **every method in the registry**; only
+/// `exact_warmup` runs are excluded (see [`SamplePlan::supports`]) —
+/// execute from a [`SamplePlan`]: all per-step coefficient math is resolved
+/// up front and the steady-state step is pure in-place tensor arithmetic.
+/// The result is bit-identical to [`sample_unplanned`] (proven per method ×
+/// parametrization × spacing by `tests/solver_conformance.rs`). Callers
+/// issuing many identically-configured runs (the coordinator) should
+/// build/cache the plan themselves and call [`sample_with_plan`] directly
+/// to amortize even the one-time build.
 pub fn sample(
     model: &dyn Model,
     sched: &dyn NoiseSchedule,
@@ -147,12 +149,12 @@ pub fn sample(
 /// [`sample`] once per entry of `x_inits` whenever the model evaluates
 /// batch rows independently (true for the analytic backends).
 ///
-/// Configurations plans don't cover (singlestep methods, non-UniP
-/// baselines, `exact_warmup`) and trajectory-capture runs — which are
-/// inherently per-request — fall back to independent sequential runs.
-/// Callers issuing many batches (the coordinator) should build/cache the
-/// plan and keep a pooled [`BatchWorkspace`] themselves and call
-/// [`sample_batch_with_plan`] directly.
+/// Configurations plans don't cover (`exact_warmup` runs) and
+/// trajectory-capture runs — which are inherently per-request — fall back
+/// to independent sequential runs. Callers issuing many batches (the
+/// coordinator) should build/cache the plan and keep a pooled
+/// [`BatchWorkspace`] themselves and call [`sample_batch_with_plan`]
+/// directly.
 pub fn sample_batch(
     model: &dyn Model,
     sched: &dyn NoiseSchedule,
@@ -170,10 +172,9 @@ pub fn sample_batch(
 
 /// The on-the-fly reference loop: step geometry and combination
 /// coefficients recomputed at every step. Kept (a) as the only path for
-/// configurations a [`SamplePlan`] does not cover — singlestep methods,
-/// non-UniP baselines, `exact_warmup` runs — and (b) as the reference
-/// implementation the planned path is tested bit-identical against
-/// (`solver::plan` tests).
+/// `exact_warmup` runs (which a [`SamplePlan`] does not cover) and (b) as
+/// the **oracle** the planned path is tested bit-identical against, per
+/// method family (`solver::plan` tests + `tests/solver_conformance.rs`).
 pub fn sample_unplanned(
     model: &dyn Model,
     sched: &dyn NoiseSchedule,
@@ -379,41 +380,6 @@ fn sample_singlestep(
     }
 
     SampleResult { x, nfe: ev.nfe(), trajectory: traj }
-}
-
-/// DPM-Solver++ singlestep second-order update (reference `2S`): used for
-/// 2-interval tail groups of the 3S budget split.
-fn dpmpp_2s_step(
-    ev: &Evaluator,
-    sched: &dyn NoiseSchedule,
-    x: &Tensor,
-    s: f64,
-    t: f64,
-    m_s: &Tensor,
-    r1: f64,
-) -> Tensor {
-    let (ls, lt) = (sched.lambda(s), sched.lambda(t));
-    let h = lt - ls;
-    let s1 = sched.t_of_lambda(ls + r1 * h);
-    let phi_11 = (-r1 * h).exp_m1();
-    let phi_1 = (-h).exp_m1();
-
-    let x_s1 = Tensor::lincomb(
-        sched.sigma(s1) / sched.sigma(s),
-        x,
-        -sched.alpha(s1) * phi_11,
-        m_s,
-    );
-    let m_s1 = ev.eval(&x_s1, s1);
-    let d1 = m_s1.sub(m_s);
-    let mut out = Tensor::lincomb(
-        sched.sigma(t) / sched.sigma(s),
-        x,
-        -sched.alpha(t) * phi_1,
-        m_s,
-    );
-    out.axpy(-sched.alpha(t) * phi_1 / (2.0 * r1), &d1);
-    out
 }
 
 #[cfg(test)]

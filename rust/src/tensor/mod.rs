@@ -193,6 +193,16 @@ impl Tensor {
         }
     }
 
+    /// `self <- x * a`, reusing this tensor's buffer (workspace form of
+    /// [`Tensor::scaled`]; same multiplication order, so results are
+    /// bit-identical).
+    pub fn assign_scaled(&mut self, x: &Tensor, a: f64) {
+        assert_eq!(self.shape, x.shape, "assign_scaled shape mismatch");
+        for (o, xv) in self.data.iter_mut().zip(&x.data) {
+            *o = xv * a;
+        }
+    }
+
     /// `self <- x` without allocating (shapes must match).
     pub fn copy_from(&mut self, x: &Tensor) {
         assert_eq!(self.shape, x.shape, "copy_from shape mismatch");
@@ -393,43 +403,60 @@ pub fn weighted_sum(coeffs: &[f64], ts: &[&Tensor]) -> Tensor {
     Tensor { shape, data: out }
 }
 
+impl AsRef<Tensor> for Tensor {
+    fn as_ref(&self) -> &Tensor {
+        self
+    }
+}
+
 /// In-place variant of [`weighted_sum`]: writes `Σ_m c_m * ts[m]` into
 /// `out`'s existing buffer — zero allocations, for the plan-executed step
 /// path where `ts` are workspace rows. The unrolled fast paths use the same
 /// accumulation order as [`weighted_sum`], so results are bit-identical.
-pub fn weighted_sum_into(out: &mut Tensor, coeffs: &[f64], ts: &[Tensor]) {
+///
+/// Generic over `&[Tensor]` (workspace rows) and `&[&Tensor]` (borrowed
+/// history outputs) so plan-executed steps can combine either without
+/// collecting an intermediate `Vec`.
+pub fn weighted_sum_into<T: AsRef<Tensor>>(out: &mut Tensor, coeffs: &[f64], ts: &[T]) {
     assert_eq!(coeffs.len(), ts.len());
     assert!(!ts.is_empty(), "weighted_sum_into of zero tensors");
-    let n = ts[0].len();
-    assert_eq!(out.shape(), ts[0].shape(), "weighted_sum_into output shape mismatch");
+    let first = ts[0].as_ref();
+    let n = first.len();
+    assert_eq!(out.shape(), first.shape(), "weighted_sum_into output shape mismatch");
     for t in ts {
-        assert_eq!(t.shape(), ts[0].shape(), "weighted_sum_into shape mismatch");
+        assert_eq!(t.as_ref().shape(), first.shape(), "weighted_sum_into shape mismatch");
     }
     let o = out.data_mut();
     match ts.len() {
         1 => {
-            let (c0, a) = (coeffs[0], ts[0].data());
+            let (c0, a) = (coeffs[0], ts[0].as_ref().data());
             for i in 0..n {
                 o[i] = c0 * a[i];
             }
         }
         2 => {
             let (c0, c1) = (coeffs[0], coeffs[1]);
-            let (a, b) = (ts[0].data(), ts[1].data());
+            let (a, b) = (ts[0].as_ref().data(), ts[1].as_ref().data());
             for i in 0..n {
                 o[i] = c0 * a[i] + c1 * b[i];
             }
         }
         3 => {
             let (c0, c1, c2) = (coeffs[0], coeffs[1], coeffs[2]);
-            let (a, b, c) = (ts[0].data(), ts[1].data(), ts[2].data());
+            let (a, b, c) =
+                (ts[0].as_ref().data(), ts[1].as_ref().data(), ts[2].as_ref().data());
             for i in 0..n {
                 o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i];
             }
         }
         4 => {
             let (c0, c1, c2, c3) = (coeffs[0], coeffs[1], coeffs[2], coeffs[3]);
-            let (a, b, c, d) = (ts[0].data(), ts[1].data(), ts[2].data(), ts[3].data());
+            let (a, b, c, d) = (
+                ts[0].as_ref().data(),
+                ts[1].as_ref().data(),
+                ts[2].as_ref().data(),
+                ts[3].as_ref().data(),
+            );
             for i in 0..n {
                 o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i];
             }
@@ -437,8 +464,13 @@ pub fn weighted_sum_into(out: &mut Tensor, coeffs: &[f64], ts: &[Tensor]) {
         5 => {
             let (c0, c1, c2, c3, c4) =
                 (coeffs[0], coeffs[1], coeffs[2], coeffs[3], coeffs[4]);
-            let (a, b, c, d, e) =
-                (ts[0].data(), ts[1].data(), ts[2].data(), ts[3].data(), ts[4].data());
+            let (a, b, c, d, e) = (
+                ts[0].as_ref().data(),
+                ts[1].as_ref().data(),
+                ts[2].as_ref().data(),
+                ts[3].as_ref().data(),
+                ts[4].as_ref().data(),
+            );
             for i in 0..n {
                 o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i] + c4 * e[i];
             }
@@ -447,12 +479,12 @@ pub fn weighted_sum_into(out: &mut Tensor, coeffs: &[f64], ts: &[Tensor]) {
             let (c0, c1, c2, c3, c4, c5) =
                 (coeffs[0], coeffs[1], coeffs[2], coeffs[3], coeffs[4], coeffs[5]);
             let (a, b, c, d, e, f) = (
-                ts[0].data(),
-                ts[1].data(),
-                ts[2].data(),
-                ts[3].data(),
-                ts[4].data(),
-                ts[5].data(),
+                ts[0].as_ref().data(),
+                ts[1].as_ref().data(),
+                ts[2].as_ref().data(),
+                ts[3].as_ref().data(),
+                ts[4].as_ref().data(),
+                ts[5].as_ref().data(),
             );
             for i in 0..n {
                 o[i] = c0 * a[i] + c1 * b[i] + c2 * c[i] + c3 * d[i] + c4 * e[i] + c5 * f[i];
@@ -466,7 +498,7 @@ pub fn weighted_sum_into(out: &mut Tensor, coeffs: &[f64], ts: &[Tensor]) {
                 if cm == 0.0 {
                     continue;
                 }
-                let src = t.data();
+                let src = t.as_ref().data();
                 for i in 0..n {
                     o[i] += cm * src[i];
                 }
@@ -588,8 +620,36 @@ mod tests {
         }
         assert_eq!(out, Tensor::sub_scaled(&x, &y, 0.25));
 
+        out.assign_scaled(&x, -1.5);
+        let scaled = x.scaled(-1.5);
+        for (a, b) in out.data().iter().zip(scaled.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
         out.copy_from(&y);
         assert_eq!(out, y);
+    }
+
+    #[test]
+    fn weighted_sum_into_accepts_owned_and_borrowed_slices() {
+        // The plan executor combines workspace rows (`&[Tensor]`) and
+        // borrowed history outputs (`&[&Tensor]`); both must produce the
+        // same bits as the allocating `weighted_sum`.
+        let ts: Vec<Tensor> = (0..4)
+            .map(|k| Tensor::from_slice(&[(k as f64) + 0.5, -(k as f64) * 0.3, 1.0 / (k as f64 + 1.0)]))
+            .collect();
+        let coeffs = [0.7, -0.4, 0.2, 1.1];
+        let refs: Vec<&Tensor> = ts.iter().collect();
+        let expect = weighted_sum(&coeffs, &refs);
+
+        let mut out_owned = Tensor::zeros(&[3]);
+        weighted_sum_into(&mut out_owned, &coeffs, &ts[..]);
+        let mut out_borrowed = Tensor::zeros(&[3]);
+        weighted_sum_into(&mut out_borrowed, &coeffs, &refs[..]);
+        for ((a, b), e) in out_owned.data().iter().zip(out_borrowed.data()).zip(expect.data()) {
+            assert_eq!(a.to_bits(), e.to_bits());
+            assert_eq!(b.to_bits(), e.to_bits());
+        }
     }
 
     #[test]

@@ -148,13 +148,68 @@ fn workspace_pool_reuses_after_warmup() {
     assert_eq!(bw.reuses(), 7);
 }
 
+/// The tentpole's batching claim across the whole zoo: batched lockstep
+/// execution of any registry method — multistep baselines and singlestep
+/// NFE-budget solvers alike — is bit-identical to solo planned runs, with
+/// and without UniC.
 #[test]
-fn sample_batch_falls_back_for_unplannable_methods() {
+fn whole_zoo_batches_bit_identically() {
     let sched = VpLinear::default();
-    let gm = dataset(DatasetSpec::Cifar10Like);
+    let gm = dataset(DatasetSpec::BedroomLike);
     let model = GmmModel { gm: &gm, sched: &sched };
-    let opts = SampleOptions::new(Method::DpmSolverPp { order: 2 }, 6);
-    assert!(SamplePlan::build(&sched, &opts).is_none(), "dpmpp-2m has no plan");
+    let mut bw = BatchWorkspace::new();
+    for method in [
+        Method::Ddim { pred: Prediction::Noise },
+        Method::DpmSolverPp { order: 2 },
+        Method::DpmSolverPp { order: 3 },
+        Method::Plms,
+        Method::Deis { order: 2 },
+        Method::DpmSolverSingle { order: 3 },
+        Method::DpmSolverPp3S,
+    ] {
+        for with_unic in [false, true] {
+            let mut opts = SampleOptions::new(method.clone(), 7);
+            if with_unic {
+                opts = opts.with_unic(CoeffVariant::Bh(BFunction::Bh2), false);
+            }
+            let plan = SamplePlan::build(&sched, &opts)
+                .unwrap_or_else(|| panic!("{} must be plannable", opts.id()));
+            let inits = member_inits(gm.dim);
+            let solo: Vec<_> = inits
+                .iter()
+                .map(|x| sample_with_plan(&model, &sched, x, &opts, &plan))
+                .collect();
+            let refs: Vec<&Tensor> = inits.iter().collect();
+            let batched = sample_batch_with_plan(&model, &sched, &refs, &opts, &plan, &mut bw);
+            assert_eq!(batched.len(), inits.len());
+            for (i, (a, b)) in solo.iter().zip(&batched).enumerate() {
+                let tag = format!("{} member {i} unic {with_unic}", opts.id());
+                assert_eq!(a.nfe, b.nfe, "nfe: {tag}");
+                assert_eq!(bits(&a.x), bits(&b.x), "state bits: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sample_batch_falls_back_for_unplannable_configs() {
+    // Every method now compiles to a plan; the only unplannable
+    // configuration left is the exact-warmup experiment mode, which falls
+    // back to independent reference runs.
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::BedroomLike);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let mut opts = SampleOptions::new(
+        Method::UniP {
+            order: 2,
+            variant: CoeffVariant::Bh(BFunction::Bh2),
+            pred: Prediction::Noise,
+            schedule: None,
+        },
+        5,
+    );
+    opts.exact_warmup = true;
+    assert!(SamplePlan::build(&sched, &opts).is_none(), "exact-warmup has no plan");
     let inits = member_inits(gm.dim);
     let refs: Vec<&Tensor> = inits.iter().collect();
     let batched = sample_batch(&model, &sched, &refs, &opts);

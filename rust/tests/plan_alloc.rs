@@ -72,7 +72,7 @@ fn steady_state_unipc_step_is_allocation_free() {
         }
         let mut x = rng.normal_tensor(&shape);
         let m_t = rng.normal_tensor(&shape);
-        let mut ws = StepWorkspace::new(&shape, plan.max_order());
+        let mut ws = StepWorkspace::new(&shape, plan.ws_rows());
 
         // A steady-state step: order-3 predictor + corrector, mid-run.
         let k = 5;
@@ -81,6 +81,64 @@ fn steady_state_unipc_step_is_allocation_free() {
 
         // Warm once outside the window (nothing should allocate even here,
         // but the claim is about steady state).
+        plan.predict_into(k, &hist, &x, &mut ws);
+        plan.correct_into(k, &hist, &m_t, &mut ws, &mut x);
+
+        ALLOCS.with(|c| c.set(0));
+        ARMED.with(|a| a.set(true));
+        for _ in 0..64 {
+            plan.predict_into(k, &hist, &x, &mut ws);
+            let applied = plan.correct_into(k, &hist, &m_t, &mut ws, &mut x);
+            assert!(applied);
+        }
+        ARMED.with(|a| a.set(false));
+        let n = ALLOCS.with(|c| c.get());
+        assert_eq!(
+            n, 0,
+            "steady-state planned step allocated {n} times ({})",
+            plan.key()
+        );
+    }
+}
+
+/// The tentpole's zero-alloc claim across the newly planned non-UniPC
+/// multistep families: a steady-state DPM-Solver++ (2M/3M), DEIS, PNDM, or
+/// DDIM step — predictor plus UniC corrector — driven from a plan must not
+/// touch the heap in the solver arithmetic. (Singlestep groups evaluate the
+/// model at interior nodes mid-step, which allocates by the model contract,
+/// so they are exercised by the conformance suite instead.)
+#[test]
+fn steady_state_baseline_steps_are_allocation_free() {
+    let sched = VpLinear::default();
+    let methods = [
+        Method::Ddim { pred: Prediction::Noise },
+        Method::DpmSolverPp { order: 2 },
+        Method::DpmSolverPp { order: 3 },
+        Method::Plms,
+        Method::Deis { order: 3 },
+    ];
+    for method in methods {
+        let opts =
+            SampleOptions::new(method, 8).with_unic(UniPcCoeffs::Bh(BFunction::Bh2), false);
+        let plan = SamplePlan::build(&sched, &opts).expect("plannable config");
+        let shape = [16usize, 8];
+        let mut rng = Rng::seed_from(31);
+
+        // Seed a full history buffer, as the warm-up steps would have.
+        let cap = plan.history_cap();
+        let mut hist = History::new(cap);
+        for j in 0..cap {
+            let t = 0.95 - 0.07 * j as f64;
+            hist.push(t, sched.lambda(t), rng.normal_tensor(&shape));
+        }
+        let mut x = rng.normal_tensor(&shape);
+        let m_t = rng.normal_tensor(&shape);
+        let mut ws = StepWorkspace::new(&shape, plan.ws_rows());
+
+        // A steady-state mid-run step with an active corrector.
+        let k = 5;
+        assert!(plan.has_corrector(k), "{}", plan.key());
+
         plan.predict_into(k, &hist, &x, &mut ws);
         plan.correct_into(k, &hist, &m_t, &mut ws, &mut x);
 

@@ -100,6 +100,37 @@ fn prop_timesteps_valid_for_random_grids() {
 }
 
 #[test]
+fn prop_method_string_roundtrip() {
+    // Round-trip contract of the method registry: every zoo entry survives
+    // `parse(id())` and `parse(cache_key())`; random order-scheduled UniP
+    // variants (whose display id is lossy by design) survive
+    // `parse(cache_key())` with the schedule contents intact.
+    for m in Method::zoo() {
+        assert_eq!(Method::parse(&m.id()).as_ref(), Some(&m), "id {}", m.id());
+        assert_eq!(
+            Method::parse(&m.cache_key()).as_ref(),
+            Some(&m),
+            "cache_key {}",
+            m.cache_key()
+        );
+    }
+    check("scheduled-method cache_key roundtrip", 100, |g| {
+        let order = g.usize_in(1, 4);
+        let len = g.usize_in(1, 8);
+        let schedule: Vec<usize> = (0..len).map(|_| g.usize_in(1, order)).collect();
+        let variant = *g.pick(&[
+            CoeffVariant::Bh(BFunction::Bh1),
+            CoeffVariant::Bh(BFunction::Bh2),
+            CoeffVariant::Varying,
+        ]);
+        let pred = if g.bool() { Prediction::Noise } else { Prediction::Data };
+        let m = Method::UniP { order, variant, pred, schedule: Some(schedule) };
+        let parsed = Method::parse(&m.cache_key());
+        assert_eq!(parsed.as_ref(), Some(&m), "{}", m.cache_key());
+    });
+}
+
+#[test]
 fn prop_sampler_nfe_accounting_and_determinism() {
     // Across random methods/steps: NFE matches the documented contract and
     // sampling is deterministic in (seed, config).

@@ -1,0 +1,124 @@
+//! Cross-solver conformance suite (the tentpole's acceptance gate): for
+//! **every** parseable method in the registry, across every prediction the
+//! method admits, every [`TimeSpacing`], and several step counts, the
+//! plan-compiled execution path ([`sample_with_plan`]) must be
+//! **bit-identical** — state bits and NFE — to the per-method reference
+//! loop ([`sample_unplanned`]), on the analytic GMM backend.
+//!
+//! `sample_unplanned` is the oracle: it re-derives every scalar on the fly
+//! with the original per-family step functions, so agreement down to the
+//! last bit proves the plan compiler resolved the exact same arithmetic.
+//!
+//! Runtime note: the sweep is sized to stay cheap in debug builds (8-d
+//! mixture, 2-row states); `make test-full` additionally runs it under
+//! `--release` together with the numerically heavy convergence suite.
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::analytic::GmmModel;
+use unipc::numerics::vandermonde::BFunction;
+use unipc::rng::Rng;
+use unipc::sched::{TimeSpacing, VpLinear};
+use unipc::solver::unipc::CoeffVariant;
+use unipc::solver::{
+    sample_unplanned, sample_with_plan, Method, SampleOptions, SamplePlan,
+};
+use unipc::tensor::Tensor;
+
+fn bits(t: &Tensor) -> Vec<u64> {
+    t.data().iter().map(|v| v.to_bits()).collect()
+}
+
+/// Planned-vs-reference bit-identity over method × spacing × steps × UniC.
+#[test]
+fn planned_execution_is_bit_identical_for_every_method() {
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::BedroomLike);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let x0 = Rng::seed_from(42).normal_tensor(&[2, gm.dim]);
+
+    let mut swept = 0usize;
+    for method in Method::zoo() {
+        for spacing in [TimeSpacing::LogSnr, TimeSpacing::Uniform, TimeSpacing::Quadratic] {
+            for steps in [5usize, 10, 20] {
+                for with_unic in [false, true] {
+                    let mut opts = SampleOptions::new(method.clone(), steps);
+                    opts.spacing = spacing;
+                    if with_unic {
+                        opts = opts.with_unic(CoeffVariant::Bh(BFunction::Bh2), false);
+                    }
+                    let plan = SamplePlan::build(&sched, &opts).unwrap_or_else(|| {
+                        panic!("{} ({}) must be plannable", opts.id(), spacing.name())
+                    });
+                    let reference = sample_unplanned(&model, &sched, &x0, &opts);
+                    let planned = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+                    let tag = format!(
+                        "{} spacing {} steps {steps} unic {with_unic}",
+                        opts.id(),
+                        spacing.name()
+                    );
+                    assert_eq!(reference.nfe, planned.nfe, "nfe: {tag}");
+                    assert_eq!(
+                        bits(&reference.x),
+                        bits(&planned.x),
+                        "state bits: {tag}"
+                    );
+                    assert!(
+                        planned.x.data().iter().all(|v| v.is_finite()),
+                        "non-finite output: {tag}"
+                    );
+                    swept += 1;
+                }
+            }
+        }
+    }
+    // The zoo currently holds 37 methods; 37 × 3 spacings × 3 step counts
+    // × 2 UniC settings = 666 configurations. Guard against the sweep
+    // silently shrinking if the zoo or the grids change shape.
+    assert!(swept >= 650, "conformance sweep shrank to {swept} configs");
+}
+
+/// The `Method::parse`-able surface and the zoo agree: every zoo entry
+/// round-trips through its id, and every id the sweep uses parses back to
+/// the same method (so the conformance coverage statement "every parseable
+/// method" is anchored to the registry itself).
+#[test]
+fn zoo_is_the_parseable_surface() {
+    let zoo = Method::zoo();
+    for m in &zoo {
+        assert_eq!(Method::parse(&m.id()).as_ref(), Some(m), "{}", m.id());
+        assert_eq!(Method::parse(&m.cache_key()).as_ref(), Some(m), "{}", m.cache_key());
+    }
+    // No duplicates: each id appears once.
+    let mut ids: Vec<String> = zoo.iter().map(|m| m.id()).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), zoo.len(), "duplicate ids in the zoo");
+}
+
+/// NFE accounting survives planning for both step conventions: multistep
+/// methods cost exactly `steps` NFE, singlestep methods exactly their
+/// budget, and UniC adds none — for every method in the zoo.
+#[test]
+fn nfe_conventions_hold_through_plans() {
+    let sched = VpLinear::default();
+    let gm = dataset(DatasetSpec::BedroomLike);
+    let model = GmmModel { gm: &gm, sched: &sched };
+    let x0 = Rng::seed_from(5).normal_tensor(&[1, gm.dim]);
+    for method in Method::zoo() {
+        for with_unic in [false, true] {
+            let steps = 9;
+            let mut opts = SampleOptions::new(method.clone(), steps);
+            if with_unic {
+                opts = opts.with_unic(CoeffVariant::Bh(BFunction::Bh2), false);
+            }
+            let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+            let r = sample_with_plan(&model, &sched, &x0, &opts, &plan);
+            assert_eq!(
+                r.nfe,
+                steps,
+                "{} unic {with_unic}: steps/budget must equal NFE",
+                opts.id()
+            );
+        }
+    }
+}
