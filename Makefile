@@ -16,25 +16,29 @@ test:
 
 # Release-mode run of the numerically heavy suites: the cross-solver
 # conformance sweep (every method × prediction × spacing, planned vs
-# reference bit-identity) and the empirical convergence-order suite
-# (log-error regression against each method's order claim). Both suites
-# are sized to also pass inside plain `make test` (debug) so the tier-1
-# gate exercises them; this target re-runs just the two of them optimized,
-# which is the fast path when iterating on solver numerics (they integrate
-# thousands of solver steps against an 8000-step RK4 ground truth).
+# reference bit-identity), the empirical convergence-order suite
+# (log-error regression against each method's order claim), and the chaos
+# fault-injection suite (panic isolation, deadlines, batch quarantine,
+# pool supervision under 10%-ish injected faults). All suites are sized to
+# also pass inside plain `make test` (debug) so the tier-1 gate exercises
+# them; this target re-runs just these optimized, which is the fast path
+# when iterating on solver numerics or the fault-tolerance layer.
 test-full:
 	$(CARGO) test --release -q --manifest-path $(MANIFEST) \
-		--test solver_conformance --test solver_convergence
+		--test solver_conformance --test solver_convergence \
+		--test fault_injection
 
 # API docs for the crate (README.md links into these module docs).
 docs:
 	$(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
-# The CI gate: build, full test suite (incl. doctests and the equivalence /
-# allocation proofs), the release-mode conformance + convergence suites,
-# and rustdoc with warnings promoted to errors so doc rot fails fast.
+# The CI gate: build, clippy with warnings promoted to errors, full test
+# suite (incl. doctests and the equivalence / allocation proofs), the
+# release-mode conformance + convergence + chaos suites, and rustdoc with
+# warnings promoted to errors so doc rot fails fast.
 check:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
+	$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) -- -D warnings
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 	$(MAKE) test-full
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)

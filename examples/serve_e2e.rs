@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         guidance: Some(1.5),
         seed: 1234,
         return_samples: true,
+        ..Default::default()
     };
     let resp = client.sample(&req)?;
     anyhow::ensure!(resp.ok, "request failed: {:?}", resp.error);

@@ -29,6 +29,16 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Queue capacity; requests beyond it are rejected (backpressure).
     pub queue_cap: usize,
+    /// Default per-request deadline in milliseconds (admission to start of
+    /// execution), for requests that don't set `deadline_ms` themselves.
+    /// Jobs still queued past their deadline are shed with a typed
+    /// `DeadlineExceeded` response instead of executing. 0 disables the
+    /// default deadline.
+    pub default_deadline_ms: u64,
+    /// How long `Service::shutdown` waits for workers to drain the queue
+    /// before shedding the remaining jobs with typed responses and joining
+    /// the pool (bounded teardown).
+    pub drain_deadline_ms: u64,
     /// Default solver settings for requests that don't override them.
     pub default_steps: usize,
     pub default_method: String,
@@ -48,6 +58,8 @@ impl Default for ServerConfig {
             batch_linger_us: 0,
             workers: 4,
             queue_cap: 256,
+            default_deadline_ms: 30_000,
+            drain_deadline_ms: 2_000,
             default_steps: 10,
             default_method: "unipc-3".into(),
             spacing: TimeSpacing::LogSnr,
@@ -87,6 +99,8 @@ impl ServerConfig {
                 "batch_linger_us" => c.batch_linger_us = req_usize(val, k)? as u64,
                 "workers" => c.workers = req_usize(val, k)?,
                 "queue_cap" => c.queue_cap = req_usize(val, k)?,
+                "default_deadline_ms" => c.default_deadline_ms = req_usize(val, k)? as u64,
+                "drain_deadline_ms" => c.drain_deadline_ms = req_usize(val, k)? as u64,
                 "default_steps" => c.default_steps = req_usize(val, k)?,
                 "default_method" => c.default_method = req_str(val, k)?,
                 "spacing" => {
@@ -119,6 +133,12 @@ impl ServerConfig {
         self.queue_cap = args.get_usize("queue-cap", self.queue_cap).map_err(anyhow::Error::msg)?;
         self.batch_linger_us = args
             .get_usize("batch-linger-us", self.batch_linger_us as usize)
+            .map_err(anyhow::Error::msg)? as u64;
+        self.default_deadline_ms = args
+            .get_usize("deadline-ms", self.default_deadline_ms as usize)
+            .map_err(anyhow::Error::msg)? as u64;
+        self.drain_deadline_ms = args
+            .get_usize("drain-deadline-ms", self.drain_deadline_ms as usize)
             .map_err(anyhow::Error::msg)? as u64;
         self.default_steps =
             args.get_usize("steps", self.default_steps).map_err(anyhow::Error::msg)?;
@@ -171,7 +191,8 @@ mod tests {
     fn json_overrides_defaults() {
         let v = json::parse(
             r#"{"addr": "0.0.0.0:9000", "max_batch": 8, "default_method": "dpmpp-2m",
-                "spacing": "time_uniform", "t_end": 0.01, "batch_linger_us": 500}"#,
+                "spacing": "time_uniform", "t_end": 0.01, "batch_linger_us": 500,
+                "default_deadline_ms": 250, "drain_deadline_ms": 100}"#,
         )
         .unwrap();
         let c = ServerConfig::from_json(&v).unwrap();
@@ -180,6 +201,8 @@ mod tests {
         assert_eq!(c.spacing, TimeSpacing::Uniform);
         assert_eq!(c.t_end, 0.01);
         assert_eq!(c.batch_linger_us, 500);
+        assert_eq!(c.default_deadline_ms, 250);
+        assert_eq!(c.drain_deadline_ms, 100);
         // Untouched defaults survive.
         assert_eq!(c.workers, ServerConfig::default().workers);
     }
@@ -210,10 +233,13 @@ mod tests {
             "16".to_string(),
             "--method".to_string(),
             "ddim".to_string(),
+            "--deadline-ms".to_string(),
+            "500".to_string(),
         ])
         .unwrap();
         let c = ServerConfig::default().apply_args(&args).unwrap();
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.default_method, "ddim");
+        assert_eq!(c.default_deadline_ms, 500);
     }
 }

@@ -1,6 +1,7 @@
 //! Serving metrics: counters + latency digests, snapshotted as JSON for the
 //! `stats` op and the bench harness.
 
+use super::request::FailureKind;
 use crate::json::Value;
 use crate::stats::LatencyDigest;
 use std::time::Duration;
@@ -26,6 +27,18 @@ pub struct Metrics {
     /// Runs served entirely from a worker's pooled `BatchWorkspace`
     /// (no solver-side allocation to start the run).
     pub workspace_reuses: u64,
+    /// Per-kind failure counters, indexed by [`FailureKind::index`] and
+    /// surfaced flat in the snapshot under each kind's wire name.
+    pub failures_by_kind: [u64; 6],
+    /// Workers respawned by the supervisor after a panic retired them
+    /// (pool size is an invariant; this counts how often it was restored).
+    pub worker_restarts: u64,
+    /// Batch members failed individually for non-finite output while their
+    /// cohort completed normally.
+    pub quarantined_members: u64,
+    /// Batch members re-run solo after a mid-batch panic poisoned their
+    /// lockstep run.
+    pub batch_retries: u64,
     pub queue: LatencyDigest,
     pub compute: LatencyDigest,
     pub e2e: LatencyDigest,
@@ -47,6 +60,13 @@ impl Metrics {
         self.e2e.record(queue + compute);
     }
 
+    /// Count one typed failure: the `failed` total plus the per-kind
+    /// counter.
+    pub fn record_failure(&mut self, kind: FailureKind) {
+        self.failed += 1;
+        self.failures_by_kind[kind.index()] += 1;
+    }
+
     /// Record one plan-executed run that served `members` requests,
     /// `reuses` of whose workspace acquisitions came from pooled capacity
     /// (0 or 1 for a single run; passed as a delta so callers can batch).
@@ -60,7 +80,7 @@ impl Metrics {
     }
 
     pub fn snapshot_json(&mut self) -> Value {
-        Value::obj(vec![
+        let mut pairs = vec![
             ("submitted", Value::from(self.submitted as f64)),
             ("rejected", Value::from(self.rejected as f64)),
             ("completed", Value::from(self.completed as f64)),
@@ -77,6 +97,14 @@ impl Metrics {
                 ),
             ),
             ("workspace_reuses", Value::from(self.workspace_reuses as f64)),
+        ];
+        for k in FailureKind::ALL {
+            pairs.push((k.as_str(), Value::from(self.failures_by_kind[k.index()] as f64)));
+        }
+        pairs.extend([
+            ("worker_restarts", Value::from(self.worker_restarts as f64)),
+            ("quarantined_members", Value::from(self.quarantined_members as f64)),
+            ("batch_retries", Value::from(self.batch_retries as f64)),
             ("queue_p50_us", Value::from(self.queue.percentile_us(50.0) as f64)),
             ("queue_p99_us", Value::from(self.queue.percentile_us(99.0) as f64)),
             ("compute_p50_us", Value::from(self.compute.percentile_us(50.0) as f64)),
@@ -85,7 +113,8 @@ impl Metrics {
             ("e2e_p95_us", Value::from(self.e2e.percentile_us(95.0) as f64)),
             ("e2e_p99_us", Value::from(self.e2e.percentile_us(99.0) as f64)),
             ("e2e_mean_us", Value::from(self.e2e.mean_us())),
-        ])
+        ]);
+        Value::obj(pairs)
     }
 }
 
@@ -128,5 +157,25 @@ mod tests {
         let mut m = Metrics::default();
         let s = m.snapshot_json().to_string();
         assert!(crate::json::parse(&s).is_ok());
+    }
+
+    #[test]
+    fn record_failure_counts_per_kind() {
+        let mut m = Metrics::default();
+        m.record_failure(FailureKind::DeadlineExceeded);
+        m.record_failure(FailureKind::DeadlineExceeded);
+        m.record_failure(FailureKind::WorkerPanic);
+        m.worker_restarts = 1;
+        m.quarantined_members = 2;
+        m.batch_retries = 3;
+        assert_eq!(m.failed, 3);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("failed").unwrap().as_f64(), Some(3.0));
+        assert_eq!(snap.get("deadline_exceeded").unwrap().as_f64(), Some(2.0));
+        assert_eq!(snap.get("worker_panic").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("non_finite_output").unwrap().as_f64(), Some(0.0));
+        assert_eq!(snap.get("worker_restarts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(snap.get("quarantined_members").unwrap().as_f64(), Some(2.0));
+        assert_eq!(snap.get("batch_retries").unwrap().as_f64(), Some(3.0));
     }
 }

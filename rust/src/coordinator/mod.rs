@@ -4,17 +4,23 @@
 //! boundary) this is the L3 system the paper's technique plugs into: UniPC
 //! is just a `method` string on the request.
 //!
-//! * [`request`] — wire-level request/response types + JSON codecs.
-//! * [`service`] — the worker pool; blocking submit with queue-cap
-//!   backpressure; deterministic per-request seeds; the batch assembler
-//!   that coalesces same-plan requests into lockstep batched runs over a
-//!   shared `Arc<SamplePlan>` and per-worker pooled workspaces.
-//! * [`metrics`] — counters + latency digests, snapshotted as JSON.
+//! * [`request`] — wire-level request/response types + JSON codecs,
+//!   including the structured [`FailureKind`] failure taxonomy and
+//!   per-request deadlines.
+//! * [`service`] — the supervised worker pool; typed admission rejection
+//!   (invalid/queue-full/shut-down); deterministic per-request seeds; the
+//!   batch assembler that coalesces same-plan requests into lockstep
+//!   batched runs over a shared `Arc<SamplePlan>` and per-worker pooled
+//!   workspaces; panic isolation + worker respawn, deadline shedding,
+//!   per-member output quarantine, and the seeded chaos-injection backend
+//!   ([`service::ChaosConfig`]).
+//! * [`metrics`] — counters (including per-failure-kind) + latency
+//!   digests, snapshotted as JSON.
 
 pub mod metrics;
 pub mod request;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use request::{SampleRequest, SampleResponse};
-pub use service::{ModelBackend, Service};
+pub use request::{FailureKind, SampleRequest, SampleResponse};
+pub use service::{silence_injected_panics, ChaosConfig, ModelBackend, Service};

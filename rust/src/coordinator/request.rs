@@ -3,6 +3,7 @@
 use crate::json::Value;
 use crate::solver::Method;
 use anyhow::{anyhow, bail, Result};
+use std::fmt;
 
 /// A sampling request.
 #[derive(Clone, Debug, PartialEq)]
@@ -25,6 +26,12 @@ pub struct SampleRequest {
     /// Include the generated samples in the response (off for pure
     /// load-testing).
     pub return_samples: bool,
+    /// Per-request deadline in milliseconds, measured from admission.
+    /// `None` uses the server default (`ServerConfig::default_deadline_ms`);
+    /// `Some(0)` disables the deadline for this request. Jobs still queued
+    /// past their deadline are shed with [`FailureKind::DeadlineExceeded`]
+    /// instead of executing.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for SampleRequest {
@@ -38,6 +45,7 @@ impl Default for SampleRequest {
             guidance: None,
             seed: 0,
             return_samples: true,
+            deadline_ms: None,
         }
     }
 }
@@ -78,6 +86,9 @@ impl SampleRequest {
         if let Some(g) = self.guidance {
             pairs.push(("guidance", Value::from(g)));
         }
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", Value::from(d as f64)));
+        }
         Value::obj(pairs)
     }
 
@@ -107,7 +118,69 @@ impl SampleRequest {
         if let Some(rs) = v.get("return_samples") {
             r.return_samples = rs.as_bool().ok_or_else(|| anyhow!("bad 'return_samples'"))?;
         }
+        if let Some(d) = v.get("deadline_ms") {
+            r.deadline_ms = Some(d.as_usize().ok_or_else(|| anyhow!("bad 'deadline_ms'"))? as u64);
+        }
         Ok(r)
+    }
+}
+
+/// Why a request failed: the structured failure taxonomy. Every non-ok
+/// [`SampleResponse`] carries exactly one kind, and the service surfaces
+/// per-kind counters in `metrics_json` (snake_case of these names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Rejected at admission: malformed parameters or unknown method.
+    InvalidRequest,
+    /// Rejected at admission: queue at capacity (backpressure).
+    QueueFull,
+    /// Shed before execution: still queued past the request deadline.
+    DeadlineExceeded,
+    /// Executed, but the solver produced NaN/Inf rows for this request.
+    NonFiniteOutput,
+    /// The worker thread panicked while executing this request.
+    WorkerPanic,
+    /// Everything else: backend/runtime errors, shutdown shedding.
+    BackendError,
+}
+
+impl FailureKind {
+    /// Every kind, in counter order (`index` is the position here).
+    pub const ALL: [FailureKind; 6] = [
+        FailureKind::InvalidRequest,
+        FailureKind::QueueFull,
+        FailureKind::DeadlineExceeded,
+        FailureKind::NonFiniteOutput,
+        FailureKind::WorkerPanic,
+        FailureKind::BackendError,
+    ];
+
+    /// Stable wire/metric name (snake_case).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FailureKind::InvalidRequest => "invalid_request",
+            FailureKind::QueueFull => "queue_full",
+            FailureKind::DeadlineExceeded => "deadline_exceeded",
+            FailureKind::NonFiniteOutput => "non_finite_output",
+            FailureKind::WorkerPanic => "worker_panic",
+            FailureKind::BackendError => "backend_error",
+        }
+    }
+
+    /// Parse the wire name back.
+    pub fn parse(s: &str) -> Option<FailureKind> {
+        FailureKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+
+    /// Position in [`FailureKind::ALL`] (per-kind counter index).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+impl fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
     }
 }
 
@@ -115,6 +188,9 @@ impl SampleRequest {
 #[derive(Clone, Debug)]
 pub struct SampleResponse {
     pub ok: bool,
+    /// The failure taxonomy entry; `None` exactly when `ok`.
+    pub kind: Option<FailureKind>,
+    /// Human-readable failure detail.
     pub error: Option<String>,
     pub nfe: usize,
     /// Time spent waiting in the queue.
@@ -127,9 +203,25 @@ pub struct SampleResponse {
 }
 
 impl SampleResponse {
-    pub fn failure(msg: String) -> Self {
+    /// A successful response; queue/compute stamps are filled by the caller.
+    pub fn success(nfe: usize, samples: Option<Vec<f64>>, dim: usize) -> Self {
+        SampleResponse {
+            ok: true,
+            kind: None,
+            error: None,
+            nfe,
+            queue_us: 0,
+            compute_us: 0,
+            samples,
+            dim,
+        }
+    }
+
+    /// A typed failure response.
+    pub fn failure(kind: FailureKind, msg: String) -> Self {
         SampleResponse {
             ok: false,
+            kind: Some(kind),
             error: Some(msg),
             nfe: 0,
             queue_us: 0,
@@ -147,6 +239,9 @@ impl SampleResponse {
             ("compute_us", Value::from(self.compute_us as f64)),
             ("dim", Value::from(self.dim)),
         ];
+        if let Some(k) = self.kind {
+            pairs.push(("kind", Value::from(k.as_str())));
+        }
         if let Some(e) = &self.error {
             pairs.push(("error", Value::from(e.as_str())));
         }
@@ -161,8 +256,17 @@ impl SampleResponse {
 
     pub fn from_json(v: &Value) -> Result<Self> {
         let ok = v.get("ok").and_then(Value::as_bool).unwrap_or(false);
+        let kind = match (ok, v.get("kind").and_then(Value::as_str)) {
+            (true, _) => None,
+            (false, Some(s)) => Some(
+                FailureKind::parse(s).ok_or_else(|| anyhow!("unknown failure kind '{s}'"))?,
+            ),
+            // Failure from a peer predating the taxonomy: least-specific kind.
+            (false, None) => Some(FailureKind::BackendError),
+        };
         Ok(SampleResponse {
             ok,
+            kind,
             error: v.get("error").and_then(Value::as_str).map(str::to_string),
             nfe: v.get("nfe").and_then(Value::as_usize).unwrap_or(0),
             queue_us: v.get("queue_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
@@ -191,10 +295,20 @@ mod tests {
             guidance: Some(2.0),
             seed: 99,
             return_samples: false,
+            deadline_ms: Some(1500),
         };
         let v = json::parse(&r.to_json().to_string()).unwrap();
         let r2 = SampleRequest::from_json(&v).unwrap();
         assert_eq!(r, r2);
+    }
+
+    #[test]
+    fn deadline_omitted_means_server_default() {
+        let r = SampleRequest::default();
+        assert_eq!(r.deadline_ms, None);
+        let v = json::parse(&r.to_json().to_string()).unwrap();
+        assert!(v.get("deadline_ms").is_none(), "None is not serialized");
+        assert_eq!(SampleRequest::from_json(&v).unwrap().deadline_ms, None);
     }
 
     #[test]
@@ -213,28 +327,41 @@ mod tests {
 
     #[test]
     fn response_roundtrip_with_samples() {
-        let resp = SampleResponse {
-            ok: true,
-            error: None,
-            nfe: 10,
-            queue_us: 12,
-            compute_us: 345,
-            samples: Some(vec![0.5, -1.0]),
-            dim: 2,
-        };
+        let mut resp = SampleResponse::success(10, Some(vec![0.5, -1.0]), 2);
+        resp.queue_us = 12;
+        resp.compute_us = 345;
         let v = json::parse(&resp.to_json().to_string()).unwrap();
         let r2 = SampleResponse::from_json(&v).unwrap();
         assert!(r2.ok);
+        assert_eq!(r2.kind, None);
         assert_eq!(r2.samples.unwrap(), vec![0.5, -1.0]);
         assert_eq!(r2.compute_us, 345);
     }
 
     #[test]
-    fn failure_response() {
-        let r = SampleResponse::failure("queue full".into());
+    fn failure_response_carries_its_kind() {
+        let r = SampleResponse::failure(FailureKind::QueueFull, "queue full".into());
         let v = json::parse(&r.to_json().to_string()).unwrap();
         let r2 = SampleResponse::from_json(&v).unwrap();
         assert!(!r2.ok);
+        assert_eq!(r2.kind, Some(FailureKind::QueueFull));
         assert_eq!(r2.error.as_deref(), Some("queue full"));
+    }
+
+    #[test]
+    fn failure_kind_names_roundtrip() {
+        for k in FailureKind::ALL {
+            assert_eq!(FailureKind::parse(k.as_str()), Some(k));
+            assert_eq!(k.to_string(), k.as_str());
+        }
+        assert_eq!(FailureKind::parse("wat"), None);
+        // Counter indices are dense and stable.
+        for (i, k) in FailureKind::ALL.iter().enumerate() {
+            assert_eq!(k.index(), i);
+        }
+        // Untyped legacy failures map to the least-specific kind.
+        let v = json::parse(r#"{"ok": false, "error": "boom"}"#).unwrap();
+        let r = SampleResponse::from_json(&v).unwrap();
+        assert_eq!(r.kind, Some(FailureKind::BackendError));
     }
 }

@@ -1,4 +1,5 @@
-//! The sampling service: a bounded queue + worker pool running solver loops.
+//! The sampling service: a bounded queue + supervised worker pool running
+//! solver loops, with fault isolation around every execution.
 //!
 //! Each worker pops a request and first tries the **batched plan path**:
 //! requests whose batch key matches — same [`plan_key`] *and* same model
@@ -13,7 +14,27 @@
 //!
 //! The batch assembler is bounded by `ServerConfig::max_batch` total rows
 //! and, optionally, lingers `ServerConfig::batch_linger_us` for more
-//! same-key arrivals (0 = coalesce only what is already queued).
+//! same-key arrivals (0 = coalesce only what is already queued) — never
+//! past the earliest member deadline.
+//!
+//! **Fault tolerance.** Execution is wrapped in `catch_unwind`, so a panic
+//! in a kernel or backend becomes a typed [`FailureKind::WorkerPanic`]
+//! response for exactly the affected requests instead of a hung receiver.
+//! A worker that caught a panic retires (its pooled workspace may be
+//! corrupt); a supervisor guard respawns a replacement, keeping the pool
+//! size invariant (`worker_restarts` counts this). A panic mid-batch
+//! quarantines the cohort: every member is re-run solo (`batch_retries`),
+//! so only the actual culprit fails and the rest stay bit-identical to a
+//! fault-free run. Batched output is finiteness-checked per member on the
+//! stacked tensor ([`Tensor::rows_finite`]); NaN/Inf rows fail only the
+//! owning member ([`FailureKind::NonFiniteOutput`], `quarantined_members`)
+//! because every kernel in the planned path is row-independent.
+//!
+//! **Deadlines.** Each request resolves a deadline at admission
+//! (`deadline_ms`, defaulting to `ServerConfig::default_deadline_ms`; 0
+//! disables). Jobs still queued past their deadline are shed at dequeue
+//! with a typed [`FailureKind::DeadlineExceeded`] response and are never
+//! executed.
 //!
 //! Every method in the registry compiles to a plan, so **the entire
 //! workload is plan-cached and batchable** — UniPC, DPM-Solver++ (multistep
@@ -25,7 +46,7 @@
 //! step-level dynamic batching below this layer.
 
 use super::metrics::Metrics;
-use super::request::{SampleRequest, SampleResponse};
+use super::request::{FailureKind, SampleRequest, SampleResponse};
 use crate::analytic::GaussianMixture;
 use crate::config::ServerConfig;
 use crate::rng::Rng;
@@ -37,11 +58,31 @@ use crate::solver::{
     SampleOptions, SamplePlan,
 };
 use crate::tensor::Tensor;
-use anyhow::{anyhow, Result};
+use std::any::Any;
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Fault-injection settings for [`ModelBackend::Chaos`]: a seeded,
+/// deterministic fault stream drawn once per model evaluation. Each eval
+/// independently draws a latency spike, a panic, and a NaN'd output row, in
+/// that order, so a given seed produces the same fault schedule regardless
+/// of which faults actually fire.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosConfig {
+    /// Seed for the fault stream (shared across all evals of this backend).
+    pub seed: u64,
+    /// Probability an eval panics (after any latency spike).
+    pub panic_rate: f64,
+    /// Probability an eval NaNs one row of its output.
+    pub nan_rate: f64,
+    /// Probability an eval sleeps `latency_us` first.
+    pub latency_rate: f64,
+    pub latency_us: u64,
+}
 
 /// What evaluates ε_θ for the service.
 #[derive(Clone)]
@@ -55,6 +96,18 @@ pub enum ModelBackend {
         /// Component indices per class (classifier-free guidance support).
         class_components: Arc<Vec<Vec<usize>>>,
     },
+    /// A fault-injecting decorator around another backend: panics, NaN
+    /// rows, and latency spikes on a seeded deterministic schedule. Powers
+    /// the chaos suite (`tests/fault_injection.rs`) and the serving bench's
+    /// chaos ablation.
+    Chaos {
+        inner: Box<ModelBackend>,
+        cfg: ChaosConfig,
+        /// One shared fault stream: concurrent workers draw from the same
+        /// seeded sequence, keeping the total fault mix at the configured
+        /// rates regardless of interleaving.
+        faults: Arc<Mutex<Rng>>,
+    },
 }
 
 impl ModelBackend {
@@ -62,8 +115,46 @@ impl ModelBackend {
         match self {
             ModelBackend::Pjrt(h) => h.dim,
             ModelBackend::Analytic { gm, .. } => gm.dim,
+            ModelBackend::Chaos { inner, .. } => inner.dim(),
         }
     }
+
+    /// Wrap a backend with seeded fault injection.
+    pub fn chaos(inner: ModelBackend, cfg: ChaosConfig) -> ModelBackend {
+        ModelBackend::Chaos {
+            inner: Box::new(inner),
+            faults: Arc::new(Mutex::new(Rng::seed_from(cfg.seed))),
+            cfg,
+        }
+    }
+}
+
+/// Peel chaos decorators off a backend to reach the real evaluator.
+fn base_backend(b: &ModelBackend) -> &ModelBackend {
+    match b {
+        ModelBackend::Chaos { inner, .. } => base_backend(inner),
+        other => other,
+    }
+}
+
+/// Install (once, process-wide) a panic hook that swallows the backtrace
+/// noise of chaos-injected panics while delegating every real panic to the
+/// previous hook. Call from chaos tests/benches before the first fault.
+pub fn silence_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .copied()
+                .or_else(|| payload.downcast_ref::<String>().map(String::as_str));
+            if !msg.is_some_and(|s| s.contains("chaos: injected")) {
+                default(info);
+            }
+        }));
+    });
 }
 
 /// Per-request model view over a backend.
@@ -77,7 +168,7 @@ struct RequestModel<'a> {
 
 impl<'a> RequestModel<'a> {
     fn new(backend: &'a ModelBackend, sched: &'a VpLinear, req: &SampleRequest) -> Self {
-        let pjrt = match backend {
+        let pjrt = match base_backend(backend) {
             ModelBackend::Pjrt(h) => {
                 let mut m = PjrtModel::new(h.clone());
                 if let Some(c) = req.class {
@@ -85,19 +176,13 @@ impl<'a> RequestModel<'a> {
                 }
                 Some(m)
             }
-            ModelBackend::Analytic { .. } => None,
+            _ => None,
         };
         RequestModel { backend, sched, class: req.class, guidance: req.guidance, pjrt }
     }
-}
 
-impl Model for RequestModel<'_> {
-    fn prediction(&self) -> Prediction {
-        Prediction::Noise
-    }
-
-    fn eval(&self, x: &Tensor, t: f64) -> Tensor {
-        match self.backend {
+    fn eval_backend(&self, backend: &ModelBackend, x: &Tensor, t: f64) -> Tensor {
+        match backend {
             ModelBackend::Pjrt(_) => self.pjrt.as_ref().unwrap().eval(x, t),
             ModelBackend::Analytic { gm, class_components } => {
                 let subset = self.class.map(|c| class_components[c].as_slice());
@@ -110,7 +195,46 @@ impl Model for RequestModel<'_> {
                     _ => cond,
                 }
             }
+            ModelBackend::Chaos { inner, cfg, faults } => {
+                // Draw the whole fault tuple in one lock scope — the same
+                // number of draws per eval whether or not faults fire — and
+                // release the lock before acting, so an injected panic can
+                // never poison the shared fault stream.
+                let (sleep, boom, nan_row) = {
+                    let mut rng = faults.lock().unwrap();
+                    let sleep = rng.uniform() < cfg.latency_rate;
+                    let boom = rng.uniform() < cfg.panic_rate;
+                    let nan = rng.uniform() < cfg.nan_rate;
+                    let row = rng.below(x.batch().max(1));
+                    (sleep, boom, nan.then_some(row))
+                };
+                if sleep {
+                    std::thread::sleep(Duration::from_micros(cfg.latency_us));
+                }
+                if boom {
+                    panic!("chaos: injected model panic");
+                }
+                let mut out = self.eval_backend(inner, x, t);
+                if let Some(row) = nan_row {
+                    if row < out.batch() {
+                        for v in out.row_mut(row) {
+                            *v = f64::NAN;
+                        }
+                    }
+                }
+                out
+            }
         }
+    }
+}
+
+impl Model for RequestModel<'_> {
+    fn prediction(&self) -> Prediction {
+        Prediction::Noise
+    }
+
+    fn eval(&self, x: &Tensor, t: f64) -> Tensor {
+        self.eval_backend(self.backend, x, t)
     }
 
     fn dim(&self) -> usize {
@@ -131,11 +255,55 @@ struct QueuedJob {
     batch_key: Option<String>,
     reply: mpsc::Sender<SampleResponse>,
     enqueued: Instant,
+    /// Absolute deadline resolved at admission; `None` = no deadline.
+    deadline: Option<Instant>,
 }
 
 /// Distinct solver configs are few in practice; the cap only guards against
 /// a hostile client cycling order schedules to grow the map unboundedly.
 const PLAN_CACHE_CAP: usize = 256;
+
+/// Last-use LRU cache of compiled plans. A u64 logical clock stamps every
+/// hit and insert; eviction removes the entry with the oldest stamp, so a
+/// hot plan survives arbitrary churn of one-shot configs (the previous
+/// arbitrary-eviction policy could dump the hottest plan).
+struct PlanCache {
+    cap: usize,
+    clock: u64,
+    map: HashMap<String, (Arc<SamplePlan>, u64)>,
+}
+
+impl PlanCache {
+    fn new(cap: usize) -> PlanCache {
+        PlanCache { cap: cap.max(1), clock: 0, map: HashMap::new() }
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn get(&mut self, key: &str) -> Option<Arc<SamplePlan>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.map.get_mut(key).map(|e| {
+            e.1 = clock;
+            Arc::clone(&e.0)
+        })
+    }
+
+    fn insert(&mut self, key: String, plan: Arc<SamplePlan>) {
+        self.clock += 1;
+        if self.map.len() >= self.cap && !self.map.contains_key(&key) {
+            // O(n) scan is fine at this cap; eviction is rare by design.
+            let victim = self.map.iter().min_by_key(|(_, v)| v.1).map(|(k, _)| k.clone());
+            if let Some(k) = victim {
+                self.map.remove(&k);
+            }
+        }
+        self.map.insert(key, (plan, self.clock));
+    }
+}
 
 struct Inner {
     queue: Mutex<VecDeque<QueuedJob>>,
@@ -147,8 +315,11 @@ struct Inner {
     /// Shared sampling plans keyed by [`plan_key`]: concurrent workers
     /// serving identically-configured requests execute from one
     /// `Arc<SamplePlan>` instead of re-deriving coefficients per request.
-    plans: Mutex<HashMap<String, Arc<SamplePlan>>>,
+    plans: Mutex<PlanCache>,
     shutdown: AtomicBool,
+    /// Live worker handles, joined by [`Service::shutdown`]. The supervisor
+    /// pushes replacements here as it respawns panicked workers.
+    handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 /// The running service (clone to share).
@@ -167,39 +338,64 @@ impl Service {
             backend,
             sched: VpLinear::default(),
             metrics: Mutex::new(Metrics::default()),
-            plans: Mutex::new(HashMap::new()),
+            plans: Mutex::new(PlanCache::new(PLAN_CACHE_CAP)),
             shutdown: AtomicBool::new(false),
+            handles: Mutex::new(Vec::new()),
         });
         for i in 0..inner.cfg.workers {
-            let inner = Arc::clone(&inner);
-            std::thread::Builder::new()
-                .name(format!("sampler-{i}"))
-                .spawn(move || worker_loop(inner))
-                .expect("spawn sampler worker");
+            spawn_worker(&inner, i);
         }
         Service { inner }
     }
 
-    /// Submit a request. Applies admission control: invalid requests and a
-    /// full queue are rejected immediately (backpressure).
-    pub fn submit(&self, req: SampleRequest) -> Result<mpsc::Receiver<SampleResponse>> {
-        let mut metrics = self.inner.metrics.lock().unwrap();
-        metrics.submitted += 1;
-        if let Err(e) = req.validate(self.inner.cfg.max_batch) {
-            metrics.rejected += 1;
-            return Err(e);
+    /// Submit a request. Applies admission control: invalid requests, a full
+    /// queue (backpressure), and a shut-down service are rejected
+    /// immediately with the typed response they would otherwise have
+    /// received on the channel.
+    pub fn submit(
+        &self,
+        req: SampleRequest,
+    ) -> Result<mpsc::Receiver<SampleResponse>, SampleResponse> {
+        {
+            let mut metrics = self.inner.metrics.lock().unwrap();
+            metrics.submitted += 1;
+            if self.inner.shutdown.load(Ordering::SeqCst) {
+                metrics.rejected += 1;
+                metrics.failures_by_kind[FailureKind::BackendError.index()] += 1;
+                return Err(SampleResponse::failure(
+                    FailureKind::BackendError,
+                    "service is shut down".into(),
+                ));
+            }
+            if let Err(e) = req.validate(self.inner.cfg.max_batch) {
+                metrics.rejected += 1;
+                metrics.failures_by_kind[FailureKind::InvalidRequest.index()] += 1;
+                return Err(SampleResponse::failure(
+                    FailureKind::InvalidRequest,
+                    format!("{e:#}"),
+                ));
+            }
         }
-        drop(metrics);
 
         let (tx, rx) = mpsc::channel();
         let (opts, batch_key) = admission_setup(&self.inner, &req);
+        let enqueued = Instant::now();
+        let deadline = resolve_deadline_ms(&self.inner.cfg, &req)
+            .map(|ms| enqueued + Duration::from_millis(ms));
         {
             let mut q = self.inner.queue.lock().unwrap();
             if q.len() >= self.inner.cfg.queue_cap {
-                self.inner.metrics.lock().unwrap().rejected += 1;
-                return Err(anyhow!("queue full ({} pending)", q.len()));
+                let pending = q.len();
+                drop(q);
+                let mut metrics = self.inner.metrics.lock().unwrap();
+                metrics.rejected += 1;
+                metrics.failures_by_kind[FailureKind::QueueFull.index()] += 1;
+                return Err(SampleResponse::failure(
+                    FailureKind::QueueFull,
+                    format!("queue full ({pending} pending)"),
+                ));
             }
-            q.push_back(QueuedJob { req, opts, batch_key, reply: tx, enqueued: Instant::now() });
+            q.push_back(QueuedJob { req, opts, batch_key, reply: tx, enqueued, deadline });
         }
         // notify_all, not notify_one: a lingering batch assembler waits on
         // this same condvar and would otherwise swallow the only wakeup
@@ -209,13 +405,34 @@ impl Service {
         Ok(rx)
     }
 
-    /// Submit and wait for the result.
+    /// Submit and wait for the result. The wait itself is bounded by the
+    /// request deadline (plus a grace window for a job admitted just inside
+    /// its deadline to finish computing), so a stuck worker can't hang the
+    /// caller.
     pub fn sample_blocking(&self, req: SampleRequest) -> SampleResponse {
-        match self.submit(req) {
-            Ok(rx) => rx
-                .recv()
-                .unwrap_or_else(|_| SampleResponse::failure("worker dropped request".into())),
-            Err(e) => SampleResponse::failure(format!("{e:#}")),
+        let deadline_ms = resolve_deadline_ms(&self.inner.cfg, &req);
+        let rx = match self.submit(req) {
+            Ok(rx) => rx,
+            Err(resp) => return resp,
+        };
+        match deadline_ms {
+            None => rx.recv().unwrap_or_else(|_| {
+                SampleResponse::failure(FailureKind::WorkerPanic, "worker dropped request".into())
+            }),
+            Some(ms) => {
+                let grace = Duration::from_millis(self.inner.cfg.drain_deadline_ms.max(1_000));
+                match rx.recv_timeout(Duration::from_millis(ms) + grace) {
+                    Ok(resp) => resp,
+                    Err(mpsc::RecvTimeoutError::Timeout) => SampleResponse::failure(
+                        FailureKind::DeadlineExceeded,
+                        format!("no response within deadline ({ms} ms + grace)"),
+                    ),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => SampleResponse::failure(
+                        FailureKind::WorkerPanic,
+                        "worker dropped request".into(),
+                    ),
+                }
+            }
         }
     }
 
@@ -231,14 +448,126 @@ impl Service {
         self.inner.backend.dim()
     }
 
-    /// Stop the workers (queued jobs are drained first).
+    /// Number of live (not yet finished) worker threads. The supervisor
+    /// keeps this at `cfg.workers`; a retiring thread may transiently still
+    /// count while its replacement is already live.
+    pub fn workers_alive(&self) -> usize {
+        self.inner.handles.lock().unwrap().iter().filter(|h| !h.is_finished()).count()
+    }
+
+    /// Stop the pool: give workers `cfg.drain_deadline_ms` to drain the
+    /// queue, shed whatever is left with typed responses (no receiver is
+    /// ever left hanging), then join every worker. Idempotent.
     pub fn shutdown(&self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
         self.inner.cv.notify_all();
+
+        // Bounded drain: workers keep popping until the flag stops them at
+        // an empty queue.
+        let drain_until =
+            Instant::now() + Duration::from_millis(self.inner.cfg.drain_deadline_ms);
+        while Instant::now() < drain_until {
+            if self.inner.queue.lock().unwrap().is_empty() {
+                break;
+            }
+            self.inner.cv.notify_all();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        // Shed stragglers with a typed response so every receiver resolves.
+        let shed: Vec<QueuedJob> = {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.drain(..).collect()
+        };
+        if !shed.is_empty() {
+            let mut m = self.inner.metrics.lock().unwrap();
+            for _ in &shed {
+                m.record_failure(FailureKind::BackendError);
+            }
+        }
+        for job in shed {
+            let _ = job.reply.send(SampleResponse::failure(
+                FailureKind::BackendError,
+                "service shut down before execution".into(),
+            ));
+        }
+
+        // Join the pool. The shutdown flag is checked under no lock, so a
+        // worker can race past its check and block on the condvar after our
+        // notify — keep re-notifying until each thread actually exits
+        // (spin-join) rather than risking a lost-wakeup deadlock.
+        loop {
+            let handle = {
+                let mut handles = self.inner.handles.lock().unwrap();
+                handles.pop()
+            };
+            let h = match handle {
+                Some(h) => h,
+                None => break,
+            };
+            while !h.is_finished() {
+                self.inner.cv.notify_all();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            if let Err(p) = h.join() {
+                std::panic::resume_unwind(p);
+            }
+        }
     }
 }
 
-fn worker_loop(inner: Arc<Inner>) {
+/// Resolve a request's effective deadline in ms: per-request override, else
+/// the server default; 0 from either source disables it.
+fn resolve_deadline_ms(cfg: &ServerConfig, req: &SampleRequest) -> Option<u64> {
+    let ms = req.deadline_ms.unwrap_or(cfg.default_deadline_ms);
+    if ms == 0 {
+        None
+    } else {
+        Some(ms)
+    }
+}
+
+/// Spawn one worker and record its handle (pruning handles of threads that
+/// already exited, so the vec stays bounded under churn).
+fn spawn_worker(inner: &Arc<Inner>, id: usize) {
+    let arc = Arc::clone(inner);
+    let handle = std::thread::Builder::new()
+        .name(format!("sampler-{id}"))
+        .spawn(move || worker_loop(arc, id))
+        .expect("spawn sampler worker");
+    let mut handles = inner.handles.lock().unwrap();
+    handles.retain(|h| !h.is_finished());
+    handles.push(handle);
+}
+
+/// Supervision: when a worker retires (caught panic ⇒ possibly-corrupt
+/// pooled state) or unwinds past the loop entirely, its drop respawns a
+/// replacement so the pool size is an invariant. No respawn once shutdown
+/// has begun.
+struct RespawnGuard {
+    inner: Arc<Inner>,
+    id: usize,
+    retire: bool,
+}
+
+impl Drop for RespawnGuard {
+    fn drop(&mut self) {
+        if self.inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if self.retire || std::thread::panicking() {
+            // `if let Ok`: never double-panic in a Drop over a metrics lock
+            // that the panicking thread might have poisoned.
+            if let Ok(mut m) = self.inner.metrics.lock() {
+                m.worker_restarts += 1;
+            }
+            spawn_worker(&self.inner, self.id);
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>, id: usize) {
+    let mut guard = RespawnGuard { inner: Arc::clone(&inner), id, retire: false };
     // One pooled workspace per worker, reused across every batched run it
     // executes (the `workspace_reuses` metric counts successful reuse).
     let mut scratch = BatchWorkspace::new();
@@ -255,15 +584,49 @@ fn worker_loop(inner: Arc<Inner>) {
                 q = inner.cv.wait(q).unwrap();
             }
         };
-        match batch_setup(&inner, &job) {
+        let job = match shed_if_expired(&inner, job) {
+            Some(j) => j,
+            None => continue,
+        };
+        let tainted = match batch_setup(&inner, &job) {
             Some((opts, plan, key)) => {
                 let mut jobs = vec![job];
                 gather_batch(&inner, &key, &mut jobs);
-                execute_batch(&inner, &mut scratch, jobs, &opts, &plan);
+                execute_batch(&inner, &mut scratch, jobs, &opts, &plan)
             }
             None => execute_solo(&inner, job),
+        };
+        if tainted {
+            // A caught panic may have left the pooled workspace (or any
+            // worker-local state) inconsistent: retire fail-stop and let
+            // the supervisor bring up a clean replacement.
+            guard.retire = true;
+            return;
         }
     }
+}
+
+/// Shed `job` with a typed `DeadlineExceeded` response if its deadline has
+/// passed; expired jobs are never executed.
+fn shed_if_expired(inner: &Inner, job: QueuedJob) -> Option<QueuedJob> {
+    let expired = job.deadline.is_some_and(|d| Instant::now() >= d);
+    if expired {
+        shed_expired(inner, job);
+        None
+    } else {
+        Some(job)
+    }
+}
+
+fn shed_expired(inner: &Inner, job: QueuedJob) {
+    let waited = job.enqueued.elapsed();
+    inner.metrics.lock().unwrap().record_failure(FailureKind::DeadlineExceeded);
+    let mut resp = SampleResponse::failure(
+        FailureKind::DeadlineExceeded,
+        format!("deadline exceeded after {}us in queue", waited.as_micros()),
+    );
+    resp.queue_us = waited.as_micros() as u64;
+    let _ = job.reply.send(resp);
 }
 
 /// Resolve the batched-execution setup for a popped job from its
@@ -305,29 +668,46 @@ fn admission_setup(
 /// Pull queued jobs whose batch key matches `key` into `jobs`, bounded by
 /// `max_batch` total rows. With a linger window configured, waits up to the
 /// deadline for more same-key arrivals; with the default of 0 this is a
-/// single opportunistic scan of what is already queued.
+/// single opportunistic scan of what is already queued. Expired same-key
+/// jobs found during the scan are shed, not absorbed.
 fn gather_batch(inner: &Inner, key: &str, jobs: &mut Vec<QueuedJob>) {
     let mut rows: usize = jobs.iter().map(|j| j.req.n).sum();
     if rows >= inner.cfg.max_batch {
         return;
     }
-    let deadline = Instant::now() + Duration::from_micros(inner.cfg.batch_linger_us);
+    let mut deadline = Instant::now() + Duration::from_micros(inner.cfg.batch_linger_us);
+    // Never linger past a member's request deadline: waiting longer only
+    // adds latency to a job that is already out of slack.
+    for j in jobs.iter() {
+        if let Some(d) = j.deadline {
+            deadline = deadline.min(d);
+        }
+    }
     let mut q = inner.queue.lock().unwrap();
     loop {
         let mut i = 0;
         while i < q.len() {
-            if rows + q[i].req.n <= inner.cfg.max_batch
-                && q[i].batch_key.as_deref() == Some(key)
-            {
-                let j = q.remove(i).expect("index in range");
-                rows += j.req.n;
-                jobs.push(j);
-                if rows >= inner.cfg.max_batch {
-                    return;
+            if q[i].batch_key.as_deref() == Some(key) {
+                if q[i].deadline.is_some_and(|d| Instant::now() >= d) {
+                    // Queue lock → metrics lock is the allowed order.
+                    let j = q.remove(i).expect("index in range");
+                    shed_expired(inner, j);
+                    continue;
                 }
-            } else {
-                i += 1;
+                if rows + q[i].req.n <= inner.cfg.max_batch {
+                    let j = q.remove(i).expect("index in range");
+                    rows += j.req.n;
+                    jobs.push(j);
+                    if let Some(d) = jobs.last().and_then(|j| j.deadline) {
+                        deadline = deadline.min(d);
+                    }
+                    if rows >= inner.cfg.max_batch {
+                        return;
+                    }
+                    continue;
+                }
             }
+            i += 1;
         }
         if inner.shutdown.load(Ordering::SeqCst) {
             return;
@@ -346,16 +726,35 @@ fn gather_batch(inner: &Inner, key: &str, jobs: &mut Vec<QueuedJob>) {
     }
 }
 
+/// Best-effort stringification of a panic payload for the failure message.
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
 /// Execute a batch of same-key jobs in lockstep from the shared plan,
 /// record per-request metrics, and reply to every member. A batch of one
 /// still runs here: it reuses the worker's pooled workspace.
+///
+/// Returns `true` if the run panicked (the worker must retire). On a
+/// mid-batch panic the cohort is quarantined: every member is re-run solo,
+/// so only the member whose evaluation actually faults fails and the rest
+/// produce output bit-identical to a fault-free run (the solo path executes
+/// the same plan). On a clean run, each member's output rows are checked
+/// for finiteness on the stacked tensor; non-finite members fail
+/// individually while their cohort completes.
 fn execute_batch(
     inner: &Inner,
     scratch: &mut BatchWorkspace,
     jobs: Vec<QueuedJob>,
     opts: &SampleOptions,
     plan: &SamplePlan,
-) {
+) -> bool {
     let queue_times: Vec<Duration> = jobs.iter().map(|j| j.enqueued.elapsed()).collect();
     let started = Instant::now();
     // All members share conditioning (the batch key guarantees it), so one
@@ -368,8 +767,50 @@ fn execute_batch(
         .collect();
     let refs: Vec<&Tensor> = inits.iter().collect();
     let reuses_before = scratch.reuses();
-    let results = sample_batch_with_plan(&model, &inner.sched, &refs, opts, plan, scratch);
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        sample_batch_with_plan(&model, &inner.sched, &refs, opts, plan, scratch)
+    }));
     let compute_time = started.elapsed();
+
+    let results = match outcome {
+        Ok(results) => results,
+        Err(payload) => {
+            let msg = panic_message(payload.as_ref());
+            if jobs.len() > 1 {
+                // Quarantine: re-run every member solo so only the actual
+                // culprit fails; the others stay bit-identical to a clean
+                // run (solo executes the same plan).
+                inner.metrics.lock().unwrap().batch_retries += jobs.len() as u64;
+                for job in jobs {
+                    let _ = execute_solo(inner, job);
+                }
+            } else {
+                // A batch of one has no cohort to protect; fail it typed.
+                let job = jobs.into_iter().next().expect("non-empty batch");
+                let resp = SampleResponse::failure(
+                    FailureKind::WorkerPanic,
+                    format!("worker panicked during execution: {msg}"),
+                );
+                finish_solo(inner, job, resp, queue_times[0], compute_time);
+            }
+            return true;
+        }
+    };
+
+    // Per-member finiteness on the stacked output: kernels in the planned
+    // path are row-independent, so a NaN/Inf row can only have poisoned the
+    // member that owns it — quarantine exactly those members.
+    let finite: Vec<bool> = {
+        let stacked = scratch.stacked();
+        let mut row = 0usize;
+        jobs.iter()
+            .map(|j| {
+                let ok = stacked.rows_finite(row, j.req.n);
+                row += j.req.n;
+                ok
+            })
+            .collect()
+    };
 
     let mut m = inner.metrics.lock().unwrap();
     // The leader's lookup_plan counted its own hit/build; followers were
@@ -377,42 +818,89 @@ fn execute_batch(
     // plan, so count them as hits to keep plan_hits per-request.
     m.plan_hits += jobs.len() as u64 - 1;
     m.record_batch(jobs.len(), scratch.reuses() - reuses_before);
-    for (job, (r, qt)) in jobs.iter().zip(results.iter().zip(&queue_times)) {
-        m.record_completion(job.req.n, r.nfe, *qt, compute_time);
+    for ((job, r), (qt, ok)) in
+        jobs.iter().zip(results.iter()).zip(queue_times.iter().zip(&finite))
+    {
+        if *ok {
+            m.record_completion(job.req.n, r.nfe, *qt, compute_time);
+        } else {
+            m.quarantined_members += 1;
+            m.record_failure(FailureKind::NonFiniteOutput);
+        }
     }
     drop(m);
 
-    for (job, (r, qt)) in jobs.into_iter().zip(results.into_iter().zip(queue_times)) {
-        let resp = SampleResponse {
-            ok: true,
-            error: None,
-            nfe: r.nfe,
-            queue_us: qt.as_micros() as u64,
-            compute_us: compute_time.as_micros() as u64,
-            samples: job.req.return_samples.then(|| r.x.data().to_vec()),
-            dim,
+    for ((job, r), (qt, ok)) in
+        jobs.into_iter().zip(results).zip(queue_times.into_iter().zip(finite))
+    {
+        let mut resp = if ok {
+            SampleResponse::success(
+                r.nfe,
+                job.req.return_samples.then(|| r.x.data().to_vec()),
+                dim,
+            )
+        } else {
+            let mut f = SampleResponse::failure(
+                FailureKind::NonFiniteOutput,
+                "solver produced non-finite output for this request".into(),
+            );
+            f.nfe = r.nfe;
+            f.dim = dim;
+            f
         };
+        resp.queue_us = qt.as_micros() as u64;
+        resp.compute_us = compute_time.as_micros() as u64;
         let _ = job.reply.send(resp);
+    }
+    false
+}
+
+/// The solo path: unplannable methods, parse failures, and quarantined
+/// batch-member retries. Returns `true` if the run panicked (the worker
+/// must retire).
+fn execute_solo(inner: &Inner, job: QueuedJob) -> bool {
+    let queue_time = job.enqueued.elapsed();
+    let started = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        run_request(inner, &job.req, job.opts.as_ref())
+    }));
+    let compute_time = started.elapsed();
+    match outcome {
+        Ok(resp) => {
+            finish_solo(inner, job, resp, queue_time, compute_time);
+            false
+        }
+        Err(payload) => {
+            let resp = SampleResponse::failure(
+                FailureKind::WorkerPanic,
+                format!(
+                    "worker panicked during execution: {}",
+                    panic_message(payload.as_ref())
+                ),
+            );
+            finish_solo(inner, job, resp, queue_time, compute_time);
+            true
+        }
     }
 }
 
-/// The solo path: unplannable methods and parse failures.
-fn execute_solo(inner: &Inner, job: QueuedJob) {
-    let queue_time = job.enqueued.elapsed();
-    let started = Instant::now();
-    let resp = run_request(inner, &job.req, job.opts.as_ref());
-    let compute_time = started.elapsed();
-
-    let mut m = inner.metrics.lock().unwrap();
-    match &resp {
-        r if r.ok => m.record_completion(job.req.n, r.nfe, queue_time, compute_time),
-        _ => m.failed += 1,
+/// Record metrics for a solo outcome, stamp latencies, and reply.
+fn finish_solo(
+    inner: &Inner,
+    job: QueuedJob,
+    mut resp: SampleResponse,
+    queued: Duration,
+    compute: Duration,
+) {
+    {
+        let mut m = inner.metrics.lock().unwrap();
+        match resp.kind {
+            None => m.record_completion(job.req.n, resp.nfe, queued, compute),
+            Some(k) => m.record_failure(k),
+        }
     }
-    drop(m);
-
-    let mut resp = resp;
-    resp.queue_us = queue_time.as_micros() as u64;
-    resp.compute_us = compute_time.as_micros() as u64;
+    resp.queue_us = queued.as_micros() as u64;
+    resp.compute_us = compute.as_micros() as u64;
     let _ = job.reply.send(resp);
 }
 
@@ -425,9 +913,8 @@ fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
     }
     let key = plan_key(&inner.sched, opts);
     {
-        let plans = inner.plans.lock().unwrap();
+        let mut plans = inner.plans.lock().unwrap();
         if let Some(p) = plans.get(&key) {
-            let p = Arc::clone(p);
             drop(plans);
             inner.metrics.lock().unwrap().plan_hits += 1;
             return Some(p);
@@ -442,16 +929,8 @@ fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
         // genuinely new config evicts: a lost race must not shrink the
         // cache.
         if let Some(p) = plans.get(&key) {
-            (Arc::clone(p), false)
+            (p, false)
         } else {
-            if plans.len() >= PLAN_CACHE_CAP {
-                // Evict one arbitrary entry: bounds memory without dumping
-                // every hot plan the way a wholesale clear would under a
-                // client churning distinct schedules.
-                if let Some(stale) = plans.keys().next().cloned() {
-                    plans.remove(&stale);
-                }
-            }
             plans.insert(key, Arc::clone(&built));
             (built, true)
         }
@@ -467,7 +946,7 @@ fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
 }
 
 /// Resolve a request's full solver options against the server defaults.
-fn build_opts(inner: &Inner, req: &SampleRequest) -> Result<SampleOptions> {
+fn build_opts(inner: &Inner, req: &SampleRequest) -> anyhow::Result<SampleOptions> {
     let method = req.parsed_method()?;
     let mut opts = SampleOptions::new(method, req.steps);
     opts.spacing = inner.cfg.spacing;
@@ -496,7 +975,9 @@ fn run_request(
         Some(o) => o.clone(),
         None => match build_opts(inner, req) {
             Ok(o) => o,
-            Err(e) => return SampleResponse::failure(format!("{e:#}")),
+            Err(e) => {
+                return SampleResponse::failure(FailureKind::InvalidRequest, format!("{e:#}"))
+            }
         },
     };
     let model = RequestModel::new(&inner.backend, &inner.sched, req);
@@ -504,18 +985,24 @@ fn run_request(
 
     let mut rng = Rng::seed_from(req.seed);
     let x_t = rng.normal_tensor(&[req.n, dim]);
-    // Plannable configs took the batched path; this runs the rest.
+    // Plannable configs take the planned path inside `sample` too, so a
+    // quarantined batch member re-run here is bit-identical to its batch.
     let result = sample(&model, &inner.sched, &x_t, &opts);
 
-    SampleResponse {
-        ok: true,
-        error: None,
-        nfe: result.nfe,
-        queue_us: 0,
-        compute_us: 0,
-        samples: req.return_samples.then(|| result.x.data().to_vec()),
-        dim,
+    if !result.x.rows_finite(0, req.n) {
+        let mut f = SampleResponse::failure(
+            FailureKind::NonFiniteOutput,
+            "solver produced non-finite output for this request".into(),
+        );
+        f.nfe = result.nfe;
+        f.dim = dim;
+        return f;
     }
+    SampleResponse::success(
+        result.nfe,
+        req.return_samples.then(|| result.x.data().to_vec()),
+        dim,
+    )
 }
 
 #[cfg(test)]
@@ -554,10 +1041,12 @@ mod tests {
         let bad = SampleRequest { n: 0, ..Default::default() };
         let r = svc.sample_blocking(bad);
         assert!(!r.ok);
+        assert_eq!(r.kind, Some(FailureKind::InvalidRequest));
         let bad2 = SampleRequest { method: "nope".into(), ..Default::default() };
         assert!(!svc.sample_blocking(bad2).ok);
         let m = svc.metrics_json();
         assert_eq!(m.get("rejected").unwrap().as_f64(), Some(2.0));
+        assert_eq!(m.get("invalid_request").unwrap().as_f64(), Some(2.0));
         svc.shutdown();
     }
 
@@ -616,7 +1105,10 @@ mod tests {
                 ..Default::default()
             }) {
                 Ok(rx) => receivers.push(rx),
-                Err(_) => rejected += 1,
+                Err(resp) => {
+                    assert_eq!(resp.kind, Some(FailureKind::QueueFull));
+                    rejected += 1;
+                }
             }
         }
         assert!(rejected > 0, "queue cap must reject under overload");
@@ -718,6 +1210,45 @@ mod tests {
             assert!(r.ok, "{method}: {:?}", r.error);
             assert!(r.samples.unwrap().iter().all(|v| v.is_finite()), "{method}");
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_lru_keeps_hot_entry_under_churn() {
+        let sched = VpLinear::default();
+        let build = || {
+            let opts = SampleOptions::new(
+                crate::solver::Method::parse("dpmpp-2m").unwrap(),
+                5,
+            );
+            Arc::new(SamplePlan::build(&sched, &opts).unwrap())
+        };
+        let mut cache = PlanCache::new(4);
+        cache.insert("hot".into(), build());
+        for i in 0..20 {
+            // Touch the hot entry between every churn insert: last-use LRU
+            // must keep it while cold one-shot keys cycle through.
+            assert!(cache.get("hot").is_some(), "hot plan evicted at churn {i}");
+            cache.insert(format!("cold-{i}"), build());
+            assert!(cache.len() <= 4, "cap exceeded at churn {i}");
+        }
+        assert!(cache.get("hot").is_some(), "hot plan must survive churn");
+        assert!(cache.get("cold-0").is_none(), "oldest cold key must be evicted");
+    }
+
+    #[test]
+    fn submit_after_shutdown_rejected_with_typed_response() {
+        let svc = analytic_service(1, 4);
+        svc.shutdown();
+        let r = svc.submit(SampleRequest::default());
+        match r {
+            Err(resp) => {
+                assert!(!resp.ok);
+                assert_eq!(resp.kind, Some(FailureKind::BackendError));
+            }
+            Ok(_) => panic!("submit after shutdown must be rejected"),
+        }
+        // Shutdown is idempotent.
         svc.shutdown();
     }
 }

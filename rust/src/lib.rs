@@ -37,6 +37,7 @@ pub mod config;
 pub mod evalharness;
 pub mod coordinator;
 pub mod json;
+pub mod log;
 pub mod numerics;
 pub mod rng;
 pub mod runtime;

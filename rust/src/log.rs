@@ -1,0 +1,40 @@
+//! Minimal leveled logging to stderr.
+//!
+//! The offline registry carries no `log`/`tracing` crates, so the serving
+//! stack uses this shim: `log::info!` / `log::warn!` with the familiar
+//! `format!` interface, written straight to stderr with a level prefix.
+//! Call sites import it with `use crate::log;` (or `use unipc::log;` from
+//! binaries) and read exactly like the ecosystem macros.
+
+/// Write one formatted record to stderr (macro plumbing; prefer the
+/// [`info!`](crate::__log_info) / [`warn!`](crate::__log_warn) macros).
+pub fn emit(level: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{level}] {args}");
+}
+
+/// `log::info!` — informational record to stderr.
+#[macro_export]
+macro_rules! __log_info {
+    ($($arg:tt)*) => {
+        $crate::log::emit("INFO", format_args!($($arg)*))
+    };
+}
+
+/// `log::warn!` — warning record to stderr.
+#[macro_export]
+macro_rules! __log_warn {
+    ($($arg:tt)*) => {
+        $crate::log::emit("WARN", format_args!($($arg)*))
+    };
+}
+
+pub use crate::{__log_info as info, __log_warn as warn};
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_format_without_panicking() {
+        crate::log::info!("value = {}", 42);
+        crate::log::warn!("{} + {} = {}", 1, 2, 1 + 2);
+    }
+}

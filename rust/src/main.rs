@@ -15,6 +15,7 @@ use unipc::analytic::datasets::{dataset, DatasetSpec};
 use unipc::cli::{usage, Args, OptSpec};
 use unipc::config::ServerConfig;
 use unipc::coordinator::{ModelBackend, SampleRequest, Service};
+use unipc::log;
 use unipc::runtime::{EngineOptions, PjrtHandle};
 use unipc::server::{Client, Server};
 
@@ -104,6 +105,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "weights", help: ".upw weights path", default: None },
                     OptSpec { name: "workers", help: "sampler threads", default: Some("4") },
                     OptSpec { name: "max-batch", help: "max rows per model call", default: Some("64") },
+                    OptSpec { name: "deadline-ms", help: "default request deadline (0 = none)", default: Some("30000") },
+                    OptSpec { name: "drain-deadline-ms", help: "shutdown drain bound", default: Some("2000") },
                     OptSpec { name: "analytic", help: "force the analytic backend", default: None },
                 ],
             )

@@ -10,6 +10,7 @@ use crate::coordinator::SampleRequest;
 use crate::rng::Rng;
 use crate::stats::LatencyDigest;
 use anyhow::Result;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -38,11 +39,14 @@ pub struct LoadReport {
     pub latency: LatencyDigest,
     /// Achieved throughput in samples (images)/second.
     pub samples_per_sec: f64,
+    /// Non-ok responses broken down by failure kind (wire name); empty
+    /// under a fault-free run.
+    pub failures: BTreeMap<String, u64>,
 }
 
 impl LoadReport {
     pub fn summary(&mut self) -> String {
-        format!(
+        let mut s = format!(
             "sent={} ok={} rejected={} wall={:.2}s thpt={:.1} samples/s lat[{}]",
             self.sent,
             self.ok,
@@ -50,7 +54,11 @@ impl LoadReport {
             self.wall.as_secs_f64(),
             self.samples_per_sec,
             self.latency.summary()
-        )
+        );
+        if !self.failures.is_empty() {
+            s.push_str(&format!(" fails={:?}", self.failures));
+        }
+        s
     }
 }
 
@@ -61,6 +69,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
     let rejected = Arc::new(AtomicU64::new(0));
     let samples = Arc::new(AtomicU64::new(0));
     let latency = Arc::new(Mutex::new(LatencyDigest::new()));
+    let failures: Arc<Mutex<BTreeMap<String, u64>>> = Arc::new(Mutex::new(BTreeMap::new()));
 
     let per_conn = cfg.total / cfg.connections;
     let conn_rps = cfg.rps / cfg.connections as f64;
@@ -72,6 +81,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         let rejected = Arc::clone(&rejected);
         let samples = Arc::clone(&samples);
         let latency = Arc::clone(&latency);
+        let failures = Arc::clone(&failures);
         let seed = cfg.seed;
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut client = Client::connect(&addr)?;
@@ -94,8 +104,13 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
                         samples.fetch_add(req.n as u64, Ordering::Relaxed);
                         latency.lock().unwrap().record(sent.elapsed());
                     }
-                    Ok(_) => {
+                    Ok(resp) => {
                         rejected.fetch_add(1, Ordering::Relaxed);
+                        let kind = resp
+                            .kind
+                            .map(|k| k.as_str().to_string())
+                            .unwrap_or_else(|| "unknown".into());
+                        *failures.lock().unwrap().entry(kind).or_insert(0) += 1;
                     }
                     Err(e) => return Err(e),
                 }
@@ -110,6 +125,9 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
     let latency = Arc::try_unwrap(latency)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+    let failures = Arc::try_unwrap(failures)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_else(|arc| arc.lock().unwrap().clone());
     Ok(LoadReport {
         sent: per_conn * cfg.connections,
         ok: ok.load(Ordering::Relaxed) as usize,
@@ -117,6 +135,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         wall,
         samples_per_sec: samples.load(Ordering::Relaxed) as f64 / wall.as_secs_f64(),
         latency,
+        failures,
     })
 }
 
@@ -155,6 +174,7 @@ mod tests {
         assert_eq!(report.sent, 24);
         assert_eq!(report.ok, 24);
         assert!(report.samples_per_sec > 0.0);
+        assert!(report.failures.is_empty(), "clean run must have no failures");
         assert!(!report.summary().is_empty());
         server.stop();
         svc.shutdown();

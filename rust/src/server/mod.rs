@@ -16,6 +16,7 @@ pub use loadgen::{run_load, LoadConfig, LoadReport};
 
 use crate::coordinator::{SampleRequest, Service};
 use crate::json::{self, Value};
+use crate::log;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -93,6 +94,7 @@ fn dispatch(line: &str, service: &Service) -> Value {
         Err(e) => {
             return Value::obj(vec![
                 ("ok", Value::from(false)),
+                ("kind", Value::from("invalid_request")),
                 ("error", Value::from(format!("bad json: {e}"))),
             ])
         }
@@ -104,11 +106,13 @@ fn dispatch(line: &str, service: &Service) -> Value {
             Ok(req) => service.sample_blocking(req).to_json(),
             Err(e) => Value::obj(vec![
                 ("ok", Value::from(false)),
+                ("kind", Value::from("invalid_request")),
                 ("error", Value::from(format!("{e:#}"))),
             ]),
         },
         other => Value::obj(vec![
             ("ok", Value::from(false)),
+            ("kind", Value::from("invalid_request")),
             ("error", Value::from(format!("unknown op {other:?}"))),
         ]),
     }

@@ -427,6 +427,14 @@ impl BatchWorkspace {
         self.reuses
     }
 
+    /// The stacked `[Σ nᵢ, d]` state tensor of the most recent run. The
+    /// serving layer validates each member's row range on it
+    /// ([`crate::tensor::Tensor::rows_finite`]) to quarantine non-finite
+    /// members without failing their batch cohort.
+    pub fn stacked(&self) -> &Tensor {
+        &self.x
+    }
+
     fn ensure(&mut self, shape: &[usize], rows: usize) {
         let mut reused = self.x.resize_to(shape);
         reused &= self.ws.ensure(shape, rows);

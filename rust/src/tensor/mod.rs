@@ -122,6 +122,18 @@ impl Tensor {
         &mut self.data[i * d..(i + 1) * d]
     }
 
+    /// Whether rows `start..start + len` of a 2-D `[n, d]` tensor contain
+    /// only finite values. This is the serving layer's per-member output
+    /// check on a stacked batch tensor: each request's row range is
+    /// validated independently, so one member's NaN/Inf cannot fail its
+    /// batch cohort.
+    pub fn rows_finite(&self, start: usize, len: usize) -> bool {
+        assert_eq!(self.shape.len(), 2, "rows_finite needs a 2-D tensor");
+        assert!(start + len <= self.shape[0], "row range out of bounds");
+        let d = self.shape[1];
+        self.data[start * d..(start + len) * d].iter().all(|v| v.is_finite())
+    }
+
     /// `self <- a * self`.
     pub fn scale(&mut self, a: f64) {
         for v in &mut self.data {
@@ -526,6 +538,26 @@ mod tests {
     #[should_panic(expected = "incompatible")]
     fn from_vec_shape_mismatch_panics() {
         let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn rows_finite_checks_only_the_requested_range() {
+        let mut t = Tensor::zeros(&[4, 3]);
+        t.row_mut(2)[1] = f64::NAN;
+        assert!(!t.rows_finite(0, 4));
+        assert!(t.rows_finite(0, 2), "rows before the NaN are finite");
+        assert!(!t.rows_finite(2, 1), "the NaN row is flagged");
+        assert!(t.rows_finite(3, 1), "rows after the NaN are finite");
+        t.row_mut(2)[1] = f64::INFINITY;
+        assert!(!t.rows_finite(1, 2), "Inf is non-finite too");
+        assert!(t.rows_finite(4, 0), "empty range at the end is fine");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn rows_finite_rejects_out_of_range() {
+        let t = Tensor::zeros(&[2, 2]);
+        let _ = t.rows_finite(1, 2);
     }
 
     #[test]

@@ -1,0 +1,328 @@
+//! Chaos suite: fault injection against the full serving stack.
+//!
+//! [`ModelBackend::Chaos`] injects panics, NaN output rows, and latency
+//! spikes on a seeded deterministic schedule. These tests prove the serving
+//! invariants the fault-tolerant layer guarantees:
+//!
+//! * every well-formed request gets **exactly one** typed response —
+//!   no hung receivers, no duplicates, no untyped errors;
+//! * requests whose evaluations were fault-free produce output
+//!   **bit-identical** to a clean (chaos-free) run, even when cohort
+//!   members in the same lockstep batch panicked or NaN'd;
+//! * the worker pool **never shrinks**: panicked workers retire and the
+//!   supervisor respawns replacements (`worker_restarts`);
+//! * expired jobs are **shed, not executed**, with typed
+//!   `deadline_exceeded` responses, and shutdown drains or sheds every
+//!   queued job so no receiver is left hanging.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::config::ServerConfig;
+use unipc::coordinator::{
+    silence_injected_panics, ChaosConfig, FailureKind, ModelBackend, SampleRequest, Service,
+};
+
+fn analytic_backend() -> ModelBackend {
+    let spec = DatasetSpec::Cifar10Like;
+    let gm = Arc::new(dataset(spec));
+    let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+    ModelBackend::Analytic { gm, class_components: Arc::new(classes) }
+}
+
+fn chaos_backend(seed: u64, panic_rate: f64, nan_rate: f64) -> ModelBackend {
+    ModelBackend::chaos(
+        analytic_backend(),
+        ChaosConfig { seed, panic_rate, nan_rate, latency_rate: 0.05, latency_us: 200 },
+    )
+}
+
+/// Under injected faults, every request resolves to exactly one typed
+/// response; fault-free requests are bit-identical to a clean run; the
+/// pool self-heals after panics.
+#[test]
+fn chaos_typed_responses_bit_identical_and_pool_survives() {
+    silence_injected_panics();
+    const N: usize = 60;
+    let mk_req = |seed: u64| SampleRequest { n: 1, steps: 8, seed, ..Default::default() };
+
+    // Reference outputs from a fault-free service.
+    let clean = Service::start(
+        ServerConfig { workers: 2, queue_cap: 64, ..Default::default() },
+        analytic_backend(),
+    );
+    let refs: Vec<Vec<f64>> = (0..N as u64)
+        .map(|s| {
+            let r = clean.sample_blocking(mk_req(s));
+            assert!(r.ok, "clean run must succeed: {:?}", r.error);
+            r.samples.unwrap()
+        })
+        .collect();
+    clean.shutdown();
+
+    // The same workload through a chaos backend.
+    let svc = Service::start(
+        ServerConfig { workers: 2, queue_cap: 64, ..Default::default() },
+        chaos_backend(3, 0.04, 0.04),
+    );
+    let mut oks = 0u64;
+    let mut fails = 0u64;
+    for s in 0..N as u64 {
+        let r = svc.sample_blocking(mk_req(s));
+        if r.ok {
+            assert_eq!(r.kind, None);
+            assert_eq!(
+                r.samples.as_ref(),
+                Some(&refs[s as usize]),
+                "fault-free request {s} must be bit-identical to the clean run"
+            );
+            oks += 1;
+        } else {
+            assert!(r.kind.is_some(), "failures must be typed: {:?}", r.error);
+            fails += 1;
+        }
+    }
+    assert_eq!(oks + fails, N as u64, "exactly one response per request");
+    assert!(oks > 0, "some requests must dodge the faults");
+    assert!(fails > 0, "some requests must hit the faults");
+
+    let m = svc.metrics_json();
+    let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(counter("completed"), oks as f64);
+    assert_eq!(counter("failed"), fails as f64);
+    assert_eq!(
+        counter("worker_panic") + counter("non_finite_output"),
+        fails as f64,
+        "every failure is a typed panic or non-finite outcome: {m:?}"
+    );
+    assert!(counter("worker_restarts") > 0.0, "panics must have retired workers: {m:?}");
+
+    // The supervisor restored the pool; the service still serves.
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(svc.workers_alive() >= 2, "pool must never shrink");
+    for s in 0..10u64 {
+        let r = svc.sample_blocking(mk_req(1000 + s));
+        assert!(r.ok || r.kind.is_some());
+    }
+    svc.shutdown();
+}
+
+/// A fault inside a lockstep batch must not poison the cohort: NaN'd
+/// members fail individually; a mid-batch panic re-runs every member solo;
+/// surviving members stay bit-identical to a clean run and every receiver
+/// gets exactly one response.
+#[test]
+fn batch_quarantine_protects_cohort_members() {
+    silence_injected_panics();
+    const BATCH: usize = 12;
+    let mk_req = |seed: u64| SampleRequest { n: 2, steps: 6, seed, ..Default::default() };
+
+    let clean = Service::start(
+        ServerConfig { workers: 1, queue_cap: 256, ..Default::default() },
+        analytic_backend(),
+    );
+    let refs: Vec<Vec<f64>> = (0..BATCH as u64)
+        .map(|s| clean.sample_blocking(mk_req(s)).samples.unwrap())
+        .collect();
+    clean.shutdown();
+
+    // One worker with a generous linger window, so concurrent submissions
+    // coalesce into one lockstep batch that the chaos backend then faults.
+    let svc = Service::start(
+        ServerConfig {
+            workers: 1,
+            queue_cap: 256,
+            batch_linger_us: 50_000,
+            ..Default::default()
+        },
+        chaos_backend(17, 0.05, 0.05),
+    );
+
+    let mut total_ok = 0u64;
+    let mut saw_fault_in_batch = false;
+    for _round in 0..20 {
+        let rxs: Vec<_> = (0..BATCH as u64).map(|s| svc.submit(mk_req(s)).unwrap()).collect();
+        for (s, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response must arrive");
+            assert!(
+                rx.try_recv().is_err(),
+                "exactly one response per request (member {s})"
+            );
+            if resp.ok {
+                assert_eq!(
+                    resp.samples.as_ref(),
+                    Some(&refs[s]),
+                    "surviving member {s} must be bit-identical to the clean run"
+                );
+                total_ok += 1;
+            } else {
+                assert!(resp.kind.is_some(), "member failures must be typed");
+            }
+        }
+        let m = svc.metrics_json();
+        let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap();
+        if (counter("quarantined_members") > 0.0 || counter("batch_retries") > 0.0)
+            && total_ok > 0
+        {
+            saw_fault_in_batch = true;
+            break;
+        }
+    }
+    assert!(
+        saw_fault_in_batch,
+        "chaos must have faulted at least one lockstep batch with survivors: {:?}",
+        svc.metrics_json()
+    );
+    svc.shutdown();
+}
+
+/// Jobs still queued past their deadline are shed with a typed response
+/// and never executed.
+#[test]
+fn expired_jobs_are_shed_with_typed_responses() {
+    let svc = Service::start(
+        ServerConfig { workers: 1, queue_cap: 64, ..Default::default() },
+        analytic_backend(),
+    );
+    // Occupy the single worker with long-running work (generous deadline).
+    let blockers: Vec<_> = (0..3u64)
+        .map(|s| {
+            svc.submit(SampleRequest {
+                n: 8,
+                steps: 800,
+                seed: s,
+                return_samples: false,
+                deadline_ms: Some(120_000),
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(5));
+    // These can't start before the blockers finish, and their 1 ms deadline
+    // expires long before that.
+    let doomed: Vec<_> = (0..5u64)
+        .map(|s| {
+            svc.submit(SampleRequest {
+                n: 1,
+                steps: 5,
+                seed: 100 + s,
+                return_samples: false,
+                deadline_ms: Some(1),
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+
+    for rx in doomed {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("shed response must arrive");
+        assert!(!r.ok);
+        assert_eq!(r.kind, Some(FailureKind::DeadlineExceeded));
+        assert_eq!(r.nfe, 0, "expired jobs must never execute");
+    }
+    for rx in blockers {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("blocker response");
+        assert!(r.ok, "{:?}", r.error);
+    }
+    let m = svc.metrics_json();
+    assert_eq!(m.get("deadline_exceeded").unwrap().as_f64(), Some(5.0));
+    svc.shutdown();
+}
+
+/// Shutdown drains what it can within the drain deadline, sheds the rest
+/// with typed responses, and leaves no receiver hanging.
+#[test]
+fn shutdown_sheds_queued_jobs_and_answers_every_receiver() {
+    let svc = Service::start(
+        ServerConfig {
+            workers: 1,
+            queue_cap: 64,
+            drain_deadline_ms: 1,
+            ..Default::default()
+        },
+        analytic_backend(),
+    );
+    let blocker = svc
+        .submit(SampleRequest {
+            n: 8,
+            steps: 1000,
+            seed: 0,
+            return_samples: false,
+            ..Default::default()
+        })
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    // Distinct step counts ⇒ distinct plan keys, so the worker can't drain
+    // them all as one batch inside the 1 ms window.
+    let queued: Vec<_> = (0..6u64)
+        .map(|s| {
+            svc.submit(SampleRequest {
+                n: 4,
+                steps: 400 + s as usize * 7,
+                seed: s,
+                return_samples: false,
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+
+    svc.shutdown();
+
+    let r = blocker.recv_timeout(Duration::from_secs(120)).expect("blocker answered");
+    assert!(r.ok || r.kind.is_some());
+    let mut sheds = 0;
+    for rx in queued {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("no receiver left hanging");
+        if r.ok {
+            continue; // drained before the deadline
+        }
+        assert_eq!(r.kind, Some(FailureKind::BackendError), "{:?}", r.error);
+        sheds += 1;
+    }
+    assert!(sheds > 0, "the 1 ms drain window cannot drain six multi-step jobs");
+
+    // Post-shutdown submits are rejected, typed; shutdown is idempotent.
+    assert!(svc.submit(SampleRequest::default()).is_err());
+    svc.shutdown();
+}
+
+/// `sample_blocking` must not hang past the request deadline even when the
+/// job is stuck behind a long queue.
+#[test]
+fn sample_blocking_respects_deadline_under_queueing() {
+    let svc = Service::start(
+        ServerConfig { workers: 1, queue_cap: 64, ..Default::default() },
+        analytic_backend(),
+    );
+    let blocker = svc
+        .submit(SampleRequest {
+            n: 8,
+            steps: 1000,
+            seed: 0,
+            return_samples: false,
+            ..Default::default()
+        })
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+
+    let started = Instant::now();
+    let r = svc.sample_blocking(SampleRequest {
+        n: 1,
+        steps: 5,
+        seed: 9,
+        return_samples: false,
+        deadline_ms: Some(1),
+        ..Default::default()
+    });
+    assert!(!r.ok);
+    assert_eq!(r.kind, Some(FailureKind::DeadlineExceeded));
+    assert!(
+        started.elapsed() < Duration::from_secs(60),
+        "blocking call must be bounded by the deadline"
+    );
+    let _ = blocker.recv_timeout(Duration::from_secs(120));
+    svc.shutdown();
+}
