@@ -6,7 +6,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test test-full docs check perf
+.PHONY: build test test-full stress docs check perf
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -17,16 +17,26 @@ test:
 # Release-mode run of the numerically heavy suites: the cross-solver
 # conformance sweep (every method × prediction × spacing, planned vs
 # reference bit-identity), the empirical convergence-order suite
-# (log-error regression against each method's order claim), and the chaos
+# (log-error regression against each method's order claim), the chaos
 # fault-injection suite (panic isolation, deadlines, batch quarantine,
-# pool supervision under 10%-ish injected faults). All suites are sized to
-# also pass inside plain `make test` (debug) so the tier-1 gate exercises
-# them; this target re-runs just these optimized, which is the fast path
-# when iterating on solver numerics or the fault-tolerance layer.
+# pool supervision under 10%-ish injected faults, shard fault isolation),
+# and the sharded-coordinator invariant suite (deterministic routing,
+# shard-count-independent outputs, exact metrics aggregation). All suites
+# are sized to also pass inside plain `make test` (debug) so the tier-1
+# gate exercises them; this target re-runs just these optimized, which is
+# the fast path when iterating on solver numerics or the serving layer.
 test-full:
 	$(CARGO) test --release -q --manifest-path $(MANIFEST) \
 		--test solver_conformance --test solver_convergence \
-		--test fault_injection
+		--test fault_injection --test shard_serving
+
+# Submitter-storm stress run: the shard/chaos concurrency suites in
+# release mode with elevated thread and request counts (UNIPC_STRESS=1).
+# Slower than test-full; run when touching the coordinator's locking,
+# routing, or stealing logic.
+stress:
+	UNIPC_STRESS=1 $(CARGO) test --release -q --manifest-path $(MANIFEST) \
+		--test shard_serving --test fault_injection
 
 # API docs for the crate (README.md links into these module docs).
 docs:
@@ -34,8 +44,10 @@ docs:
 
 # The CI gate: build, clippy with warnings promoted to errors, full test
 # suite (incl. doctests and the equivalence / allocation proofs), the
-# release-mode conformance + convergence + chaos suites, and rustdoc with
-# warnings promoted to errors so doc rot fails fast.
+# release-mode conformance + convergence + chaos + shard suites, and
+# rustdoc with warnings promoted to errors so doc rot fails fast. For a
+# heavier concurrency shakedown of the sharded coordinator, run
+# `make stress` (UNIPC_STRESS=1 submitter storms) on top.
 check:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 	$(CARGO) clippy --all-targets --manifest-path $(MANIFEST) -- -D warnings

@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         backend,
     );
     let server = Server::spawn(svc.clone(), "127.0.0.1:0")?;
-    println!("server : {}", server.addr);
+    println!("server : {} (4 workers across {} shards)", server.addr, svc.shards());
 
     // 3. Correctness cross-check: one guided request through the full stack
     //    vs the same solve computed directly.
@@ -132,7 +132,8 @@ fn main() -> anyhow::Result<()> {
             },
         ),
     ] {
-        let cfg = LoadConfig { rps: 12.0, total: 36, connections: 3, template, seed: 5 };
+        let cfg =
+            LoadConfig { rps: 12.0, total: 36, connections: 3, template, seed: 5, key_mix: 1 };
         let mut report = run_load(&server.addr.to_string(), &cfg)?;
         println!("{label:<32} {}", report.summary());
     }

@@ -16,6 +16,7 @@ use unipc::config::ServerConfig;
 use unipc::coordinator::{
     silence_injected_panics, ChaosConfig, ModelBackend, SampleRequest, Service,
 };
+use unipc::json::Value;
 use unipc::runtime::{EngineOptions, PjrtHandle};
 use unipc::server::{run_load, LoadConfig, Server};
 
@@ -75,6 +76,7 @@ fn run_point(
             ..Default::default()
         },
         seed: 9,
+        key_mix: 1,
     };
     let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
     let mut line = format!(
@@ -118,6 +120,7 @@ fn run_chaos_point(rps: f64, total: usize) -> String {
             nan_rate: 0.10,
             latency_rate: 0.10,
             latency_us: 500,
+            ..ChaosConfig::default()
         },
     );
     let svc = Service::start(
@@ -139,6 +142,7 @@ fn run_chaos_point(rps: f64, total: usize) -> String {
             ..Default::default()
         },
         seed: 9,
+        key_mix: 1,
     };
     let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
     let m = svc.metrics_json();
@@ -154,6 +158,50 @@ fn run_chaos_point(rps: f64, total: usize) -> String {
     server.stop();
     svc.shutdown();
     line
+}
+
+/// One shard-count ablation point: saturating open-loop load at a fixed
+/// worker count, workload fanned across 8 batch keys so a multi-shard
+/// coordinator can actually spread admission. Small cheap requests (n=1,
+/// 5 steps, no sample payload) keep the solver out of the way — the point
+/// measures queue-lock contention, which is what sharding removes.
+/// Returns the printable line plus (requests/s, steals) for the JSON dump.
+fn run_shard_point(shards: usize, total: usize) -> (String, f64, f64) {
+    let (be, kind) = backend(200);
+    let svc = Service::start(
+        ServerConfig { workers: 8, shards, queue_cap: 4096, ..Default::default() },
+        be,
+    );
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let cfg = LoadConfig {
+        rps: 200_000.0, // far past capacity: measures service rate, not offered load
+        total,
+        connections: 32,
+        template: SampleRequest {
+            n: 1,
+            steps: 5,
+            method: "unipc-3".into(),
+            unic: true,
+            seed: 0,
+            return_samples: false,
+            ..Default::default()
+        },
+        seed: 9,
+        key_mix: 8,
+    };
+    let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
+    let rps_achieved = report.ok as f64 / report.wall.as_secs_f64();
+    let m = svc.metrics_json();
+    let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let line = format!(
+        "[{kind}] shards={shards} workers=8 keys=8: {}  req/s={rps_achieved:.0} steals={} batched_runs={}",
+        report.summary(),
+        counter("steals"),
+        counter("batched_runs"),
+    );
+    server.stop();
+    svc.shutdown();
+    (line, rps_achieved, counter("steals"))
 }
 
 fn main() {
@@ -189,4 +237,34 @@ fn main() {
     // Failed requests get typed responses; the pool self-heals.
     println!("-- chaos ablation (10% injected faults, rps=16) --");
     println!("{}", run_chaos_point(16.0, 48));
+
+    // Coordinator sharding (PR 7): fixed 8 workers, saturating load over 8
+    // batch keys, shard count swept. One queue serializes admission + the
+    // assembler scan; sharding splits that lock. Emits
+    // BENCH_serving_shards.json (shard count → req/s, steals) next to
+    // BENCH_hot_path.json for the tracked perf trajectory.
+    println!("-- shard-count ablation (8 workers, saturating, 8 batch keys) --");
+    let mut shard_pairs: Vec<(String, Value)> = Vec::new();
+    let mut baseline_1_shard = 0.0;
+    for shards in [1usize, 2, 4, 8] {
+        let (line, rps, steals) = run_shard_point(shards, 1600);
+        println!("{line}");
+        if shards == 1 {
+            baseline_1_shard = rps;
+        }
+        shard_pairs.push((format!("shards_{shards}_req_per_sec"), rps.into()));
+        shard_pairs.push((format!("shards_{shards}_steals"), steals.into()));
+    }
+    if baseline_1_shard > 0.0 {
+        let best = shard_pairs
+            .iter()
+            .filter(|(k, _)| k.ends_with("req_per_sec"))
+            .filter_map(|(_, v)| v.as_f64())
+            .fold(0.0f64, f64::max);
+        shard_pairs.push(("speedup_best_vs_1_shard".into(), (best / baseline_1_shard).into()));
+    }
+    let pairs: Vec<(&str, Value)> =
+        shard_pairs.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let _ = std::fs::write("BENCH_serving_shards.json", Value::obj(pairs).to_string());
+    println!("wrote BENCH_serving_shards.json");
 }

@@ -27,7 +27,16 @@ pub struct ServerConfig {
     pub batch_linger_us: u64,
     /// Worker threads running sampling loops.
     pub workers: usize,
-    /// Queue capacity; requests beyond it are rejected (backpressure).
+    /// Coordinator shards. Each shard owns its own queue, condvar, and
+    /// worker sub-pool; requests route by `hash(batch_key) % shards`, so a
+    /// batchable cohort always lands on one shard (batching/linger/deadline
+    /// semantics are per shard and unchanged), with cross-shard work
+    /// stealing when a shard runs dry. 0 (the default) auto-sizes to
+    /// `workers.min(4)`; explicit values are clamped to `workers` so every
+    /// shard has at least one home worker.
+    pub shards: usize,
+    /// Queue capacity **per shard**; requests beyond it are rejected
+    /// (backpressure).
     pub queue_cap: usize,
     /// Default per-request deadline in milliseconds (admission to start of
     /// execution), for requests that don't set `deadline_ms` themselves.
@@ -57,6 +66,7 @@ impl Default for ServerConfig {
             batch_wait_us: 200,
             batch_linger_us: 0,
             workers: 4,
+            shards: 0,
             queue_cap: 256,
             default_deadline_ms: 30_000,
             drain_deadline_ms: 2_000,
@@ -98,6 +108,7 @@ impl ServerConfig {
                 "batch_wait_us" => c.batch_wait_us = req_usize(val, k)? as u64,
                 "batch_linger_us" => c.batch_linger_us = req_usize(val, k)? as u64,
                 "workers" => c.workers = req_usize(val, k)?,
+                "shards" => c.shards = req_usize(val, k)?,
                 "queue_cap" => c.queue_cap = req_usize(val, k)?,
                 "default_deadline_ms" => c.default_deadline_ms = req_usize(val, k)? as u64,
                 "drain_deadline_ms" => c.drain_deadline_ms = req_usize(val, k)? as u64,
@@ -130,6 +141,7 @@ impl ServerConfig {
         }
         self.max_batch = args.get_usize("max-batch", self.max_batch).map_err(anyhow::Error::msg)?;
         self.workers = args.get_usize("workers", self.workers).map_err(anyhow::Error::msg)?;
+        self.shards = args.get_usize("shards", self.shards).map_err(anyhow::Error::msg)?;
         self.queue_cap = args.get_usize("queue-cap", self.queue_cap).map_err(anyhow::Error::msg)?;
         self.batch_linger_us = args
             .get_usize("batch-linger-us", self.batch_linger_us as usize)
@@ -147,6 +159,14 @@ impl ServerConfig {
         }
         self.validate()?;
         Ok(self)
+    }
+
+    /// The shard count the service actually runs: an explicit `shards`
+    /// clamped to the worker count (every shard needs a home worker), or
+    /// `workers.min(4)` when unset (0). Always ≥ 1.
+    pub fn effective_shards(&self) -> usize {
+        let n = if self.shards == 0 { self.workers.min(4) } else { self.shards };
+        n.clamp(1, self.workers.max(1))
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -188,11 +208,30 @@ mod tests {
     }
 
     #[test]
+    fn shards_default_and_clamping() {
+        // Unset (0) auto-sizes to workers.min(4).
+        let mut c = ServerConfig::default();
+        assert_eq!(c.shards, 0);
+        assert_eq!(c.effective_shards(), 4, "4 workers ⇒ 4 auto shards");
+        c.workers = 2;
+        assert_eq!(c.effective_shards(), 2);
+        c.workers = 16;
+        assert_eq!(c.effective_shards(), 4, "auto caps at 4");
+        // Explicit values are honored but clamped to the worker count.
+        c.shards = 8;
+        assert_eq!(c.effective_shards(), 8);
+        c.workers = 3;
+        assert_eq!(c.effective_shards(), 3, "no shard without a home worker");
+        c.shards = 1;
+        assert_eq!(c.effective_shards(), 1);
+    }
+
+    #[test]
     fn json_overrides_defaults() {
         let v = json::parse(
             r#"{"addr": "0.0.0.0:9000", "max_batch": 8, "default_method": "dpmpp-2m",
                 "spacing": "time_uniform", "t_end": 0.01, "batch_linger_us": 500,
-                "default_deadline_ms": 250, "drain_deadline_ms": 100}"#,
+                "default_deadline_ms": 250, "drain_deadline_ms": 100, "shards": 2}"#,
         )
         .unwrap();
         let c = ServerConfig::from_json(&v).unwrap();
@@ -203,6 +242,7 @@ mod tests {
         assert_eq!(c.batch_linger_us, 500);
         assert_eq!(c.default_deadline_ms, 250);
         assert_eq!(c.drain_deadline_ms, 100);
+        assert_eq!(c.shards, 2);
         // Untouched defaults survive.
         assert_eq!(c.workers, ServerConfig::default().workers);
     }
@@ -235,11 +275,14 @@ mod tests {
             "ddim".to_string(),
             "--deadline-ms".to_string(),
             "500".to_string(),
+            "--shards".to_string(),
+            "2".to_string(),
         ])
         .unwrap();
         let c = ServerConfig::default().apply_args(&args).unwrap();
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.default_method, "ddim");
         assert_eq!(c.default_deadline_ms, 500);
+        assert_eq!(c.shards, 2);
     }
 }

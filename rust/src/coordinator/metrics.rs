@@ -1,12 +1,19 @@
 //! Serving metrics: counters + latency digests, snapshotted as JSON for the
 //! `stats` op and the bench harness.
+//!
+//! The sharded coordinator keeps **one store per shard** (each behind that
+//! shard's mutex, so recording never crosses shards) and aggregates on
+//! demand with [`Metrics::merge`]. Merging is exact: counters and histogram
+//! buckets add, and latency digests merge at the raw-sample level — the
+//! aggregate never sums or re-bins already-snapshotted percentile fields,
+//! which would be lossy.
 
 use super::request::FailureKind;
 use crate::json::Value;
 use crate::stats::LatencyDigest;
 use std::time::Duration;
 
-/// Mutable metrics store (guarded by the service's mutex).
+/// Mutable metrics store (guarded by the owning shard's mutex).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub submitted: u64,
@@ -39,6 +46,15 @@ pub struct Metrics {
     /// Batch members re-run solo after a mid-batch panic poisoned their
     /// lockstep run.
     pub batch_retries: u64,
+    /// Jobs this shard owned that an idle worker homed on a *different*
+    /// shard popped (cross-shard work stealing). Attributed to the shard
+    /// that owned the queue, so a per-shard snapshot describes that
+    /// shard's traffic.
+    pub steals: u64,
+    /// Histogram of this shard's queue depth observed right after each
+    /// enqueue, in power-of-two buckets: 1, 2, 3–4, 5–8, 9–16, 17–32,
+    /// 33–64, >64. Element-wise summable across shards.
+    pub shard_depth_hist: [u64; 8],
     pub queue: LatencyDigest,
     pub compute: LatencyDigest,
     pub e2e: LatencyDigest,
@@ -79,6 +95,63 @@ impl Metrics {
         self.workspace_reuses += reuses;
     }
 
+    /// Record the queue depth observed right after an enqueue.
+    pub fn record_depth(&mut self, depth: usize) {
+        self.shard_depth_hist[Self::depth_bucket(depth)] += 1;
+    }
+
+    /// Bucket index used by [`Metrics::record_depth`] (public so tests and
+    /// dashboards can compute expected bins).
+    pub fn depth_bucket(depth: usize) -> usize {
+        match depth {
+            0 | 1 => 0,
+            2 => 1,
+            3..=4 => 2,
+            5..=8 => 3,
+            9..=16 => 4,
+            17..=32 => 5,
+            33..=64 => 6,
+            _ => 7,
+        }
+    }
+
+    /// Field-wise merge of another store into this one — the aggregation
+    /// primitive behind the sharded service's global snapshot. Counters and
+    /// histogram buckets add bucket-for-bucket (no re-binning), and the
+    /// latency digests merge their **raw samples**, so percentiles of the
+    /// merged store are exactly the percentiles of the union of samples.
+    /// Summing two `snapshot_json` outputs instead would add percentile
+    /// fields, which is meaningless — aggregate at this level, then
+    /// snapshot.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.submitted += other.submitted;
+        self.rejected += other.rejected;
+        self.completed += other.completed;
+        self.failed += other.failed;
+        self.samples_out += other.samples_out;
+        self.nfe_total += other.nfe_total;
+        self.plan_builds += other.plan_builds;
+        self.plan_hits += other.plan_hits;
+        self.batched_runs += other.batched_runs;
+        self.workspace_reuses += other.workspace_reuses;
+        self.worker_restarts += other.worker_restarts;
+        self.quarantined_members += other.quarantined_members;
+        self.batch_retries += other.batch_retries;
+        self.steals += other.steals;
+        for (a, b) in self.batch_size_hist.iter_mut().zip(&other.batch_size_hist) {
+            *a += *b;
+        }
+        for (a, b) in self.shard_depth_hist.iter_mut().zip(&other.shard_depth_hist) {
+            *a += *b;
+        }
+        for (a, b) in self.failures_by_kind.iter_mut().zip(&other.failures_by_kind) {
+            *a += *b;
+        }
+        self.queue.merge(&other.queue);
+        self.compute.merge(&other.compute);
+        self.e2e.merge(&other.e2e);
+    }
+
     pub fn snapshot_json(&mut self) -> Value {
         let mut pairs = vec![
             ("submitted", Value::from(self.submitted as f64)),
@@ -97,6 +170,13 @@ impl Metrics {
                 ),
             ),
             ("workspace_reuses", Value::from(self.workspace_reuses as f64)),
+            ("steals", Value::from(self.steals as f64)),
+            (
+                "shard_depth_hist",
+                Value::Arr(
+                    self.shard_depth_hist.iter().map(|&c| Value::Num(c as f64)).collect(),
+                ),
+            ),
         ];
         for k in FailureKind::ALL {
             pairs.push((k.as_str(), Value::from(self.failures_by_kind[k.index()] as f64)));
@@ -157,6 +237,79 @@ mod tests {
         let mut m = Metrics::default();
         let s = m.snapshot_json().to_string();
         assert!(crate::json::parse(&s).is_ok());
+    }
+
+    /// The sharded aggregator must be lossless: merging two stores and
+    /// snapshotting must equal recording everything into one store —
+    /// counters and histograms bucket-for-bucket, percentiles from the
+    /// union of raw samples (NOT the sum of per-store percentile fields,
+    /// which is what a snapshot-level aggregator would lossily produce).
+    #[test]
+    fn merge_is_exact_no_lossy_rebinning() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        let mut whole = Metrics::default();
+        // Skewed latencies: percentiles of the union differ wildly from
+        // any per-store percentile, so a lossy aggregator can't pass.
+        for us in [10u64, 20, 30] {
+            a.record_completion(2, 8, Duration::from_micros(us), Duration::from_micros(us));
+            whole.record_completion(2, 8, Duration::from_micros(us), Duration::from_micros(us));
+        }
+        for us in [10_000u64, 20_000] {
+            b.record_completion(1, 5, Duration::from_micros(us), Duration::from_micros(us));
+            whole.record_completion(1, 5, Duration::from_micros(us), Duration::from_micros(us));
+        }
+        a.record_batch(3, 1);
+        whole.record_batch(3, 1);
+        b.record_batch(3, 0);
+        b.record_batch(12, 1);
+        whole.record_batch(3, 0);
+        whole.record_batch(12, 1);
+        a.record_depth(1);
+        whole.record_depth(1);
+        b.record_depth(40);
+        whole.record_depth(40);
+        a.record_failure(FailureKind::WorkerPanic);
+        whole.record_failure(FailureKind::WorkerPanic);
+        a.steals = 2;
+        whole.steals = 2;
+
+        let mut merged = Metrics::default();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.completed, whole.completed);
+        assert_eq!(merged.samples_out, whole.samples_out);
+        assert_eq!(merged.nfe_total, whole.nfe_total);
+        assert_eq!(merged.failed, whole.failed);
+        assert_eq!(merged.steals, whole.steals);
+        assert_eq!(merged.batch_size_hist, whole.batch_size_hist);
+        assert_eq!(merged.shard_depth_hist, whole.shard_depth_hist);
+        assert_eq!(merged.failures_by_kind, whole.failures_by_kind);
+        let (ms, mw) = (merged.snapshot_json(), whole.snapshot_json());
+        // Exact percentiles prove the digests merged raw samples: the p50
+        // of the union (30us) is not derivable from the two stores' own
+        // p50s (20us and 10000+us).
+        for key in ["e2e_p50_us", "e2e_p99_us", "queue_p50_us", "e2e_mean_us"] {
+            assert_eq!(ms.get(key), mw.get(key), "{key}");
+        }
+        assert_eq!(ms, mw, "merged snapshot must equal the single-store snapshot");
+    }
+
+    #[test]
+    fn depth_buckets_are_power_of_two() {
+        for (depth, bucket) in
+            [(0, 0), (1, 0), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3), (9, 4), (16, 4), (17, 5), (33, 6), (64, 6), (65, 7), (10_000, 7)]
+        {
+            assert_eq!(Metrics::depth_bucket(depth), bucket, "depth {depth}");
+        }
+        let mut m = Metrics::default();
+        m.record_depth(7);
+        assert_eq!(m.shard_depth_hist[3], 1);
+        let snap = m.snapshot_json();
+        let hist = snap.get("shard_depth_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 8);
+        assert_eq!(hist[3].as_f64(), Some(1.0));
+        assert_eq!(snap.get("steals").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

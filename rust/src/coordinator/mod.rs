@@ -7,15 +7,18 @@
 //! * [`request`] — wire-level request/response types + JSON codecs,
 //!   including the structured [`FailureKind`] failure taxonomy and
 //!   per-request deadlines.
-//! * [`service`] — the supervised worker pool; typed admission rejection
-//!   (invalid/queue-full/shut-down); deterministic per-request seeds; the
-//!   batch assembler that coalesces same-plan requests into lockstep
-//!   batched runs over a shared `Arc<SamplePlan>` and per-worker pooled
-//!   workspaces; panic isolation + worker respawn, deadline shedding,
-//!   per-member output quarantine, and the seeded chaos-injection backend
-//!   ([`service::ChaosConfig`]).
-//! * [`metrics`] — counters (including per-failure-kind) + latency
-//!   digests, snapshotted as JSON.
+//! * [`service`] — the **sharded** supervised worker pool: N partitions
+//!   (queue + condvar + worker sub-pool each) with batch-key-hash routing
+//!   ([`service::shard_for_key`]) and cross-shard work stealing; typed
+//!   admission rejection (invalid/queue-full/shut-down); deterministic
+//!   per-request seeds; the batch assembler that coalesces same-plan
+//!   requests into lockstep batched runs over a shared `Arc<SamplePlan>`
+//!   and per-worker pooled workspaces; panic isolation + worker respawn,
+//!   deadline shedding, per-member output quarantine, and the seeded
+//!   chaos-injection backend ([`service::ChaosConfig`]).
+//! * [`metrics`] — per-shard counters (including per-failure-kind) +
+//!   latency digests, snapshotted as JSON and merged exactly
+//!   ([`Metrics::merge`]) into the service-wide aggregate.
 
 pub mod metrics;
 pub mod request;
@@ -23,4 +26,6 @@ pub mod service;
 
 pub use metrics::Metrics;
 pub use request::{FailureKind, SampleRequest, SampleResponse};
-pub use service::{silence_injected_panics, ChaosConfig, ModelBackend, Service};
+pub use service::{
+    shard_for_key, silence_injected_panics, ChaosConfig, ModelBackend, Service,
+};

@@ -56,6 +56,15 @@ impl SampleRequest {
         Method::parse(&self.method).ok_or_else(|| anyhow!("unknown method '{}'", self.method))
     }
 
+    /// Model-conditioning suffix of the batch key: batch members share one
+    /// model view, so class and guidance must match exactly (guidance
+    /// compared by bits). The full batch key (`plan_key` + this suffix)
+    /// also drives shard routing, so every member of a batchable cohort
+    /// lands on the same coordinator shard.
+    pub fn conditioning_key(&self) -> String {
+        format!("|class={:?}|g={:?}", self.class, self.guidance.map(f64::to_bits))
+    }
+
     pub fn validate(&self, max_n: usize) -> Result<()> {
         if self.n == 0 || self.n > max_n {
             bail!("n must be in 1..={max_n}");
@@ -323,6 +332,20 @@ mod tests {
         assert!(r.validate(64).is_err(), "guidance without class");
         r = SampleRequest { method: "bogus".into(), ..Default::default() };
         assert!(r.validate(64).is_err());
+    }
+
+    #[test]
+    fn conditioning_key_separates_model_views() {
+        let base = SampleRequest::default();
+        let classed = SampleRequest { class: Some(1), ..Default::default() };
+        let guided =
+            SampleRequest { class: Some(1), guidance: Some(2.0), ..Default::default() };
+        assert_eq!(base.conditioning_key(), base.conditioning_key());
+        assert_ne!(base.conditioning_key(), classed.conditioning_key());
+        assert_ne!(classed.conditioning_key(), guided.conditioning_key());
+        // Seed/steps don't condition the model and must not split batches.
+        let reseeded = SampleRequest { seed: 99, steps: 50, ..Default::default() };
+        assert_eq!(base.conditioning_key(), reseeded.conditioning_key());
     }
 
     #[test]

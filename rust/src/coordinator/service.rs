@@ -1,5 +1,22 @@
-//! The sampling service: a bounded queue + supervised worker pool running
-//! solver loops, with fault isolation around every execution.
+//! The sampling service: a **sharded** coordinator — N partitions, each
+//! owning its own bounded queue, condvar, and supervised worker sub-pool —
+//! running solver loops with fault isolation around every execution.
+//!
+//! **Sharding.** A single queue mutex serializes admission, the batch
+//! assembler's scan, and deadline shedding across every worker; at the
+//! paper's <10-NFE operating point the per-request solver work is small
+//! enough that this lock, not math, bounds throughput. The coordinator
+//! therefore partitions into `ServerConfig::effective_shards()` shards.
+//! Requests route at admission by `hash(batch_key) % shards`
+//! ([`shard_for_key`]), so every member of a batchable cohort lands on the
+//! same shard and batching/linger/deadline semantics below are per shard
+//! and otherwise unchanged; solo (unplannable) jobs route round-robin.
+//! Worker `i` homes on shard `i % shards` and, when its home queue is
+//! empty, **steals** from the other shards so a skewed key distribution
+//! cannot strand idle workers (`steals` metric, attributed to the shard
+//! the job was stolen from). Metrics are per shard and merged on demand
+//! ([`Metrics::merge`] — exact, raw-sample digest merge); the plan cache
+//! stays global, so a config still compiles exactly once.
 //!
 //! Each worker pops a request and first tries the **batched plan path**:
 //! requests whose batch key matches — same [`plan_key`] *and* same model
@@ -61,17 +78,24 @@ use crate::tensor::Tensor;
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// How long an idle worker sleeps on its home shard's condvar before
+/// re-scanning every shard for stealable work. A submit only notifies the
+/// *routed* shard's condvar, so this bounded wait is what lets an idle
+/// worker discover a hot queue elsewhere; it also bounds shutdown-wakeup
+/// latency.
+const STEAL_POLL: Duration = Duration::from_micros(500);
 
 /// Fault-injection settings for [`ModelBackend::Chaos`]: a seeded,
 /// deterministic fault stream drawn once per model evaluation. Each eval
 /// independently draws a latency spike, a panic, and a NaN'd output row, in
 /// that order, so a given seed produces the same fault schedule regardless
 /// of which faults actually fire.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct ChaosConfig {
     /// Seed for the fault stream (shared across all evals of this backend).
     pub seed: u64,
@@ -82,6 +106,13 @@ pub struct ChaosConfig {
     /// Probability an eval sleeps `latency_us` first.
     pub latency_rate: f64,
     pub latency_us: u64,
+    /// When set, only evaluations conditioned on this class label draw
+    /// faults; every other request passes through untouched (and draws
+    /// nothing from the fault stream). Because the class is part of the
+    /// batch key — and the batch key routes the request — this aims chaos
+    /// at exactly one coordinator shard, which is how the shard-isolation
+    /// tests poison shard A while proving shard B keeps serving.
+    pub target_class: Option<usize>,
 }
 
 /// What evaluates ε_θ for the service.
@@ -196,6 +227,12 @@ impl<'a> RequestModel<'a> {
                 }
             }
             ModelBackend::Chaos { inner, cfg, faults } => {
+                if cfg.target_class.is_some() && cfg.target_class != self.class {
+                    // Untargeted conditioning: pass through without touching
+                    // the fault stream, so targeted requests see the same
+                    // fault schedule regardless of background traffic.
+                    return self.eval_backend(inner, x, t);
+                }
                 // Draw the whole fault tuple in one lock scope — the same
                 // number of draws per eval whether or not faults fire — and
                 // release the lock before acting, so an injected panic can
@@ -305,21 +342,66 @@ impl PlanCache {
     }
 }
 
-struct Inner {
+/// One coordinator partition: a bounded queue, its condvar, and the metrics
+/// store for traffic routed here. Workers home on a shard but steal from
+/// the others when their own queue is dry.
+struct Shard {
     queue: Mutex<VecDeque<QueuedJob>>,
     cv: Condvar,
+    metrics: Mutex<Metrics>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            metrics: Mutex::new(Metrics::default()),
+        }
+    }
+}
+
+/// The shard a batch key routes to: stable FNV-1a hash, so the same key —
+/// and therefore every member of a batchable cohort — always lands on the
+/// same shard for a given shard count.
+pub fn shard_for_key(key: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % shards.max(1) as u64) as usize
+}
+
+/// Pick the shard a submission lands on: batch-key hash for batchable
+/// requests, round-robin for solo jobs (no key to hash; spreading them
+/// keeps one pathological client from serializing a single shard).
+fn route_shard(inner: &Inner, batch_key: Option<&str>) -> usize {
+    match batch_key {
+        Some(key) => shard_for_key(key, inner.shards.len()),
+        None => inner.solo_rr.fetch_add(1, Ordering::Relaxed) % inner.shards.len(),
+    }
+}
+
+struct Inner {
+    shards: Vec<Shard>,
     cfg: ServerConfig,
     backend: ModelBackend,
     sched: VpLinear,
-    metrics: Mutex<Metrics>,
     /// Shared sampling plans keyed by [`plan_key`]: concurrent workers
     /// serving identically-configured requests execute from one
     /// `Arc<SamplePlan>` instead of re-deriving coefficients per request.
+    /// Deliberately global (not per shard): a config compiles once no
+    /// matter where its requests route or who steals them.
     plans: Mutex<PlanCache>,
     shutdown: AtomicBool,
-    /// Live worker handles, joined by [`Service::shutdown`]. The supervisor
-    /// pushes replacements here as it respawns panicked workers.
-    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// Round-robin cursor for solo (unplannable) jobs, which have no batch
+    /// key to hash.
+    solo_rr: AtomicUsize,
+    /// Live worker handles tagged with each worker's home shard, joined by
+    /// [`Service::shutdown`]. The supervisor pushes replacements here as it
+    /// respawns panicked workers (same id ⇒ same home shard).
+    handles: Mutex<Vec<(usize, JoinHandle<()>)>>,
 }
 
 /// The running service (clone to share).
@@ -329,17 +411,18 @@ pub struct Service {
 }
 
 impl Service {
-    /// Start the worker pool.
+    /// Start the sharded worker pool: `cfg.effective_shards()` shards, with
+    /// worker `i` homed on shard `i % shards`.
     pub fn start(cfg: ServerConfig, backend: ModelBackend) -> Service {
+        let n_shards = cfg.effective_shards();
         let inner = Arc::new(Inner {
-            queue: Mutex::new(VecDeque::new()),
-            cv: Condvar::new(),
+            shards: (0..n_shards).map(|_| Shard::new()).collect(),
             cfg,
             backend,
             sched: VpLinear::default(),
-            metrics: Mutex::new(Metrics::default()),
             plans: Mutex::new(PlanCache::new(PLAN_CACHE_CAP)),
             shutdown: AtomicBool::new(false),
+            solo_rr: AtomicUsize::new(0),
             handles: Mutex::new(Vec::new()),
         });
         for i in 0..inner.cfg.workers {
@@ -348,16 +431,21 @@ impl Service {
         Service { inner }
     }
 
-    /// Submit a request. Applies admission control: invalid requests, a full
-    /// queue (backpressure), and a shut-down service are rejected
-    /// immediately with the typed response they would otherwise have
-    /// received on the channel.
+    /// Submit a request. Routes to a shard at admission — by batch-key hash
+    /// for batchable requests (so a cohort always lands together), round-
+    /// robin for solo jobs — and applies admission control: invalid
+    /// requests, a full shard queue (backpressure), and a shut-down service
+    /// are rejected immediately with the typed response they would
+    /// otherwise have received on the channel. All admission bookkeeping
+    /// lands on the routed shard's metrics.
     pub fn submit(
         &self,
         req: SampleRequest,
     ) -> Result<mpsc::Receiver<SampleResponse>, SampleResponse> {
+        let (opts, batch_key) = admission_setup(&self.inner, &req);
+        let shard = &self.inner.shards[route_shard(&self.inner, batch_key.as_deref())];
         {
-            let mut metrics = self.inner.metrics.lock().unwrap();
+            let mut metrics = shard.metrics.lock().unwrap();
             metrics.submitted += 1;
             if self.inner.shutdown.load(Ordering::SeqCst) {
                 metrics.rejected += 1;
@@ -378,16 +466,15 @@ impl Service {
         }
 
         let (tx, rx) = mpsc::channel();
-        let (opts, batch_key) = admission_setup(&self.inner, &req);
         let enqueued = Instant::now();
         let deadline = resolve_deadline_ms(&self.inner.cfg, &req)
             .map(|ms| enqueued + Duration::from_millis(ms));
-        {
-            let mut q = self.inner.queue.lock().unwrap();
+        let depth = {
+            let mut q = shard.queue.lock().unwrap();
             if q.len() >= self.inner.cfg.queue_cap {
                 let pending = q.len();
                 drop(q);
-                let mut metrics = self.inner.metrics.lock().unwrap();
+                let mut metrics = shard.metrics.lock().unwrap();
                 metrics.rejected += 1;
                 metrics.failures_by_kind[FailureKind::QueueFull.index()] += 1;
                 return Err(SampleResponse::failure(
@@ -396,12 +483,14 @@ impl Service {
                 ));
             }
             q.push_back(QueuedJob { req, opts, batch_key, reply: tx, enqueued, deadline });
-        }
+            q.len()
+        };
+        shard.metrics.lock().unwrap().record_depth(depth);
         // notify_all, not notify_one: a lingering batch assembler waits on
         // this same condvar and would otherwise swallow the only wakeup
         // meant for an idle worker, stranding a non-matching job for the
         // rest of the linger window.
-        self.inner.cv.notify_all();
+        shard.cv.notify_all();
         Ok(rx)
     }
 
@@ -436,77 +525,153 @@ impl Service {
         }
     }
 
+    /// The global snapshot: every shard's metrics merged exactly
+    /// ([`Metrics::merge`] — counters/histograms sum, digests merge raw
+    /// samples so percentiles stay exact), plus the shard-level gauges
+    /// `shards` (partition count) and `shard_depths` (current queue depth
+    /// per shard, in shard order).
     pub fn metrics_json(&self) -> crate::json::Value {
-        self.inner.metrics.lock().unwrap().snapshot_json()
+        let mut agg = Metrics::default();
+        for shard in &self.inner.shards {
+            agg.merge(&shard.metrics.lock().unwrap());
+        }
+        let mut v = agg.snapshot_json();
+        if let crate::json::Value::Obj(m) = &mut v {
+            m.insert(
+                "shards".into(),
+                crate::json::Value::Num(self.inner.shards.len() as f64),
+            );
+            m.insert(
+                "shard_depths".into(),
+                crate::json::Value::Arr(
+                    self.inner
+                        .shards
+                        .iter()
+                        .map(|s| crate::json::Value::Num(s.queue.lock().unwrap().len() as f64))
+                        .collect(),
+                ),
+            );
+        }
+        v
+    }
+
+    /// One snapshot per shard, in shard order. For every counter and
+    /// histogram bucket these sum field-wise to the aggregate
+    /// [`Service::metrics_json`]; percentile fields do not sum (the
+    /// aggregate recomputes them from the merged raw samples).
+    pub fn shard_metrics_json(&self) -> Vec<crate::json::Value> {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.metrics.lock().unwrap().snapshot_json())
+            .collect()
+    }
+
+    /// The number of coordinator shards this service runs.
+    pub fn shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// The shard a request would route to: `Some(shard)` for batchable
+    /// requests (a pure function of the batch key), `None` for solo jobs
+    /// (placed round-robin at submit time). Introspection hook for the
+    /// routing-invariant tests and shard-aware load drivers.
+    pub fn route_of(&self, req: &SampleRequest) -> Option<usize> {
+        let (_, key) = admission_setup(&self.inner, req);
+        key.map(|k| shard_for_key(&k, self.inner.shards.len()))
     }
 
     pub fn pending(&self) -> usize {
-        self.inner.queue.lock().unwrap().len()
+        self.inner.shards.iter().map(|s| s.queue.lock().unwrap().len()).sum()
     }
 
     pub fn dim(&self) -> usize {
         self.inner.backend.dim()
     }
 
-    /// Number of live (not yet finished) worker threads. The supervisor
-    /// keeps this at `cfg.workers`; a retiring thread may transiently still
-    /// count while its replacement is already live.
+    /// Number of live (not yet finished) worker threads across all shards.
+    /// The supervisor keeps this at `cfg.workers`; a retiring thread may
+    /// transiently still count while its replacement is already live.
     pub fn workers_alive(&self) -> usize {
-        self.inner.handles.lock().unwrap().iter().filter(|h| !h.is_finished()).count()
+        self.inner.handles.lock().unwrap().iter().filter(|(_, h)| !h.is_finished()).count()
     }
 
-    /// Stop the pool: give workers `cfg.drain_deadline_ms` to drain the
-    /// queue, shed whatever is left with typed responses (no receiver is
-    /// ever left hanging), then join every worker. Idempotent.
+    /// Number of live worker threads homed on `shard`. The supervisor
+    /// respawns a panicked worker under its original id, so each shard's
+    /// sub-pool size (`workers / shards`, ±1) is itself an invariant.
+    pub fn shard_workers_alive(&self, shard: usize) -> usize {
+        self.inner
+            .handles
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(home, h)| *home == shard && !h.is_finished())
+            .count()
+    }
+
+    /// Stop the pool: give workers `cfg.drain_deadline_ms` to drain every
+    /// shard queue, shed whatever is left with typed responses (no receiver
+    /// is ever left hanging), then join every worker. The drain bound is
+    /// global — all shards drain concurrently within one window, so a
+    /// shard-count change never changes how long shutdown can take.
+    /// Idempotent.
     pub fn shutdown(&self) {
         self.inner.shutdown.store(true, Ordering::SeqCst);
-        self.inner.cv.notify_all();
+        for shard in &self.inner.shards {
+            shard.cv.notify_all();
+        }
 
         // Bounded drain: workers keep popping until the flag stops them at
         // an empty queue.
         let drain_until =
             Instant::now() + Duration::from_millis(self.inner.cfg.drain_deadline_ms);
         while Instant::now() < drain_until {
-            if self.inner.queue.lock().unwrap().is_empty() {
+            if self.inner.shards.iter().all(|s| s.queue.lock().unwrap().is_empty()) {
                 break;
             }
-            self.inner.cv.notify_all();
+            for shard in &self.inner.shards {
+                shard.cv.notify_all();
+            }
             std::thread::sleep(Duration::from_millis(1));
         }
 
-        // Shed stragglers with a typed response so every receiver resolves.
-        let shed: Vec<QueuedJob> = {
-            let mut q = self.inner.queue.lock().unwrap();
-            q.drain(..).collect()
-        };
-        if !shed.is_empty() {
-            let mut m = self.inner.metrics.lock().unwrap();
-            for _ in &shed {
-                m.record_failure(FailureKind::BackendError);
+        // Shed stragglers with a typed response so every receiver resolves,
+        // charging each shed job to the shard that held it.
+        for shard in &self.inner.shards {
+            let shed: Vec<QueuedJob> = shard.queue.lock().unwrap().drain(..).collect();
+            if !shed.is_empty() {
+                let mut m = shard.metrics.lock().unwrap();
+                for _ in &shed {
+                    m.record_failure(FailureKind::BackendError);
+                }
             }
-        }
-        for job in shed {
-            let _ = job.reply.send(SampleResponse::failure(
-                FailureKind::BackendError,
-                "service shut down before execution".into(),
-            ));
+            for job in shed {
+                let _ = job.reply.send(SampleResponse::failure(
+                    FailureKind::BackendError,
+                    "service shut down before execution".into(),
+                ));
+            }
         }
 
         // Join the pool. The shutdown flag is checked under no lock, so a
         // worker can race past its check and block on the condvar after our
         // notify — keep re-notifying until each thread actually exits
-        // (spin-join) rather than risking a lost-wakeup deadlock.
+        // (spin-join) rather than risking a lost-wakeup deadlock. Idle
+        // workers additionally time out every STEAL_POLL, so no wakeup can
+        // stay lost for long even without the re-notify.
         loop {
             let handle = {
                 let mut handles = self.inner.handles.lock().unwrap();
                 handles.pop()
             };
-            let h = match handle {
+            let (_, h) = match handle {
                 Some(h) => h,
                 None => break,
             };
             while !h.is_finished() {
-                self.inner.cv.notify_all();
+                for shard in &self.inner.shards {
+                    shard.cv.notify_all();
+                }
                 std::thread::sleep(Duration::from_millis(1));
             }
             if let Err(p) = h.join() {
@@ -527,17 +692,20 @@ fn resolve_deadline_ms(cfg: &ServerConfig, req: &SampleRequest) -> Option<u64> {
     }
 }
 
-/// Spawn one worker and record its handle (pruning handles of threads that
-/// already exited, so the vec stays bounded under churn).
+/// Spawn one worker and record its handle tagged with its home shard
+/// (pruning handles of threads that already exited, so the vec stays
+/// bounded under churn). A worker's home is a pure function of its id, so
+/// a supervisor respawn lands the replacement on the same shard.
 fn spawn_worker(inner: &Arc<Inner>, id: usize) {
     let arc = Arc::clone(inner);
+    let home = id % inner.shards.len();
     let handle = std::thread::Builder::new()
         .name(format!("sampler-{id}"))
         .spawn(move || worker_loop(arc, id))
         .expect("spawn sampler worker");
     let mut handles = inner.handles.lock().unwrap();
-    handles.retain(|h| !h.is_finished());
-    handles.push(handle);
+    handles.retain(|(_, h)| !h.is_finished());
+    handles.push((home, handle));
 }
 
 /// Supervision: when a worker retires (caught panic ⇒ possibly-corrupt
@@ -556,9 +724,11 @@ impl Drop for RespawnGuard {
             return;
         }
         if self.retire || std::thread::panicking() {
+            // Charge the restart to the retiring worker's home shard.
             // `if let Ok`: never double-panic in a Drop over a metrics lock
             // that the panicking thread might have poisoned.
-            if let Ok(mut m) = self.inner.metrics.lock() {
+            let home = self.id % self.inner.shards.len();
+            if let Ok(mut m) = self.inner.shards[home].metrics.lock() {
                 m.worker_restarts += 1;
             }
             spawn_worker(&self.inner, self.id);
@@ -568,33 +738,30 @@ impl Drop for RespawnGuard {
 
 fn worker_loop(inner: Arc<Inner>, id: usize) {
     let mut guard = RespawnGuard { inner: Arc::clone(&inner), id, retire: false };
+    let home = id % inner.shards.len();
     // One pooled workspace per worker, reused across every batched run it
     // executes (the `workspace_reuses` metric counts successful reuse).
     let mut scratch = BatchWorkspace::new();
     loop {
-        let job = {
-            let mut q = inner.queue.lock().unwrap();
-            loop {
-                if let Some(job) = q.pop_front() {
-                    break job;
-                }
-                if inner.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                q = inner.cv.wait(q).unwrap();
-            }
+        let (job, owner) = match next_job(&inner, home) {
+            Some(pair) => pair,
+            None => return,
         };
-        let job = match shed_if_expired(&inner, job) {
+        // The job stays attributed to the shard that queued it, whoever
+        // runs it: batching scans the owner's queue (the rest of the
+        // cohort lives there) and metrics land on the owner's store.
+        let shard = &inner.shards[owner];
+        let job = match shed_if_expired(shard, job) {
             Some(j) => j,
             None => continue,
         };
-        let tainted = match batch_setup(&inner, &job) {
+        let tainted = match batch_setup(&inner, shard, &job) {
             Some((opts, plan, key)) => {
                 let mut jobs = vec![job];
-                gather_batch(&inner, &key, &mut jobs);
-                execute_batch(&inner, &mut scratch, jobs, &opts, &plan)
+                gather_batch(&inner, shard, &key, &mut jobs);
+                execute_batch(&inner, shard, &mut scratch, jobs, &opts, &plan)
             }
-            None => execute_solo(&inner, job),
+            None => execute_solo(&inner, shard, job),
         };
         if tainted {
             // A caught panic may have left the pooled workspace (or any
@@ -606,21 +773,54 @@ fn worker_loop(inner: Arc<Inner>, id: usize) {
     }
 }
 
+/// Pop the next job for a worker homed on `home`: the home queue first,
+/// then the other shards in ring order (work stealing — a steal is counted
+/// against the shard it came from). When everything is dry, waits on the
+/// home condvar with a `STEAL_POLL` timeout: submits only notify the
+/// routed shard, so the bounded wait is what lets this worker notice a hot
+/// queue elsewhere. Returns `None` on shutdown with all queues empty.
+fn next_job(inner: &Inner, home: usize) -> Option<(QueuedJob, usize)> {
+    let n = inner.shards.len();
+    loop {
+        for off in 0..n {
+            let idx = (home + off) % n;
+            let job = inner.shards[idx].queue.lock().unwrap().pop_front();
+            if let Some(job) = job {
+                if off != 0 {
+                    inner.shards[idx].metrics.lock().unwrap().steals += 1;
+                }
+                return Some((job, idx));
+            }
+        }
+        let q = inner.shards[home].queue.lock().unwrap();
+        if q.is_empty() {
+            if inner.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            // Timed wait, not a bare wait: no one notifies this condvar
+            // for work that routed elsewhere, and the rescan above is the
+            // only way to see it.
+            let _ = inner.shards[home].cv.wait_timeout(q, STEAL_POLL).unwrap();
+        }
+    }
+}
+
 /// Shed `job` with a typed `DeadlineExceeded` response if its deadline has
-/// passed; expired jobs are never executed.
-fn shed_if_expired(inner: &Inner, job: QueuedJob) -> Option<QueuedJob> {
+/// passed; expired jobs are never executed. The failure is recorded on the
+/// shard that owned the job's queue.
+fn shed_if_expired(shard: &Shard, job: QueuedJob) -> Option<QueuedJob> {
     let expired = job.deadline.is_some_and(|d| Instant::now() >= d);
     if expired {
-        shed_expired(inner, job);
+        shed_expired(shard, job);
         None
     } else {
         Some(job)
     }
 }
 
-fn shed_expired(inner: &Inner, job: QueuedJob) {
+fn shed_expired(shard: &Shard, job: QueuedJob) {
     let waited = job.enqueued.elapsed();
-    inner.metrics.lock().unwrap().record_failure(FailureKind::DeadlineExceeded);
+    shard.metrics.lock().unwrap().record_failure(FailureKind::DeadlineExceeded);
     let mut resp = SampleResponse::failure(
         FailureKind::DeadlineExceeded,
         format!("deadline exceeded after {}us in queue", waited.as_micros()),
@@ -635,32 +835,28 @@ fn shed_expired(inner: &Inner, job: QueuedJob) {
 /// `None` routes the job to the solo reference path (unplannable method).
 fn batch_setup(
     inner: &Inner,
+    shard: &Shard,
     job: &QueuedJob,
 ) -> Option<(SampleOptions, Arc<SamplePlan>, String)> {
     let key = job.batch_key.clone()?;
     let opts = job.opts.clone()?;
-    let plan = lookup_plan(inner, &opts)?;
+    let plan = lookup_plan(inner, shard, &opts)?;
     Some((opts, plan, key))
-}
-
-/// Model-conditioning suffix of the batch key: batch members share one
-/// model view, so class and guidance must match exactly (guidance compared
-/// by bits).
-fn conditioning_key(req: &SampleRequest) -> String {
-    format!("|class={:?}|g={:?}", req.class, req.guidance.map(f64::to_bits))
 }
 
 /// Admission-time resolution, done once per request ([`Service::submit`])
 /// and stored on the queued job: the full solver options and, for
-/// plannable configurations, the batch key. The batch key is `None` for
-/// methods plans don't cover (they take the solo path).
+/// plannable configurations, the batch key (plan key + the request's
+/// [`SampleRequest::conditioning_key`] — members share one model view).
+/// The batch key is `None` for methods plans don't cover (they take the
+/// solo path). The key also routes the request: see [`shard_for_key`].
 fn admission_setup(
     inner: &Inner,
     req: &SampleRequest,
 ) -> (Option<SampleOptions>, Option<String>) {
     let opts = build_opts(inner, req).ok();
     let key = opts.as_ref().filter(|o| SamplePlan::supports(o)).map(|o| {
-        format!("{}{}", plan_key(&inner.sched, o), conditioning_key(req))
+        format!("{}{}", plan_key(&inner.sched, o), req.conditioning_key())
     });
     (opts, key)
 }
@@ -669,8 +865,10 @@ fn admission_setup(
 /// `max_batch` total rows. With a linger window configured, waits up to the
 /// deadline for more same-key arrivals; with the default of 0 this is a
 /// single opportunistic scan of what is already queued. Expired same-key
-/// jobs found during the scan are shed, not absorbed.
-fn gather_batch(inner: &Inner, key: &str, jobs: &mut Vec<QueuedJob>) {
+/// jobs found during the scan are shed, not absorbed. Scans only `shard` —
+/// the shard the leader was queued on — which is where routing guarantees
+/// the rest of the cohort lives, even when the leader was stolen.
+fn gather_batch(inner: &Inner, shard: &Shard, key: &str, jobs: &mut Vec<QueuedJob>) {
     let mut rows: usize = jobs.iter().map(|j| j.req.n).sum();
     if rows >= inner.cfg.max_batch {
         return;
@@ -683,7 +881,7 @@ fn gather_batch(inner: &Inner, key: &str, jobs: &mut Vec<QueuedJob>) {
             deadline = deadline.min(d);
         }
     }
-    let mut q = inner.queue.lock().unwrap();
+    let mut q = shard.queue.lock().unwrap();
     loop {
         let mut i = 0;
         while i < q.len() {
@@ -691,7 +889,7 @@ fn gather_batch(inner: &Inner, key: &str, jobs: &mut Vec<QueuedJob>) {
                 if q[i].deadline.is_some_and(|d| Instant::now() >= d) {
                     // Queue lock → metrics lock is the allowed order.
                     let j = q.remove(i).expect("index in range");
-                    shed_expired(inner, j);
+                    shed_expired(shard, j);
                     continue;
                 }
                 if rows + q[i].req.n <= inner.cfg.max_batch {
@@ -721,7 +919,7 @@ fn gather_batch(inner: &Inner, key: &str, jobs: &mut Vec<QueuedJob>) {
         // window from now). Deliberately no re-notify here: with every
         // waiter lingering, a notify would just bounce between assemblers
         // in a busy loop for the rest of the window.
-        let (guard, _timeout) = inner.cv.wait_timeout(q, deadline - now).unwrap();
+        let (guard, _timeout) = shard.cv.wait_timeout(q, deadline - now).unwrap();
         q = guard;
     }
 }
@@ -750,6 +948,7 @@ fn panic_message(payload: &(dyn Any + Send)) -> String {
 /// individually while their cohort completes.
 fn execute_batch(
     inner: &Inner,
+    shard: &Shard,
     scratch: &mut BatchWorkspace,
     jobs: Vec<QueuedJob>,
     opts: &SampleOptions,
@@ -780,9 +979,9 @@ fn execute_batch(
                 // Quarantine: re-run every member solo so only the actual
                 // culprit fails; the others stay bit-identical to a clean
                 // run (solo executes the same plan).
-                inner.metrics.lock().unwrap().batch_retries += jobs.len() as u64;
+                shard.metrics.lock().unwrap().batch_retries += jobs.len() as u64;
                 for job in jobs {
-                    let _ = execute_solo(inner, job);
+                    let _ = execute_solo(inner, shard, job);
                 }
             } else {
                 // A batch of one has no cohort to protect; fail it typed.
@@ -791,7 +990,7 @@ fn execute_batch(
                     FailureKind::WorkerPanic,
                     format!("worker panicked during execution: {msg}"),
                 );
-                finish_solo(inner, job, resp, queue_times[0], compute_time);
+                finish_solo(shard, job, resp, queue_times[0], compute_time);
             }
             return true;
         }
@@ -812,7 +1011,7 @@ fn execute_batch(
             .collect()
     };
 
-    let mut m = inner.metrics.lock().unwrap();
+    let mut m = shard.metrics.lock().unwrap();
     // The leader's lookup_plan counted its own hit/build; followers were
     // absorbed without a lookup but are equally served from the cached
     // plan, so count them as hits to keep plan_hits per-request.
@@ -857,8 +1056,8 @@ fn execute_batch(
 
 /// The solo path: unplannable methods, parse failures, and quarantined
 /// batch-member retries. Returns `true` if the run panicked (the worker
-/// must retire).
-fn execute_solo(inner: &Inner, job: QueuedJob) -> bool {
+/// must retire). Metrics land on `shard` — the shard that owned the job.
+fn execute_solo(inner: &Inner, shard: &Shard, job: QueuedJob) -> bool {
     let queue_time = job.enqueued.elapsed();
     let started = Instant::now();
     let outcome = catch_unwind(AssertUnwindSafe(|| {
@@ -867,7 +1066,7 @@ fn execute_solo(inner: &Inner, job: QueuedJob) -> bool {
     let compute_time = started.elapsed();
     match outcome {
         Ok(resp) => {
-            finish_solo(inner, job, resp, queue_time, compute_time);
+            finish_solo(shard, job, resp, queue_time, compute_time);
             false
         }
         Err(payload) => {
@@ -878,7 +1077,7 @@ fn execute_solo(inner: &Inner, job: QueuedJob) -> bool {
                     panic_message(payload.as_ref())
                 ),
             );
-            finish_solo(inner, job, resp, queue_time, compute_time);
+            finish_solo(shard, job, resp, queue_time, compute_time);
             true
         }
     }
@@ -886,14 +1085,14 @@ fn execute_solo(inner: &Inner, job: QueuedJob) -> bool {
 
 /// Record metrics for a solo outcome, stamp latencies, and reply.
 fn finish_solo(
-    inner: &Inner,
+    shard: &Shard,
     job: QueuedJob,
     mut resp: SampleResponse,
     queued: Duration,
     compute: Duration,
 ) {
     {
-        let mut m = inner.metrics.lock().unwrap();
+        let mut m = shard.metrics.lock().unwrap();
         match resp.kind {
             None => m.record_completion(job.req.n, resp.nfe, queued, compute),
             Some(k) => m.record_failure(k),
@@ -906,8 +1105,9 @@ fn finish_solo(
 
 /// Fetch (or build and cache) the shared plan for this solver config.
 /// Returns `None` for configurations plans don't cover; those run the
-/// reference loop.
-fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
+/// reference loop. The cache is global; the hit/build counters land on the
+/// executing worker's current shard.
+fn lookup_plan(inner: &Inner, shard: &Shard, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
     if !SamplePlan::supports(opts) {
         return None;
     }
@@ -916,7 +1116,7 @@ fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
         let mut plans = inner.plans.lock().unwrap();
         if let Some(p) = plans.get(&key) {
             drop(plans);
-            inner.metrics.lock().unwrap().plan_hits += 1;
+            shard.metrics.lock().unwrap().plan_hits += 1;
             return Some(p);
         }
     }
@@ -935,7 +1135,7 @@ fn lookup_plan(inner: &Inner, opts: &SampleOptions) -> Option<Arc<SamplePlan>> {
             (built, true)
         }
     };
-    let mut m = inner.metrics.lock().unwrap();
+    let mut m = shard.metrics.lock().unwrap();
     if inserted {
         m.plan_builds += 1;
     } else {
@@ -1234,6 +1434,68 @@ mod tests {
         }
         assert!(cache.get("hot").is_some(), "hot plan must survive churn");
         assert!(cache.get("cold-0").is_none(), "oldest cold key must be evicted");
+    }
+
+    #[test]
+    fn shard_for_key_is_stable_and_in_range() {
+        for shards in 1..=8usize {
+            for key in ["a", "unipc-3|steps=5|class=None", "x|class=Some(3)|g=None"] {
+                let s = shard_for_key(key, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_for_key(key, shards), "routing must be pure");
+            }
+        }
+        // shards=0 is defended (effective_shards never produces it, but the
+        // hash must not divide by zero).
+        assert_eq!(shard_for_key("k", 0), 0);
+    }
+
+    #[test]
+    fn route_of_batchable_is_deterministic_and_solo_is_none() {
+        let svc = analytic_service(4, 64);
+        assert_eq!(svc.shards(), 4, "4 workers default to 4 shards");
+        let req = SampleRequest { n: 1, steps: 5, seed: 3, ..Default::default() };
+        let r1 = svc.route_of(&req);
+        assert!(r1.is_some(), "plannable request must have a batch-key route");
+        // Seed is not part of the batch key: any seed routes identically.
+        assert_eq!(r1, svc.route_of(&SampleRequest { seed: 99, ..req.clone() }));
+        // Conditioning is: a classed request may route elsewhere, but still
+        // deterministically.
+        let classed = SampleRequest { class: Some(2), ..req.clone() };
+        assert_eq!(svc.route_of(&classed), svc.route_of(&classed.clone()));
+        // An unparsable method has no batch key ⇒ solo round-robin.
+        let solo = SampleRequest { method: "nope".into(), ..req };
+        assert_eq!(svc.route_of(&solo), None);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn work_stealing_drains_a_foreign_shard() {
+        // Every worker homes somewhere, but all 16 same-key requests route
+        // to exactly one shard; with 4 workers on 4 shards, completion of
+        // the whole burst proves foreign-homed workers stole from it.
+        let svc = analytic_service(4, 64);
+        let reqs: Vec<SampleRequest> = (0..16)
+            .map(|i| SampleRequest {
+                n: 1,
+                steps: 5,
+                seed: i,
+                return_samples: false,
+                ..Default::default()
+            })
+            .collect();
+        let target = svc.route_of(&reqs[0]).unwrap();
+        for r in &reqs {
+            assert_eq!(svc.route_of(r), Some(target), "one cohort, one shard");
+        }
+        let rxs: Vec<_> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().ok);
+        }
+        let m = svc.metrics_json();
+        assert_eq!(m.get("completed").unwrap().as_f64(), Some(16.0));
+        assert_eq!(m.get("shards").unwrap().as_f64(), Some(4.0));
+        svc.shutdown();
     }
 
     #[test]

@@ -104,6 +104,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "artifacts", help: "AOT artifacts dir", default: Some("artifacts") },
                     OptSpec { name: "weights", help: ".upw weights path", default: None },
                     OptSpec { name: "workers", help: "sampler threads", default: Some("4") },
+                    OptSpec { name: "shards", help: "coordinator shards (0 = workers.min(4))", default: Some("0") },
                     OptSpec { name: "max-batch", help: "max rows per model call", default: Some("64") },
                     OptSpec { name: "deadline-ms", help: "default request deadline (0 = none)", default: Some("30000") },
                     OptSpec { name: "drain-deadline-ms", help: "shutdown drain bound", default: Some("2000") },
@@ -117,7 +118,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let backend = backend_from(&cfg, args.flag("analytic"))?;
     let service = Service::start(cfg.clone(), backend);
     let server = Server::spawn(service.clone(), &cfg.addr)?;
-    println!("listening on {}", server.addr);
+    println!(
+        "listening on {} ({} workers across {} shards)",
+        server.addr,
+        cfg.workers,
+        service.shards()
+    );
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(60));

@@ -27,6 +27,13 @@ pub struct LoadConfig {
     /// Request template; seed is varied per request.
     pub template: SampleRequest,
     pub seed: u64,
+    /// Distinct batch keys to fan the workload across, driven by cycling
+    /// the request class label (`class = i % key_mix`). The class is part
+    /// of the batch key, which also routes the request — so `key_mix`
+    /// controls how many coordinator shards the workload can occupy
+    /// (1 = every request shares one key, the template's own class). Must
+    /// not exceed the backend's class count.
+    pub key_mix: usize,
 }
 
 /// Aggregate results.
@@ -83,6 +90,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         let latency = Arc::clone(&latency);
         let failures = Arc::clone(&failures);
         let seed = cfg.seed;
+        let key_mix = cfg.key_mix;
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut client = Client::connect(&addr)?;
             let mut rng = Rng::seed_from(seed).split(c as u64 + 1);
@@ -97,6 +105,11 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
                 }
                 let mut req = template.clone();
                 req.seed = seed ^ ((c as u64) << 32) ^ i as u64;
+                if key_mix > 1 {
+                    // Deterministic per-request key assignment, spread
+                    // evenly across connections.
+                    req.class = Some((c * per_conn + i) % key_mix);
+                }
                 let sent = Instant::now();
                 match client.sample(&req) {
                     Ok(resp) if resp.ok => {
@@ -169,6 +182,7 @@ mod tests {
                 ..Default::default()
             },
             seed: 1,
+            key_mix: 1,
         };
         let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
         assert_eq!(report.sent, 24);

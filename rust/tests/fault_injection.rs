@@ -13,7 +13,12 @@
 //!   supervisor respawns replacements (`worker_restarts`);
 //! * expired jobs are **shed, not executed**, with typed
 //!   `deadline_exceeded` responses, and shutdown drains or sheds every
-//!   queued job so no receiver is left hanging.
+//!   queued job so no receiver is left hanging;
+//! * faults are **shard-local**: chaos aimed at one coordinator shard
+//!   (via `ChaosConfig::target_class` — the class routes the request)
+//!   cannot stall, corrupt, or shrink the worker sub-pools of the others,
+//!   and the multi-shard service keeps the same deadline/shutdown bounds
+//!   as a single queue.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,7 +39,14 @@ fn analytic_backend() -> ModelBackend {
 fn chaos_backend(seed: u64, panic_rate: f64, nan_rate: f64) -> ModelBackend {
     ModelBackend::chaos(
         analytic_backend(),
-        ChaosConfig { seed, panic_rate, nan_rate, latency_rate: 0.05, latency_us: 200 },
+        ChaosConfig {
+            seed,
+            panic_rate,
+            nan_rate,
+            latency_rate: 0.05,
+            latency_us: 200,
+            ..ChaosConfig::default()
+        },
     )
 }
 
@@ -324,5 +336,243 @@ fn sample_blocking_respects_deadline_under_queueing() {
         "blocking call must be bounded by the deadline"
     );
     let _ = blocker.recv_timeout(Duration::from_secs(120));
+    svc.shutdown();
+}
+
+/// Pick two class labels whose requests route to different shards. The
+/// FNV routing is a pure function of the batch key, so this always
+/// succeeds with ≥ 2 shards and 10 classes to probe.
+fn two_classes_on_distinct_shards(svc: &Service, steps: usize) -> (usize, usize) {
+    let route = |class: usize| {
+        svc.route_of(&SampleRequest { n: 1, steps, class: Some(class), ..Default::default() })
+            .expect("classed request is plannable")
+    };
+    let a = 0;
+    for b in 1..10 {
+        if route(b) != route(a) {
+            return (a, b);
+        }
+    }
+    panic!("10 classes must not all hash to one of {} shards", svc.shards());
+}
+
+/// Chaos aimed at one shard (every targeted evaluation panics) must not
+/// stall the other shards: untargeted requests keep completing
+/// bit-identically to a clean run, and the supervisor restores every
+/// shard's worker sub-pool.
+#[test]
+fn shard_poisoned_by_panics_does_not_stall_the_others() {
+    silence_injected_panics();
+    let cfg = ServerConfig { workers: 4, queue_cap: 256, ..Default::default() };
+
+    // Clean references for the untargeted class.
+    let clean = Service::start(cfg.clone(), analytic_backend());
+    assert_eq!(clean.shards(), 4);
+    let (doomed_class, healthy_class) = two_classes_on_distinct_shards(&clean, 8);
+    let mk_req = |class: usize, seed: u64| SampleRequest {
+        n: 1,
+        steps: 8,
+        class: Some(class),
+        seed,
+        ..Default::default()
+    };
+    let refs: Vec<Vec<f64>> = (0..20u64)
+        .map(|s| {
+            let r = clean.sample_blocking(mk_req(healthy_class, s));
+            assert!(r.ok, "{:?}", r.error);
+            r.samples.unwrap()
+        })
+        .collect();
+    clean.shutdown();
+
+    let svc = Service::start(
+        cfg,
+        ModelBackend::chaos(
+            analytic_backend(),
+            ChaosConfig {
+                seed: 7,
+                panic_rate: 1.0,
+                target_class: Some(doomed_class),
+                ..ChaosConfig::default()
+            },
+        ),
+    );
+    let doomed_shard =
+        svc.route_of(&mk_req(doomed_class, 0)).expect("classed request is plannable");
+    let healthy_shard =
+        svc.route_of(&mk_req(healthy_class, 0)).expect("classed request is plannable");
+    assert_ne!(doomed_shard, healthy_shard, "classes must exercise two shards");
+
+    // Interleave: every targeted request panics (typed), every untargeted
+    // one must still complete bit-identically despite sharing the pool.
+    for s in 0..20u64 {
+        let bad = svc.sample_blocking(mk_req(doomed_class, s));
+        assert!(!bad.ok);
+        assert_eq!(bad.kind, Some(FailureKind::WorkerPanic), "{:?}", bad.error);
+        let good = svc.sample_blocking(mk_req(healthy_class, s));
+        assert!(good.ok, "healthy shard stalled at {s}: {:?}", good.error);
+        assert_eq!(
+            good.samples.as_ref(),
+            Some(&refs[s as usize]),
+            "untargeted request {s} must be bit-identical to the clean run"
+        );
+    }
+
+    // Per-shard attribution: every panic landed on the doomed shard's
+    // metrics, none on the healthy shard's.
+    let shards = svc.shard_metrics_json();
+    let counter = |shard: usize, key: &str| {
+        shards[shard].get(key).and_then(|v| v.as_f64()).unwrap()
+    };
+    assert_eq!(counter(doomed_shard, "worker_panic"), 20.0);
+    assert_eq!(counter(healthy_shard, "worker_panic"), 0.0);
+    assert_eq!(counter(healthy_shard, "completed"), 20.0);
+
+    // Supervision is per worker, and each worker homes on one shard: after
+    // the panic storm settles, every shard must still field its full
+    // sub-pool (workers=4 across 4 shards ⇒ exactly one each).
+    std::thread::sleep(Duration::from_millis(300));
+    assert!(svc.workers_alive() >= 4, "pool must never shrink");
+    for shard in 0..svc.shards() {
+        assert!(
+            svc.shard_workers_alive(shard) >= 1,
+            "shard {shard} lost its home worker"
+        );
+    }
+    let m = svc.metrics_json();
+    assert!(m.get("worker_restarts").unwrap().as_f64().unwrap() > 0.0, "{m:?}");
+    svc.shutdown();
+}
+
+/// Deadline shedding holds with multiple shards: when every worker is
+/// pinned (stealing can't help), queued jobs past their deadline are shed
+/// typed and never executed, wherever they routed.
+#[test]
+fn expired_jobs_are_shed_across_shards() {
+    let svc = Service::start(
+        ServerConfig { workers: 2, queue_cap: 64, ..Default::default() },
+        analytic_backend(),
+    );
+    assert_eq!(svc.shards(), 2);
+    // Distinct step counts ⇒ distinct plan keys: the blockers can't
+    // coalesce into one batch, so both workers stay busy and no idle
+    // worker exists to steal the doomed jobs before they expire.
+    let blockers: Vec<_> = (0..4u64)
+        .map(|s| {
+            svc.submit(SampleRequest {
+                n: 8,
+                steps: 800 + s as usize * 7,
+                seed: s,
+                return_samples: false,
+                deadline_ms: Some(120_000),
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(5));
+    // Fan the doomed jobs across both shards via their class labels.
+    let (ca, cb) = two_classes_on_distinct_shards(&svc, 5);
+    let doomed: Vec<_> = (0..6u64)
+        .map(|s| {
+            svc.submit(SampleRequest {
+                n: 1,
+                steps: 5,
+                class: Some(if s % 2 == 0 { ca } else { cb }),
+                seed: 100 + s,
+                return_samples: false,
+                deadline_ms: Some(1),
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+
+    for rx in doomed {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("shed response must arrive");
+        assert!(!r.ok);
+        assert_eq!(r.kind, Some(FailureKind::DeadlineExceeded));
+        assert_eq!(r.nfe, 0, "expired jobs must never execute");
+    }
+    for rx in blockers {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("blocker response");
+        assert!(r.ok, "{:?}", r.error);
+    }
+    let m = svc.metrics_json();
+    assert_eq!(m.get("deadline_exceeded").unwrap().as_f64(), Some(6.0));
+    // Both shards saw sheds (the aggregate alone could hide a stuck shard).
+    let shed_shards = svc
+        .shard_metrics_json()
+        .iter()
+        .filter(|s| s.get("deadline_exceeded").unwrap().as_f64().unwrap() > 0.0)
+        .count();
+    assert_eq!(shed_shards, 2, "doomed jobs were fanned across both shards");
+    svc.shutdown();
+}
+
+/// Bounded shutdown holds with multiple shards: one drain window covers
+/// all shards concurrently, stragglers on every shard are shed typed, and
+/// no receiver is left hanging.
+#[test]
+fn multi_shard_shutdown_is_bounded_and_answers_every_receiver() {
+    let svc = Service::start(
+        ServerConfig {
+            workers: 4,
+            queue_cap: 256,
+            drain_deadline_ms: 1,
+            ..Default::default()
+        },
+        analytic_backend(),
+    );
+    assert_eq!(svc.shards(), 4);
+    // Pin all four workers, then queue work behind them on every shard.
+    let blockers: Vec<_> = (0..4u64)
+        .map(|s| {
+            svc.submit(SampleRequest {
+                n: 8,
+                steps: 900 + s as usize * 7,
+                seed: s,
+                return_samples: false,
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(5));
+    let queued: Vec<_> = (0..12u64)
+        .map(|s| {
+            svc.submit(SampleRequest {
+                n: 4,
+                steps: 300 + s as usize * 7,
+                seed: s,
+                return_samples: false,
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+
+    let started = Instant::now();
+    svc.shutdown();
+    assert!(
+        started.elapsed() < Duration::from_secs(120),
+        "shutdown must stay bounded with shards"
+    );
+
+    for rx in blockers {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("blocker answered");
+        assert!(r.ok || r.kind.is_some());
+    }
+    let mut sheds = 0;
+    for rx in queued {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("no receiver left hanging");
+        if r.ok {
+            continue; // drained before the deadline
+        }
+        assert_eq!(r.kind, Some(FailureKind::BackendError), "{:?}", r.error);
+        sheds += 1;
+    }
+    assert!(sheds > 0, "a 1 ms window cannot drain twelve multi-step jobs");
+    assert!(svc.submit(SampleRequest::default()).is_err());
     svc.shutdown();
 }

@@ -1,0 +1,270 @@
+//! Concurrency/invariant suite for the sharded coordinator.
+//!
+//! The service partitions its queue into N shards routed by
+//! `hash(batch_key) % N` with cross-shard work stealing. These tests pin
+//! the invariants that make the partitioning invisible to clients:
+//!
+//! * **routing is deterministic** — the same batch key always lands on the
+//!   same shard, and seeds (not part of the key) never change the route;
+//! * **results are shard-count-independent** — a workload run against an
+//!   N-shard service is bit-identical to the same workload against a
+//!   1-shard service;
+//! * **exactly one typed response per request** under a multi-threaded
+//!   submitter storm with ~10% injected faults (set `UNIPC_STRESS=1` for
+//!   elevated thread/request counts — `make stress`);
+//! * **aggregation is exact** — the global metrics snapshot equals the
+//!   field-wise sum of the per-shard snapshots for every counter and
+//!   histogram bucket (percentiles are recomputed from merged raw samples,
+//!   never summed).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::config::ServerConfig;
+use unipc::coordinator::{
+    shard_for_key, silence_injected_panics, ChaosConfig, ModelBackend, SampleRequest,
+    Service,
+};
+
+fn analytic_backend() -> ModelBackend {
+    let spec = DatasetSpec::Cifar10Like;
+    let gm = Arc::new(dataset(spec));
+    let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+    ModelBackend::Analytic { gm, class_components: Arc::new(classes) }
+}
+
+fn service(workers: usize, shards: usize) -> Service {
+    let cfg = ServerConfig { workers, shards, queue_cap: 4096, ..Default::default() };
+    Service::start(cfg, analytic_backend())
+}
+
+/// A workload template that fans across batch keys: the class label is
+/// part of the conditioning key, so distinct classes route to (generally)
+/// distinct shards while the solver work stays identical.
+fn mixed_request(i: u64) -> SampleRequest {
+    SampleRequest {
+        n: 1,
+        steps: 5,
+        class: Some((i % 8) as usize),
+        seed: i,
+        ..Default::default()
+    }
+}
+
+/// Stress knobs: `UNIPC_STRESS=1` (see `make stress`) raises the storm
+/// from a CI-friendly smoke to an actual contention test.
+fn stress_level() -> (usize, usize) {
+    if std::env::var("UNIPC_STRESS").is_ok_and(|v| v != "0") {
+        (16, 64) // threads, requests per thread
+    } else {
+        (4, 16)
+    }
+}
+
+/// Same batch key ⇒ same shard, for any shard count; the seed is not part
+/// of the key and never changes the route.
+#[test]
+fn routing_is_deterministic_per_batch_key() {
+    // The pure hash itself is stable and in range.
+    for shards in 1..=8 {
+        for class in 0..8u64 {
+            let key = format!("plan|class=Some({class})|g=None");
+            let s = shard_for_key(&key, shards);
+            assert!(s < shards);
+            assert_eq!(s, shard_for_key(&key, shards));
+        }
+    }
+
+    // End to end: route_of is pure in everything but the batch key.
+    let svc = service(4, 4);
+    assert_eq!(svc.shards(), 4);
+    for i in 0..32u64 {
+        let route = svc.route_of(&mixed_request(i));
+        assert!(route.is_some(), "plannable request must route by key");
+        for seed in [7u64, 1 << 40, u64::MAX] {
+            let mut same_key = mixed_request(i);
+            same_key.seed = seed;
+            assert_eq!(svc.route_of(&same_key), route, "seed must not change the route");
+        }
+    }
+    // With 8 distinct classes over 4 shards, more than one shard is hit
+    // (the hash would have to be degenerate to collapse them all).
+    let distinct: std::collections::BTreeSet<usize> =
+        (0..8u64).filter_map(|i| svc.route_of(&mixed_request(i))).collect();
+    assert!(distinct.len() > 1, "key fan-out must spread across shards: {distinct:?}");
+    svc.shutdown();
+}
+
+/// A sharded service must produce bit-identical samples to a 1-shard
+/// service for the same workload: routing and stealing change *where*
+/// work runs, never *what* it computes.
+#[test]
+fn sharded_outputs_bit_identical_to_single_shard() {
+    const N: u64 = 48;
+    let single = service(4, 1);
+    assert_eq!(single.shards(), 1);
+    let refs: Vec<Option<Vec<f64>>> = (0..N)
+        .map(|i| {
+            let r = single.sample_blocking(mixed_request(i));
+            assert!(r.ok, "{:?}", r.error);
+            r.samples
+        })
+        .collect();
+    single.shutdown();
+
+    let sharded = service(4, 4);
+    assert_eq!(sharded.shards(), 4);
+    // Submit concurrently so batching and stealing actually engage.
+    let rxs: Vec<_> =
+        (0..N).map(|i| sharded.submit(mixed_request(i)).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        assert!(r.ok, "request {i}: {:?}", r.error);
+        assert_eq!(r.samples, refs[i], "request {i} must be shard-count-independent");
+    }
+    sharded.shutdown();
+}
+
+/// Submitter storm with ~10% injected faults: every request resolves to
+/// exactly one response, and every failure is typed. The accounting must
+/// close exactly — submitted = completed + failed + rejected across all
+/// shards, with no request double-counted or dropped.
+#[test]
+fn storm_every_request_gets_exactly_one_typed_response() {
+    silence_injected_panics();
+    let (threads, per_thread) = stress_level();
+    let cfg = ServerConfig { workers: 4, queue_cap: 4096, ..Default::default() };
+    let svc = Service::start(
+        cfg,
+        ModelBackend::chaos(
+            analytic_backend(),
+            ChaosConfig {
+                seed: 11,
+                panic_rate: 0.05,
+                nan_rate: 0.05,
+                ..ChaosConfig::default()
+            },
+        ),
+    );
+
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0u64;
+                let mut typed_fail = 0u64;
+                for i in 0..per_thread {
+                    let mut req = mixed_request((t * per_thread + i) as u64);
+                    req.return_samples = false;
+                    let r = svc.sample_blocking(req);
+                    if r.ok {
+                        assert_eq!(r.kind, None);
+                        ok += 1;
+                    } else {
+                        assert!(r.kind.is_some(), "untyped failure: {:?}", r.error);
+                        typed_fail += 1;
+                    }
+                }
+                (ok, typed_fail)
+            })
+        })
+        .collect();
+    let (mut ok, mut typed_fail) = (0u64, 0u64);
+    for h in handles {
+        let (o, f) = h.join().expect("submitter thread panicked");
+        ok += o;
+        typed_fail += f;
+    }
+    let total = (threads * per_thread) as u64;
+    assert_eq!(ok + typed_fail, total, "exactly one response per request");
+    assert!(ok > 0, "some requests must dodge 10% faults");
+
+    let m = svc.metrics_json();
+    let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(counter("submitted"), total as f64);
+    assert_eq!(counter("completed"), ok as f64);
+    // Typed client-side failures are failures or admission rejections
+    // server-side; both sum to the same total, so nothing is lost or
+    // double-counted.
+    assert_eq!(counter("failed") + counter("rejected"), typed_fail as f64);
+    svc.shutdown();
+}
+
+/// The global snapshot equals the field-wise sum of per-shard snapshots
+/// for every counter and histogram bucket — including the shard-level
+/// `steals` and `shard_depth_hist` — after a workload that exercises
+/// completions, batching, stealing, and failures.
+#[test]
+fn global_metrics_equal_sum_of_shard_snapshots() {
+    let svc = service(4, 4);
+    // Mixed outcomes: successes across many keys plus invalid rejections.
+    let rxs: Vec<_> = (0..64u64)
+        .map(|i| {
+            let mut req = mixed_request(i);
+            req.return_samples = false;
+            svc.submit(req).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(120)).expect("response").ok);
+    }
+    let _ = svc.sample_blocking(SampleRequest { n: 0, ..Default::default() });
+    let _ = svc.sample_blocking(SampleRequest { method: "nope".into(), ..Default::default() });
+
+    let global = svc.metrics_json();
+    let shards = svc.shard_metrics_json();
+    assert_eq!(shards.len(), svc.shards());
+    assert_eq!(global.get("shards").unwrap().as_f64(), Some(4.0));
+    assert_eq!(global.get("shard_depths").unwrap().as_arr().unwrap().len(), 4);
+
+    let scalar_counters = [
+        "submitted", "rejected", "completed", "failed", "samples_out", "nfe_total",
+        "plan_builds", "plan_hits", "batched_runs", "workspace_reuses", "steals",
+        "worker_restarts", "quarantined_members", "batch_retries",
+        // per-kind failure counters
+        "invalid_request", "queue_full", "deadline_exceeded", "non_finite_output",
+        "worker_panic", "backend_error",
+    ];
+    let mut sums: BTreeMap<&str, f64> = BTreeMap::new();
+    let mut hist_sums: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for snap in &shards {
+        for key in scalar_counters {
+            let v = snap.get(key).and_then(|v| v.as_f64()).expect(key);
+            *sums.entry(key).or_insert(0.0) += v;
+        }
+        for key in ["batch_size_hist", "shard_depth_hist"] {
+            let arr = snap.get(key).unwrap().as_arr().unwrap();
+            let acc = hist_sums.entry(key).or_insert_with(|| vec![0.0; arr.len()]);
+            for (a, v) in acc.iter_mut().zip(arr) {
+                *a += v.as_f64().unwrap();
+            }
+        }
+    }
+    for key in scalar_counters {
+        assert_eq!(
+            global.get(key).and_then(|v| v.as_f64()),
+            Some(sums[key]),
+            "global '{key}' must be the sum of shard snapshots"
+        );
+    }
+    for key in ["batch_size_hist", "shard_depth_hist"] {
+        let g: Vec<f64> = global
+            .get(key)
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect();
+        assert_eq!(g, hist_sums[key], "global '{key}' must sum bucket-for-bucket");
+    }
+    // Sanity on the workload itself: everything completed and the depth
+    // histogram saw every enqueue.
+    assert_eq!(sums["completed"], 64.0);
+    assert_eq!(sums["rejected"], 2.0);
+    let depth_total: f64 = hist_sums["shard_depth_hist"].iter().sum();
+    assert_eq!(depth_total, 64.0, "one depth observation per accepted enqueue");
+    svc.shutdown();
+}
