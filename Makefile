@@ -17,18 +17,22 @@ test:
 # Release-mode run of the numerically heavy suites: the cross-solver
 # conformance sweep (every method × prediction × spacing, planned vs
 # reference bit-identity), the empirical convergence-order suite
-# (log-error regression against each method's order claim), the chaos
-# fault-injection suite (panic isolation, deadlines, batch quarantine,
-# pool supervision under 10%-ish injected faults, shard fault isolation),
-# and the sharded-coordinator invariant suite (deterministic routing,
-# shard-count-independent outputs, exact metrics aggregation). All suites
-# are sized to also pass inside plain `make test` (debug) so the tier-1
-# gate exercises them; this target re-runs just these optimized, which is
-# the fast path when iterating on solver numerics or the serving layer.
+# (log-error regression against each method's order claim), the batching
+# equivalence suite (batched lockstep runs — mixed-conditioning cohorts
+# included — bit-identical to solo runs across the zoo), the chaos
+# fault-injection suite (panic isolation, deadlines, batch + per-member
+# quarantine, pool supervision under 10%-ish injected faults, shard fault
+# isolation), and the sharded-coordinator invariant suite (deterministic
+# plan-key routing, conditioning-independent routes, shard-count-
+# independent outputs, exact metrics aggregation, the collapsed-vs-split
+# batch-key ablation). All suites are sized to also pass inside plain
+# `make test` (debug) so the tier-1 gate exercises them; this target
+# re-runs just these optimized, which is the fast path when iterating on
+# solver numerics or the serving layer.
 test-full:
 	$(CARGO) test --release -q --manifest-path $(MANIFEST) \
 		--test solver_conformance --test solver_convergence \
-		--test fault_injection --test shard_serving
+		--test batch_equiv --test fault_injection --test shard_serving
 
 # Submitter-storm stress run: the shard/chaos concurrency suites in
 # release mode with elevated thread and request counts (UNIPC_STRESS=1).

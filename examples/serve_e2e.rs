@@ -132,8 +132,16 @@ fn main() -> anyhow::Result<()> {
             },
         ),
     ] {
-        let cfg =
-            LoadConfig { rps: 12.0, total: 36, connections: 3, template, seed: 5, key_mix: 1 };
+        let cfg = LoadConfig {
+            rps: 12.0,
+            total: 36,
+            connections: 3,
+            template,
+            seed: 5,
+            key_mix: 1,
+            mix_guidance: None,
+            plan_mix: 1,
+        };
         let mut report = run_load(&server.addr.to_string(), &cfg)?;
         println!("{label:<32} {}", report.summary());
     }

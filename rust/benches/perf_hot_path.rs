@@ -11,6 +11,9 @@
 //!         naive reference loop vs plan-cached execution for the
 //!         DPM-Solver++ multistep and DEIS families (DEIS pays a per-step
 //!         Gauss–Legendre quadrature on the naive path)
+//!   L3-g  per-member conditioning: one mixed-conditioning cohort run as a
+//!         single slab-tiled lockstep batch vs the same members split into
+//!         per-conditioning cohorts (the legacy batch-key behavior)
 //!   RT-a  PJRT ε call latency vs batch size (batching amortization)
 //!   RT-b  fused correct artifact vs eval + host update (round-trip saving)
 //!
@@ -19,10 +22,12 @@
 
 use std::hint::black_box;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use unipc::analytic::datasets::{dataset, DatasetSpec};
 use unipc::analytic::GmmModel;
+use unipc::coordinator::{CohortModel, CondSlab, Conditioning, ModelBackend};
 use unipc::json::Value;
 use unipc::numerics::vandermonde::{unipc_coeffs, BFunction};
 use unipc::rng::Rng;
@@ -200,6 +205,69 @@ fn main() {
                 seq.as_secs_f64() / bat.as_secs_f64()
             );
         }
+    }
+
+    // L3-g: per-member conditioning (PR 8). Eight serving-shaped n=1
+    // members over 4 distinct (class, guidance) views: the collapsed batch
+    // key runs them as ONE slab-tiled lockstep batch; the legacy key would
+    // run 4 separate per-conditioning cohorts. Same arithmetic per row
+    // (bit-identical outputs) — the delta is batching: fewer runs, fewer
+    // model dispatches, better per-step amortization.
+    {
+        let spec = DatasetSpec::Cifar10Like;
+        let backend = ModelBackend::Analytic {
+            gm: Arc::new(dataset(spec)),
+            class_components: Arc::new(
+                (0..spec.n_classes()).map(|c| spec.class_components(c)).collect(),
+            ),
+        };
+        let opts = unipc3_opts(UniPcCoeffs::Bh(BFunction::Bh2), 8);
+        let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+        let mut members: Vec<(Tensor, Conditioning)> = (0..8usize)
+            .map(|i| {
+                let cond = Conditioning {
+                    class: Some(i % 4),
+                    guidance: (i % 2 == 0).then_some(2.0),
+                };
+                (Rng::seed_from(500 + i as u64).normal_tensor(&[1, gm.dim]), cond)
+            })
+            .collect();
+        // Stack in conditioning order, as the worker does before coalescing.
+        members.sort_by_key(|(_, c)| c.order_key());
+        let slabs = CondSlab::coalesce(members.iter().map(|(x, c)| (x.shape()[0], *c)));
+        assert_eq!(slabs.len(), 4, "8 members over 4 distinct conditionings");
+        let refs: Vec<&Tensor> = members.iter().map(|(x, _)| x).collect();
+        let mut bw = BatchWorkspace::new();
+        let cohort = CohortModel::new(&backend, &sched, slabs.clone());
+        let mixed = bench(
+            &mut results,
+            "L3-g mixed-cond batched b=8 UniPC-3 x8 (gmm)",
+            500,
+            || {
+                black_box(sample_batch_with_plan(
+                    &cohort, &sched, &refs, &opts, &plan, &mut bw,
+                ));
+            },
+        );
+        let split = bench(
+            &mut results,
+            "L3-g cond-split cohorts 4x2 UniPC-3 x8 (gmm)",
+            500,
+            || {
+                for slab in &slabs {
+                    let solo = CohortModel::solo(&backend, &sched, slab.cond, slab.rows);
+                    let group = &refs[slab.start..slab.start + slab.rows];
+                    black_box(sample_batch_with_plan(
+                        &solo, &sched, group, &opts, &plan, &mut bw,
+                    ));
+                }
+            },
+        );
+        println!(
+            "{:<48} {:>11.2}x",
+            "L3-g   mixed cohort vs cond-split",
+            split.as_secs_f64() / mixed.as_secs_f64()
+        );
     }
 
     // L3-f: the plan compiler generalized to the whole zoo — naive

@@ -77,6 +77,8 @@ fn run_point(
         },
         seed: 9,
         key_mix: 1,
+        mix_guidance: None,
+        plan_mix: 1,
     };
     let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
     let mut line = format!(
@@ -143,6 +145,8 @@ fn run_chaos_point(rps: f64, total: usize) -> String {
         },
         seed: 9,
         key_mix: 1,
+        mix_guidance: None,
+        plan_mix: 1,
     };
     let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
     let m = svc.metrics_json();
@@ -161,10 +165,12 @@ fn run_chaos_point(rps: f64, total: usize) -> String {
 }
 
 /// One shard-count ablation point: saturating open-loop load at a fixed
-/// worker count, workload fanned across 8 batch keys so a multi-shard
-/// coordinator can actually spread admission. Small cheap requests (n=1,
-/// 5 steps, no sample payload) keep the solver out of the way — the point
-/// measures queue-lock contention, which is what sharding removes.
+/// worker count, workload fanned across 8 *plan keys* (distinct step
+/// counts via `plan_mix`) so a multi-shard coordinator can actually spread
+/// admission — conditioning no longer fans the key, so `key_mix` would
+/// all land on one shard. Small cheap requests (n=1, no sample payload)
+/// keep the solver out of the way — the point measures queue-lock
+/// contention, which is what sharding removes.
 /// Returns the printable line plus (requests/s, steals) for the JSON dump.
 fn run_shard_point(shards: usize, total: usize) -> (String, f64, f64) {
     let (be, kind) = backend(200);
@@ -187,7 +193,9 @@ fn run_shard_point(shards: usize, total: usize) -> (String, f64, f64) {
             ..Default::default()
         },
         seed: 9,
-        key_mix: 8,
+        key_mix: 1,
+        mix_guidance: None,
+        plan_mix: 8,
     };
     let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
     let rps_achieved = report.ok as f64 / report.wall.as_secs_f64();
@@ -202,6 +210,67 @@ fn run_shard_point(shards: usize, total: usize) -> (String, f64, f64) {
     server.stop();
     svc.shutdown();
     (line, rps_achieved, counter("steals"))
+}
+
+/// Conditioning-mix ablation: one worker, one plan key, traffic fanned
+/// across 8 classes with guidance on every other request. With the
+/// collapsed batch key (PR 8) the whole mix stacks into one lockstep
+/// cohort per linger window; `split_cond_batches: true` restores the
+/// legacy per-conditioning keys as the baseline. Reports the member-
+/// weighted mean batch size from `batch_size_hist` plus the mixed-cohort
+/// counters — the steady-state cohorts should be visibly larger collapsed.
+fn run_cond_mix_point(split: bool, rps: f64, total: usize) -> String {
+    let (be, kind) = backend(200);
+    let svc = Service::start(
+        ServerConfig {
+            workers: 1,
+            shards: 1,
+            queue_cap: 4096,
+            batch_linger_us: 2_000,
+            split_cond_batches: split,
+            ..Default::default()
+        },
+        be,
+    );
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let cfg = LoadConfig {
+        rps,
+        total,
+        connections: 4,
+        template: SampleRequest {
+            n: 1,
+            steps: 5,
+            method: "unipc-3".into(),
+            unic: true,
+            seed: 0,
+            return_samples: false,
+            ..Default::default()
+        },
+        seed: 9,
+        key_mix: 8,
+        mix_guidance: Some(2.0),
+        plan_mix: 1,
+    };
+    let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
+    let m = svc.metrics_json();
+    let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let hist: Vec<f64> = m
+        .get("batch_size_hist")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+        .unwrap_or_default();
+    let runs: f64 = hist.iter().sum();
+    let members: f64 = hist.iter().enumerate().map(|(i, c)| (i + 1) as f64 * c).sum();
+    let mean_batch = if runs > 0.0 { members / runs } else { 0.0 };
+    let line = format!(
+        "[{kind}] split_cond_batches={split}: {}  mean_batch={mean_batch:.2} batched_runs={} mixed_cond_batches={}",
+        report.summary(),
+        counter("batched_runs"),
+        counter("mixed_cond_batches"),
+    );
+    server.stop();
+    svc.shutdown();
+    line
 }
 
 fn main() {
@@ -237,6 +306,14 @@ fn main() {
     // Failed requests get typed responses; the pool self-heals.
     println!("-- chaos ablation (10% injected faults, rps=16) --");
     println!("{}", run_chaos_point(16.0, 48));
+
+    // Per-member conditioning (PR 8): same plan, 8 classes + alternating
+    // guidance. The collapsed batch key stacks the whole mix into one
+    // cohort; the split baseline shows what the legacy key cost.
+    println!("-- conditioning-mix ablation (1 worker, 8 classes, alternating guidance) --");
+    for split in [true, false] {
+        println!("{}", run_cond_mix_point(split, 400.0, 64));
+    }
 
     // Coordinator sharding (PR 7): fixed 8 workers, saturating load over 8
     // batch keys, shard count swept. One queue serializes admission + the

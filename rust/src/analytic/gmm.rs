@@ -153,9 +153,36 @@ impl GaussianMixture {
         t: f64,
         subset: Option<&[usize]>,
     ) -> Tensor {
+        let mut out = Tensor::zeros(x.shape());
+        self.eps_star_rows(sched, x, t, subset, 0, x.shape()[0], &mut out);
+        out
+    }
+
+    /// ε*(x, t) for the row range `[start, start + rows)` of `x`, written
+    /// into the same rows of `out` — the slab form of
+    /// [`GaussianMixture::eps_star`] used by the serving layer's
+    /// row-conditioned model view, where contiguous same-conditioning row
+    /// ranges of a mixed cohort evaluate under their own component subsets.
+    ///
+    /// The per-call hoisted work (component subset expansion, marginal
+    /// variances, log-posterior constants) depends only on `(t, subset)`,
+    /// and the per-row kernel is the same one `eps_star` uses, so a slab
+    /// evaluation is bit-identical to evaluating those rows alone.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eps_star_rows(
+        &self,
+        sched: &dyn NoiseSchedule,
+        x: &Tensor,
+        t: f64,
+        subset: Option<&[usize]>,
+        start: usize,
+        rows: usize,
+        out: &mut Tensor,
+    ) {
         assert_eq!(x.shape().len(), 2);
         assert_eq!(x.shape()[1], self.dim);
-        let n = x.shape()[0];
+        assert_eq!(out.shape(), x.shape());
+        assert!(start + rows <= x.shape()[0]);
         let a = sched.alpha(t);
         let sg = sched.sigma(t);
         let all;
@@ -176,8 +203,7 @@ impl GaussianMixture {
         }
         let mut logp = vec![0.0; ks.len()];
         let mut gammas = vec![0.0; ks.len()];
-        let mut out = Tensor::zeros(x.shape());
-        for i in 0..n {
+        for i in start..start + rows {
             self.eps_row(
                 a,
                 sg,
@@ -190,7 +216,86 @@ impl GaussianMixture {
                 out.row_mut(i),
             );
         }
-        out
+    }
+
+    /// Classifier-free-guided ε̃ = (1+s)·ε_cond − s·ε_uncond for the row
+    /// range `[start, start + rows)` of `x`, written into the same rows of
+    /// `out` — the slab form of [`GuidedGmmModel`]. The per-row combine
+    /// uses exactly the `a·x + b·y` expression [`Tensor::lincomb`]
+    /// evaluates, so a guided slab is bit-identical to running
+    /// `GuidedGmmModel` on those rows alone.
+    #[allow(clippy::too_many_arguments)]
+    pub fn eps_star_guided_rows(
+        &self,
+        sched: &dyn NoiseSchedule,
+        x: &Tensor,
+        t: f64,
+        class_components: &[usize],
+        scale: f64,
+        start: usize,
+        rows: usize,
+        out: &mut Tensor,
+    ) {
+        if scale == 0.0 {
+            self.eps_star_rows(sched, x, t, Some(class_components), start, rows, out);
+            return;
+        }
+        assert_eq!(x.shape().len(), 2);
+        assert_eq!(x.shape()[1], self.dim);
+        assert_eq!(out.shape(), x.shape());
+        assert!(start + rows <= x.shape()[0]);
+        let a = sched.alpha(t);
+        let sg = sched.sigma(t);
+        let d = self.dim;
+        let all: Vec<usize> = (0..self.n_components()).collect();
+        // Hoist both model views' row-independent heads once per call,
+        // exactly as two separate `eps_star` calls would.
+        let hoist = |ks: &[usize]| {
+            let mut vks = Vec::with_capacity(ks.len());
+            let mut logc = Vec::with_capacity(ks.len());
+            for &k in ks {
+                let v = a * a * self.stds[k] * self.stds[k] + sg * sg;
+                vks.push(v);
+                logc.push(self.weights[k].ln() - 0.5 * d as f64 * v.ln());
+            }
+            (vks, logc)
+        };
+        let (vks_c, logc_c) = hoist(class_components);
+        let (vks_u, logc_u) = hoist(&all);
+        let mut logp_c = vec![0.0; class_components.len()];
+        let mut gammas_c = vec![0.0; class_components.len()];
+        let mut logp_u = vec![0.0; all.len()];
+        let mut gammas_u = vec![0.0; all.len()];
+        let mut cbuf = vec![0.0; d];
+        let mut ubuf = vec![0.0; d];
+        for i in start..start + rows {
+            self.eps_row(
+                a,
+                sg,
+                x.row(i),
+                class_components,
+                &vks_c,
+                &logc_c,
+                &mut logp_c,
+                &mut gammas_c,
+                &mut cbuf,
+            );
+            self.eps_row(
+                a,
+                sg,
+                x.row(i),
+                &all,
+                &vks_u,
+                &logc_u,
+                &mut logp_u,
+                &mut gammas_u,
+                &mut ubuf,
+            );
+            let o = out.row_mut(i);
+            for j in 0..d {
+                o[j] = (1.0 + scale) * cbuf[j] + (-scale) * ubuf[j];
+            }
+        }
     }
 
     /// A standard benchmark mixture: `k` components on a circle of radius
@@ -378,6 +483,46 @@ mod tests {
         let a = guided.eval(&x, 0.5);
         let b = g.eps_star(&sched, &x, 0.5, Some(&[0, 1]));
         assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn slab_eval_is_bit_identical_to_whole_tensor_eval() {
+        // The row-conditioned serving path evaluates contiguous row ranges
+        // (slabs) of a stacked batch separately; each slab must reproduce
+        // the exact bits the whole-tensor call produces for those rows.
+        let sched = VpLinear::default();
+        let g = GaussianMixture::ring(3, 5, 2.0, 0.4);
+        let mut rng = Rng::seed_from(11);
+        let x = rng.normal_tensor(&[7, 3]);
+        for subset in [None, Some(&[1usize, 3][..])] {
+            let whole = g.eps_star(&sched, &x, 0.5, subset);
+            let mut out = Tensor::zeros(x.shape());
+            g.eps_star_rows(&sched, &x, 0.5, subset, 0, 2, &mut out);
+            g.eps_star_rows(&sched, &x, 0.5, subset, 2, 4, &mut out);
+            g.eps_star_rows(&sched, &x, 0.5, subset, 6, 1, &mut out);
+            assert_eq!(whole.data(), out.data());
+        }
+    }
+
+    #[test]
+    fn guided_slab_is_bit_identical_to_guided_model_rows() {
+        let sched = VpLinear::default();
+        let g = GaussianMixture::ring(3, 5, 2.0, 0.4);
+        let mut rng = Rng::seed_from(12);
+        let x = rng.normal_tensor(&[4, 3]);
+        for scale in [0.0, 0.5, 4.0] {
+            let guided = GuidedGmmModel {
+                gm: &g,
+                sched: &sched,
+                class_components: vec![0, 2],
+                scale,
+            };
+            let whole = guided.eval(&x, 0.37);
+            let mut out = Tensor::zeros(x.shape());
+            g.eps_star_guided_rows(&sched, &x, 0.37, &[0, 2], scale, 0, 3, &mut out);
+            g.eps_star_guided_rows(&sched, &x, 0.37, &[0, 2], scale, 3, 1, &mut out);
+            assert_eq!(whole.data(), out.data());
+        }
     }
 
     #[test]

@@ -25,6 +25,13 @@ pub struct ServerConfig {
     /// batches opportunistically: only what is already queued coalesces,
     /// and an idle service adds no latency.
     pub batch_linger_us: u64,
+    /// Ablation/compat switch: when true, the batch key re-appends the
+    /// request conditioning (the legacy pre-row-conditioning behavior), so
+    /// mixed class/guidance traffic splits into per-conditioning cohorts
+    /// instead of stacking into one lockstep run over a row-conditioned
+    /// model view. Benches and tests use it to quantify what the collapsed
+    /// key buys; leave false in production.
+    pub split_cond_batches: bool,
     /// Worker threads running sampling loops.
     pub workers: usize,
     /// Coordinator shards. Each shard owns its own queue, condvar, and
@@ -65,6 +72,7 @@ impl Default for ServerConfig {
             max_batch: 64,
             batch_wait_us: 200,
             batch_linger_us: 0,
+            split_cond_batches: false,
             workers: 4,
             shards: 0,
             queue_cap: 256,
@@ -107,6 +115,7 @@ impl ServerConfig {
                 "max_batch" => c.max_batch = req_usize(val, k)?,
                 "batch_wait_us" => c.batch_wait_us = req_usize(val, k)? as u64,
                 "batch_linger_us" => c.batch_linger_us = req_usize(val, k)? as u64,
+                "split_cond_batches" => c.split_cond_batches = req_bool(val, k)?,
                 "workers" => c.workers = req_usize(val, k)?,
                 "shards" => c.shards = req_usize(val, k)?,
                 "queue_cap" => c.queue_cap = req_usize(val, k)?,
@@ -198,6 +207,10 @@ fn req_f64(v: &Value, key: &str) -> Result<f64> {
     v.as_f64().ok_or_else(|| anyhow::anyhow!("'{key}' must be a number"))
 }
 
+fn req_bool(v: &Value, key: &str) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow::anyhow!("'{key}' must be a boolean"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,7 +244,8 @@ mod tests {
         let v = json::parse(
             r#"{"addr": "0.0.0.0:9000", "max_batch": 8, "default_method": "dpmpp-2m",
                 "spacing": "time_uniform", "t_end": 0.01, "batch_linger_us": 500,
-                "default_deadline_ms": 250, "drain_deadline_ms": 100, "shards": 2}"#,
+                "default_deadline_ms": 250, "drain_deadline_ms": 100, "shards": 2,
+                "split_cond_batches": true}"#,
         )
         .unwrap();
         let c = ServerConfig::from_json(&v).unwrap();
@@ -243,6 +257,8 @@ mod tests {
         assert_eq!(c.default_deadline_ms, 250);
         assert_eq!(c.drain_deadline_ms, 100);
         assert_eq!(c.shards, 2);
+        assert!(c.split_cond_batches);
+        assert!(!ServerConfig::default().split_cond_batches, "collapsed key is the default");
         // Untouched defaults survive.
         assert_eq!(c.workers, ServerConfig::default().workers);
     }
@@ -260,6 +276,7 @@ mod tests {
             r#"{"default_method": "wat"}"#,
             r#"{"t_end": 2.0}"#,
             r#"{"max_batch": "x"}"#,
+            r#"{"split_cond_batches": 3}"#,
         ] {
             let v = json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&v).is_err(), "{bad}");

@@ -31,6 +31,14 @@ pub struct Metrics {
     /// Histogram over batched-path run sizes: bucket `i` counts runs with
     /// `i + 1` member requests; the last bucket collects runs with ≥ 8.
     pub batch_size_hist: [u64; 8],
+    /// Plan-executed runs whose members spanned ≥ 2 distinct model
+    /// conditionings (class/guidance) — the cohorts the conditioning-free
+    /// batch key admits that the legacy key would have split.
+    pub mixed_cond_batches: u64,
+    /// Histogram over distinct conditionings per batched-path run: bucket
+    /// `i` counts runs with `i + 1` distinct (class, guidance) views (= the
+    /// run's slab count); the last bucket collects runs with ≥ 8.
+    pub cond_distinct_hist: [u64; 8],
     /// Runs served entirely from a worker's pooled `BatchWorkspace`
     /// (no solver-side allocation to start the run).
     pub workspace_reuses: u64,
@@ -83,14 +91,21 @@ impl Metrics {
         self.failures_by_kind[kind.index()] += 1;
     }
 
-    /// Record one plan-executed run that served `members` requests,
-    /// `reuses` of whose workspace acquisitions came from pooled capacity
-    /// (0 or 1 for a single run; passed as a delta so callers can batch).
-    pub fn record_batch(&mut self, members: usize, reuses: u64) {
+    /// Record one plan-executed run that served `members` requests spanning
+    /// `distinct_conds` distinct model conditionings (the run's slab
+    /// count), `reuses` of whose workspace acquisitions came from pooled
+    /// capacity (0 or 1 for a single run; passed as a delta so callers can
+    /// batch).
+    pub fn record_batch(&mut self, members: usize, distinct_conds: usize, reuses: u64) {
         debug_assert!(members >= 1);
+        debug_assert!(distinct_conds >= 1 && distinct_conds <= members);
         self.batch_size_hist[members.min(8) - 1] += 1;
+        self.cond_distinct_hist[distinct_conds.min(8) - 1] += 1;
         if members >= 2 {
             self.batched_runs += 1;
+        }
+        if distinct_conds >= 2 {
+            self.mixed_cond_batches += 1;
         }
         self.workspace_reuses += reuses;
     }
@@ -133,12 +148,16 @@ impl Metrics {
         self.plan_builds += other.plan_builds;
         self.plan_hits += other.plan_hits;
         self.batched_runs += other.batched_runs;
+        self.mixed_cond_batches += other.mixed_cond_batches;
         self.workspace_reuses += other.workspace_reuses;
         self.worker_restarts += other.worker_restarts;
         self.quarantined_members += other.quarantined_members;
         self.batch_retries += other.batch_retries;
         self.steals += other.steals;
         for (a, b) in self.batch_size_hist.iter_mut().zip(&other.batch_size_hist) {
+            *a += *b;
+        }
+        for (a, b) in self.cond_distinct_hist.iter_mut().zip(&other.cond_distinct_hist) {
             *a += *b;
         }
         for (a, b) in self.shard_depth_hist.iter_mut().zip(&other.shard_depth_hist) {
@@ -167,6 +186,13 @@ impl Metrics {
                 "batch_size_hist",
                 Value::Arr(
                     self.batch_size_hist.iter().map(|&c| Value::Num(c as f64)).collect(),
+                ),
+            ),
+            ("mixed_cond_batches", Value::from(self.mixed_cond_batches as f64)),
+            (
+                "cond_distinct_hist",
+                Value::Arr(
+                    self.cond_distinct_hist.iter().map(|&c| Value::Num(c as f64)).collect(),
                 ),
             ),
             ("workspace_reuses", Value::from(self.workspace_reuses as f64)),
@@ -217,19 +243,27 @@ mod tests {
     #[test]
     fn record_batch_updates_hist_and_counters() {
         let mut m = Metrics::default();
-        m.record_batch(1, 1);
-        m.record_batch(4, 1);
-        m.record_batch(12, 0);
+        m.record_batch(1, 1, 1);
+        m.record_batch(4, 3, 1);
+        m.record_batch(12, 12, 0);
         assert_eq!(m.batched_runs, 2, "singletons are not batched runs");
         assert_eq!(m.batch_size_hist[0], 1);
         assert_eq!(m.batch_size_hist[3], 1);
         assert_eq!(m.batch_size_hist[7], 1, "oversize runs land in the last bucket");
         assert_eq!(m.workspace_reuses, 2);
+        assert_eq!(m.mixed_cond_batches, 2, "uniform runs are not mixed");
+        assert_eq!(m.cond_distinct_hist[0], 1);
+        assert_eq!(m.cond_distinct_hist[2], 1);
+        assert_eq!(m.cond_distinct_hist[7], 1, "≥8 distinct views hit the last bucket");
         let snap = m.snapshot_json();
         assert_eq!(snap.get("batched_runs").unwrap().as_f64(), Some(2.0));
+        assert_eq!(snap.get("mixed_cond_batches").unwrap().as_f64(), Some(2.0));
         let hist = snap.get("batch_size_hist").unwrap().as_arr().unwrap();
         assert_eq!(hist.len(), 8);
         assert_eq!(hist[3].as_f64(), Some(1.0));
+        let chist = snap.get("cond_distinct_hist").unwrap().as_arr().unwrap();
+        assert_eq!(chist.len(), 8);
+        assert_eq!(chist[2].as_f64(), Some(1.0));
     }
 
     #[test]
@@ -259,12 +293,12 @@ mod tests {
             b.record_completion(1, 5, Duration::from_micros(us), Duration::from_micros(us));
             whole.record_completion(1, 5, Duration::from_micros(us), Duration::from_micros(us));
         }
-        a.record_batch(3, 1);
-        whole.record_batch(3, 1);
-        b.record_batch(3, 0);
-        b.record_batch(12, 1);
-        whole.record_batch(3, 0);
-        whole.record_batch(12, 1);
+        a.record_batch(3, 2, 1);
+        whole.record_batch(3, 2, 1);
+        b.record_batch(3, 1, 0);
+        b.record_batch(12, 9, 1);
+        whole.record_batch(3, 1, 0);
+        whole.record_batch(12, 9, 1);
         a.record_depth(1);
         whole.record_depth(1);
         b.record_depth(40);
@@ -283,6 +317,8 @@ mod tests {
         assert_eq!(merged.failed, whole.failed);
         assert_eq!(merged.steals, whole.steals);
         assert_eq!(merged.batch_size_hist, whole.batch_size_hist);
+        assert_eq!(merged.cond_distinct_hist, whole.cond_distinct_hist);
+        assert_eq!(merged.mixed_cond_batches, whole.mixed_cond_batches);
         assert_eq!(merged.shard_depth_hist, whole.shard_depth_hist);
         assert_eq!(merged.failures_by_kind, whole.failures_by_kind);
         let (ms, mw) = (merged.snapshot_json(), whole.snapshot_json());

@@ -9,13 +9,17 @@
 //!   per-request deadlines.
 //! * [`service`] — the **sharded** supervised worker pool: N partitions
 //!   (queue + condvar + worker sub-pool each) with batch-key-hash routing
-//!   ([`service::shard_for_key`]) and cross-shard work stealing; typed
-//!   admission rejection (invalid/queue-full/shut-down); deterministic
-//!   per-request seeds; the batch assembler that coalesces same-plan
-//!   requests into lockstep batched runs over a shared `Arc<SamplePlan>`
-//!   and per-worker pooled workspaces; panic isolation + worker respawn,
-//!   deadline shedding, per-member output quarantine, and the seeded
-//!   chaos-injection backend ([`service::ChaosConfig`]).
+//!   ([`service::shard_for_key`]; the key is the plan key alone, so
+//!   conditioning never splits or re-routes a cohort) and cross-shard work
+//!   stealing; typed admission rejection (invalid/queue-full/shut-down);
+//!   deterministic per-request seeds; the batch assembler that coalesces
+//!   same-plan requests — mixed class/guidance included — into lockstep
+//!   batched runs over a shared `Arc<SamplePlan>`, evaluated through the
+//!   row-conditioned [`service::CohortModel`] (one [`service::CondSlab`]
+//!   per distinct conditioning) and per-worker pooled workspaces; panic
+//!   isolation + worker respawn, deadline shedding, per-member output
+//!   quarantine, and the seeded chaos-injection backend
+//!   ([`service::ChaosConfig`]).
 //! * [`metrics`] — per-shard counters (including per-failure-kind) +
 //!   latency digests, snapshotted as JSON and merged exactly
 //!   ([`Metrics::merge`]) into the service-wide aggregate.
@@ -25,7 +29,8 @@ pub mod request;
 pub mod service;
 
 pub use metrics::Metrics;
-pub use request::{FailureKind, SampleRequest, SampleResponse};
+pub use request::{Conditioning, FailureKind, SampleRequest, SampleResponse};
 pub use service::{
-    shard_for_key, silence_injected_panics, ChaosConfig, ModelBackend, Service,
+    shard_for_key, silence_injected_panics, ChaosConfig, CohortModel, CondSlab,
+    ModelBackend, Service,
 };

@@ -50,17 +50,52 @@ impl Default for SampleRequest {
     }
 }
 
+/// A batch member's model conditioning: the (class, guidance) pair that
+/// selects the model view its rows evaluate under. This is NOT part of
+/// the batch key — requests sharing a sampling plan batch together
+/// regardless of conditioning, and the worker evaluates each contiguous
+/// same-conditioning row range (slab) of the stacked batch under its own
+/// view (`coordinator::CohortModel`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Conditioning {
+    /// Class label (None = unconditional).
+    pub class: Option<usize>,
+    /// Classifier-free guidance scale (requires `class`).
+    pub guidance: Option<f64>,
+}
+
+impl Conditioning {
+    /// Exact equality as the batch assembler sees it: class by value,
+    /// guidance by f64 bits (matching `SampleRequest::conditioning_key`).
+    pub fn same(&self, other: &Conditioning) -> bool {
+        self.class == other.class
+            && self.guidance.map(f64::to_bits) == other.guidance.map(f64::to_bits)
+    }
+
+    /// Total-order key grouping equal conditionings adjacently when the
+    /// worker sorts a mixed cohort before stacking (slab contiguity).
+    pub fn order_key(&self) -> (Option<usize>, Option<u64>) {
+        (self.class, self.guidance.map(f64::to_bits))
+    }
+}
+
 impl SampleRequest {
     /// Parse + validate the configured method.
     pub fn parsed_method(&self) -> Result<Method> {
         Method::parse(&self.method).ok_or_else(|| anyhow!("unknown method '{}'", self.method))
     }
 
-    /// Model-conditioning suffix of the batch key: batch members share one
-    /// model view, so class and guidance must match exactly (guidance
-    /// compared by bits). The full batch key (`plan_key` + this suffix)
-    /// also drives shard routing, so every member of a batchable cohort
-    /// lands on the same coordinator shard.
+    /// This request's model conditioning (class + guidance).
+    pub fn conditioning(&self) -> Conditioning {
+        Conditioning { class: self.class, guidance: self.guidance }
+    }
+
+    /// Model-conditioning identity string: class and guidance compared
+    /// exactly (guidance by bits). Since the backend became
+    /// row-conditioned this is no longer part of the batch key — mixed
+    /// class/guidance cohorts stack into one lockstep run — but it is kept
+    /// as the legacy key suffix behind `ServerConfig::split_cond_batches`
+    /// (the conditioning-split ablation baseline).
     pub fn conditioning_key(&self) -> String {
         format!("|class={:?}|g={:?}", self.class, self.guidance.map(f64::to_bits))
     }
@@ -346,6 +381,27 @@ mod tests {
         // Seed/steps don't condition the model and must not split batches.
         let reseeded = SampleRequest { seed: 99, steps: 50, ..Default::default() };
         assert_eq!(base.conditioning_key(), reseeded.conditioning_key());
+    }
+
+    #[test]
+    fn conditioning_equality_matches_the_key_and_orders_stably() {
+        let a = SampleRequest { class: Some(1), guidance: Some(2.0), ..Default::default() };
+        let b = SampleRequest { class: Some(1), guidance: Some(2.0), ..Default::default() };
+        let c = SampleRequest { class: Some(1), guidance: Some(-0.0), ..Default::default() };
+        let d = SampleRequest { class: Some(1), guidance: Some(0.0), ..Default::default() };
+        assert!(a.conditioning().same(&b.conditioning()));
+        // Bit comparison, exactly like the key: -0.0 and 0.0 are distinct
+        // conditionings (distinct f64 bits), matching conditioning_key.
+        assert!(!c.conditioning().same(&d.conditioning()));
+        assert_ne!(c.conditioning_key(), d.conditioning_key());
+        // `same` ⟺ equal order keys, so sorting by order_key makes equal
+        // conditionings adjacent (the slab-contiguity invariant).
+        assert_eq!(a.conditioning().order_key(), b.conditioning().order_key());
+        assert_ne!(c.conditioning().order_key(), d.conditioning().order_key());
+        // Unconditional sorts first and compares equal to itself.
+        let un = SampleRequest::default().conditioning();
+        assert!(un.same(&un));
+        assert!(un.order_key() < a.conditioning().order_key());
     }
 
     #[test]

@@ -19,15 +19,24 @@
 //! stays global, so a config still compiles exactly once.
 //!
 //! Each worker pops a request and first tries the **batched plan path**:
-//! requests whose batch key matches — same [`plan_key`] *and* same model
-//! conditioning (class/guidance) — are pulled out of the queue into one
-//! lockstep run ([`crate::solver::sample_batch_with_plan`]) that shares a
-//! cached `Arc<SamplePlan>`, advances every member through the same
-//! timestep grid, and evaluates the model backend **once per step** on the
-//! stacked batch tensor. Each worker keeps one pooled
-//! [`crate::solver::BatchWorkspace`] reused across runs, so steady-state
-//! runs start without allocating. Batched output is bit-identical to
-//! running each request alone (`tests/batch_equiv.rs`).
+//! requests whose batch key matches — the [`plan_key`] alone — are pulled
+//! out of the queue into one lockstep run
+//! ([`crate::solver::sample_batch_with_plan`]) that shares a cached
+//! `Arc<SamplePlan>`, advances every member through the same timestep
+//! grid, and evaluates the model backend **once per step** on the stacked
+//! batch tensor. Model conditioning (class/guidance) is **not** part of
+//! the key: the backend view is row-conditioned ([`CohortModel`]) — the
+//! worker sorts members by conditioning before stacking, so each distinct
+//! conditioning becomes one contiguous row range ([`CondSlab`]) evaluated
+//! under its own class/guidance view, and a uniform cohort stays a single
+//! slab on the whole-tensor fast path (zero cost over the pre-slab path).
+//! Each worker keeps one pooled [`crate::solver::BatchWorkspace`] reused
+//! across runs, so steady-state runs start without allocating. Batched
+//! output is bit-identical to running each request alone — including
+//! mixed-conditioning cohorts (`tests/batch_equiv.rs`), because every
+//! kernel in the planned path and every backend slab eval is
+//! row-independent. `ServerConfig::split_cond_batches` restores the legacy
+//! conditioning-split keying as an ablation baseline.
 //!
 //! The batch assembler is bounded by `ServerConfig::max_batch` total rows
 //! and, optionally, lingers `ServerConfig::batch_linger_us` for more
@@ -63,7 +72,7 @@
 //! step-level dynamic batching below this layer.
 
 use super::metrics::Metrics;
-use super::request::{FailureKind, SampleRequest, SampleResponse};
+use super::request::{Conditioning, FailureKind, SampleRequest, SampleResponse};
 use crate::analytic::GaussianMixture;
 use crate::config::ServerConfig;
 use crate::rng::Rng;
@@ -106,12 +115,16 @@ pub struct ChaosConfig {
     /// Probability an eval sleeps `latency_us` first.
     pub latency_rate: f64,
     pub latency_us: u64,
-    /// When set, only evaluations conditioned on this class label draw
-    /// faults; every other request passes through untouched (and draws
-    /// nothing from the fault stream). Because the class is part of the
-    /// batch key — and the batch key routes the request — this aims chaos
-    /// at exactly one coordinator shard, which is how the shard-isolation
-    /// tests poison shard A while proving shard B keeps serving.
+    /// When set, only evaluations whose conditioning includes this class
+    /// label draw faults; untargeted evaluations pass through untouched
+    /// (and draw nothing from the fault stream). For a mixed-conditioning
+    /// cohort the eval is targeted when **any** slab carries the class, and
+    /// an injected NaN row is remapped into the targeted slabs' rows — so
+    /// chaos aims at exactly the members conditioned on the class, which is
+    /// how the mixed-cohort chaos tests prove per-member isolation. (The
+    /// class no longer routes the request — the batch key is the plan key
+    /// alone — so shard-isolation tests split shards by step count instead
+    /// while still aiming faults by class.)
     pub target_class: Option<usize>,
 }
 
@@ -188,46 +201,183 @@ pub fn silence_injected_panics() {
     });
 }
 
-/// Per-request model view over a backend.
-struct RequestModel<'a> {
-    backend: &'a ModelBackend,
-    sched: &'a VpLinear,
-    class: Option<usize>,
-    guidance: Option<f64>,
-    pjrt: Option<PjrtModel>,
+/// A contiguous row range of a stacked batch whose rows share one model
+/// conditioning — the unit at which [`CohortModel`] selects the backend
+/// view. The worker sorts cohort members by conditioning before stacking,
+/// so a cohort with k distinct conditionings coalesces to exactly k slabs,
+/// and a uniform cohort to one (the whole-tensor fast path).
+#[derive(Clone, Copy, Debug)]
+pub struct CondSlab {
+    /// First stacked row of the slab.
+    pub start: usize,
+    /// Number of rows (≥ 1 for slabs produced by [`CondSlab::coalesce`]).
+    pub rows: usize,
+    /// The model view these rows evaluate under.
+    pub cond: Conditioning,
 }
 
-impl<'a> RequestModel<'a> {
-    fn new(backend: &'a ModelBackend, sched: &'a VpLinear, req: &SampleRequest) -> Self {
-        let pjrt = match base_backend(backend) {
-            ModelBackend::Pjrt(h) => {
-                let mut m = PjrtModel::new(h.clone());
-                if let Some(c) = req.class {
-                    m = m.with_class(c, req.guidance);
-                }
-                Some(m)
+impl CondSlab {
+    /// Coalesce per-member `(rows, conditioning)` pairs — in stacked row
+    /// order — into maximal contiguous same-conditioning slabs
+    /// (conditionings compared exactly, guidance by bits, via
+    /// [`Conditioning::same`]).
+    pub fn coalesce(members: impl IntoIterator<Item = (usize, Conditioning)>) -> Vec<CondSlab> {
+        let mut slabs: Vec<CondSlab> = Vec::new();
+        let mut start = 0usize;
+        for (rows, cond) in members {
+            match slabs.last_mut() {
+                Some(s) if s.cond.same(&cond) => s.rows += rows,
+                _ => slabs.push(CondSlab { start, rows, cond }),
             }
-            _ => None,
+            start += rows;
+        }
+        slabs
+    }
+}
+
+/// The row-conditioned model view over a [`ModelBackend`]: the stacked
+/// batch is partitioned into [`CondSlab`]s and each slab's rows evaluate
+/// under that slab's class/guidance. This is the backend contract that
+/// lets mixed class/guidance requests share one lockstep batched run:
+///
+/// - A **uniform cohort is a single slab** and takes the whole-tensor fast
+///   path — exactly the arithmetic of the pre-slab per-request view, so
+///   the common case costs nothing.
+/// - A **mixed cohort** evaluates per slab into one output tensor. Every
+///   backend slab kernel is row-independent and hoists only
+///   `(t, conditioning)`-dependent work, so each member's rows are
+///   bit-identical to a solo run under its own conditioning
+///   (`tests/batch_equiv.rs` proves this across the method zoo).
+pub struct CohortModel<'a> {
+    backend: &'a ModelBackend,
+    sched: &'a VpLinear,
+    slabs: Vec<CondSlab>,
+    /// One PJRT adapter per slab (empty for non-PJRT backends): the
+    /// executor below coalesces the per-slab calls back into padded device
+    /// batches, so a mixed cohort still amortizes dispatch.
+    pjrt: Vec<PjrtModel>,
+}
+
+impl<'a> CohortModel<'a> {
+    /// A view over `slabs`, which must tile `[0, Σ rows)` contiguously in
+    /// order (as produced by [`CondSlab::coalesce`]).
+    pub fn new(backend: &'a ModelBackend, sched: &'a VpLinear, slabs: Vec<CondSlab>) -> Self {
+        debug_assert!(!slabs.is_empty());
+        debug_assert!(slabs.windows(2).all(|w| w[0].start + w[0].rows == w[1].start));
+        debug_assert_eq!(slabs.first().map(|s| s.start), Some(0));
+        let pjrt = match base_backend(backend) {
+            ModelBackend::Pjrt(h) => slabs
+                .iter()
+                .map(|s| {
+                    let mut m = PjrtModel::new(h.clone());
+                    if let Some(c) = s.cond.class {
+                        m = m.with_class(c, s.cond.guidance);
+                    }
+                    m
+                })
+                .collect(),
+            _ => Vec::new(),
         };
-        RequestModel { backend, sched, class: req.class, guidance: req.guidance, pjrt }
+        CohortModel { backend, sched, slabs, pjrt }
+    }
+
+    /// The single-slab view a solo request runs under (`rows` = its row
+    /// count): the uniform fast path, bit-identical to the batched slab
+    /// evaluation of the same rows.
+    pub fn solo(
+        backend: &'a ModelBackend,
+        sched: &'a VpLinear,
+        cond: Conditioning,
+        rows: usize,
+    ) -> Self {
+        CohortModel::new(backend, sched, vec![CondSlab { start: 0, rows, cond }])
+    }
+
+    /// The slab partition this view evaluates under.
+    pub fn slabs(&self) -> &[CondSlab] {
+        &self.slabs
+    }
+
+    /// Whether a chaos config aims at this cohort: no target means every
+    /// eval is targeted; with a target class, any slab conditioned on it
+    /// makes the eval draw from the fault stream.
+    fn chaos_targeted(&self, cfg: &ChaosConfig) -> bool {
+        match cfg.target_class {
+            None => true,
+            Some(c) => self.slabs.iter().any(|s| s.cond.class == Some(c)),
+        }
+    }
+
+    /// Rows belonging to slabs the chaos target aims at (all rows when
+    /// untargeted), clipped to the actual output in case the eval tensor is
+    /// smaller than the slab tiling (defensive; never happens in practice).
+    fn chaos_target_rows(&self, cfg: &ChaosConfig, batch: usize) -> Vec<usize> {
+        self.slabs
+            .iter()
+            .filter(|s| cfg.target_class.is_none() || s.cond.class == cfg.target_class)
+            .flat_map(|s| s.start..s.start + s.rows)
+            .filter(|&r| r < batch)
+            .collect()
     }
 
     fn eval_backend(&self, backend: &ModelBackend, x: &Tensor, t: f64) -> Tensor {
         match backend {
-            ModelBackend::Pjrt(_) => self.pjrt.as_ref().unwrap().eval(x, t),
-            ModelBackend::Analytic { gm, class_components } => {
-                let subset = self.class.map(|c| class_components[c].as_slice());
-                let cond = gm.eps_star(self.sched, x, t, subset);
-                match (self.guidance, subset) {
-                    (Some(s), Some(_)) if s != 0.0 => {
-                        let uncond = gm.eps_star(self.sched, x, t, None);
-                        Tensor::lincomb(1.0 + s, &cond, -s, &uncond)
-                    }
-                    _ => cond,
+            ModelBackend::Pjrt(_) => {
+                if self.slabs.len() == 1 {
+                    return self.pjrt[0].eval(x, t);
                 }
+                // Mixed cohort: one adapter call per slab; the runtime
+                // executor coalesces compatible calls into padded device
+                // batches below this layer.
+                let mut out = Tensor::zeros(x.shape());
+                for (slab, m) in self.slabs.iter().zip(&self.pjrt) {
+                    let part = m.eval(&x.slice_rows(slab.start, slab.rows), t);
+                    out.copy_rows_from(slab.start, &part);
+                }
+                out
+            }
+            ModelBackend::Analytic { gm, class_components } => {
+                if let [slab] = self.slabs.as_slice() {
+                    // Uniform fast path: whole-tensor eval + whole-tensor
+                    // guidance combine, exactly the pre-slab arithmetic.
+                    let subset = slab.cond.class.map(|c| class_components[c].as_slice());
+                    let cond = gm.eps_star(self.sched, x, t, subset);
+                    return match (slab.cond.guidance, subset) {
+                        (Some(s), Some(_)) if s != 0.0 => {
+                            let uncond = gm.eps_star(self.sched, x, t, None);
+                            Tensor::lincomb(1.0 + s, &cond, -s, &uncond)
+                        }
+                        _ => cond,
+                    };
+                }
+                let mut out = Tensor::zeros(x.shape());
+                for slab in &self.slabs {
+                    match (slab.cond.class, slab.cond.guidance) {
+                        (Some(c), Some(s)) if s != 0.0 => gm.eps_star_guided_rows(
+                            self.sched,
+                            x,
+                            t,
+                            &class_components[c],
+                            s,
+                            slab.start,
+                            slab.rows,
+                            &mut out,
+                        ),
+                        (class, _) => gm.eps_star_rows(
+                            self.sched,
+                            x,
+                            t,
+                            class.map(|c| class_components[c].as_slice()),
+                            slab.start,
+                            slab.rows,
+                            &mut out,
+                        ),
+                    }
+                }
+                out
             }
             ModelBackend::Chaos { inner, cfg, faults } => {
-                if cfg.target_class.is_some() && cfg.target_class != self.class {
+                if !self.chaos_targeted(cfg) {
                     // Untargeted conditioning: pass through without touching
                     // the fault stream, so targeted requests see the same
                     // fault schedule regardless of background traffic.
@@ -253,8 +403,15 @@ impl<'a> RequestModel<'a> {
                 }
                 let mut out = self.eval_backend(inner, x, t);
                 if let Some(row) = nan_row {
-                    if row < out.batch() {
-                        for v in out.row_mut(row) {
+                    // Remap the drawn row into the targeted slabs' rows so a
+                    // class-aimed NaN always lands on a member conditioned
+                    // on the target class. For untargeted configs (and
+                    // uniform targeted cohorts) every row is eligible and
+                    // the remap is the identity, preserving the pre-slab
+                    // fault schedule bit-for-bit.
+                    let eligible = self.chaos_target_rows(cfg, out.batch());
+                    if !eligible.is_empty() {
+                        for v in out.row_mut(eligible[row % eligible.len()]) {
                             *v = f64::NAN;
                         }
                     }
@@ -265,7 +422,7 @@ impl<'a> RequestModel<'a> {
     }
 }
 
-impl Model for RequestModel<'_> {
+impl Model for CohortModel<'_> {
     fn prediction(&self) -> Prediction {
         Prediction::Noise
     }
@@ -286,9 +443,10 @@ struct QueuedJob {
     /// rejects — kept as an Option so the solo path can still produce the
     /// failure response).
     opts: Option<SampleOptions>,
-    /// Batch key (plan key + model conditioning), derived once at admission
-    /// so the assembler's queue scan is an allocation-free string compare.
-    /// `None` routes the job to the solo reference path.
+    /// Batch key (the plan key alone; conditioning is carried per row by
+    /// [`CohortModel`] instead), derived once at admission so the
+    /// assembler's queue scan is an allocation-free string compare. `None`
+    /// routes the job to the solo reference path.
     batch_key: Option<String>,
     reply: mpsc::Sender<SampleResponse>,
     enqueued: Instant,
@@ -846,17 +1004,27 @@ fn batch_setup(
 
 /// Admission-time resolution, done once per request ([`Service::submit`])
 /// and stored on the queued job: the full solver options and, for
-/// plannable configurations, the batch key (plan key + the request's
-/// [`SampleRequest::conditioning_key`] — members share one model view).
-/// The batch key is `None` for methods plans don't cover (they take the
-/// solo path). The key also routes the request: see [`shard_for_key`].
+/// plannable configurations, the batch key — the [`plan_key`] alone, so
+/// requests that share a sampling plan batch together regardless of model
+/// conditioning (the worker builds a row-conditioned [`CohortModel`]
+/// instead of requiring one shared view). The legacy keying (plan key +
+/// [`SampleRequest::conditioning_key`]) is available behind
+/// `ServerConfig::split_cond_batches` as the conditioning-split ablation
+/// baseline. The batch key is `None` for methods plans don't cover (they
+/// take the solo path). The key also routes the request: see
+/// [`shard_for_key`].
 fn admission_setup(
     inner: &Inner,
     req: &SampleRequest,
 ) -> (Option<SampleOptions>, Option<String>) {
     let opts = build_opts(inner, req).ok();
     let key = opts.as_ref().filter(|o| SamplePlan::supports(o)).map(|o| {
-        format!("{}{}", plan_key(&inner.sched, o), req.conditioning_key())
+        let pk = plan_key(&inner.sched, o);
+        if inner.cfg.split_cond_batches {
+            format!("{pk}{}", req.conditioning_key())
+        } else {
+            pk
+        }
     });
     (opts, key)
 }
@@ -950,15 +1118,21 @@ fn execute_batch(
     inner: &Inner,
     shard: &Shard,
     scratch: &mut BatchWorkspace,
-    jobs: Vec<QueuedJob>,
+    mut jobs: Vec<QueuedJob>,
     opts: &SampleOptions,
     plan: &SamplePlan,
 ) -> bool {
+    // Members may differ in conditioning (the batch key is the plan key
+    // alone): sort them so equal conditionings are contiguous — one slab
+    // each, and a uniform cohort stays a single slab on the fast path.
+    // Scatter is per-member reply channels, so the reorder is invisible to
+    // clients.
+    jobs.sort_by_key(|j| j.req.conditioning().order_key());
     let queue_times: Vec<Duration> = jobs.iter().map(|j| j.enqueued.elapsed()).collect();
     let started = Instant::now();
-    // All members share conditioning (the batch key guarantees it), so one
-    // model view serves the whole stacked batch.
-    let model = RequestModel::new(&inner.backend, &inner.sched, &jobs[0].req);
+    let slabs = CondSlab::coalesce(jobs.iter().map(|j| (j.req.n, j.req.conditioning())));
+    let distinct_conds = slabs.len();
+    let model = CohortModel::new(&inner.backend, &inner.sched, slabs);
     let dim = model.dim();
     let inits: Vec<Tensor> = jobs
         .iter()
@@ -1016,7 +1190,7 @@ fn execute_batch(
     // absorbed without a lookup but are equally served from the cached
     // plan, so count them as hits to keep plan_hits per-request.
     m.plan_hits += jobs.len() as u64 - 1;
-    m.record_batch(jobs.len(), scratch.reuses() - reuses_before);
+    m.record_batch(jobs.len(), distinct_conds, scratch.reuses() - reuses_before);
     for ((job, r), (qt, ok)) in
         jobs.iter().zip(results.iter()).zip(queue_times.iter().zip(&finite))
     {
@@ -1180,7 +1354,7 @@ fn run_request(
             }
         },
     };
-    let model = RequestModel::new(&inner.backend, &inner.sched, req);
+    let model = CohortModel::solo(&inner.backend, &inner.sched, req.conditioning(), req.n);
     let dim = model.dim();
 
     let mut rng = Rng::seed_from(req.seed);
@@ -1459,13 +1633,113 @@ mod tests {
         assert!(r1.is_some(), "plannable request must have a batch-key route");
         // Seed is not part of the batch key: any seed routes identically.
         assert_eq!(r1, svc.route_of(&SampleRequest { seed: 99, ..req.clone() }));
-        // Conditioning is: a classed request may route elsewhere, but still
-        // deterministically.
+        // Neither is conditioning: the batch key is the plan key alone, so
+        // classed/guided requests colocate with the unconditional cohort.
         let classed = SampleRequest { class: Some(2), ..req.clone() };
-        assert_eq!(svc.route_of(&classed), svc.route_of(&classed.clone()));
+        assert_eq!(svc.route_of(&classed), r1);
+        let guided =
+            SampleRequest { class: Some(2), guidance: Some(3.0), ..req.clone() };
+        assert_eq!(svc.route_of(&guided), r1);
         // An unparsable method has no batch key ⇒ solo round-robin.
         let solo = SampleRequest { method: "nope".into(), ..req };
         assert_eq!(svc.route_of(&solo), None);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn cond_slabs_coalesce_adjacent_equal_conditionings() {
+        let c = |class: Option<usize>, g: Option<f64>| Conditioning { class, guidance: g };
+        let slabs = CondSlab::coalesce(vec![
+            (2, c(None, None)),
+            (1, c(None, None)),
+            (3, c(Some(1), None)),
+            (1, c(Some(1), Some(2.0))),
+            (2, c(Some(1), Some(2.0))),
+        ]);
+        assert_eq!(slabs.len(), 3);
+        assert_eq!((slabs[0].start, slabs[0].rows), (0, 3));
+        assert_eq!((slabs[1].start, slabs[1].rows), (3, 3));
+        assert_eq!((slabs[2].start, slabs[2].rows), (6, 3));
+        assert_eq!(slabs[2].cond.guidance, Some(2.0));
+        // Equal conditionings that are NOT adjacent stay separate slabs —
+        // coalesce preserves stacked row order (the worker's sort is what
+        // makes equal conditionings adjacent).
+        let split = CondSlab::coalesce(vec![
+            (1, c(Some(1), None)),
+            (1, c(None, None)),
+            (1, c(Some(1), None)),
+        ]);
+        assert_eq!(split.len(), 3);
+    }
+
+    #[test]
+    fn mixed_conditioning_requests_batch_together_bit_identically() {
+        // One worker with a generous linger window: rapid-fire submissions
+        // with distinct classes and guidance scales must coalesce into one
+        // mixed-conditioning lockstep run, and every member must stay
+        // bit-identical to its solo run.
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        let cfg = ServerConfig {
+            workers: 1,
+            queue_cap: 64,
+            batch_linger_us: 50_000,
+            ..Default::default()
+        };
+        let svc = Service::start(
+            cfg,
+            ModelBackend::Analytic { gm, class_components: Arc::new(classes) },
+        );
+        let reqs: Vec<SampleRequest> = vec![
+            SampleRequest { n: 2, steps: 5, seed: 1, ..Default::default() },
+            SampleRequest { n: 1, steps: 5, seed: 2, class: Some(3), ..Default::default() },
+            SampleRequest {
+                n: 2,
+                steps: 5,
+                seed: 3,
+                class: Some(7),
+                guidance: Some(2.0),
+                ..Default::default()
+            },
+            SampleRequest {
+                n: 1,
+                steps: 5,
+                seed: 4,
+                class: Some(3),
+                guidance: Some(0.5),
+                ..Default::default()
+            },
+        ];
+        let solo: Vec<Vec<f64>> = reqs
+            .iter()
+            .map(|r| {
+                let resp = svc.sample_blocking(r.clone());
+                assert!(resp.ok, "{:?}", resp.error);
+                resp.samples.unwrap()
+            })
+            .collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+        let batched: Vec<Vec<f64>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().samples.unwrap())
+            .collect();
+        assert_eq!(solo, batched, "mixed-conditioning batch must match solo bits");
+
+        let m = svc.metrics_json();
+        assert_eq!(m.get("completed").unwrap().as_f64(), Some(8.0));
+        assert!(
+            m.get("mixed_cond_batches").unwrap().as_f64().unwrap() >= 1.0,
+            "distinct conditionings must have shared a batched run: {m:?}"
+        );
+        let hist = match m.get("cond_distinct_hist") {
+            Some(crate::json::Value::Arr(a)) => a.clone(),
+            other => panic!("missing cond_distinct_hist: {other:?}"),
+        };
+        assert!(
+            hist.iter().skip(1).filter_map(|v| v.as_f64()).sum::<f64>() >= 1.0,
+            "some batch must have had ≥ 2 distinct conditionings: {hist:?}"
+        );
         svc.shutdown();
     }
 

@@ -639,9 +639,11 @@ fn pad_inputs(
 // ---------------------------------------------------------------------------
 
 /// Adapts a [`PjrtHandle`] to the [`Model`] trait so all solvers run
-/// against the learned network. Each request holds its own adapter with its
-/// class/guidance configuration; concurrent adapters batch together inside
-/// the executor.
+/// against the learned network. Each uniform cohort — or each conditioning
+/// slab of a mixed cohort (`coordinator::CohortModel` holds one adapter per
+/// slab) — evaluates through its own adapter with its class/guidance
+/// configuration; concurrent adapter calls batch together inside the
+/// executor, so per-slab calls still coalesce into padded device batches.
 pub struct PjrtModel {
     pub handle: PjrtHandle,
     /// Class label; `None` = unconditional (the null class).

@@ -27,13 +27,25 @@ pub struct LoadConfig {
     /// Request template; seed is varied per request.
     pub template: SampleRequest,
     pub seed: u64,
-    /// Distinct batch keys to fan the workload across, driven by cycling
-    /// the request class label (`class = i % key_mix`). The class is part
-    /// of the batch key, which also routes the request — so `key_mix`
-    /// controls how many coordinator shards the workload can occupy
-    /// (1 = every request shares one key, the template's own class). Must
-    /// not exceed the backend's class count.
+    /// Distinct conditionings to fan the workload across, driven by cycling
+    /// the request class label (`class = k % key_mix` for the k-th request
+    /// overall). Conditioning is *not* part of the batch key anymore, so
+    /// this knob no longer routes: mixed-class traffic stacks into one
+    /// lockstep cohort per plan key (use [`LoadConfig::plan_mix`] to fan
+    /// across shards). 1 = every request keeps the template's own class.
+    /// Must not exceed the backend's class count.
     pub key_mix: usize,
+    /// When `key_mix > 1`, also attach this guidance scale to every other
+    /// classed request (`k % 2 == 0`), so the conditioning mix exercises
+    /// guided and unguided rows in the same cohort. Ignored when `key_mix`
+    /// is 1 (guidance requires a class label).
+    pub mix_guidance: Option<f64>,
+    /// Distinct *plan keys* to fan the workload across, driven by cycling
+    /// the step count (`steps = template.steps + k % plan_mix`). The plan
+    /// key is the batch key, which routes the request — so `plan_mix`
+    /// controls how many coordinator shards the workload can occupy
+    /// (1 = every request shares the template's plan).
+    pub plan_mix: usize,
 }
 
 /// Aggregate results.
@@ -91,6 +103,8 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         let failures = Arc::clone(&failures);
         let seed = cfg.seed;
         let key_mix = cfg.key_mix;
+        let mix_guidance = cfg.mix_guidance;
+        let plan_mix = cfg.plan_mix;
         handles.push(std::thread::spawn(move || -> Result<()> {
             let mut client = Client::connect(&addr)?;
             let mut rng = Rng::seed_from(seed).split(c as u64 + 1);
@@ -105,10 +119,19 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
                 }
                 let mut req = template.clone();
                 req.seed = seed ^ ((c as u64) << 32) ^ i as u64;
+                // Deterministic per-request mix assignment, spread evenly
+                // across connections.
+                let k = c * per_conn + i;
+                if plan_mix > 1 {
+                    req.steps = template.steps + k % plan_mix;
+                }
                 if key_mix > 1 {
-                    // Deterministic per-request key assignment, spread
-                    // evenly across connections.
-                    req.class = Some((c * per_conn + i) % key_mix);
+                    req.class = Some(k % key_mix);
+                    if let Some(g) = mix_guidance {
+                        if k % 2 == 0 {
+                            req.guidance = Some(g);
+                        }
+                    }
                 }
                 let sent = Instant::now();
                 match client.sample(&req) {
@@ -183,6 +206,8 @@ mod tests {
             },
             seed: 1,
             key_mix: 1,
+            mix_guidance: None,
+            plan_mix: 1,
         };
         let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
         assert_eq!(report.sent, 24);

@@ -65,9 +65,11 @@
 //! are row-independent), and a per-worker [`BatchWorkspace`] pools the
 //! stacked state and the [`StepWorkspace`] across runs so steady-state
 //! batches start without allocating. The coordinator's batch assembler
-//! ([`crate::coordinator`]) groups queued requests by plan key + model
-//! conditioning and drives this entry point — for every method in the
-//! registry, with no special-casing.
+//! ([`crate::coordinator`]) groups queued requests by plan key alone —
+//! model conditioning is carried per *row* by the row-conditioned
+//! [`crate::coordinator::CohortModel`] view, so mixed class/guidance
+//! requests share one lockstep run — and drives this entry point for
+//! every method in the registry, with no special-casing.
 //!
 //! # Example
 //!
@@ -1265,6 +1267,14 @@ pub fn sample_with_plan(
 /// across the whole method zoo). Per-member `nfe` equals the solo run's
 /// count: batching changes how many rows each evaluation carries, not how
 /// many evaluations the schedule performs.
+///
+/// The members need not share model conditioning: `model` may be a
+/// **row-conditioned** view (the coordinator's
+/// [`crate::coordinator::CohortModel`]) that evaluates contiguous row
+/// ranges under different class/guidance settings. The solver is agnostic
+/// — it sees one `Model` — and the row-independence argument above carries
+/// over unchanged, so mixed-conditioning cohorts stay bit-identical to
+/// solo runs member by member.
 ///
 /// `bw` is the caller's pooled workspace: the coordinator keeps one per
 /// worker so steady-state runs start without allocating. Trajectory capture

@@ -5,15 +5,18 @@
 //! parametrizations, and UniC settings — plus the workspace-pool reuse
 //! contract (no per-run buffer growth after warm-up).
 
+use std::sync::Arc;
+
 use unipc::analytic::datasets::{dataset, DatasetSpec};
 use unipc::analytic::GmmModel;
+use unipc::coordinator::{CohortModel, CondSlab, Conditioning, ModelBackend};
 use unipc::numerics::vandermonde::BFunction;
 use unipc::rng::Rng;
 use unipc::sched::VpLinear;
 use unipc::solver::unipc::CoeffVariant;
 use unipc::solver::{
     sample, sample_batch, sample_batch_with_plan, sample_with_plan, BatchWorkspace, Method,
-    Prediction, SampleOptions, SamplePlan,
+    Model, Prediction, SampleOptions, SamplePlan,
 };
 use unipc::tensor::Tensor;
 
@@ -217,5 +220,163 @@ fn sample_batch_falls_back_for_unplannable_configs() {
         let a = sample(&model, &sched, x0, &opts);
         assert_eq!(a.nfe, b.nfe);
         assert_eq!(bits(&a.x), bits(&b.x));
+    }
+}
+
+// ---- mixed-conditioning cohorts (PR 8 tentpole) --------------------------
+//
+// The coordinator now stacks requests with *different* class/guidance
+// conditioning into one lockstep run over a row-conditioned `CohortModel`.
+// These tests prove the slab-evaluated mixed cohort is bit-identical — state
+// bits and NFE — to solo runs of each member under its own uniform view.
+
+fn analytic_backend(spec: DatasetSpec) -> ModelBackend {
+    let gm = Arc::new(dataset(spec));
+    let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+    ModelBackend::Analytic { gm, class_components: Arc::new(classes) }
+}
+
+/// Mixed-size, mixed-conditioning members like a cohort the collapsed batch
+/// key admits: unconditional, classed, and guided rows side by side.
+fn mixed_members(dim: usize) -> Vec<(Tensor, Conditioning)> {
+    [
+        (1usize, Conditioning::default()),
+        (2, Conditioning { class: Some(1), guidance: None }),
+        (3, Conditioning { class: Some(4), guidance: Some(2.0) }),
+        (1, Conditioning { class: Some(1), guidance: Some(0.5) }),
+    ]
+    .iter()
+    .enumerate()
+    .map(|(i, &(n, cond))| (Rng::seed_from(70 + i as u64).normal_tensor(&[n, dim]), cond))
+    .collect()
+}
+
+#[test]
+fn mixed_conditioning_batch_is_bit_identical_to_solo_across_variants() {
+    let sched = VpLinear::default();
+    let spec = DatasetSpec::Cifar10Like;
+    let backend = analytic_backend(spec);
+    let dim = dataset(spec).dim;
+    let mut bw = BatchWorkspace::new();
+    for order in [2usize, 3] {
+        for variant in [CoeffVariant::Bh(BFunction::Bh2), CoeffVariant::Varying] {
+            for pred in [Prediction::Noise, Prediction::Data] {
+                for with_unic in [false, true] {
+                    let mut opts = SampleOptions::new(
+                        Method::UniP { order, variant, pred, schedule: None },
+                        6,
+                    );
+                    if with_unic {
+                        opts = opts.with_unic(variant, false);
+                    }
+                    let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+                    let members = mixed_members(dim);
+                    // Solo reference: each member under its own uniform
+                    // (single-slab, whole-tensor fast path) model view.
+                    let solo: Vec<_> = members
+                        .iter()
+                        .map(|(x, cond)| {
+                            let m = CohortModel::solo(&backend, &sched, *cond, x.shape()[0]);
+                            sample_with_plan(&m, &sched, x, &opts, &plan)
+                        })
+                        .collect();
+                    // Batched: one stacked run over the slab-tiled cohort.
+                    let slabs = CondSlab::coalesce(
+                        members.iter().map(|(x, cond)| (x.shape()[0], *cond)),
+                    );
+                    assert_eq!(slabs.len(), 4, "all four conditionings are distinct");
+                    let cohort = CohortModel::new(&backend, &sched, slabs);
+                    let refs: Vec<&Tensor> = members.iter().map(|(x, _)| x).collect();
+                    let batched =
+                        sample_batch_with_plan(&cohort, &sched, &refs, &opts, &plan, &mut bw);
+                    assert_eq!(batched.len(), members.len());
+                    let tag =
+                        format!("order {order} {variant:?} {pred:?} unic {with_unic}");
+                    for (i, (a, b)) in solo.iter().zip(&batched).enumerate() {
+                        assert_eq!(a.nfe, b.nfe, "nfe member {i}: {tag}");
+                        assert_eq!(bits(&a.x), bits(&b.x), "state bits member {i}: {tag}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The same claim across the whole registry: every plannable method runs
+/// mixed-conditioning cohorts bit-identically to solo runs.
+#[test]
+fn mixed_conditioning_zoo_batches_bit_identically() {
+    let sched = VpLinear::default();
+    let spec = DatasetSpec::Cifar10Like;
+    let backend = analytic_backend(spec);
+    let dim = dataset(spec).dim;
+    let mut bw = BatchWorkspace::new();
+    for method in [
+        Method::Ddim { pred: Prediction::Noise },
+        Method::DpmSolverPp { order: 2 },
+        Method::DpmSolverPp { order: 3 },
+        Method::Plms,
+        Method::Deis { order: 2 },
+        Method::DpmSolverSingle { order: 3 },
+        Method::DpmSolverPp3S,
+    ] {
+        for with_unic in [false, true] {
+            let mut opts = SampleOptions::new(method.clone(), 7);
+            if with_unic {
+                opts = opts.with_unic(CoeffVariant::Bh(BFunction::Bh2), false);
+            }
+            let plan = SamplePlan::build(&sched, &opts)
+                .unwrap_or_else(|| panic!("{} must be plannable", opts.id()));
+            let members = mixed_members(dim);
+            let solo: Vec<_> = members
+                .iter()
+                .map(|(x, cond)| {
+                    let m = CohortModel::solo(&backend, &sched, *cond, x.shape()[0]);
+                    sample_with_plan(&m, &sched, x, &opts, &plan)
+                })
+                .collect();
+            let slabs =
+                CondSlab::coalesce(members.iter().map(|(x, cond)| (x.shape()[0], *cond)));
+            let cohort = CohortModel::new(&backend, &sched, slabs);
+            let refs: Vec<&Tensor> = members.iter().map(|(x, _)| x).collect();
+            let batched = sample_batch_with_plan(&cohort, &sched, &refs, &opts, &plan, &mut bw);
+            for (i, (a, b)) in solo.iter().zip(&batched).enumerate() {
+                let tag = format!("{} member {i} unic {with_unic}", opts.id());
+                assert_eq!(a.nfe, b.nfe, "nfe: {tag}");
+                assert_eq!(bits(&a.x), bits(&b.x), "state bits: {tag}");
+            }
+        }
+    }
+}
+
+/// The uniform-cohort fast path (single slab ⇒ whole-tensor eval) and the
+/// slab loop compute the same bits: artificially splitting one conditioning
+/// into two slabs changes nothing about a direct model eval.
+#[test]
+fn uniform_cohort_fast_path_matches_artificial_slab_split() {
+    let sched = VpLinear::default();
+    let spec = DatasetSpec::Cifar10Like;
+    let backend = analytic_backend(spec);
+    let dim = dataset(spec).dim;
+    let x = Rng::seed_from(77).normal_tensor(&[5, dim]);
+    for cond in [
+        Conditioning::default(),
+        Conditioning { class: Some(3), guidance: None },
+        Conditioning { class: Some(3), guidance: Some(2.0) },
+    ] {
+        let fast = CohortModel::solo(&backend, &sched, cond, 5);
+        let split = CohortModel::new(
+            &backend,
+            &sched,
+            vec![
+                CondSlab { start: 0, rows: 2, cond },
+                CondSlab { start: 2, rows: 3, cond },
+            ],
+        );
+        for t in [0.9, 0.4, 0.05] {
+            let a = fast.eval(&x, t);
+            let b = split.eval(&x, t);
+            assert_eq!(bits(&a), bits(&b), "cond {cond:?} t {t}");
+        }
     }
 }

@@ -14,11 +14,16 @@
 //! * expired jobs are **shed, not executed**, with typed
 //!   `deadline_exceeded` responses, and shutdown drains or sheds every
 //!   queued job so no receiver is left hanging;
-//! * faults are **shard-local**: chaos aimed at one coordinator shard
-//!   (via `ChaosConfig::target_class` — the class routes the request)
-//!   cannot stall, corrupt, or shrink the worker sub-pools of the others,
-//!   and the multi-shard service keeps the same deadline/shutdown bounds
-//!   as a single queue.
+//! * faults are **member-local**: in a mixed-conditioning cohort, chaos
+//!   aimed at one conditioning (via `ChaosConfig::target_class`) fails only
+//!   the targeted members — NaN'd rows quarantine individually, a mid-batch
+//!   panic re-runs everyone solo — and the survivors stay bit-identical;
+//! * faults are **shard-local**: chaos pinned to requests on one
+//!   coordinator shard (shards split by *plan key* — conditioning no longer
+//!   routes, so the tests split shards by step count and aim the chaos at a
+//!   class carried only by that shard's requests) cannot stall, corrupt, or
+//!   shrink the worker sub-pools of the others, and the multi-shard service
+//!   keeps the same deadline/shutdown bounds as a single queue.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -189,6 +194,153 @@ fn batch_quarantine_protects_cohort_members() {
     svc.shutdown();
 }
 
+/// The four conditionings of the mixed-cohort chaos tests: unconditional,
+/// classed, and guided members that the collapsed batch key stacks into one
+/// lockstep run.
+const MIXED_MEMBERS: [(Option<usize>, Option<f64>); 4] =
+    [(None, None), (Some(1), None), (Some(4), Some(2.0)), (Some(2), Some(0.5))];
+
+fn mixed_member_req(i: usize) -> SampleRequest {
+    SampleRequest {
+        n: 2,
+        steps: 6,
+        class: MIXED_MEMBERS[i].0,
+        guidance: MIXED_MEMBERS[i].1,
+        seed: 30 + i as u64,
+        ..Default::default()
+    }
+}
+
+fn mixed_member_refs() -> Vec<Vec<f64>> {
+    let clean = Service::start(
+        ServerConfig { workers: 1, queue_cap: 64, ..Default::default() },
+        analytic_backend(),
+    );
+    let refs = (0..MIXED_MEMBERS.len())
+        .map(|i| {
+            let r = clean.sample_blocking(mixed_member_req(i));
+            assert!(r.ok, "clean run must succeed: {:?}", r.error);
+            r.samples.unwrap()
+        })
+        .collect();
+    clean.shutdown();
+    refs
+}
+
+/// NaN chaos aimed at one conditioning of a mixed cohort quarantines only
+/// the targeted member: the injected NaN row always lands inside a slab
+/// conditioned on the target class, so the other members of the same
+/// lockstep run survive bit-identical to a clean service.
+#[test]
+fn mixed_cohort_nan_quarantines_only_targeted_member() {
+    silence_injected_panics();
+    let refs = mixed_member_refs();
+
+    // Every eval NaNs a row, but only inside rows conditioned on class 4.
+    let svc = Service::start(
+        ServerConfig {
+            workers: 1,
+            queue_cap: 256,
+            batch_linger_us: 50_000,
+            ..Default::default()
+        },
+        ModelBackend::chaos(
+            analytic_backend(),
+            ChaosConfig { seed: 11, nan_rate: 1.0, target_class: Some(4), ..ChaosConfig::default() },
+        ),
+    );
+    let mut saw_mixed_quarantine = false;
+    for _round in 0..20 {
+        let rxs: Vec<_> =
+            (0..MIXED_MEMBERS.len()).map(|i| svc.submit(mixed_member_req(i)).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(60)).expect("response must arrive");
+            if MIXED_MEMBERS[i].0 == Some(4) {
+                assert!(!r.ok, "targeted member must be quarantined");
+                assert_eq!(r.kind, Some(FailureKind::NonFiniteOutput), "{:?}", r.error);
+            } else {
+                assert!(r.ok, "untargeted member {i} must survive: {:?}", r.error);
+                assert_eq!(
+                    r.samples.as_ref(),
+                    Some(&refs[i]),
+                    "survivor {i} must be bit-identical to the clean run"
+                );
+            }
+        }
+        let m = svc.metrics_json();
+        let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap();
+        if counter("mixed_cond_batches") > 0.0 && counter("quarantined_members") > 0.0 {
+            saw_mixed_quarantine = true;
+            break;
+        }
+    }
+    assert!(
+        saw_mixed_quarantine,
+        "a mixed cohort must have formed and quarantined its targeted member: {:?}",
+        svc.metrics_json()
+    );
+    svc.shutdown();
+}
+
+/// A mid-batch panic aimed at one conditioning fails only the targeted
+/// members: the panicked cohort re-runs every member solo, where the
+/// untargeted ones complete clean and bit-identical while the targeted one
+/// panics again into a typed `worker_panic` response.
+#[test]
+fn mixed_cohort_panic_retry_fails_only_targeted_members() {
+    silence_injected_panics();
+    let refs = mixed_member_refs();
+
+    let svc = Service::start(
+        ServerConfig {
+            workers: 1,
+            queue_cap: 256,
+            batch_linger_us: 50_000,
+            ..Default::default()
+        },
+        ModelBackend::chaos(
+            analytic_backend(),
+            ChaosConfig {
+                seed: 13,
+                panic_rate: 1.0,
+                target_class: Some(4),
+                ..ChaosConfig::default()
+            },
+        ),
+    );
+    let mut saw_batch_retry = false;
+    for _round in 0..20 {
+        let rxs: Vec<_> =
+            (0..MIXED_MEMBERS.len()).map(|i| svc.submit(mixed_member_req(i)).unwrap()).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(60)).expect("response must arrive");
+            if MIXED_MEMBERS[i].0 == Some(4) {
+                assert!(!r.ok, "targeted member must fail");
+                assert_eq!(r.kind, Some(FailureKind::WorkerPanic), "{:?}", r.error);
+            } else {
+                assert!(r.ok, "untargeted member {i} must survive: {:?}", r.error);
+                assert_eq!(
+                    r.samples.as_ref(),
+                    Some(&refs[i]),
+                    "survivor {i} must be bit-identical to the clean run"
+                );
+            }
+        }
+        let m = svc.metrics_json();
+        let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap();
+        if counter("batch_retries") > 0.0 {
+            saw_batch_retry = true;
+            break;
+        }
+    }
+    assert!(
+        saw_batch_retry,
+        "a mixed cohort must have panicked and re-run its members solo: {:?}",
+        svc.metrics_json()
+    );
+    svc.shutdown();
+}
+
 /// Jobs still queued past their deadline are shed with a typed response
 /// and never executed.
 #[test]
@@ -339,21 +491,23 @@ fn sample_blocking_respects_deadline_under_queueing() {
     svc.shutdown();
 }
 
-/// Pick two class labels whose requests route to different shards. The
-/// FNV routing is a pure function of the batch key, so this always
-/// succeeds with ≥ 2 shards and 10 classes to probe.
-fn two_classes_on_distinct_shards(svc: &Service, steps: usize) -> (usize, usize) {
-    let route = |class: usize| {
-        svc.route_of(&SampleRequest { n: 1, steps, class: Some(class), ..Default::default() })
-            .expect("classed request is plannable")
+/// Pick two step counts whose requests route to different shards. The
+/// batch key is the plan key alone (conditioning never splits or re-routes
+/// a cohort), so distinct plans are the only way to exercise two shards —
+/// and the FNV routing is a pure function of the key, so with ≥ 2 shards
+/// some pair among 40 probed plans must land apart.
+fn two_step_counts_on_distinct_shards(svc: &Service, base: usize) -> (usize, usize) {
+    let route = |steps: usize| {
+        svc.route_of(&SampleRequest { n: 1, steps, ..Default::default() })
+            .expect("planned request routes")
     };
-    let a = 0;
-    for b in 1..10 {
+    let a = base;
+    for b in base + 1..base + 40 {
         if route(b) != route(a) {
             return (a, b);
         }
     }
-    panic!("10 classes must not all hash to one of {} shards", svc.shards());
+    panic!("40 plans must not all hash to one of {} shards", svc.shards());
 }
 
 /// Chaos aimed at one shard (every targeted evaluation panics) must not
@@ -365,20 +519,22 @@ fn shard_poisoned_by_panics_does_not_stall_the_others() {
     silence_injected_panics();
     let cfg = ServerConfig { workers: 4, queue_cap: 256, ..Default::default() };
 
-    // Clean references for the untargeted class.
+    // Shards split by plan key (step count); the chaos aims at a class
+    // carried only by the doomed plan's requests.
     let clean = Service::start(cfg.clone(), analytic_backend());
     assert_eq!(clean.shards(), 4);
-    let (doomed_class, healthy_class) = two_classes_on_distinct_shards(&clean, 8);
-    let mk_req = |class: usize, seed: u64| SampleRequest {
+    let (doomed_steps, healthy_steps) = two_step_counts_on_distinct_shards(&clean, 8);
+    let (doomed_class, healthy_class) = (0usize, 1usize);
+    let mk_req = |class: usize, steps: usize, seed: u64| SampleRequest {
         n: 1,
-        steps: 8,
+        steps,
         class: Some(class),
         seed,
         ..Default::default()
     };
     let refs: Vec<Vec<f64>> = (0..20u64)
         .map(|s| {
-            let r = clean.sample_blocking(mk_req(healthy_class, s));
+            let r = clean.sample_blocking(mk_req(healthy_class, healthy_steps, s));
             assert!(r.ok, "{:?}", r.error);
             r.samples.unwrap()
         })
@@ -397,19 +553,21 @@ fn shard_poisoned_by_panics_does_not_stall_the_others() {
             },
         ),
     );
-    let doomed_shard =
-        svc.route_of(&mk_req(doomed_class, 0)).expect("classed request is plannable");
-    let healthy_shard =
-        svc.route_of(&mk_req(healthy_class, 0)).expect("classed request is plannable");
-    assert_ne!(doomed_shard, healthy_shard, "classes must exercise two shards");
+    let doomed_shard = svc
+        .route_of(&mk_req(doomed_class, doomed_steps, 0))
+        .expect("planned request routes");
+    let healthy_shard = svc
+        .route_of(&mk_req(healthy_class, healthy_steps, 0))
+        .expect("planned request routes");
+    assert_ne!(doomed_shard, healthy_shard, "plans must exercise two shards");
 
     // Interleave: every targeted request panics (typed), every untargeted
     // one must still complete bit-identically despite sharing the pool.
     for s in 0..20u64 {
-        let bad = svc.sample_blocking(mk_req(doomed_class, s));
+        let bad = svc.sample_blocking(mk_req(doomed_class, doomed_steps, s));
         assert!(!bad.ok);
         assert_eq!(bad.kind, Some(FailureKind::WorkerPanic), "{:?}", bad.error);
-        let good = svc.sample_blocking(mk_req(healthy_class, s));
+        let good = svc.sample_blocking(mk_req(healthy_class, healthy_steps, s));
         assert!(good.ok, "healthy shard stalled at {s}: {:?}", good.error);
         assert_eq!(
             good.samples.as_ref(),
@@ -471,14 +629,14 @@ fn expired_jobs_are_shed_across_shards() {
         })
         .collect();
     std::thread::sleep(Duration::from_millis(5));
-    // Fan the doomed jobs across both shards via their class labels.
-    let (ca, cb) = two_classes_on_distinct_shards(&svc, 5);
+    // Fan the doomed jobs across both shards via their step counts (the
+    // plan key routes; conditioning wouldn't split them anymore).
+    let (sa, sb) = two_step_counts_on_distinct_shards(&svc, 5);
     let doomed: Vec<_> = (0..6u64)
         .map(|s| {
             svc.submit(SampleRequest {
                 n: 1,
-                steps: 5,
-                class: Some(if s % 2 == 0 { ca } else { cb }),
+                steps: if s % 2 == 0 { sa } else { sb },
                 seed: 100 + s,
                 return_samples: false,
                 deadline_ms: Some(1),

@@ -6,6 +6,10 @@
 //!
 //! * **routing is deterministic** — the same batch key always lands on the
 //!   same shard, and seeds (not part of the key) never change the route;
+//! * **conditioning never splits a cohort** — the batch key is the plan key
+//!   alone, so any class/guidance mix shares its plan's route and stacks
+//!   into one lockstep cohort; the `split_cond_batches` ablation restores
+//!   the legacy per-conditioning keys and demonstrably smaller batches;
 //! * **results are shard-count-independent** — a workload run against an
 //!   N-shard service is bit-identical to the same workload against a
 //!   1-shard service;
@@ -27,6 +31,7 @@ use unipc::coordinator::{
     shard_for_key, silence_injected_panics, ChaosConfig, ModelBackend, SampleRequest,
     Service,
 };
+use unipc::server::{run_load, LoadConfig, Server};
 
 fn analytic_backend() -> ModelBackend {
     let spec = DatasetSpec::Cifar10Like;
@@ -40,13 +45,14 @@ fn service(workers: usize, shards: usize) -> Service {
     Service::start(cfg, analytic_backend())
 }
 
-/// A workload template that fans across batch keys: the class label is
-/// part of the conditioning key, so distinct classes route to (generally)
-/// distinct shards while the solver work stays identical.
+/// A workload template that fans across batch keys: the batch key is the
+/// plan key alone, so the step count cycles to produce distinct keys that
+/// route to (generally) distinct shards. The class label cycles too —
+/// conditioning rides along inside cohorts without touching the route.
 fn mixed_request(i: u64) -> SampleRequest {
     SampleRequest {
         n: 1,
-        steps: 5,
+        steps: 5 + (i % 8) as usize,
         class: Some((i % 8) as usize),
         seed: i,
         ..Default::default()
@@ -69,8 +75,8 @@ fn stress_level() -> (usize, usize) {
 fn routing_is_deterministic_per_batch_key() {
     // The pure hash itself is stable and in range.
     for shards in 1..=8 {
-        for class in 0..8u64 {
-            let key = format!("plan|class=Some({class})|g=None");
+        for steps in 5..13usize {
+            let key = format!("vp|unipc-3|steps={steps}");
             let s = shard_for_key(&key, shards);
             assert!(s < shards);
             assert_eq!(s, shard_for_key(&key, shards));
@@ -89,7 +95,7 @@ fn routing_is_deterministic_per_batch_key() {
             assert_eq!(svc.route_of(&same_key), route, "seed must not change the route");
         }
     }
-    // With 8 distinct classes over 4 shards, more than one shard is hit
+    // With 8 distinct plans over 4 shards, more than one shard is hit
     // (the hash would have to be degenerate to collapse them all).
     let distinct: std::collections::BTreeSet<usize> =
         (0..8u64).filter_map(|i| svc.route_of(&mixed_request(i))).collect();
@@ -221,8 +227,9 @@ fn global_metrics_equal_sum_of_shard_snapshots() {
 
     let scalar_counters = [
         "submitted", "rejected", "completed", "failed", "samples_out", "nfe_total",
-        "plan_builds", "plan_hits", "batched_runs", "workspace_reuses", "steals",
-        "worker_restarts", "quarantined_members", "batch_retries",
+        "plan_builds", "plan_hits", "batched_runs", "mixed_cond_batches",
+        "workspace_reuses", "steals", "worker_restarts", "quarantined_members",
+        "batch_retries",
         // per-kind failure counters
         "invalid_request", "queue_full", "deadline_exceeded", "non_finite_output",
         "worker_panic", "backend_error",
@@ -234,7 +241,7 @@ fn global_metrics_equal_sum_of_shard_snapshots() {
             let v = snap.get(key).and_then(|v| v.as_f64()).expect(key);
             *sums.entry(key).or_insert(0.0) += v;
         }
-        for key in ["batch_size_hist", "shard_depth_hist"] {
+        for key in ["batch_size_hist", "cond_distinct_hist", "shard_depth_hist"] {
             let arr = snap.get(key).unwrap().as_arr().unwrap();
             let acc = hist_sums.entry(key).or_insert_with(|| vec![0.0; arr.len()]);
             for (a, v) in acc.iter_mut().zip(arr) {
@@ -249,7 +256,7 @@ fn global_metrics_equal_sum_of_shard_snapshots() {
             "global '{key}' must be the sum of shard snapshots"
         );
     }
-    for key in ["batch_size_hist", "shard_depth_hist"] {
+    for key in ["batch_size_hist", "cond_distinct_hist", "shard_depth_hist"] {
         let g: Vec<f64> = global
             .get(key)
             .unwrap()
@@ -267,4 +274,122 @@ fn global_metrics_equal_sum_of_shard_snapshots() {
     let depth_total: f64 = hist_sums["shard_depth_hist"].iter().sum();
     assert_eq!(depth_total, 64.0, "one depth observation per accepted enqueue");
     svc.shutdown();
+}
+
+/// The collapsed batch key is the plan key alone: no class/guidance
+/// combination moves a request off its plan's shard, while the
+/// `split_cond_batches` ablation restores the legacy per-conditioning
+/// fan-out.
+#[test]
+fn conditioning_does_not_change_the_route() {
+    let svc = service(4, 4);
+    for steps in [5usize, 8, 13] {
+        let base = SampleRequest { n: 1, steps, ..Default::default() };
+        let home = svc.route_of(&base).expect("planned request routes");
+        for class in 0..8usize {
+            for guidance in [None, Some(1.5), Some(7.0)] {
+                let req = SampleRequest {
+                    n: 1,
+                    steps,
+                    class: Some(class),
+                    guidance,
+                    ..Default::default()
+                };
+                assert_eq!(
+                    svc.route_of(&req),
+                    Some(home),
+                    "steps {steps} class {class} guidance {guidance:?} must keep the plan's route"
+                );
+            }
+        }
+    }
+    svc.shutdown();
+
+    // The ablation switch re-appends the conditioning to the key, so the
+    // same classes fan out across shards again (formerly split cohorts).
+    let split = Service::start(
+        ServerConfig {
+            workers: 4,
+            shards: 4,
+            queue_cap: 4096,
+            split_cond_batches: true,
+            ..Default::default()
+        },
+        analytic_backend(),
+    );
+    let routes: std::collections::BTreeSet<usize> = (0..8usize)
+        .filter_map(|class| {
+            split.route_of(&SampleRequest {
+                n: 1,
+                steps: 5,
+                class: Some(class),
+                ..Default::default()
+            })
+        })
+        .collect();
+    assert!(routes.len() > 1, "split keys must fan conditionings out again: {routes:?}");
+    split.shutdown();
+}
+
+/// Formerly split cohorts colocate: under the load generator's mixed
+/// class/guidance `key_mix` on one plan key, the collapsed batch key forms
+/// strictly larger steady-state cohorts — the member-weighted mean of
+/// `batch_size_hist` shifts upward — and mixes conditionings inside them,
+/// while the `split_cond_batches` baseline can never mix at all.
+#[test]
+fn mixed_conditioning_batches_grow_vs_split_baseline() {
+    let run = |split: bool| -> (f64, f64) {
+        let svc = Service::start(
+            ServerConfig {
+                workers: 1,
+                shards: 1,
+                queue_cap: 4096,
+                batch_linger_us: 20_000,
+                split_cond_batches: split,
+                ..Default::default()
+            },
+            analytic_backend(),
+        );
+        let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+        let cfg = LoadConfig {
+            rps: 100_000.0, // no pacing: four blocking connections saturate
+            total: 60,
+            connections: 4,
+            template: SampleRequest {
+                n: 1,
+                steps: 5,
+                return_samples: false,
+                ..Default::default()
+            },
+            seed: 3,
+            key_mix: 8,
+            mix_guidance: Some(2.0),
+            plan_mix: 1,
+        };
+        let report = run_load(&server.addr.to_string(), &cfg).unwrap();
+        assert_eq!(report.ok, 60, "clean run must succeed end to end");
+        let m = svc.metrics_json();
+        let hist: Vec<f64> = m
+            .get("batch_size_hist")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+            .expect("batch_size_hist");
+        let runs: f64 = hist.iter().sum();
+        let members: f64 = hist.iter().enumerate().map(|(i, c)| (i + 1) as f64 * c).sum();
+        let mixed = m.get("mixed_cond_batches").and_then(|v| v.as_f64()).unwrap();
+        server.stop();
+        svc.shutdown();
+        (members / runs.max(1.0), mixed)
+    };
+    let (mean_split, mixed_split) = run(true);
+    let (mean_collapsed, mixed_collapsed) = run(false);
+    assert_eq!(mixed_split, 0.0, "per-conditioning keys can never form a mixed cohort");
+    assert!(
+        mixed_collapsed >= 1.0,
+        "the collapsed key must form mixed cohorts (mean batch {mean_collapsed:.2})"
+    );
+    assert!(
+        mean_collapsed > mean_split,
+        "collapsed-key cohorts must be larger: {mean_collapsed:.2} vs split {mean_split:.2}"
+    );
 }
