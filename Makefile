@@ -6,7 +6,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test test-full stress docs check perf
+.PHONY: build test test-full stress docs check perf trace-demo
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -22,17 +22,20 @@ test:
 # included — bit-identical to solo runs across the zoo), the chaos
 # fault-injection suite (panic isolation, deadlines, batch + per-member
 # quarantine, pool supervision under 10%-ish injected faults, shard fault
-# isolation), and the sharded-coordinator invariant suite (deterministic
+# isolation), the sharded-coordinator invariant suite (deterministic
 # plan-key routing, conditioning-independent routes, shard-count-
 # independent outputs, exact metrics aggregation, the collapsed-vs-split
-# batch-key ablation). All suites are sized to also pass inside plain
-# `make test` (debug) so the tier-1 gate exercises them; this target
-# re-runs just these optimized, which is the fast path when iterating on
-# solver numerics or the serving layer.
+# batch-key ablation), and the span-tree tracing suite (one complete
+# admit-to-respond tree per request under chaos, steal attribution,
+# quarantine spans, wire round-trip of trace ids). All suites are sized to
+# also pass inside plain `make test` (debug) so the tier-1 gate exercises
+# them; this target re-runs just these optimized, which is the fast path
+# when iterating on solver numerics or the serving layer.
 test-full:
 	$(CARGO) test --release -q --manifest-path $(MANIFEST) \
 		--test solver_conformance --test solver_convergence \
-		--test batch_equiv --test fault_injection --test shard_serving
+		--test batch_equiv --test fault_injection --test shard_serving \
+		--test trace_spans
 
 # Submitter-storm stress run: the shard/chaos concurrency suites in
 # release mode with elevated thread and request counts (UNIPC_STRESS=1).
@@ -60,7 +63,15 @@ check:
 	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --manifest-path $(MANIFEST)
 
 # Hot-path microbenches (emits rust/BENCH_hot_path.json: name -> ns/iter)
-# followed by the end-to-end serving load sweep.
+# followed by the end-to-end serving load sweep (which also exports
+# rust/TRACE_serving.json, a Chrome trace of the traced load point).
 perf: build
 	$(CARGO) bench --bench perf_hot_path --manifest-path $(MANIFEST)
 	$(CARGO) bench --bench serving_load --manifest-path $(MANIFEST)
+
+# One-command observability demo: serves the analytic backend, fires a
+# short mixed workload at trace=steps, prints the latency/stage breakdown,
+# and writes rust/TRACE_demo.json — load it in chrome://tracing or
+# https://ui.perfetto.dev to see per-request span trees.
+trace-demo: build
+	cd rust && $(CARGO) run --release --quiet -- trace-demo --out TRACE_demo.json

@@ -14,6 +14,10 @@
 //!   L3-g  per-member conditioning: one mixed-conditioning cohort run as a
 //!         single slab-tiled lockstep batch vs the same members split into
 //!         per-conditioning cohorts (the legacy batch-key behavior)
+//!   L3-h  tracing overhead on the batched hot path: the same b=8 cohort
+//!         run bare vs. instrumented exactly as the worker runs it at
+//!         trace=steps (TimedModel wrap, per-step span pairs into a
+//!         preallocated scratch vec, lifecycle events, one ring flush)
 //!   RT-a  PJRT ε call latency vs batch size (batching amortization)
 //!   RT-b  fused correct artifact vs eval + host update (round-trip saving)
 //!
@@ -34,10 +38,11 @@ use unipc::rng::Rng;
 use unipc::runtime::{EngineOptions, PjrtHandle};
 use unipc::sched::VpLinear;
 use unipc::solver::{
-    sample_batch_with_plan, sample_unplanned, sample_with_plan, BatchWorkspace, Method, Model,
-    Prediction, SampleOptions, SamplePlan, UniPcCoeffs,
+    sample_batch_with_plan, sample_batch_with_plan_observed, sample_unplanned, sample_with_plan,
+    BatchWorkspace, Method, Model, Prediction, SampleOptions, SamplePlan, UniPcCoeffs,
 };
 use unipc::tensor::{weighted_sum, weighted_sum_into, Tensor};
+use unipc::trace::{SpanEvent, Stage, StepSpans, TimedModel, TraceRing};
 
 fn bench<F: FnMut()>(
     results: &mut Vec<(String, Duration)>,
@@ -267,6 +272,93 @@ fn main() {
             "{:<48} {:>11.2}x",
             "L3-g   mixed cohort vs cond-split",
             split.as_secs_f64() / mixed.as_secs_f64()
+        );
+    }
+
+    // L3-h: tracing overhead on the batched hot path (PR 9). The "trace
+    // on" row reproduces the worker's steady state at trace=steps: wrap
+    // the model in TimedModel, reserve + fill a reusable scratch vec with
+    // the cohort lifecycle events and a model_eval/solver_step pair per
+    // planned step via StepSpans, then flush once into a shard ring. The
+    // delta vs the bare L3-e-shaped run is the full cost of tracing, and
+    // the invariant EXPERIMENTS.md tracks is that it stays under ~2%.
+    {
+        let opts = unipc3_opts(UniPcCoeffs::Bh(BFunction::Bh2), 8);
+        let plan = SamplePlan::build(&sched, &opts).expect("plannable");
+        let members = 8usize;
+        let inits: Vec<Tensor> = (0..members)
+            .map(|i| Rng::seed_from(600 + i as u64).normal_tensor(&[1, gm.dim]))
+            .collect();
+        let refs: Vec<&Tensor> = inits.iter().collect();
+        let mut bw = BatchWorkspace::new();
+        let off = bench(
+            &mut results,
+            "L3-h batched b=8 UniPC-3 x8 trace=off (gmm)",
+            500,
+            || {
+                black_box(sample_batch_with_plan(
+                    &gmm_model, &sched, &refs, &opts, &plan, &mut bw,
+                ));
+            },
+        );
+        // Long-lived per-shard state: ring + scratch survive across batch
+        // runs, exactly as in the worker loop.
+        let mut ring = TraceRing::new(4096);
+        let mut spans: Vec<SpanEvent> = Vec::new();
+        let epoch = Instant::now();
+        let on = bench(
+            &mut results,
+            "L3-h batched b=8 UniPC-3 x8 trace=steps (gmm)",
+            500,
+            || {
+                spans.clear();
+                spans.reserve(2 * plan.len() + 3 * members + 2);
+                spans.push(SpanEvent {
+                    trace_id: 1,
+                    stage: Stage::Assemble,
+                    a: members as u64,
+                    b: 1,
+                    ..Default::default()
+                });
+                for i in 0..members {
+                    spans.push(SpanEvent {
+                        trace_id: 2 + i as u64,
+                        parent: 1,
+                        stage: Stage::CohortLink,
+                        a: i as u64,
+                        b: 1,
+                        ..Default::default()
+                    });
+                }
+                let timed = TimedModel::new(&gmm_model);
+                {
+                    let mut obs =
+                        StepSpans::new(&mut spans, &timed, epoch, 1, 0, 0, members as u64);
+                    black_box(sample_batch_with_plan_observed(
+                        &timed,
+                        &sched,
+                        &refs,
+                        &opts,
+                        &plan,
+                        &mut bw,
+                        Some(&mut obs),
+                    ));
+                }
+                for i in 0..members {
+                    spans.push(SpanEvent {
+                        trace_id: 2 + i as u64,
+                        stage: Stage::Respond,
+                        b: 8,
+                        ..Default::default()
+                    });
+                }
+                ring.record_all(&spans);
+            },
+        );
+        println!(
+            "{:<48} {:>10.2}%",
+            "L3-h   tracing overhead (steps vs off)",
+            100.0 * (on.as_secs_f64() / off.as_secs_f64() - 1.0)
         );
     }
 

@@ -164,6 +164,61 @@ fn run_chaos_point(rps: f64, total: usize) -> String {
     line
 }
 
+/// Tracing point (PR 9): the rps=16 workload re-run at `trace=steps`, the
+/// most expensive tracing level (a model_eval/solver_step span pair per
+/// planned step on every batch). Prints the stage breakdown the loadgen
+/// now derives from response timing stamps, reports how many span events
+/// the shard rings retained, and exports the whole run as a Chrome
+/// `trace_event` JSON (`TRACE_serving.json` — load it in
+/// `chrome://tracing` or Perfetto).
+fn run_traced_point(rps: f64, total: usize) -> String {
+    let (be, kind) = backend(200);
+    let svc = Service::start(
+        ServerConfig {
+            workers: 4,
+            queue_cap: 512,
+            trace: unipc::trace::TraceLevel::Steps,
+            ..Default::default()
+        },
+        be,
+    );
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let cfg = LoadConfig {
+        rps,
+        total,
+        connections: 4,
+        template: SampleRequest {
+            n: 4,
+            steps: 8,
+            method: "unipc-3".into(),
+            unic: true,
+            seed: 0,
+            return_samples: false,
+            ..Default::default()
+        },
+        seed: 9,
+        key_mix: 1,
+        mix_guidance: None,
+        plan_mix: 1,
+    };
+    let mut report = run_load(&server.addr.to_string(), &cfg).unwrap();
+    let m = svc.metrics_json();
+    let counter = |key: &str| m.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let chrome = svc.chrome_trace_json();
+    let events =
+        chrome.get("traceEvents").and_then(|v| v.as_arr()).map(|a| a.len()).unwrap_or(0);
+    let _ = std::fs::write("TRACE_serving.json", chrome.to_string());
+    let line = format!(
+        "[{kind}+trace=steps] rps={rps:<6}: {}  spans_recorded={} spans_dropped={} ({events} chrome events -> TRACE_serving.json)",
+        report.summary(),
+        counter("trace_recorded"),
+        counter("trace_dropped"),
+    );
+    server.stop();
+    svc.shutdown();
+    line
+}
+
 /// One shard-count ablation point: saturating open-loop load at a fixed
 /// worker count, workload fanned across 8 *plan keys* (distinct step
 /// counts via `plan_mix`) so a multi-shard coordinator can actually spread
@@ -306,6 +361,13 @@ fn main() {
     // Failed requests get typed responses; the pool self-heals.
     println!("-- chaos ablation (10% injected faults, rps=16) --");
     println!("{}", run_chaos_point(16.0, 48));
+
+    // Request tracing (PR 9): the same workload at the most expensive
+    // span level, exported as a Chrome trace artifact. The printed stage
+    // breakdown (queue vs compute, model vs solver) comes from the
+    // response timing stamps every run above also carries.
+    println!("-- tracing point (trace=steps, rps=16) --");
+    println!("{}", run_traced_point(16.0, 48));
 
     // Per-member conditioning (PR 8): same plan, 8 classes + alternating
     // guidance. The collapsed batch key stacks the whole mix into one

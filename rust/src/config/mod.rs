@@ -4,6 +4,7 @@
 use crate::cli::Args;
 use crate::json::{self, Value};
 use crate::sched::TimeSpacing;
+use crate::trace::TraceLevel;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
@@ -61,6 +62,15 @@ pub struct ServerConfig {
     pub spacing: TimeSpacing,
     pub t_start: f64,
     pub t_end: f64,
+    /// Span-event recording level (JSON/CLI values `off` | `lifecycle` |
+    /// `steps`). `lifecycle` (the default) records admission-to-respond
+    /// span events; `steps` adds a `model_eval`/`solver_step` pair per
+    /// planned step. The per-request `model_eval_us`/`solver_us` digests
+    /// and response fields are maintained at every level.
+    pub trace: TraceLevel,
+    /// Span-event ring capacity **per shard** (events, preallocated;
+    /// oldest overwritten).
+    pub trace_buf: usize,
 }
 
 impl Default for ServerConfig {
@@ -83,6 +93,8 @@ impl Default for ServerConfig {
             spacing: TimeSpacing::LogSnr,
             t_start: 1.0,
             t_end: 1e-3,
+            trace: TraceLevel::Lifecycle,
+            trace_buf: 4096,
         }
     }
 }
@@ -130,6 +142,12 @@ impl ServerConfig {
                 }
                 "t_start" => c.t_start = req_f64(val, k)?,
                 "t_end" => c.t_end = req_f64(val, k)?,
+                "trace" => {
+                    let s = req_str(val, k)?;
+                    c.trace = TraceLevel::parse(&s)
+                        .ok_or_else(|| anyhow::anyhow!("unknown trace level '{s}'"))?;
+                }
+                "trace_buf" => c.trace_buf = req_usize(val, k)?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -166,6 +184,12 @@ impl ServerConfig {
         if let Some(m) = args.get("method") {
             self.default_method = m.to_string();
         }
+        if let Some(t) = args.get("trace") {
+            self.trace = TraceLevel::parse(t)
+                .ok_or_else(|| anyhow::anyhow!("unknown trace level '{t}'"))?;
+        }
+        self.trace_buf =
+            args.get_usize("trace-buf", self.trace_buf).map_err(anyhow::Error::msg)?;
         self.validate()?;
         Ok(self)
     }
@@ -190,6 +214,9 @@ impl ServerConfig {
         }
         if crate::solver::Method::parse(&self.default_method).is_none() {
             bail!("unknown default_method '{}'", self.default_method);
+        }
+        if self.trace_buf == 0 {
+            bail!("trace_buf must be ≥ 1");
         }
         Ok(())
     }
@@ -261,6 +288,23 @@ mod tests {
         assert!(!ServerConfig::default().split_cond_batches, "collapsed key is the default");
         // Untouched defaults survive.
         assert_eq!(c.workers, ServerConfig::default().workers);
+    }
+
+    #[test]
+    fn trace_level_from_json_and_cli() {
+        assert_eq!(ServerConfig::default().trace, TraceLevel::Lifecycle);
+        let v = json::parse(r#"{"trace": "steps", "trace_buf": 128}"#).unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.trace, TraceLevel::Steps);
+        assert_eq!(c.trace_buf, 128);
+        for bad in [r#"{"trace": "verbose"}"#, r#"{"trace_buf": 0}"#] {
+            let v = json::parse(bad).unwrap();
+            assert!(ServerConfig::from_json(&v).is_err(), "{bad}");
+        }
+        let args =
+            crate::cli::Args::parse(&["--trace".to_string(), "off".to_string()]).unwrap();
+        let c = ServerConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.trace, TraceLevel::Off);
     }
 
     #[test]

@@ -13,6 +13,74 @@ use crate::json::Value;
 use crate::stats::LatencyDigest;
 use std::time::Duration;
 
+/// How many slowest-e2e exemplars each store retains (and the merged
+/// global snapshot surfaces).
+pub const SLOWEST_K: usize = 8;
+
+/// One slow-request exemplar: the per-stage timing split plus the trace id,
+/// so a dashboard reader can jump from "p99 is bad" straight to
+/// `{"op":"trace"}` for the offending request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct Exemplar {
+    pub trace_id: u64,
+    pub e2e_us: u64,
+    pub queue_us: u64,
+    pub compute_us: u64,
+    pub model_eval_us: u64,
+    pub solver_us: u64,
+}
+
+impl Exemplar {
+    /// Canonical ordering: slowest first, full-field tie-break so
+    /// identical sample sets always snapshot identically regardless of
+    /// arrival or merge order.
+    fn sort_key(&self) -> (std::cmp::Reverse<u64>, u64, u64, u64, u64, u64) {
+        (
+            std::cmp::Reverse(self.e2e_us),
+            self.trace_id,
+            self.queue_us,
+            self.compute_us,
+            self.model_eval_us,
+            self.solver_us,
+        )
+    }
+}
+
+/// Bounded slowest-K exemplar store.
+///
+/// Merging is exact: an exemplar in the global top-K of a union of stores
+/// is necessarily in the top-K of the store that recorded it, so merging
+/// per-shard stores (each already truncated to K) and re-truncating yields
+/// exactly the global K slowest — never a per-shard concatenation artifact.
+#[derive(Clone, Debug, Default)]
+pub struct ExemplarStore {
+    items: Vec<Exemplar>,
+}
+
+impl ExemplarStore {
+    pub fn record(&mut self, ex: Exemplar) {
+        self.items.push(ex);
+        self.canonicalize();
+    }
+
+    /// Keep the union's K slowest (see the type docs for why this is
+    /// exact).
+    pub fn merge(&mut self, other: &ExemplarStore) {
+        self.items.extend_from_slice(&other.items);
+        self.canonicalize();
+    }
+
+    /// Retained exemplars, slowest first.
+    pub fn items(&self) -> &[Exemplar] {
+        &self.items
+    }
+
+    fn canonicalize(&mut self) {
+        self.items.sort_by_key(Exemplar::sort_key);
+        self.items.truncate(SLOWEST_K);
+    }
+}
+
 /// Mutable metrics store (guarded by the owning shard's mutex).
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -66,6 +134,16 @@ pub struct Metrics {
     pub queue: LatencyDigest,
     pub compute: LatencyDigest,
     pub e2e: LatencyDigest,
+    /// Portion of each completion's compute spent inside model (network)
+    /// evaluations — the paper's NFE cost made a first-class digest.
+    pub model_eval: LatencyDigest,
+    /// The rest of compute: solver kernels + batch plumbing
+    /// (`compute − model_eval` per completion, so the two digests split
+    /// `compute` exactly).
+    pub solver: LatencyDigest,
+    /// Slowest-K end-to-end exemplars with their stage splits and trace
+    /// ids.
+    pub slowest: ExemplarStore,
 }
 
 impl Metrics {
@@ -75,13 +153,27 @@ impl Metrics {
         nfe: usize,
         queue: Duration,
         compute: Duration,
+        model_eval: Duration,
+        trace_id: u64,
     ) {
         self.completed += 1;
         self.samples_out += n_samples as u64;
         self.nfe_total += nfe as u64;
+        let model_eval = model_eval.min(compute);
+        let solver = compute - model_eval;
         self.queue.record(queue);
         self.compute.record(compute);
         self.e2e.record(queue + compute);
+        self.model_eval.record(model_eval);
+        self.solver.record(solver);
+        self.slowest.record(Exemplar {
+            trace_id,
+            e2e_us: (queue + compute).as_micros() as u64,
+            queue_us: queue.as_micros() as u64,
+            compute_us: compute.as_micros() as u64,
+            model_eval_us: model_eval.as_micros() as u64,
+            solver_us: solver.as_micros() as u64,
+        });
     }
 
     /// Count one typed failure: the `failed` total plus the per-kind
@@ -169,6 +261,9 @@ impl Metrics {
         self.queue.merge(&other.queue);
         self.compute.merge(&other.compute);
         self.e2e.merge(&other.e2e);
+        self.model_eval.merge(&other.model_eval);
+        self.solver.merge(&other.solver);
+        self.slowest.merge(&other.slowest);
     }
 
     pub fn snapshot_json(&mut self) -> Value {
@@ -215,10 +310,33 @@ impl Metrics {
             ("queue_p99_us", Value::from(self.queue.percentile_us(99.0) as f64)),
             ("compute_p50_us", Value::from(self.compute.percentile_us(50.0) as f64)),
             ("compute_p99_us", Value::from(self.compute.percentile_us(99.0) as f64)),
+            ("model_eval_p50_us", Value::from(self.model_eval.percentile_us(50.0) as f64)),
+            ("model_eval_p99_us", Value::from(self.model_eval.percentile_us(99.0) as f64)),
+            ("solver_p50_us", Value::from(self.solver.percentile_us(50.0) as f64)),
+            ("solver_p99_us", Value::from(self.solver.percentile_us(99.0) as f64)),
             ("e2e_p50_us", Value::from(self.e2e.percentile_us(50.0) as f64)),
             ("e2e_p95_us", Value::from(self.e2e.percentile_us(95.0) as f64)),
             ("e2e_p99_us", Value::from(self.e2e.percentile_us(99.0) as f64)),
             ("e2e_mean_us", Value::from(self.e2e.mean_us())),
+            (
+                "slowest",
+                Value::Arr(
+                    self.slowest
+                        .items()
+                        .iter()
+                        .map(|ex| {
+                            Value::obj(vec![
+                                ("trace_id", Value::from(ex.trace_id as f64)),
+                                ("e2e_us", Value::from(ex.e2e_us as f64)),
+                                ("queue_us", Value::from(ex.queue_us as f64)),
+                                ("compute_us", Value::from(ex.compute_us as f64)),
+                                ("model_eval_us", Value::from(ex.model_eval_us as f64)),
+                                ("solver_us", Value::from(ex.solver_us as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]);
         Value::obj(pairs)
     }
@@ -231,13 +349,45 @@ mod tests {
     #[test]
     fn completion_updates_everything() {
         let mut m = Metrics::default();
-        m.record_completion(4, 10, Duration::from_micros(50), Duration::from_micros(950));
+        m.record_completion(
+            4,
+            10,
+            Duration::from_micros(50),
+            Duration::from_micros(950),
+            Duration::from_micros(600),
+            7,
+        );
         assert_eq!(m.completed, 1);
         assert_eq!(m.samples_out, 4);
         assert_eq!(m.nfe_total, 10);
         let snap = m.snapshot_json();
         assert_eq!(snap.get("completed").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("e2e_p50_us").unwrap().as_f64(), Some(1000.0));
+        // The split digests tile compute exactly: model 600 + solver 350.
+        assert_eq!(snap.get("model_eval_p50_us").unwrap().as_f64(), Some(600.0));
+        assert_eq!(snap.get("solver_p50_us").unwrap().as_f64(), Some(350.0));
+        let slowest = snap.get("slowest").unwrap().as_arr().unwrap();
+        assert_eq!(slowest.len(), 1);
+        assert_eq!(slowest[0].get("trace_id").unwrap().as_f64(), Some(7.0));
+        assert_eq!(slowest[0].get("e2e_us").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn model_eval_is_clamped_to_compute() {
+        let mut m = Metrics::default();
+        // A model-eval reading slightly above compute (clock skew between
+        // the two measurements) must clamp, keeping solver non-negative.
+        m.record_completion(
+            1,
+            5,
+            Duration::ZERO,
+            Duration::from_micros(100),
+            Duration::from_micros(130),
+            1,
+        );
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("model_eval_p50_us").unwrap().as_f64(), Some(100.0));
+        assert_eq!(snap.get("solver_p50_us").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
@@ -286,12 +436,16 @@ mod tests {
         // Skewed latencies: percentiles of the union differ wildly from
         // any per-store percentile, so a lossy aggregator can't pass.
         for us in [10u64, 20, 30] {
-            a.record_completion(2, 8, Duration::from_micros(us), Duration::from_micros(us));
-            whole.record_completion(2, 8, Duration::from_micros(us), Duration::from_micros(us));
+            let (q, c, me) =
+                (Duration::from_micros(us), Duration::from_micros(us), Duration::from_micros(us / 2));
+            a.record_completion(2, 8, q, c, me, us);
+            whole.record_completion(2, 8, q, c, me, us);
         }
         for us in [10_000u64, 20_000] {
-            b.record_completion(1, 5, Duration::from_micros(us), Duration::from_micros(us));
-            whole.record_completion(1, 5, Duration::from_micros(us), Duration::from_micros(us));
+            let (q, c, me) =
+                (Duration::from_micros(us), Duration::from_micros(us), Duration::from_micros(us / 4));
+            b.record_completion(1, 5, q, c, me, us);
+            whole.record_completion(1, 5, q, c, me, us);
         }
         a.record_batch(3, 2, 1);
         whole.record_batch(3, 2, 1);
@@ -325,10 +479,57 @@ mod tests {
         // Exact percentiles prove the digests merged raw samples: the p50
         // of the union (30us) is not derivable from the two stores' own
         // p50s (20us and 10000+us).
-        for key in ["e2e_p50_us", "e2e_p99_us", "queue_p50_us", "e2e_mean_us"] {
+        for key in [
+            "e2e_p50_us",
+            "e2e_p99_us",
+            "queue_p50_us",
+            "e2e_mean_us",
+            "model_eval_p50_us",
+            "model_eval_p99_us",
+            "solver_p50_us",
+            "solver_p99_us",
+        ] {
             assert_eq!(ms.get(key), mw.get(key), "{key}");
         }
         assert_eq!(ms, mw, "merged snapshot must equal the single-store snapshot");
+    }
+
+    /// The merged exemplar store is the **global** K slowest — identical to
+    /// a single store that saw every completion — not the concatenation of
+    /// per-shard stores (which would over-represent whichever shard
+    /// happened to merge first).
+    #[test]
+    fn slowest_k_merge_keeps_the_global_tail() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        let mut whole = Metrics::default();
+        // 12 completions split across two stores; e2e = queue + compute is
+        // distinct per completion so the global top-8 is unambiguous.
+        for i in 0..12u64 {
+            let q = Duration::from_micros(100 * (i + 1));
+            let c = Duration::from_micros(50);
+            let me = Duration::from_micros(20);
+            let store = if i % 2 == 0 { &mut a } else { &mut b };
+            store.record_completion(1, 5, q, c, me, i);
+            whole.record_completion(1, 5, q, c, me, i);
+        }
+        let mut merged = Metrics::default();
+        merged.merge(&a);
+        merged.merge(&b);
+        let got: Vec<u64> = merged.slowest.items().iter().map(|e| e.trace_id).collect();
+        let want: Vec<u64> = whole.slowest.items().iter().map(|e| e.trace_id).collect();
+        assert_eq!(got, want, "merge must keep the global K slowest");
+        assert_eq!(got.len(), SLOWEST_K);
+        // Slowest first, and the global slowest (trace 11, e2e 1250us) leads.
+        assert_eq!(got[0], 11);
+        let items = merged.slowest.items();
+        assert!(items.windows(2).all(|w| w[0].e2e_us >= w[1].e2e_us));
+        // Every retained exemplar's split tiles its compute exactly.
+        for ex in items {
+            assert_eq!(ex.model_eval_us + ex.solver_us, ex.compute_us);
+            assert_eq!(ex.queue_us + ex.compute_us, ex.e2e_us);
+        }
+        assert_eq!(merged.snapshot_json(), whole.snapshot_json());
     }
 
     #[test]

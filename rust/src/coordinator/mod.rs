@@ -22,13 +22,21 @@
 //!   ([`service::ChaosConfig`]).
 //! * [`metrics`] — per-shard counters (including per-failure-kind) +
 //!   latency digests, snapshotted as JSON and merged exactly
-//!   ([`Metrics::merge`]) into the service-wide aggregate.
+//!   ([`Metrics::merge`]) into the service-wide aggregate. Completion
+//!   digests split `compute` into exact model-eval vs. solver time, and a
+//!   slowest-K exemplar store ([`metrics::ExemplarStore`]) keeps the
+//!   worst end-to-end requests with their trace ids for drill-down.
+//!
+//! Request lifecycles are additionally traced as span events (admit →
+//! route/queue → assemble → per-step model_eval/solver_step → respond)
+//! into per-shard bounded rings — see [`crate::trace`] and the tracing
+//! section of [`service`].
 
 pub mod metrics;
 pub mod request;
 pub mod service;
 
-pub use metrics::Metrics;
+pub use metrics::{Exemplar, ExemplarStore, Metrics, SLOWEST_K};
 pub use request::{Conditioning, FailureKind, SampleRequest, SampleResponse};
 pub use service::{
     shard_for_key, silence_injected_panics, ChaosConfig, CohortModel, CondSlab,

@@ -32,6 +32,12 @@ pub struct SampleRequest {
     /// past their deadline are shed with [`FailureKind::DeadlineExceeded`]
     /// instead of executing.
     pub deadline_ms: Option<u64>,
+    /// Client-chosen trace id (wire key `"trace_id"`, nonzero). `None` (or
+    /// 0) lets the service mint one at admission; either way the id is
+    /// echoed on [`SampleResponse::trace_id`] and stamps every span event
+    /// the request records, so a client can correlate its own logs with
+    /// the server's `{"op":"trace"}` span trees.
+    pub trace_id: Option<u64>,
 }
 
 impl Default for SampleRequest {
@@ -46,6 +52,7 @@ impl Default for SampleRequest {
             seed: 0,
             return_samples: true,
             deadline_ms: None,
+            trace_id: None,
         }
     }
 }
@@ -133,6 +140,9 @@ impl SampleRequest {
         if let Some(d) = self.deadline_ms {
             pairs.push(("deadline_ms", Value::from(d as f64)));
         }
+        if let Some(t) = self.trace_id {
+            pairs.push(("trace_id", Value::from(t as f64)));
+        }
         Value::obj(pairs)
     }
 
@@ -164,6 +174,9 @@ impl SampleRequest {
         }
         if let Some(d) = v.get("deadline_ms") {
             r.deadline_ms = Some(d.as_usize().ok_or_else(|| anyhow!("bad 'deadline_ms'"))? as u64);
+        }
+        if let Some(t) = v.get("trace_id") {
+            r.trace_id = Some(t.as_f64().ok_or_else(|| anyhow!("bad 'trace_id'"))? as u64);
         }
         Ok(r)
     }
@@ -241,6 +254,14 @@ pub struct SampleResponse {
     pub queue_us: u64,
     /// Time spent inside the solver (includes batched PJRT waits).
     pub compute_us: u64,
+    /// Portion of `compute_us` spent inside model (network) evaluations.
+    pub model_eval_us: u64,
+    /// Portion of `compute_us` spent in solver kernels and batch plumbing
+    /// (`compute_us − model_eval_us`).
+    pub solver_us: u64,
+    /// The trace id this request ran under (0 = tracing not stamped, e.g.
+    /// a response from a peer predating the trace subsystem).
+    pub trace_id: u64,
     /// Flattened samples `[n * dim]` when requested.
     pub samples: Option<Vec<f64>>,
     pub dim: usize,
@@ -256,6 +277,9 @@ impl SampleResponse {
             nfe,
             queue_us: 0,
             compute_us: 0,
+            model_eval_us: 0,
+            solver_us: 0,
+            trace_id: 0,
             samples,
             dim,
         }
@@ -270,6 +294,9 @@ impl SampleResponse {
             nfe: 0,
             queue_us: 0,
             compute_us: 0,
+            model_eval_us: 0,
+            solver_us: 0,
+            trace_id: 0,
             samples: None,
             dim: 0,
         }
@@ -281,6 +308,9 @@ impl SampleResponse {
             ("nfe", Value::from(self.nfe)),
             ("queue_us", Value::from(self.queue_us as f64)),
             ("compute_us", Value::from(self.compute_us as f64)),
+            ("model_eval_us", Value::from(self.model_eval_us as f64)),
+            ("solver_us", Value::from(self.solver_us as f64)),
+            ("trace_id", Value::from(self.trace_id as f64)),
             ("dim", Value::from(self.dim)),
         ];
         if let Some(k) = self.kind {
@@ -315,6 +345,9 @@ impl SampleResponse {
             nfe: v.get("nfe").and_then(Value::as_usize).unwrap_or(0),
             queue_us: v.get("queue_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
             compute_us: v.get("compute_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            model_eval_us: v.get("model_eval_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            solver_us: v.get("solver_us").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            trace_id: v.get("trace_id").and_then(Value::as_f64).unwrap_or(0.0) as u64,
             samples: v.get("samples").and_then(Value::as_arr).map(|a| {
                 a.iter().filter_map(Value::as_f64).collect()
             }),
@@ -340,10 +373,29 @@ mod tests {
             seed: 99,
             return_samples: false,
             deadline_ms: Some(1500),
+            trace_id: Some(77),
         };
         let v = json::parse(&r.to_json().to_string()).unwrap();
         let r2 = SampleRequest::from_json(&v).unwrap();
         assert_eq!(r, r2);
+    }
+
+    #[test]
+    fn trace_id_roundtrips_and_is_omitted_when_unset() {
+        let r = SampleRequest::default();
+        let v = json::parse(&r.to_json().to_string()).unwrap();
+        assert!(v.get("trace_id").is_none(), "None is not serialized");
+        assert_eq!(SampleRequest::from_json(&v).unwrap().trace_id, None);
+
+        let mut resp = SampleResponse::success(10, None, 2);
+        resp.trace_id = 42;
+        resp.model_eval_us = 900;
+        resp.solver_us = 100;
+        let v = json::parse(&resp.to_json().to_string()).unwrap();
+        let r2 = SampleResponse::from_json(&v).unwrap();
+        assert_eq!(r2.trace_id, 42);
+        assert_eq!(r2.model_eval_us, 900);
+        assert_eq!(r2.solver_us, 100);
     }
 
     #[test]

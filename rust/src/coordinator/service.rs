@@ -70,6 +70,24 @@
 //! error response). With the PJRT backend, concurrent workers' model
 //! evaluations additionally coalesce inside the runtime executor —
 //! step-level dynamic batching below this layer.
+//!
+//! **Tracing.** Every request is minted a nonzero `trace_id` at admission
+//! (or adopts a client-supplied one) and its lifecycle is recorded as
+//! [`SpanEvent`]s — `admit`, `route`/`queue` at dequeue (steals attributed
+//! to the victim shard), `assemble` for the batch gather, per-step
+//! `model_eval`/`solver_step` pairs when `ServerConfig::trace` is `steps`,
+//! and a terminal `respond` (or `quarantine`/`retry`) — into a per-shard
+//! preallocated [`TraceRing`] sized by `ServerConfig::trace_buf`. Workers
+//! stage events in a reusable scratch vec and flush under one lock per
+//! batch, so steady-state recording touches neither the allocator nor a
+//! global mutex (`tests/plan_alloc.rs` proves the former). A multi-member
+//! batch additionally gets a **cohort** span: a fresh cohort id owns the
+//! assemble/step spans and `cohort` link events tie each member to it.
+//! [`Service::trace_json`] returns recent span trees and
+//! [`Service::chrome_trace_json`] exports everything retained in Chrome
+//! `trace_event` format. Independently of the span level, every completion
+//! splits `compute` into exact `model_eval`/`solver` digests and feeds the
+//! slowest-K exemplar store ([`Metrics`]).
 
 use super::metrics::Metrics;
 use super::request::{Conditioning, FailureKind, SampleRequest, SampleResponse};
@@ -80,14 +98,15 @@ use crate::runtime::{PjrtHandle, PjrtModel};
 use crate::sched::VpLinear;
 use crate::solver::unipc::CoeffVariant;
 use crate::solver::{
-    plan_key, sample, sample_batch_with_plan, BatchWorkspace, Model, Prediction,
+    plan_key, sample, sample_batch_with_plan_observed, BatchWorkspace, Model, Prediction,
     SampleOptions, SamplePlan,
 };
 use crate::tensor::Tensor;
+use crate::trace::{SpanEvent, Stage, StepSpans, TimedModel, TraceRing};
 use std::any::Any;
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -452,6 +471,10 @@ struct QueuedJob {
     enqueued: Instant,
     /// Absolute deadline resolved at admission; `None` = no deadline.
     deadline: Option<Instant>,
+    /// Nonzero trace id minted (or adopted from the client) at admission;
+    /// keys every span event this job produces and is echoed on the
+    /// response.
+    trace_id: u64,
 }
 
 /// Distinct solver configs are few in practice; the cap only guards against
@@ -504,17 +527,26 @@ impl PlanCache {
 /// store for traffic routed here. Workers home on a shard but steal from
 /// the others when their own queue is dry.
 struct Shard {
+    /// This shard's index, so span events recorded by whoever holds a
+    /// `&Shard` (owner or stealer) carry the owning partition.
+    id: u32,
     queue: Mutex<VecDeque<QueuedJob>>,
     cv: Condvar,
     metrics: Mutex<Metrics>,
+    /// Bounded span-event ring, preallocated at startup
+    /// (`ServerConfig::trace_buf` slots): recording overwrites the oldest
+    /// event and never allocates.
+    trace: Mutex<TraceRing>,
 }
 
 impl Shard {
-    fn new() -> Shard {
+    fn new(id: u32, trace_cap: usize) -> Shard {
         Shard {
+            id,
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             metrics: Mutex::new(Metrics::default()),
+            trace: Mutex::new(TraceRing::new(trace_cap)),
         }
     }
 }
@@ -556,10 +588,29 @@ struct Inner {
     /// Round-robin cursor for solo (unplannable) jobs, which have no batch
     /// key to hash.
     solo_rr: AtomicUsize,
+    /// Zero of the span-event clock: all `SpanEvent` timestamps are
+    /// microseconds since this instant, so events from different shards
+    /// (and the Chrome export) share one monotonic timeline.
+    epoch: Instant,
+    /// Trace-id mint. Starts at 1 — 0 is the "unset" sentinel on the wire.
+    trace_ids: AtomicU64,
     /// Live worker handles tagged with each worker's home shard, joined by
     /// [`Service::shutdown`]. The supervisor pushes replacements here as it
     /// respawns panicked workers (same id ⇒ same home shard).
     handles: Mutex<Vec<(usize, JoinHandle<()>)>>,
+}
+
+impl Inner {
+    /// `at` on the span-event clock: microseconds since the service epoch
+    /// (0 for an instant that somehow predates it).
+    fn rel_us(&self, at: Instant) -> u64 {
+        at.checked_duration_since(self.epoch).map_or(0, |d| d.as_micros() as u64)
+    }
+
+    /// Mint a fresh nonzero trace id.
+    fn mint_trace_id(&self) -> u64 {
+        self.trace_ids.fetch_add(1, Ordering::Relaxed)
+    }
 }
 
 /// The running service (clone to share).
@@ -573,14 +624,17 @@ impl Service {
     /// worker `i` homed on shard `i % shards`.
     pub fn start(cfg: ServerConfig, backend: ModelBackend) -> Service {
         let n_shards = cfg.effective_shards();
+        let trace_cap = cfg.trace_buf;
         let inner = Arc::new(Inner {
-            shards: (0..n_shards).map(|_| Shard::new()).collect(),
+            shards: (0..n_shards).map(|i| Shard::new(i as u32, trace_cap)).collect(),
             cfg,
             backend,
             sched: VpLinear::default(),
             plans: Mutex::new(PlanCache::new(PLAN_CACHE_CAP)),
             shutdown: AtomicBool::new(false),
             solo_rr: AtomicUsize::new(0),
+            epoch: Instant::now(),
+            trace_ids: AtomicU64::new(1),
             handles: Mutex::new(Vec::new()),
         });
         for i in 0..inner.cfg.workers {
@@ -600,6 +654,17 @@ impl Service {
         &self,
         req: SampleRequest,
     ) -> Result<mpsc::Receiver<SampleResponse>, SampleResponse> {
+        let arrived = Instant::now();
+        // Adopt a client-supplied nonzero trace id, else mint one; rejected
+        // requests carry it too so a client can correlate the refusal.
+        let trace_id = match req.trace_id {
+            Some(t) if t != 0 => t,
+            _ => self.inner.mint_trace_id(),
+        };
+        let stamp = |mut resp: SampleResponse| {
+            resp.trace_id = trace_id;
+            resp
+        };
         let (opts, batch_key) = admission_setup(&self.inner, &req);
         let shard = &self.inner.shards[route_shard(&self.inner, batch_key.as_deref())];
         {
@@ -608,22 +673,23 @@ impl Service {
             if self.inner.shutdown.load(Ordering::SeqCst) {
                 metrics.rejected += 1;
                 metrics.failures_by_kind[FailureKind::BackendError.index()] += 1;
-                return Err(SampleResponse::failure(
+                return Err(stamp(SampleResponse::failure(
                     FailureKind::BackendError,
                     "service is shut down".into(),
-                ));
+                )));
             }
             if let Err(e) = req.validate(self.inner.cfg.max_batch) {
                 metrics.rejected += 1;
                 metrics.failures_by_kind[FailureKind::InvalidRequest.index()] += 1;
-                return Err(SampleResponse::failure(
+                return Err(stamp(SampleResponse::failure(
                     FailureKind::InvalidRequest,
                     format!("{e:#}"),
-                ));
+                )));
             }
         }
 
         let (tx, rx) = mpsc::channel();
+        let (n, steps) = (req.n, req.steps);
         let enqueued = Instant::now();
         let deadline = resolve_deadline_ms(&self.inner.cfg, &req)
             .map(|ms| enqueued + Duration::from_millis(ms));
@@ -635,15 +701,35 @@ impl Service {
                 let mut metrics = shard.metrics.lock().unwrap();
                 metrics.rejected += 1;
                 metrics.failures_by_kind[FailureKind::QueueFull.index()] += 1;
-                return Err(SampleResponse::failure(
+                return Err(stamp(SampleResponse::failure(
                     FailureKind::QueueFull,
                     format!("queue full ({pending} pending)"),
-                ));
+                )));
             }
-            q.push_back(QueuedJob { req, opts, batch_key, reply: tx, enqueued, deadline });
+            q.push_back(QueuedJob {
+                req,
+                opts,
+                batch_key,
+                reply: tx,
+                enqueued,
+                deadline,
+                trace_id,
+            });
             q.len()
         };
         shard.metrics.lock().unwrap().record_depth(depth);
+        if self.inner.cfg.trace.lifecycle() {
+            shard.trace.lock().unwrap().record(SpanEvent {
+                trace_id,
+                parent: 0,
+                stage: Stage::Admit,
+                shard: shard.id,
+                start_us: self.inner.rel_us(arrived),
+                dur_us: arrived.elapsed().as_micros() as u64,
+                a: n as u64,
+                b: steps as u64,
+            });
+        }
         // notify_all, not notify_one: a lingering batch assembler waits on
         // this same condvar and would otherwise swallow the only wakeup
         // meant for an idle worker, stranding a non-matching job for the
@@ -709,6 +795,14 @@ impl Service {
                         .collect(),
                 ),
             );
+            let (mut recorded, mut dropped) = (0u64, 0u64);
+            for s in &self.inner.shards {
+                let tr = s.trace.lock().unwrap();
+                recorded += tr.recorded();
+                dropped += tr.dropped();
+            }
+            m.insert("trace_recorded".into(), crate::json::Value::Num(recorded as f64));
+            m.insert("trace_dropped".into(), crate::json::Value::Num(dropped as f64));
         }
         v
     }
@@ -723,6 +817,31 @@ impl Service {
             .iter()
             .map(|s| s.metrics.lock().unwrap().snapshot_json())
             .collect()
+    }
+
+    /// Every span event currently retained across the per-shard rings,
+    /// sorted by timestamp (ties broken by trace id). A point-in-time copy:
+    /// each shard's ring is locked only long enough to snapshot it.
+    pub fn trace_events(&self) -> Vec<SpanEvent> {
+        let mut events: Vec<SpanEvent> = Vec::new();
+        for shard in &self.inner.shards {
+            events.extend(shard.trace.lock().unwrap().snapshot());
+        }
+        events.sort_by_key(|e| (e.start_us, e.trace_id));
+        events
+    }
+
+    /// Span trees for the most recent `limit` admitted requests (the
+    /// `{"op":"trace"}` wire payload). See [`crate::trace::span_trees_json`]
+    /// for the shape.
+    pub fn trace_json(&self, limit: usize) -> crate::json::Value {
+        crate::trace::span_trees_json(&self.trace_events(), limit)
+    }
+
+    /// Chrome `trace_event`-format export of every retained span event;
+    /// load the serialized form in `chrome://tracing` or Perfetto.
+    pub fn chrome_trace_json(&self) -> crate::json::Value {
+        crate::trace::chrome_trace_json(&self.trace_events())
     }
 
     /// The number of coordinator shards this service runs.
@@ -900,6 +1019,10 @@ fn worker_loop(inner: Arc<Inner>, id: usize) {
     // One pooled workspace per worker, reused across every batched run it
     // executes (the `workspace_reuses` metric counts successful reuse).
     let mut scratch = BatchWorkspace::new();
+    // Per-worker span-event staging: events accumulate here during a run
+    // and flush to the owner shard's ring under one lock. The vec is
+    // reserved up front per run, so steady-state recording never allocates.
+    let mut spans = Vec::new();
     loop {
         let (job, owner) = match next_job(&inner, home) {
             Some(pair) => pair,
@@ -909,15 +1032,25 @@ fn worker_loop(inner: Arc<Inner>, id: usize) {
         // runs it: batching scans the owner's queue (the rest of the
         // cohort lives there) and metrics land on the owner's store.
         let shard = &inner.shards[owner];
-        let job = match shed_if_expired(shard, job) {
+        let job = match shed_if_expired(&inner, shard, job) {
             Some(j) => j,
             None => continue,
         };
         let tainted = match batch_setup(&inner, shard, &job) {
             Some((opts, plan, key)) => {
+                let gather_started = Instant::now();
                 let mut jobs = vec![job];
                 gather_batch(&inner, shard, &key, &mut jobs);
-                execute_batch(&inner, shard, &mut scratch, jobs, &opts, &plan)
+                execute_batch(
+                    &inner,
+                    shard,
+                    &mut scratch,
+                    &mut spans,
+                    jobs,
+                    &opts,
+                    &plan,
+                    gather_started,
+                )
             }
             None => execute_solo(&inner, shard, job),
         };
@@ -947,6 +1080,34 @@ fn next_job(inner: &Inner, home: usize) -> Option<(QueuedJob, usize)> {
                 if off != 0 {
                     inner.shards[idx].metrics.lock().unwrap().steals += 1;
                 }
+                if inner.cfg.trace.lifecycle() {
+                    let now = Instant::now();
+                    let mut tr = inner.shards[idx].trace.lock().unwrap();
+                    // Route: owner shard in `a`; `b` = 0 for a home pop,
+                    // else the stealing worker's home shard + 1 — steals
+                    // stay attributed to the victim shard, matching the
+                    // `steals` counter.
+                    tr.record(SpanEvent {
+                        trace_id: job.trace_id,
+                        parent: 0,
+                        stage: Stage::Route,
+                        shard: idx as u32,
+                        start_us: inner.rel_us(now),
+                        dur_us: 0,
+                        a: idx as u64,
+                        b: if off != 0 { home as u64 + 1 } else { 0 },
+                    });
+                    tr.record(SpanEvent {
+                        trace_id: job.trace_id,
+                        parent: 0,
+                        stage: Stage::Queue,
+                        shard: idx as u32,
+                        start_us: inner.rel_us(job.enqueued),
+                        dur_us: now.saturating_duration_since(job.enqueued).as_micros() as u64,
+                        a: 0,
+                        b: 0,
+                    });
+                }
                 return Some((job, idx));
             }
         }
@@ -966,24 +1127,37 @@ fn next_job(inner: &Inner, home: usize) -> Option<(QueuedJob, usize)> {
 /// Shed `job` with a typed `DeadlineExceeded` response if its deadline has
 /// passed; expired jobs are never executed. The failure is recorded on the
 /// shard that owned the job's queue.
-fn shed_if_expired(shard: &Shard, job: QueuedJob) -> Option<QueuedJob> {
+fn shed_if_expired(inner: &Inner, shard: &Shard, job: QueuedJob) -> Option<QueuedJob> {
     let expired = job.deadline.is_some_and(|d| Instant::now() >= d);
     if expired {
-        shed_expired(shard, job);
+        shed_expired(inner, shard, job);
         None
     } else {
         Some(job)
     }
 }
 
-fn shed_expired(shard: &Shard, job: QueuedJob) {
+fn shed_expired(inner: &Inner, shard: &Shard, job: QueuedJob) {
     let waited = job.enqueued.elapsed();
     shard.metrics.lock().unwrap().record_failure(FailureKind::DeadlineExceeded);
+    if inner.cfg.trace.lifecycle() {
+        shard.trace.lock().unwrap().record(SpanEvent {
+            trace_id: job.trace_id,
+            parent: 0,
+            stage: Stage::Respond,
+            shard: shard.id,
+            start_us: inner.rel_us(job.enqueued),
+            dur_us: waited.as_micros() as u64,
+            a: FailureKind::DeadlineExceeded.index() as u64 + 1,
+            b: 0,
+        });
+    }
     let mut resp = SampleResponse::failure(
         FailureKind::DeadlineExceeded,
         format!("deadline exceeded after {}us in queue", waited.as_micros()),
     );
     resp.queue_us = waited.as_micros() as u64;
+    resp.trace_id = job.trace_id;
     let _ = job.reply.send(resp);
 }
 
@@ -1057,11 +1231,28 @@ fn gather_batch(inner: &Inner, shard: &Shard, key: &str, jobs: &mut Vec<QueuedJo
                 if q[i].deadline.is_some_and(|d| Instant::now() >= d) {
                     // Queue lock → metrics lock is the allowed order.
                     let j = q.remove(i).expect("index in range");
-                    shed_expired(shard, j);
+                    shed_expired(inner, shard, j);
                     continue;
                 }
                 if rows + q[i].req.n <= inner.cfg.max_batch {
                     let j = q.remove(i).expect("index in range");
+                    // Queue span for an absorbed member (the leader got its
+                    // Route+Queue at pop time in `next_job`; members pulled
+                    // into an in-flight assembly end their wait here).
+                    // `a = 1` marks absorption; queue lock → trace lock is
+                    // fine — trace locks are terminal, like metrics.
+                    if inner.cfg.trace.lifecycle() {
+                        shard.trace.lock().unwrap().record(SpanEvent {
+                            trace_id: j.trace_id,
+                            parent: 0,
+                            stage: Stage::Queue,
+                            shard: shard.id,
+                            start_us: inner.rel_us(j.enqueued),
+                            dur_us: j.enqueued.elapsed().as_micros() as u64,
+                            a: 1,
+                            b: 0,
+                        });
+                    }
                     rows += j.req.n;
                     jobs.push(j);
                     if let Some(d) = jobs.last().and_then(|j| j.deadline) {
@@ -1114,13 +1305,16 @@ fn panic_message(payload: &(dyn Any + Send)) -> String {
 /// the same plan). On a clean run, each member's output rows are checked
 /// for finiteness on the stacked tensor; non-finite members fail
 /// individually while their cohort completes.
+#[allow(clippy::too_many_arguments)]
 fn execute_batch(
     inner: &Inner,
     shard: &Shard,
     scratch: &mut BatchWorkspace,
+    spans: &mut Vec<SpanEvent>,
     mut jobs: Vec<QueuedJob>,
     opts: &SampleOptions,
     plan: &SamplePlan,
+    gather_started: Instant,
 ) -> bool {
     // Members may differ in conditioning (the batch key is the plan key
     // alone): sort them so equal conditionings are contiguous — one slab
@@ -1132,6 +1326,43 @@ fn execute_batch(
     let started = Instant::now();
     let slabs = CondSlab::coalesce(jobs.iter().map(|j| (j.req.n, j.req.conditioning())));
     let distinct_conds = slabs.len();
+    let rows: usize = jobs.iter().map(|j| j.req.n).sum();
+    let level = inner.cfg.trace;
+    // A multi-member batch gets a dedicated cohort id owning the shared
+    // assemble/step spans, with `cohort` links tying members to it; a batch
+    // of one inlines those spans straight into the member's tree.
+    let cohort = if jobs.len() > 1 { inner.mint_trace_id() } else { jobs[0].trace_id };
+    spans.clear();
+    if level.lifecycle() {
+        // One reservation covers the worst case for this run (assemble +
+        // links + per-step pairs + quarantine/respond per member + retry),
+        // so every push below is allocation-free.
+        spans.reserve(2 * plan.len() + 3 * jobs.len() + 2);
+        spans.push(SpanEvent {
+            trace_id: cohort,
+            parent: 0,
+            stage: Stage::Assemble,
+            shard: shard.id,
+            start_us: inner.rel_us(gather_started),
+            dur_us: started.saturating_duration_since(gather_started).as_micros() as u64,
+            a: jobs.len() as u64,
+            b: distinct_conds as u64,
+        });
+        if jobs.len() > 1 {
+            for (i, job) in jobs.iter().enumerate() {
+                spans.push(SpanEvent {
+                    trace_id: job.trace_id,
+                    parent: cohort,
+                    stage: Stage::CohortLink,
+                    shard: shard.id,
+                    start_us: inner.rel_us(started),
+                    dur_us: 0,
+                    a: i as u64,
+                    b: job.req.n as u64,
+                });
+            }
+        }
+    }
     let model = CohortModel::new(&inner.backend, &inner.sched, slabs);
     let dim = model.dim();
     let inits: Vec<Tensor> = jobs
@@ -1140,10 +1371,30 @@ fn execute_batch(
         .collect();
     let refs: Vec<&Tensor> = inits.iter().collect();
     let reuses_before = scratch.reuses();
+    // The timing wrapper always runs (it feeds the model_eval/solver
+    // digests); per-step span emission additionally needs `trace=steps`.
+    let timed = TimedModel::new(&model);
     let outcome = catch_unwind(AssertUnwindSafe(|| {
-        sample_batch_with_plan(&model, &inner.sched, &refs, opts, plan, scratch)
+        if level.steps() {
+            let mut obs =
+                StepSpans::new(&mut *spans, &timed, inner.epoch, cohort, 0, shard.id, rows as u64);
+            sample_batch_with_plan_observed(
+                &timed,
+                &inner.sched,
+                &refs,
+                opts,
+                plan,
+                scratch,
+                Some(&mut obs),
+            )
+        } else {
+            sample_batch_with_plan_observed(
+                &timed, &inner.sched, &refs, opts, plan, scratch, None,
+            )
+        }
     }));
     let compute_time = started.elapsed();
+    let model_time = Duration::from_nanos(timed.eval_ns()).min(compute_time);
 
     let results = match outcome {
         Ok(results) => results,
@@ -1154,17 +1405,41 @@ fn execute_batch(
                 // culprit fails; the others stay bit-identical to a clean
                 // run (solo executes the same plan).
                 shard.metrics.lock().unwrap().batch_retries += jobs.len() as u64;
+                if level.lifecycle() {
+                    spans.push(SpanEvent {
+                        trace_id: cohort,
+                        parent: 0,
+                        stage: Stage::Retry,
+                        shard: shard.id,
+                        start_us: inner.rel_us(Instant::now()),
+                        dur_us: 0,
+                        a: jobs.len() as u64,
+                        b: 0,
+                    });
+                    shard.trace.lock().unwrap().record_all(spans);
+                }
                 for job in jobs {
                     let _ = execute_solo(inner, shard, job);
                 }
             } else {
                 // A batch of one has no cohort to protect; fail it typed.
+                if level.lifecycle() {
+                    shard.trace.lock().unwrap().record_all(spans);
+                }
                 let job = jobs.into_iter().next().expect("non-empty batch");
                 let resp = SampleResponse::failure(
                     FailureKind::WorkerPanic,
                     format!("worker panicked during execution: {msg}"),
                 );
-                finish_solo(shard, job, resp, queue_times[0], compute_time);
+                finish_solo(
+                    inner,
+                    shard,
+                    job,
+                    resp,
+                    queue_times[0],
+                    compute_time,
+                    Duration::ZERO,
+                );
             }
             return true;
         }
@@ -1195,7 +1470,7 @@ fn execute_batch(
         jobs.iter().zip(results.iter()).zip(queue_times.iter().zip(&finite))
     {
         if *ok {
-            m.record_completion(job.req.n, r.nfe, *qt, compute_time);
+            m.record_completion(job.req.n, r.nfe, *qt, compute_time, model_time, job.trace_id);
         } else {
             m.quarantined_members += 1;
             m.record_failure(FailureKind::NonFiniteOutput);
@@ -1203,8 +1478,11 @@ fn execute_batch(
     }
     drop(m);
 
-    for ((job, r), (qt, ok)) in
-        jobs.into_iter().zip(results).zip(queue_times.into_iter().zip(finite))
+    for (i, ((job, r), (qt, ok))) in jobs
+        .into_iter()
+        .zip(results)
+        .zip(queue_times.into_iter().zip(finite))
+        .enumerate()
     {
         let mut resp = if ok {
             SampleResponse::success(
@@ -1223,7 +1501,39 @@ fn execute_batch(
         };
         resp.queue_us = qt.as_micros() as u64;
         resp.compute_us = compute_time.as_micros() as u64;
+        resp.model_eval_us = model_time.as_micros() as u64;
+        // Integer subtraction (not Duration math) so the stamped split
+        // sums to compute_us exactly despite µs truncation.
+        resp.solver_us = resp.compute_us - resp.model_eval_us;
+        resp.trace_id = job.trace_id;
+        if level.lifecycle() {
+            if !ok {
+                spans.push(SpanEvent {
+                    trace_id: job.trace_id,
+                    parent: cohort,
+                    stage: Stage::Quarantine,
+                    shard: shard.id,
+                    start_us: inner.rel_us(Instant::now()),
+                    dur_us: 0,
+                    a: i as u64,
+                    b: FailureKind::NonFiniteOutput.index() as u64,
+                });
+            }
+            spans.push(SpanEvent {
+                trace_id: job.trace_id,
+                parent: 0,
+                stage: Stage::Respond,
+                shard: shard.id,
+                start_us: inner.rel_us(job.enqueued),
+                dur_us: (qt + compute_time).as_micros() as u64,
+                a: if ok { 0 } else { FailureKind::NonFiniteOutput.index() as u64 + 1 },
+                b: r.nfe as u64,
+            });
+        }
         let _ = job.reply.send(resp);
+    }
+    if level.lifecycle() {
+        shard.trace.lock().unwrap().record_all(spans);
     }
     false
 }
@@ -1239,8 +1549,8 @@ fn execute_solo(inner: &Inner, shard: &Shard, job: QueuedJob) -> bool {
     }));
     let compute_time = started.elapsed();
     match outcome {
-        Ok(resp) => {
-            finish_solo(shard, job, resp, queue_time, compute_time);
+        Ok((resp, model_time)) => {
+            finish_solo(inner, shard, job, resp, queue_time, compute_time, model_time);
             false
         }
         Err(payload) => {
@@ -1251,29 +1561,53 @@ fn execute_solo(inner: &Inner, shard: &Shard, job: QueuedJob) -> bool {
                     panic_message(payload.as_ref())
                 ),
             );
-            finish_solo(shard, job, resp, queue_time, compute_time);
+            finish_solo(inner, shard, job, resp, queue_time, compute_time, Duration::ZERO);
             true
         }
     }
 }
 
-/// Record metrics for a solo outcome, stamp latencies, and reply.
+/// Record metrics for a solo outcome, stamp latencies (including the
+/// model-eval/solver split of compute), record the terminal `respond`
+/// span, and reply.
 fn finish_solo(
+    inner: &Inner,
     shard: &Shard,
     job: QueuedJob,
     mut resp: SampleResponse,
     queued: Duration,
     compute: Duration,
+    model_eval: Duration,
 ) {
+    let model_eval = model_eval.min(compute);
     {
         let mut m = shard.metrics.lock().unwrap();
         match resp.kind {
-            None => m.record_completion(job.req.n, resp.nfe, queued, compute),
+            None => {
+                m.record_completion(job.req.n, resp.nfe, queued, compute, model_eval, job.trace_id)
+            }
             Some(k) => m.record_failure(k),
         }
     }
+    if inner.cfg.trace.lifecycle() {
+        shard.trace.lock().unwrap().record(SpanEvent {
+            trace_id: job.trace_id,
+            parent: 0,
+            stage: Stage::Respond,
+            shard: shard.id,
+            start_us: inner.rel_us(job.enqueued),
+            dur_us: (queued + compute).as_micros() as u64,
+            a: resp.kind.map_or(0, |k| k.index() as u64 + 1),
+            b: resp.nfe as u64,
+        });
+    }
     resp.queue_us = queued.as_micros() as u64;
     resp.compute_us = compute.as_micros() as u64;
+    resp.model_eval_us = model_eval.as_micros() as u64;
+    // Integer subtraction (not Duration math) so the stamped split sums to
+    // compute_us exactly despite µs truncation.
+    resp.solver_us = resp.compute_us - resp.model_eval_us;
+    resp.trace_id = job.trace_id;
     let _ = job.reply.send(resp);
 }
 
@@ -1342,7 +1676,7 @@ fn run_request(
     inner: &Inner,
     req: &SampleRequest,
     opts: Option<&SampleOptions>,
-) -> SampleResponse {
+) -> (SampleResponse, Duration) {
     // `opts` is the admission-time resolution; absent means the method
     // failed to parse, so re-run the build to produce the error message.
     let opts = match opts {
@@ -1350,7 +1684,10 @@ fn run_request(
         None => match build_opts(inner, req) {
             Ok(o) => o,
             Err(e) => {
-                return SampleResponse::failure(FailureKind::InvalidRequest, format!("{e:#}"))
+                return (
+                    SampleResponse::failure(FailureKind::InvalidRequest, format!("{e:#}")),
+                    Duration::ZERO,
+                )
             }
         },
     };
@@ -1361,7 +1698,11 @@ fn run_request(
     let x_t = rng.normal_tensor(&[req.n, dim]);
     // Plannable configs take the planned path inside `sample` too, so a
     // quarantined batch member re-run here is bit-identical to its batch.
-    let result = sample(&model, &inner.sched, &x_t, &opts);
+    // The timing wrapper splits compute into model-eval vs solver time for
+    // the response stamps and latency digests.
+    let timed = TimedModel::new(&model);
+    let result = sample(&timed, &inner.sched, &x_t, &opts);
+    let model_time = Duration::from_nanos(timed.eval_ns());
 
     if !result.x.rows_finite(0, req.n) {
         let mut f = SampleResponse::failure(
@@ -1370,13 +1711,14 @@ fn run_request(
         );
         f.nfe = result.nfe;
         f.dim = dim;
-        return f;
+        return (f, model_time);
     }
-    SampleResponse::success(
+    let resp = SampleResponse::success(
         result.nfe,
         req.return_samples.then(|| result.x.data().to_vec()),
         dim,
-    )
+    );
+    (resp, model_time)
 }
 
 #[cfg(test)]
@@ -1785,6 +2127,99 @@ mod tests {
             Ok(_) => panic!("submit after shutdown must be rejected"),
         }
         // Shutdown is idempotent.
+        svc.shutdown();
+    }
+
+    #[test]
+    fn traces_record_lifecycle_and_echo_trace_id() {
+        let svc = analytic_service(2, 16);
+        let resp = svc.sample_blocking(SampleRequest {
+            n: 2,
+            steps: 5,
+            seed: 1,
+            trace_id: Some(4242),
+            ..Default::default()
+        });
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.trace_id, 4242, "client-supplied trace id must echo back");
+        assert!(resp.compute_us >= resp.model_eval_us);
+        assert_eq!(
+            resp.model_eval_us + resp.solver_us,
+            resp.compute_us,
+            "model/solver must split compute exactly"
+        );
+        // A minted id is nonzero and distinct per request.
+        let a = svc.sample_blocking(SampleRequest { n: 1, steps: 5, seed: 2, ..Default::default() });
+        let b = svc.sample_blocking(SampleRequest { n: 1, steps: 5, seed: 3, ..Default::default() });
+        assert!(a.trace_id != 0 && b.trace_id != 0 && a.trace_id != b.trace_id);
+
+        let events = svc.trace_events();
+        let stages_of = |id: u64| -> Vec<Stage> {
+            events.iter().filter(|e| e.trace_id == id).map(|e| e.stage).collect()
+        };
+        for id in [4242, a.trace_id, b.trace_id] {
+            let stages = stages_of(id);
+            for want in [Stage::Admit, Stage::Route, Stage::Queue, Stage::Respond] {
+                assert!(stages.contains(&want), "trace {id} missing {want:?}: {stages:?}");
+            }
+        }
+        // The wire payload groups them into one tree per request.
+        let trees = svc.trace_json(10);
+        let arr =
+            trees.get("traces").and_then(|v| v.as_arr()).expect("trace_json has a traces array");
+        assert!(arr.len() >= 3, "expected ≥ 3 span trees: {trees:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn step_level_traces_emit_model_and_solver_spans() {
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        let cfg = ServerConfig {
+            workers: 1,
+            queue_cap: 16,
+            trace: crate::trace::TraceLevel::Steps,
+            ..Default::default()
+        };
+        let svc = Service::start(
+            cfg,
+            ModelBackend::Analytic { gm, class_components: Arc::new(classes) },
+        );
+        let resp = svc.sample_blocking(SampleRequest {
+            n: 1,
+            steps: 5,
+            seed: 9,
+            ..Default::default()
+        });
+        assert!(resp.ok, "{:?}", resp.error);
+        let events = svc.trace_events();
+        let evals =
+            events.iter().filter(|e| e.stage == Stage::ModelEval).count();
+        let solves =
+            events.iter().filter(|e| e.stage == Stage::SolverStep).count();
+        assert_eq!(evals, 5, "one model_eval span per step: {events:?}");
+        assert_eq!(evals, solves, "model_eval/solver_step come in pairs");
+        // Off silences span recording entirely (digests stay on).
+        let cfg_off = ServerConfig {
+            workers: 1,
+            queue_cap: 16,
+            trace: crate::trace::TraceLevel::Off,
+            ..Default::default()
+        };
+        let spec = DatasetSpec::Cifar10Like;
+        let gm = Arc::new(dataset(spec));
+        let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+        let svc_off = Service::start(
+            cfg_off,
+            ModelBackend::Analytic { gm, class_components: Arc::new(classes) },
+        );
+        let r = svc_off.sample_blocking(SampleRequest { n: 1, steps: 5, seed: 9, ..Default::default() });
+        assert!(r.ok);
+        assert!(svc_off.trace_events().is_empty(), "trace=off must record nothing");
+        assert!(r.trace_id != 0, "ids are minted even with spans off");
+        assert_eq!(r.model_eval_us + r.solver_us, r.compute_us);
+        svc_off.shutdown();
         svc.shutdown();
     }
 }

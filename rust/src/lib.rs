@@ -22,6 +22,10 @@
 //!   (same-plan requests stack into one batch-major run with one model
 //!   evaluation per step), per-request solver state, metrics, and a
 //!   TCP/JSON front end.
+//! * [`trace`] — end-to-end request tracing: span events for every
+//!   lifecycle stage (admit → route/queue → assemble → per-step
+//!   model-eval/solver split → respond), bounded per-shard rings, span-tree
+//!   and Chrome `trace_event` exporters.
 //! * substrates built from scratch for the offline environment:
 //!   [`tensor`], [`rng`], [`stats`], [`json`], [`cli`], [`config`],
 //!   [`testing`].
@@ -47,6 +51,7 @@ pub mod solver;
 pub mod stats;
 pub mod tensor;
 pub mod testing;
+pub mod trace;
 pub mod weights;
 
 /// Crate-wide result type.

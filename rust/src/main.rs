@@ -5,6 +5,7 @@
 //!                exist, analytic backend otherwise)
 //!   sample       one-shot sampling to stdout/JSON
 //!   client       fire a request at a running server
+//!   trace-demo   headless serve + load + Chrome trace artifact
 //!   order-sweep  empirical order-of-convergence study (analytic model)
 //!   info         print manifest/weights/artifact info
 
@@ -25,6 +26,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "sample" => cmd_sample(&args),
         "client" => cmd_client(&args),
+        "trace-demo" => cmd_trace_demo(&args),
         "order-sweep" => cmd_order_sweep(&args),
         "info" => cmd_info(&args),
         "" | "help" | "--help" => {
@@ -50,6 +52,7 @@ fn top_usage() -> String {
     \x20 serve        start the TCP sampling server\n\
     \x20 sample       one-shot sampling (no server)\n\
     \x20 client       send a request to a running server\n\
+    \x20 trace-demo   headless serve + load + Chrome trace artifact\n\
     \x20 order-sweep  empirical convergence orders on the analytic model\n\
     \x20 info         inspect artifacts + weights\n"
         .to_string()
@@ -108,6 +111,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "max-batch", help: "max rows per model call", default: Some("64") },
                     OptSpec { name: "deadline-ms", help: "default request deadline (0 = none)", default: Some("30000") },
                     OptSpec { name: "drain-deadline-ms", help: "shutdown drain bound", default: Some("2000") },
+                    OptSpec { name: "trace", help: "span level: off|lifecycle|steps", default: Some("lifecycle") },
+                    OptSpec { name: "trace-buf", help: "span-ring capacity per shard", default: Some("4096") },
+                    OptSpec { name: "trace-out", help: "Chrome trace_event JSON, rewritten each minute", default: None },
                     OptSpec { name: "analytic", help: "force the analytic backend", default: None },
                 ],
             )
@@ -119,16 +125,75 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let service = Service::start(cfg.clone(), backend);
     let server = Server::spawn(service.clone(), &cfg.addr)?;
     println!(
-        "listening on {} ({} workers across {} shards)",
+        "listening on {} ({} workers across {} shards, trace={})",
         server.addr,
         cfg.workers,
-        service.shards()
+        service.shards(),
+        cfg.trace.as_str(),
     );
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(60));
         log::info!("{}", service.metrics_json().to_string());
+        if let Some(path) = &trace_out {
+            if let Err(e) = std::fs::write(path, service.chrome_trace_json().to_string()) {
+                log::warn!("failed to write trace to {path}: {e}");
+            }
+        }
     }
+}
+
+/// Headless observability demo: start an analytic-backend server, drive it
+/// with the load generator, print the queue-vs-compute breakdown, and write
+/// the retained spans as a Chrome `trace_event` JSON artifact.
+fn cmd_trace_demo(args: &Args) -> anyhow::Result<()> {
+    use unipc::server::{run_load, LoadConfig};
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "trace-demo",
+                "serve + load + Chrome trace artifact, headlessly",
+                &[
+                    OptSpec { name: "out", help: "Chrome trace output path", default: Some("TRACE_demo.json") },
+                    OptSpec { name: "requests", help: "requests to fire", default: Some("64") },
+                    OptSpec { name: "trace", help: "span level: off|lifecycle|steps", default: Some("steps") },
+                ],
+            )
+        );
+        return Ok(());
+    }
+    let out = args.get_or("out", "TRACE_demo.json").to_string();
+    let total = args.get_usize("requests", 64).map_err(anyhow::Error::msg)?;
+    let mut cfg = load_config(args)?;
+    if args.get("trace").is_none() {
+        // The demo exists to show span trees: default to per-step spans.
+        cfg.trace = unipc::trace::TraceLevel::Steps;
+    }
+    let backend = backend_from(&cfg, true)?;
+    let service = Service::start(cfg, backend);
+    let server = Server::spawn(service.clone(), "127.0.0.1:0")?;
+    let load = LoadConfig {
+        rps: 400.0,
+        total,
+        connections: 4,
+        template: SampleRequest { n: 2, steps: 8, return_samples: false, ..Default::default() },
+        seed: 7,
+        key_mix: 4,
+        mix_guidance: Some(2.0),
+        plan_mix: 2,
+    };
+    let mut report = run_load(&server.addr.to_string(), &load)?;
+    println!("{}", report.summary());
+    std::fs::write(&out, service.chrome_trace_json().to_string())?;
+    println!(
+        "wrote {} span events to {out} (load in chrome://tracing or Perfetto)",
+        service.trace_events().len()
+    );
+    server.stop();
+    service.shutdown();
+    Ok(())
 }
 
 fn cmd_sample(args: &Args) -> anyhow::Result<()> {

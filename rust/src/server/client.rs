@@ -40,6 +40,15 @@ impl Client {
         self.raw(r#"{"op":"stats"}"#)
     }
 
+    /// Fetch the span trees of the most recent `limit` requests (the
+    /// `trace` op); returns the `traces` array from the reply.
+    pub fn trace(&mut self, limit: usize) -> Result<Value> {
+        let v = self.raw(&format!(r#"{{"op":"trace","limit":{limit}}}"#))?;
+        v.get("traces")
+            .cloned()
+            .ok_or_else(|| anyhow!("trace reply missing traces: {v:?}"))
+    }
+
     pub fn sample(&mut self, req: &SampleRequest) -> Result<SampleResponse> {
         let v = self.raw(&req.to_json().to_string())?;
         SampleResponse::from_json(&v)

@@ -48,6 +48,26 @@ pub struct LoadConfig {
     pub plan_mix: usize,
 }
 
+/// Server-reported stage latencies, accumulated from the timing stamps on
+/// each ok response: queue wait vs. compute, with compute further split
+/// into model-eval and solver-kernel time.
+#[derive(Clone, Debug, Default)]
+pub struct StageDigests {
+    pub queue: LatencyDigest,
+    pub compute: LatencyDigest,
+    pub model_eval: LatencyDigest,
+    pub solver: LatencyDigest,
+}
+
+impl StageDigests {
+    fn record(&mut self, queue_us: u64, compute_us: u64, model_eval_us: u64, solver_us: u64) {
+        self.queue.record_us(queue_us);
+        self.compute.record_us(compute_us);
+        self.model_eval.record_us(model_eval_us);
+        self.solver.record_us(solver_us);
+    }
+}
+
 /// Aggregate results.
 #[derive(Debug)]
 pub struct LoadReport {
@@ -61,6 +81,8 @@ pub struct LoadReport {
     /// Non-ok responses broken down by failure kind (wire name); empty
     /// under a fault-free run.
     pub failures: BTreeMap<String, u64>,
+    /// Where server-side time went, from per-response timing stamps.
+    pub stages: StageDigests,
 }
 
 impl LoadReport {
@@ -77,6 +99,24 @@ impl LoadReport {
         if !self.failures.is_empty() {
             s.push_str(&format!(" fails={:?}", self.failures));
         }
+        if self.stages.queue.count() > 0 {
+            // Queue-vs-compute attribution: how much of the server-side
+            // latency was waiting rather than working, and how the working
+            // half splits between the model and the solver kernels.
+            let qm = self.stages.queue.mean_us();
+            let cm = self.stages.compute.mean_us();
+            let share = 100.0 * qm / (qm + cm).max(1.0);
+            s.push_str(&format!(
+                "\n  breakdown: queue[{}] compute[{}] — {share:.0}% of server time queued",
+                self.stages.queue.summary(),
+                self.stages.compute.summary(),
+            ));
+            s.push_str(&format!(
+                "\n  compute split: model_eval[{}] solver[{}]",
+                self.stages.model_eval.summary(),
+                self.stages.solver.summary(),
+            ));
+        }
         s
     }
 }
@@ -88,6 +128,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
     let rejected = Arc::new(AtomicU64::new(0));
     let samples = Arc::new(AtomicU64::new(0));
     let latency = Arc::new(Mutex::new(LatencyDigest::new()));
+    let stages = Arc::new(Mutex::new(StageDigests::default()));
     let failures: Arc<Mutex<BTreeMap<String, u64>>> = Arc::new(Mutex::new(BTreeMap::new()));
 
     let per_conn = cfg.total / cfg.connections;
@@ -100,6 +141,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         let rejected = Arc::clone(&rejected);
         let samples = Arc::clone(&samples);
         let latency = Arc::clone(&latency);
+        let stages = Arc::clone(&stages);
         let failures = Arc::clone(&failures);
         let seed = cfg.seed;
         let key_mix = cfg.key_mix;
@@ -139,6 +181,12 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
                         ok.fetch_add(1, Ordering::Relaxed);
                         samples.fetch_add(req.n as u64, Ordering::Relaxed);
                         latency.lock().unwrap().record(sent.elapsed());
+                        stages.lock().unwrap().record(
+                            resp.queue_us,
+                            resp.compute_us,
+                            resp.model_eval_us,
+                            resp.solver_us,
+                        );
                     }
                     Ok(resp) => {
                         rejected.fetch_add(1, Ordering::Relaxed);
@@ -161,6 +209,9 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
     let latency = Arc::try_unwrap(latency)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+    let stages = Arc::try_unwrap(stages)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_else(|arc| arc.lock().unwrap().clone());
     let failures = Arc::try_unwrap(failures)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_else(|arc| arc.lock().unwrap().clone());
@@ -172,6 +223,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         samples_per_sec: samples.load(Ordering::Relaxed) as f64 / wall.as_secs_f64(),
         latency,
         failures,
+        stages,
     })
 }
 
@@ -214,7 +266,18 @@ mod tests {
         assert_eq!(report.ok, 24);
         assert!(report.samples_per_sec > 0.0);
         assert!(report.failures.is_empty(), "clean run must have no failures");
-        assert!(!report.summary().is_empty());
+        // Stage attribution covers every ok response, and the split fields
+        // are internally consistent (model + solver = compute per sample,
+        // so it holds for the means too).
+        assert_eq!(report.stages.queue.count(), 24);
+        assert_eq!(report.stages.compute.count(), 24);
+        let me = report.stages.model_eval.mean_us();
+        let so = report.stages.solver.mean_us();
+        let cm = report.stages.compute.mean_us();
+        assert!((me + so - cm).abs() <= 24.0, "model({me}) + solver({so}) ≈ compute({cm})");
+        let s = report.summary();
+        assert!(s.contains("breakdown:"), "summary must print the stage breakdown: {s}");
+        assert!(s.contains("model_eval["), "summary must print the compute split: {s}");
         server.stop();
         svc.shutdown();
     }

@@ -4,9 +4,15 @@
 //!
 //! Protocol (one JSON object per line):
 //!   → {"op":"sample", "n":4, "steps":10, "method":"unipc-3", ...}
-//!   ← {"ok":true, "nfe":10, "samples":[...], ...}
-//!   → {"op":"stats"}   ← metrics snapshot
+//!   ← {"ok":true, "nfe":10, "samples":[...], "trace_id":…, ...}
+//!   → {"op":"stats"}   ← metrics snapshot + front-end gauges
 //!   → {"op":"ping"}    ← {"ok":true}
+//!   → {"op":"trace", "limit":8}  ← recent span trees (see [`crate::trace`])
+//!
+//! The listener accounts for its connections: a `connections_open` gauge
+//! and per-op counters ride on every `stats` reply, and [`Server::stop`]
+//! waits (bounded) for per-connection threads to drain instead of leaving
+//! them unaccounted.
 
 pub mod client;
 pub mod loadgen;
@@ -20,13 +26,63 @@ use crate::log;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Default span-tree count for `{"op":"trace"}` when no `limit` is given.
+const DEFAULT_TRACE_LIMIT: usize = 8;
+
+/// Front-end accounting, shared by the accept loop and every connection
+/// thread. All plain atomics: the hot path pays one relaxed increment per
+/// request.
+#[derive(Debug, Default)]
+pub struct FrontendStats {
+    /// Connections ever accepted.
+    pub connections_total: AtomicU64,
+    /// Connections currently open (gauge; maintained by a drop guard, so a
+    /// panicking connection thread still decrements it).
+    pub connections_open: AtomicU64,
+    /// Per-op request counters.
+    pub op_sample: AtomicU64,
+    pub op_stats: AtomicU64,
+    pub op_ping: AtomicU64,
+    pub op_trace: AtomicU64,
+    /// Unknown ops and unparsable lines.
+    pub op_other: AtomicU64,
+}
+
+impl FrontendStats {
+    /// The gauge/counter block merged into every `stats` reply.
+    fn fields(&self) -> Vec<(&'static str, Value)> {
+        let g = |a: &AtomicU64| Value::from(a.load(Ordering::Relaxed) as f64);
+        vec![
+            ("connections_total", g(&self.connections_total)),
+            ("connections_open", g(&self.connections_open)),
+            ("op_sample", g(&self.op_sample)),
+            ("op_stats", g(&self.op_stats)),
+            ("op_ping", g(&self.op_ping)),
+            ("op_trace", g(&self.op_trace)),
+            ("op_other", g(&self.op_other)),
+        ]
+    }
+}
+
+/// Decrements `connections_open` when a connection thread exits — normally
+/// or by panic — so the gauge cannot drift.
+struct ConnGuard(Arc<FrontendStats>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.connections_open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
 
 /// A running server (owns the listener thread).
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    stats: Arc<FrontendStats>,
 }
 
 impl Server {
@@ -37,6 +93,8 @@ impl Server {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let stats = Arc::new(FrontendStats::default());
+        let stats2 = Arc::clone(&stats);
         std::thread::Builder::new()
             .name("unipc-server".into())
             .spawn(move || {
@@ -47,8 +105,13 @@ impl Server {
                     match conn {
                         Ok(stream) => {
                             let svc = service.clone();
+                            let st = Arc::clone(&stats2);
+                            let sp = Arc::clone(&stop2);
+                            st.connections_total.fetch_add(1, Ordering::Relaxed);
+                            st.connections_open.fetch_add(1, Ordering::Relaxed);
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, svc);
+                                let _guard = ConnGuard(Arc::clone(&st));
+                                let _ = handle_conn(stream, svc, st, sp);
                             });
                         }
                         Err(e) => log::warn!("accept error: {e}"),
@@ -57,41 +120,76 @@ impl Server {
             })
             .context("spawn server thread")?;
         log::info!("serving on {local}");
-        Ok(Server { addr: local, stop })
+        Ok(Server { addr: local, stop, stats })
     }
 
-    /// Ask the accept loop to stop (takes effect on the next connection).
+    /// Front-end accounting (connection gauge + per-op counters).
+    pub fn frontend_stats(&self) -> &FrontendStats {
+        &self.stats
+    }
+
+    /// Ask the accept loop to stop, then wait — bounded — for open
+    /// connection threads to finish their in-flight request and exit
+    /// (each connection re-checks the stop flag between requests).
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
         // Nudge the blocking accept with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while self.stats.connections_open.load(Ordering::Relaxed) > 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
     }
 }
 
-fn handle_conn(stream: TcpStream, service: Service) -> Result<()> {
+fn handle_conn(
+    stream: TcpStream,
+    service: Service,
+    stats: Arc<FrontendStats>,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Bound idle reads so a quiet connection notices the stop flag instead
+    // of pinning its thread on a blocking read forever.
+    stream.set_read_timeout(Some(Duration::from_millis(200))).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut stream = stream;
     let mut line = String::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        if stop.load(Ordering::SeqCst) {
+            return Ok(()); // server stopping: finish between requests
+        }
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle poll: re-check the stop flag. `line` keeps any
+                // partial prefix already read, so a slow writer straddling
+                // the timeout loses nothing.
+                continue;
+            }
+            Err(e) => return Err(e.into()),
         }
         let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
+        if !trimmed.is_empty() {
+            let reply = dispatch(trimmed, &service, &stats);
+            stream.write_all(reply.to_string().as_bytes())?;
+            stream.write_all(b"\n")?;
         }
-        let reply = dispatch(trimmed, &service);
-        stream.write_all(reply.to_string().as_bytes())?;
-        stream.write_all(b"\n")?;
+        line.clear();
     }
 }
 
-fn dispatch(line: &str, service: &Service) -> Value {
+fn dispatch(line: &str, service: &Service, stats: &FrontendStats) -> Value {
     let parsed = match json::parse(line) {
         Ok(v) => v,
         Err(e) => {
+            stats.op_other.fetch_add(1, Ordering::Relaxed);
             return Value::obj(vec![
                 ("ok", Value::from(false)),
                 ("kind", Value::from("invalid_request")),
@@ -100,21 +198,53 @@ fn dispatch(line: &str, service: &Service) -> Value {
         }
     };
     match parsed.get("op").and_then(Value::as_str) {
-        Some("ping") => Value::obj(vec![("ok", Value::from(true))]),
-        Some("stats") => service.metrics_json(),
-        Some("sample") => match SampleRequest::from_json(&parsed) {
-            Ok(req) => service.sample_blocking(req).to_json(),
-            Err(e) => Value::obj(vec![
+        Some("ping") => {
+            stats.op_ping.fetch_add(1, Ordering::Relaxed);
+            Value::obj(vec![("ok", Value::from(true))])
+        }
+        Some("stats") => {
+            stats.op_stats.fetch_add(1, Ordering::Relaxed);
+            let mut v = service.metrics_json();
+            if let Value::Obj(m) = &mut v {
+                for (k, val) in stats.fields() {
+                    m.insert(k.to_string(), val);
+                }
+            }
+            v
+        }
+        Some("trace") => {
+            stats.op_trace.fetch_add(1, Ordering::Relaxed);
+            let limit = parsed
+                .get("limit")
+                .and_then(Value::as_usize)
+                .unwrap_or(DEFAULT_TRACE_LIMIT);
+            // `trace_json` already returns `{"traces": [...]}`; stamp the
+            // protocol's `ok` onto it rather than nesting another object.
+            let mut v = service.trace_json(limit);
+            if let Value::Obj(m) = &mut v {
+                m.insert("ok".to_string(), Value::from(true));
+            }
+            v
+        }
+        Some("sample") => {
+            stats.op_sample.fetch_add(1, Ordering::Relaxed);
+            match SampleRequest::from_json(&parsed) {
+                Ok(req) => service.sample_blocking(req).to_json(),
+                Err(e) => Value::obj(vec![
+                    ("ok", Value::from(false)),
+                    ("kind", Value::from("invalid_request")),
+                    ("error", Value::from(format!("{e:#}"))),
+                ]),
+            }
+        }
+        other => {
+            stats.op_other.fetch_add(1, Ordering::Relaxed);
+            Value::obj(vec![
                 ("ok", Value::from(false)),
                 ("kind", Value::from("invalid_request")),
-                ("error", Value::from(format!("{e:#}"))),
-            ]),
-        },
-        other => Value::obj(vec![
-            ("ok", Value::from(false)),
-            ("kind", Value::from("invalid_request")),
-            ("error", Value::from(format!("unknown op {other:?}"))),
-        ]),
+                ("error", Value::from(format!("unknown op {other:?}"))),
+            ])
+        }
     }
 }
 
@@ -169,6 +299,44 @@ mod tests {
         // The connection stays usable.
         assert!(c.ping().unwrap());
         server.stop();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn frontend_counters_and_trace_op() {
+        let (server, svc) = test_server();
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        assert!(c.ping().unwrap());
+        let resp = c
+            .sample(&SampleRequest { n: 1, steps: 5, seed: 1, trace_id: Some(99), ..Default::default() })
+            .unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.trace_id, 99, "trace id must round-trip the wire");
+
+        // The trace op returns that request's span tree.
+        let traces = c.trace(8).unwrap();
+        let arr = traces.as_arr().expect("traces is an array");
+        assert!(
+            arr.iter().any(|t| t.get("trace_id").and_then(Value::as_f64) == Some(99.0)),
+            "span tree for trace 99 missing: {traces:?}"
+        );
+
+        // Stats carry the front-end gauge/counter block.
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.get("connections_open").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("connections_total").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("op_ping").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("op_sample").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("op_trace").unwrap().as_f64(), Some(1.0));
+        assert_eq!(stats.get("op_stats").unwrap().as_f64(), Some(1.0));
+
+        // stop() drains the connection thread: the gauge returns to 0.
+        server.stop();
+        assert_eq!(
+            server.frontend_stats().connections_open.load(Ordering::Relaxed),
+            0,
+            "stop must wait for connection threads to exit"
+        );
         svc.shutdown();
     }
 

@@ -43,8 +43,9 @@ pub mod unipc;
 pub use history::History;
 pub use method::{Method, UniPcCoeffs};
 pub use plan::{
-    plan_key, sample_batch_with_plan, sample_with_plan, BatchWorkspace, CompileStep,
-    PlannedStep, SamplePlan, StepCx, StepOp, StepWorkspace,
+    plan_key, sample_batch_with_plan, sample_batch_with_plan_observed, sample_with_plan,
+    sample_with_plan_observed, BatchWorkspace, CompileStep, PlannedStep, SamplePlan, StepCx,
+    StepObserver, StepOp, StepWorkspace,
 };
 pub use runner::{sample, sample_batch, sample_unplanned, SampleOptions, SampleResult};
 pub use thresholding::DynamicThresholding;

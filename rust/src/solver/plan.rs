@@ -1126,6 +1126,20 @@ impl SamplePlan {
 /// the executor uses to combine history outputs without heap traffic.
 const MAX_COMB: usize = 8;
 
+/// Per-step hook for the plan executors, called once after each planned
+/// step completes (predictor, optional corrector, and any lookahead model
+/// evaluation included). `k` is the step index into `plan.steps`.
+///
+/// The executor stays timing-agnostic: an observer that wants wall-clock
+/// attribution takes its own marks between calls (see
+/// [`crate::trace::StepSpans`], which pairs this hook with a
+/// [`crate::trace::TimedModel`] to split each step into model-eval vs.
+/// solver-kernel time). The hook is behind an `Option` so the unobserved
+/// paths pay one branch per step.
+pub trait StepObserver {
+    fn on_step(&mut self, k: usize);
+}
+
 /// Drive a full run from the plan, mutating `x` in place. Shared by the
 /// solo and batched entry points so their step arithmetic cannot drift.
 fn execute_plan(
@@ -1136,10 +1150,11 @@ fn execute_plan(
     x: &mut Tensor,
     ws: &mut StepWorkspace,
     mut traj: Option<&mut Vec<(f64, Tensor)>>,
+    mut obs: Option<&mut dyn StepObserver>,
 ) -> usize {
     let ev = Evaluator::new(model, sched, plan.prediction, opts.thresholding);
     if plan.singlestep {
-        return execute_singlestep_plan(&ev, plan, x, ws, traj);
+        return execute_singlestep_plan(&ev, plan, x, ws, traj, obs);
     }
     let mut hist = History::new(plan.history_cap);
     hist.push(plan.t0, plan.lambda0, ev.eval(x, plan.t0));
@@ -1163,6 +1178,9 @@ fn execute_plan(
         if let Some(tr) = &mut traj {
             tr.push((sp.t, x.clone()));
         }
+        if let Some(o) = obs.as_deref_mut() {
+            o.on_step(k);
+        }
     }
     ev.nfe()
 }
@@ -1176,6 +1194,7 @@ fn execute_singlestep_plan(
     x: &mut Tensor,
     ws: &mut StepWorkspace,
     mut traj: Option<&mut Vec<(f64, Tensor)>>,
+    mut obs: Option<&mut dyn StepObserver>,
 ) -> usize {
     let mut hist = History::new(plan.history_cap);
     let mut m_s: Option<Tensor> = None;
@@ -1226,6 +1245,9 @@ fn execute_singlestep_plan(
         if let Some(tr) = &mut traj {
             tr.push((sp.t, x.clone()));
         }
+        if let Some(o) = obs.as_deref_mut() {
+            o.on_step(k);
+        }
     }
     ev.nfe()
 }
@@ -1241,6 +1263,19 @@ pub fn sample_with_plan(
     opts: &SampleOptions,
     plan: &SamplePlan,
 ) -> SampleResult {
+    sample_with_plan_observed(model, sched, x_init, opts, plan, None)
+}
+
+/// [`sample_with_plan`] with a per-step [`StepObserver`] hook (tracing's
+/// entry point; `None` is the unobserved fast path).
+pub fn sample_with_plan_observed(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    x_init: &Tensor,
+    opts: &SampleOptions,
+    plan: &SamplePlan,
+    obs: Option<&mut dyn StepObserver>,
+) -> SampleResult {
     debug_assert_eq!(
         plan.key(),
         plan_key(sched, opts),
@@ -1249,7 +1284,7 @@ pub fn sample_with_plan(
     let mut x = x_init.clone();
     let mut ws = StepWorkspace::new(x.shape(), plan.ws_rows);
     let mut traj = opts.capture_trajectory.then(Vec::new);
-    let nfe = execute_plan(model, sched, opts, plan, &mut x, &mut ws, traj.as_mut());
+    let nfe = execute_plan(model, sched, opts, plan, &mut x, &mut ws, traj.as_mut(), obs);
     SampleResult { x, nfe, trajectory: traj }
 }
 
@@ -1290,6 +1325,20 @@ pub fn sample_batch_with_plan(
     plan: &SamplePlan,
     bw: &mut BatchWorkspace,
 ) -> Vec<SampleResult> {
+    sample_batch_with_plan_observed(model, sched, x_inits, opts, plan, bw, None)
+}
+
+/// [`sample_batch_with_plan`] with a per-step [`StepObserver`] hook
+/// (tracing's entry point; `None` is the unobserved fast path).
+pub fn sample_batch_with_plan_observed(
+    model: &dyn Model,
+    sched: &dyn NoiseSchedule,
+    x_inits: &[&Tensor],
+    opts: &SampleOptions,
+    plan: &SamplePlan,
+    bw: &mut BatchWorkspace,
+    obs: Option<&mut dyn StepObserver>,
+) -> Vec<SampleResult> {
     assert!(!x_inits.is_empty(), "sample_batch_with_plan: empty batch");
     assert!(
         !opts.capture_trajectory,
@@ -1316,7 +1365,7 @@ pub fn sample_batch_with_plan(
         at += t.shape()[0];
     }
 
-    let nfe = execute_plan(model, sched, opts, plan, &mut bw.x, &mut bw.ws, None);
+    let nfe = execute_plan(model, sched, opts, plan, &mut bw.x, &mut bw.ws, None, obs);
 
     let mut out = Vec::with_capacity(x_inits.len());
     let mut at = 0;

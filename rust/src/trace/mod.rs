@@ -1,0 +1,686 @@
+//! End-to-end request tracing: span events, bounded per-shard rings, and
+//! span-tree / Chrome `trace_event` exporters.
+//!
+//! Every request admitted by the coordinator is assigned a `trace_id` and
+//! leaves a trail of [`SpanEvent`]s as it moves through the serving
+//! lifecycle. Events are tiny `Copy` records written into preallocated
+//! bounded ring buffers ([`TraceRing`], one per coordinator shard), so
+//! steady-state recording allocates nothing and is cheap enough to leave on
+//! in production (`rust/tests/plan_alloc.rs` proves the zero-allocation
+//! claim; bench row `L3-h` in `BENCH_hot_path.json` bounds the overhead).
+//!
+//! # Span taxonomy
+//!
+//! | stage | emitted | `a` | `b` |
+//! |---|---|---|---|
+//! | [`Stage::Admit`] | request accepted into a shard queue | rows (`n`) | steps |
+//! | [`Stage::Route`] | worker pops the job | owner shard | `0` = home pop, else stealer shard + 1 |
+//! | [`Stage::Queue`] | worker pops the job (dur = queue wait) | — | — |
+//! | [`Stage::Assemble`] | cohort gathered (dur = linger wait) | members | slabs (distinct conditionings) |
+//! | [`Stage::CohortLink`] | per member of a multi-request cohort | member index | member rows |
+//! | [`Stage::ModelEval`] | per solver step (trace level `steps`) | step index | batch rows |
+//! | [`Stage::SolverStep`] | per solver step (trace level `steps`) | step index | batch rows |
+//! | [`Stage::Quarantine`] | member failed inside a surviving cohort | member index | failure code |
+//! | [`Stage::Retry`] | cohort re-run solo after a mid-batch panic | members re-run | — |
+//! | [`Stage::Respond`] | terminal (dur = e2e) | `0` = ok, else failure code + 1 | NFE |
+//!
+//! `ModelEval`/`SolverStep` pairs split each planned step into model-eval
+//! time vs. solver-kernel time — the paper's NFE-level efficiency claim
+//! (UniC raises order with no extra model evaluations) made measurable
+//! per request.
+//!
+//! # Cohort linkage
+//!
+//! A batched run mints a *cohort* id: the leader's `trace_id` for a
+//! batch of one, a fresh id otherwise. Assemble and per-step events carry
+//! the cohort id; each member emits a [`Stage::CohortLink`] event whose
+//! `parent` is the cohort id, so one trace shows a single model evaluation
+//! fanning across N requests.
+//!
+//! # Building span trees
+//!
+//! ```
+//! use unipc::trace::{span_trees_json, SpanEvent, Stage};
+//!
+//! // A solo request: admit -> route/queue -> assemble -> respond, with one
+//! // traced solver step. All events share trace_id 7 (cohort of one).
+//! let events = vec![
+//!     SpanEvent { trace_id: 7, stage: Stage::Admit, start_us: 0, dur_us: 2, a: 4, b: 8, ..Default::default() },
+//!     SpanEvent { trace_id: 7, stage: Stage::Route, start_us: 40, a: 1, shard: 1, ..Default::default() },
+//!     SpanEvent { trace_id: 7, stage: Stage::Queue, start_us: 0, dur_us: 40, shard: 1, ..Default::default() },
+//!     SpanEvent { trace_id: 7, stage: Stage::Assemble, start_us: 40, dur_us: 5, a: 1, b: 1, shard: 1, ..Default::default() },
+//!     SpanEvent { trace_id: 7, stage: Stage::ModelEval, start_us: 45, dur_us: 90, a: 0, b: 4, shard: 1, ..Default::default() },
+//!     SpanEvent { trace_id: 7, stage: Stage::SolverStep, start_us: 135, dur_us: 10, a: 0, b: 4, shard: 1, ..Default::default() },
+//!     SpanEvent { trace_id: 7, stage: Stage::Respond, start_us: 0, dur_us: 150, a: 0, b: 8, shard: 1, ..Default::default() },
+//! ];
+//! let trees = span_trees_json(&events, 16);
+//! let traces = trees.get("traces").unwrap().as_arr().unwrap();
+//! assert_eq!(traces.len(), 1);
+//! let spans = traces[0].get("spans").unwrap().as_arr().unwrap();
+//! assert_eq!(spans[0].get("stage").unwrap().as_str(), Some("admit"));
+//! assert_eq!(spans.last().unwrap().get("stage").unwrap().as_str(), Some("respond"));
+//! ```
+
+use crate::json::Value;
+use crate::solver::{Model, Prediction, StepObserver};
+use crate::tensor::Tensor;
+use std::cell::Cell;
+use std::time::Instant;
+
+/// How much the serving stack records per request.
+///
+/// The split digests (`model_eval_us` / `solver_us`) and response timing
+/// fields are always maintained; the level only gates span *events*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum TraceLevel {
+    /// No span events recorded.
+    Off,
+    /// Lifecycle events only: admit, route, queue, assemble, cohort links,
+    /// quarantine, retry, respond.
+    #[default]
+    Lifecycle,
+    /// Lifecycle plus a `model_eval`/`solver_step` pair per planned step.
+    Steps,
+}
+
+impl TraceLevel {
+    /// Parse the wire/CLI spelling (`off` | `lifecycle` | `steps`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Self::Off),
+            "lifecycle" => Some(Self::Lifecycle),
+            "steps" => Some(Self::Steps),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Lifecycle => "lifecycle",
+            Self::Steps => "steps",
+        }
+    }
+
+    /// Lifecycle events are recorded at this level.
+    pub fn lifecycle(self) -> bool {
+        self >= Self::Lifecycle
+    }
+
+    /// Per-step events are recorded at this level.
+    pub fn steps(self) -> bool {
+        self >= Self::Steps
+    }
+}
+
+/// Lifecycle stage of a [`SpanEvent`]. See the module docs for the
+/// per-stage meaning of the `a`/`b` detail fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Stage {
+    #[default]
+    Admit,
+    Route,
+    Queue,
+    Assemble,
+    /// Links a member request (`trace_id`) to its cohort (`parent`).
+    CohortLink,
+    ModelEval,
+    SolverStep,
+    Quarantine,
+    Retry,
+    Respond,
+}
+
+impl Stage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Admit => "admit",
+            Self::Route => "route",
+            Self::Queue => "queue",
+            Self::Assemble => "assemble",
+            Self::CohortLink => "cohort",
+            Self::ModelEval => "model_eval",
+            Self::SolverStep => "solver_step",
+            Self::Quarantine => "quarantine",
+            Self::Retry => "retry",
+            Self::Respond => "respond",
+        }
+    }
+}
+
+/// One recorded span. `Copy` and fixed-size so rings and scratch buffers
+/// never allocate per event. Timestamps are microseconds relative to the
+/// owning service's epoch (a monotonic `Instant` captured at startup).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct SpanEvent {
+    /// Request (or cohort) this event belongs to.
+    pub trace_id: u64,
+    /// Enclosing id (0 = none). Used by [`Stage::CohortLink`] to point a
+    /// member request at its cohort, and by cohort-scoped events
+    /// (assemble / per-step) to point back at the cohort id.
+    pub parent: u64,
+    pub stage: Stage,
+    /// Shard the event was recorded on.
+    pub shard: u32,
+    /// Microseconds since the service epoch.
+    pub start_us: u64,
+    /// Span duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Stage-specific detail (see module docs).
+    pub a: u64,
+    /// Stage-specific detail (see module docs).
+    pub b: u64,
+}
+
+/// Fixed-capacity overwrite-oldest ring of [`SpanEvent`]s.
+///
+/// The backing store is allocated once at construction
+/// (`vec![SpanEvent::default(); cap]`); [`TraceRing::record`] is a slot
+/// write + cursor bump and never allocates or grows.
+#[derive(Debug)]
+pub struct TraceRing {
+    slots: Vec<SpanEvent>,
+    /// Next write position.
+    head: usize,
+    /// Total events ever recorded (>= slots.len() once the ring wraps).
+    recorded: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> Self {
+        Self { slots: vec![SpanEvent::default(); cap.max(1)], head: 0, recorded: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Events lost to overwrite so far.
+    pub fn dropped(&self) -> u64 {
+        self.recorded.saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Record one event, overwriting the oldest when full. Never allocates.
+    pub fn record(&mut self, ev: SpanEvent) {
+        self.slots[self.head] = ev;
+        self.head = (self.head + 1) % self.slots.len();
+        self.recorded += 1;
+    }
+
+    /// Copy every event from `scratch` into the ring (one call per batch
+    /// run keeps lock hold times short). Never allocates.
+    pub fn record_all(&mut self, scratch: &[SpanEvent]) {
+        for &ev in scratch {
+            self.record(ev);
+        }
+    }
+
+    /// Retained events, oldest first. Allocates (snapshot path only).
+    pub fn snapshot(&self) -> Vec<SpanEvent> {
+        let n = self.recorded.min(self.slots.len() as u64) as usize;
+        let mut out = Vec::with_capacity(n);
+        // Oldest retained event sits at `head` once wrapped, at 0 before.
+        let start = if self.recorded as usize > self.slots.len() { self.head } else { 0 };
+        for i in 0..n {
+            out.push(self.slots[(start + i) % self.slots.len()]);
+        }
+        out
+    }
+}
+
+/// [`Model`] wrapper that accumulates wall-clock time spent inside
+/// `eval` into a [`Cell`], attributing model-eval time separately from
+/// solver-kernel time. Interposed by the coordinator on every run (two
+/// `Instant` reads per evaluation — far below per-step solver work), it
+/// feeds the `model_eval_us`/`solver_us` digests and, through
+/// [`StepSpans`], the per-step span events.
+pub struct TimedModel<'a> {
+    inner: &'a dyn Model,
+    eval_ns: Cell<u64>,
+    evals: Cell<u64>,
+}
+
+impl<'a> TimedModel<'a> {
+    pub fn new(inner: &'a dyn Model) -> Self {
+        Self { inner, eval_ns: Cell::new(0), evals: Cell::new(0) }
+    }
+
+    /// Total wall-clock nanoseconds spent inside `eval` so far.
+    pub fn eval_ns(&self) -> u64 {
+        self.eval_ns.get()
+    }
+
+    /// Number of `eval` calls so far.
+    pub fn evals(&self) -> u64 {
+        self.evals.get()
+    }
+}
+
+impl Model for TimedModel<'_> {
+    fn prediction(&self) -> Prediction {
+        self.inner.prediction()
+    }
+
+    fn eval(&self, x: &Tensor, t: f64) -> Tensor {
+        let t0 = Instant::now();
+        let out = self.inner.eval(x, t);
+        self.eval_ns.set(self.eval_ns.get() + t0.elapsed().as_nanos() as u64);
+        self.evals.set(self.evals.get() + 1);
+        out
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+}
+
+/// Per-step span recorder: a [`StepObserver`] that, combined with a
+/// [`TimedModel`], splits each planned step into a `model_eval` span and a
+/// `solver_step` span pushed into a caller-owned scratch buffer.
+///
+/// The caller must reserve the scratch buffer up front
+/// (`2 * plan_steps + slack`) — `on_step` only pushes, so steady-state
+/// recording stays allocation-free.
+pub struct StepSpans<'a> {
+    out: &'a mut Vec<SpanEvent>,
+    model_ns: &'a Cell<u64>,
+    epoch: Instant,
+    trace_id: u64,
+    parent: u64,
+    shard: u32,
+    rows: u64,
+    /// Wall-clock mark at the start of the current step segment.
+    mark: Instant,
+    /// `model_ns` reading at `mark`.
+    mark_model_ns: u64,
+}
+
+impl<'a> StepSpans<'a> {
+    /// Start observing. `trace_id` is the cohort id the step spans belong
+    /// to, `parent` its enclosing id (0 for none), `rows` the stacked batch
+    /// row count.
+    pub fn new(
+        out: &'a mut Vec<SpanEvent>,
+        timed: &'a TimedModel<'_>,
+        epoch: Instant,
+        trace_id: u64,
+        parent: u64,
+        shard: u32,
+        rows: u64,
+    ) -> Self {
+        let mark_model_ns = timed.eval_ns.get();
+        Self {
+            out,
+            model_ns: &timed.eval_ns,
+            epoch,
+            trace_id,
+            parent,
+            shard,
+            rows,
+            mark: Instant::now(),
+            mark_model_ns,
+        }
+    }
+}
+
+impl StepObserver for StepSpans<'_> {
+    fn on_step(&mut self, k: usize) {
+        let now = Instant::now();
+        let seg_us = now.duration_since(self.mark).as_micros() as u64;
+        let model_ns_now = self.model_ns.get();
+        let model_us = (model_ns_now - self.mark_model_ns) / 1_000;
+        let model_us = model_us.min(seg_us);
+        let start_us =
+            self.mark.checked_duration_since(self.epoch).map_or(0, |d| d.as_micros() as u64);
+        self.out.push(SpanEvent {
+            trace_id: self.trace_id,
+            parent: self.parent,
+            stage: Stage::ModelEval,
+            shard: self.shard,
+            start_us,
+            dur_us: model_us,
+            a: k as u64,
+            b: self.rows,
+        });
+        self.out.push(SpanEvent {
+            trace_id: self.trace_id,
+            parent: self.parent,
+            stage: Stage::SolverStep,
+            shard: self.shard,
+            start_us: start_us + model_us,
+            dur_us: seg_us - model_us,
+            a: k as u64,
+            b: self.rows,
+        });
+        self.mark = now;
+        self.mark_model_ns = model_ns_now;
+    }
+}
+
+fn event_json(ev: &SpanEvent) -> Value {
+    let mut pairs = vec![
+        ("stage", Value::from(ev.stage.as_str())),
+        ("start_us", Value::from(ev.start_us as f64)),
+        ("dur_us", Value::from(ev.dur_us as f64)),
+        ("shard", Value::from(ev.shard as f64)),
+    ];
+    if ev.parent != 0 {
+        pairs.push(("parent", Value::from(ev.parent as f64)));
+    }
+    match ev.stage {
+        Stage::Admit => {
+            pairs.push(("rows", Value::from(ev.a as f64)));
+            pairs.push(("steps", Value::from(ev.b as f64)));
+        }
+        Stage::Route => {
+            pairs.push(("owner_shard", Value::from(ev.a as f64)));
+            pairs.push((
+                "stolen_by",
+                if ev.b == 0 { Value::Null } else { Value::from((ev.b - 1) as f64) },
+            ));
+        }
+        Stage::Queue => {}
+        Stage::Assemble => {
+            pairs.push(("members", Value::from(ev.a as f64)));
+            pairs.push(("slabs", Value::from(ev.b as f64)));
+        }
+        Stage::CohortLink => {
+            pairs.push(("member", Value::from(ev.a as f64)));
+            pairs.push(("rows", Value::from(ev.b as f64)));
+        }
+        Stage::ModelEval | Stage::SolverStep => {
+            pairs.push(("step", Value::from(ev.a as f64)));
+            pairs.push(("rows", Value::from(ev.b as f64)));
+        }
+        Stage::Quarantine => {
+            pairs.push(("member", Value::from(ev.a as f64)));
+            pairs.push(("kind_code", Value::from(ev.b as f64)));
+        }
+        Stage::Retry => {
+            pairs.push(("members", Value::from(ev.a as f64)));
+        }
+        Stage::Respond => {
+            pairs.push(("ok", Value::Bool(ev.a == 0)));
+            if ev.a != 0 {
+                pairs.push(("kind_code", Value::from((ev.a - 1) as f64)));
+            }
+            pairs.push(("nfe", Value::from(ev.b as f64)));
+        }
+    }
+    Value::obj(pairs)
+}
+
+/// Assemble flat span events into per-request span trees.
+///
+/// Roots are trace ids that carry an [`Stage::Admit`] event; the most
+/// recent `limit` roots (by admit time) are returned, oldest first. Each
+/// tree lists the request's own spans sorted by `start_us` and, when the
+/// request rode a multi-member cohort, a `cohort` object embedding the
+/// cohort-scoped spans (assemble, per-step pairs, retry) plus the member
+/// trace ids.
+pub fn span_trees_json(events: &[SpanEvent], limit: usize) -> Value {
+    // Roots, in admit order.
+    let mut roots: Vec<(u64, u64)> = events
+        .iter()
+        .filter(|e| e.stage == Stage::Admit)
+        .map(|e| (e.start_us, e.trace_id))
+        .collect();
+    roots.sort_unstable();
+    let skip = roots.len().saturating_sub(limit);
+    let roots = &roots[skip..];
+
+    let trees: Vec<Value> = roots
+        .iter()
+        .map(|&(_, id)| {
+            let mut own: Vec<&SpanEvent> = events.iter().filter(|e| e.trace_id == id).collect();
+            // Time order, except the terminal respond sorts by its *end*
+            // (it starts back at enqueue time, covering the whole e2e
+            // window) so trees always read admit-first, respond-last.
+            own.sort_by_key(|e| {
+                let at = if e.stage == Stage::Respond { e.start_us + e.dur_us } else { e.start_us };
+                (at, e.stage as usize)
+            });
+            // A CohortLink event points at the enclosing multi-member cohort.
+            let cohort_id = own
+                .iter()
+                .find(|e| e.stage == Stage::CohortLink)
+                .map(|e| e.parent)
+                .filter(|&c| c != id && c != 0);
+            let mut pairs = vec![
+                ("trace_id", Value::from(id as f64)),
+                ("spans", Value::Arr(own.iter().map(|e| event_json(e)).collect())),
+            ];
+            if let Some(cid) = cohort_id {
+                let mut cohort_spans: Vec<&SpanEvent> =
+                    events.iter().filter(|e| e.trace_id == cid).collect();
+                cohort_spans.sort_by_key(|e| (e.start_us, e.stage as usize));
+                let mut members: Vec<f64> = events
+                    .iter()
+                    .filter(|e| e.stage == Stage::CohortLink && e.parent == cid)
+                    .map(|e| e.trace_id as f64)
+                    .collect();
+                members.sort_by(f64::total_cmp);
+                members.dedup();
+                pairs.push((
+                    "cohort",
+                    Value::obj(vec![
+                        ("cohort_id", Value::from(cid as f64)),
+                        ("members", Value::Arr(members.into_iter().map(Value::Num).collect())),
+                        ("spans", Value::Arr(cohort_spans.iter().map(|e| event_json(e)).collect())),
+                    ]),
+                ));
+            }
+            Value::obj(pairs)
+        })
+        .collect();
+    Value::obj(vec![("traces", Value::Arr(trees))])
+}
+
+/// Export flat span events in Chrome `trace_event` format (the JSON Array
+/// Format with metadata), loadable at `chrome://tracing` or
+/// <https://ui.perfetto.dev>. Complete events (`"ph":"X"`) with `ts`/`dur`
+/// in microseconds; `pid` is the shard, `tid` the trace (or cohort) id.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Value {
+    let rows: Vec<Value> = events
+        .iter()
+        .map(|e| {
+            let args = event_json(e);
+            Value::obj(vec![
+                ("name", Value::from(e.stage.as_str())),
+                ("cat", Value::from("serving")),
+                ("ph", Value::from("X")),
+                ("ts", Value::from(e.start_us as f64)),
+                ("dur", Value::from(e.dur_us.max(1) as f64)),
+                ("pid", Value::from(e.shard as f64)),
+                ("tid", Value::from(e.trace_id as f64)),
+                ("args", args),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("traceEvents", Value::Arr(rows)),
+        ("displayTimeUnit", Value::from("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(trace_id: u64, stage: Stage, start_us: u64) -> SpanEvent {
+        SpanEvent { trace_id, stage, start_us, ..Default::default() }
+    }
+
+    #[test]
+    fn trace_level_parse_roundtrip_and_gating() {
+        for lvl in [TraceLevel::Off, TraceLevel::Lifecycle, TraceLevel::Steps] {
+            assert_eq!(TraceLevel::parse(lvl.as_str()), Some(lvl));
+        }
+        assert_eq!(TraceLevel::parse("verbose"), None);
+        assert!(!TraceLevel::Off.lifecycle());
+        assert!(TraceLevel::Lifecycle.lifecycle());
+        assert!(!TraceLevel::Lifecycle.steps());
+        assert!(TraceLevel::Steps.steps());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let mut ring = TraceRing::new(4);
+        assert_eq!(ring.capacity(), 4);
+        for i in 0..6u64 {
+            ring.record(ev(i, Stage::Admit, i));
+        }
+        assert_eq!(ring.recorded(), 6);
+        assert_eq!(ring.dropped(), 2);
+        let snap = ring.snapshot();
+        let ids: Vec<u64> = snap.iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![2, 3, 4, 5], "oldest two overwritten, order preserved");
+    }
+
+    #[test]
+    fn ring_snapshot_before_wrap_is_prefix() {
+        let mut ring = TraceRing::new(8);
+        ring.record_all(&[ev(1, Stage::Admit, 0), ev(1, Stage::Respond, 9)]);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].stage, Stage::Admit);
+        assert_eq!(ring.dropped(), 0);
+    }
+
+    #[test]
+    fn span_trees_group_by_root_and_respect_limit() {
+        let events = vec![
+            ev(1, Stage::Admit, 0),
+            ev(1, Stage::Respond, 50),
+            ev(2, Stage::Admit, 10),
+            ev(2, Stage::Respond, 60),
+            // Orphan (no admit retained): must not become a root.
+            ev(9, Stage::Respond, 70),
+        ];
+        let all = span_trees_json(&events, 16);
+        let traces = all.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].get("trace_id").unwrap().as_f64(), Some(1.0));
+        let last_only = span_trees_json(&events, 1);
+        let traces = last_only.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].get("trace_id").unwrap().as_f64(), Some(2.0), "limit keeps newest");
+    }
+
+    #[test]
+    fn cohort_subtree_embeds_shared_spans_and_members() {
+        let cohort = 100u64;
+        let mut events = Vec::new();
+        for id in [1u64, 2] {
+            events.push(ev(id, Stage::Admit, id));
+            events.push(SpanEvent {
+                trace_id: id,
+                parent: cohort,
+                stage: Stage::CohortLink,
+                a: id - 1,
+                b: 4,
+                start_us: 20,
+                ..Default::default()
+            });
+            events.push(ev(id, Stage::Respond, 90));
+        }
+        events.push(SpanEvent {
+            trace_id: cohort,
+            stage: Stage::Assemble,
+            start_us: 15,
+            dur_us: 5,
+            a: 2,
+            b: 1,
+            ..Default::default()
+        });
+        events.push(SpanEvent {
+            trace_id: cohort,
+            stage: Stage::ModelEval,
+            start_us: 20,
+            dur_us: 30,
+            b: 8,
+            ..Default::default()
+        });
+        let trees = span_trees_json(&events, 16);
+        let traces = trees.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 2, "cohort id itself is not a root");
+        for t in traces {
+            let c = t.get("cohort").expect("member must embed its cohort");
+            assert_eq!(c.get("cohort_id").unwrap().as_f64(), Some(100.0));
+            let members = c.get("members").unwrap().as_arr().unwrap();
+            assert_eq!(members.len(), 2);
+            let spans = c.get("spans").unwrap().as_arr().unwrap();
+            assert_eq!(spans[0].get("stage").unwrap().as_str(), Some("assemble"));
+            assert_eq!(spans[1].get("stage").unwrap().as_str(), Some("model_eval"));
+        }
+    }
+
+    #[test]
+    fn chrome_export_is_valid_trace_event_json() {
+        let events =
+            vec![ev(1, Stage::Admit, 0), ev(1, Stage::Respond, 50), ev(2, Stage::Queue, 5)];
+        let v = chrome_trace_json(&events);
+        let s = v.to_string();
+        let parsed = crate::json::parse(&s).unwrap();
+        let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in rows {
+            assert_eq!(r.get("ph").unwrap().as_str(), Some("X"));
+            assert!(r.get("ts").unwrap().as_f64().is_some());
+            assert!(r.get("dur").unwrap().as_f64().unwrap() >= 1.0);
+            assert!(r.get("args").is_some());
+        }
+    }
+
+    /// Identity "model" that burns a little wall time per eval.
+    fn toy_model() -> impl Model {
+        (Prediction::Noise, 2usize, |x: &Tensor, _t: f64| {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            x.clone()
+        })
+    }
+
+    #[test]
+    fn timed_model_accumulates_eval_time() {
+        let model = toy_model();
+        let timed = TimedModel::new(&model);
+        let x = Tensor::zeros(&[1, timed.dim()]);
+        assert_eq!(timed.evals(), 0);
+        let _ = timed.eval(&x, 0.5);
+        let _ = timed.eval(&x, 0.4);
+        assert_eq!(timed.evals(), 2);
+        assert!(timed.eval_ns() > 0, "two evals must accumulate nonzero wall time");
+        assert_eq!(timed.prediction(), model.prediction());
+    }
+
+    #[test]
+    fn step_spans_emit_a_pair_per_step_with_exclusive_solver_time() {
+        let model = toy_model();
+        let timed = TimedModel::new(&model);
+        let epoch = Instant::now();
+        let mut out = Vec::with_capacity(8);
+        let x = Tensor::zeros(&[1, timed.dim()]);
+        let mut spans = StepSpans::new(&mut out, &timed, epoch, 42, 0, 3, 1);
+        let _ = timed.eval(&x, 0.9);
+        spans.on_step(0);
+        let _ = timed.eval(&x, 0.5);
+        spans.on_step(1);
+        assert_eq!(out.len(), 4);
+        for (i, pair) in out.chunks(2).enumerate() {
+            assert_eq!(pair[0].stage, Stage::ModelEval);
+            assert_eq!(pair[1].stage, Stage::SolverStep);
+            assert_eq!(pair[0].a, i as u64);
+            assert_eq!(pair[0].trace_id, 42);
+            assert_eq!(pair[0].shard, 3);
+            // The pair tiles the step segment: solver starts where model ends.
+            assert_eq!(pair[1].start_us, pair[0].start_us + pair[0].dur_us);
+        }
+        // Steps are contiguous segments: step 1 starts at or after step 0's end.
+        assert!(out[2].start_us >= out[0].start_us + out[0].dur_us + out[1].dur_us);
+    }
+}

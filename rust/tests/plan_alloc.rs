@@ -36,13 +36,17 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
+use std::time::Instant;
+
 use unipc::numerics::vandermonde::BFunction;
 use unipc::rng::Rng;
 use unipc::sched::{NoiseSchedule, VpLinear};
 use unipc::solver::{
-    History, Method, Prediction, SampleOptions, SamplePlan, StepWorkspace, UniPcCoeffs,
+    History, Method, Prediction, SampleOptions, SamplePlan, StepObserver, StepWorkspace,
+    UniPcCoeffs,
 };
 use unipc::tensor::Tensor;
+use unipc::trace::{SpanEvent, Stage, StepSpans, TimedModel, TraceRing};
 
 #[test]
 fn steady_state_unipc_step_is_allocation_free() {
@@ -193,4 +197,79 @@ fn pooled_workspace_and_batch_assembly_are_allocation_free_after_warmup() {
     ARMED.with(|a| a.set(false));
     let n = ALLOCS.with(|c| c.get());
     assert_eq!(n, 0, "pooled workspace reacquisition allocated {n} times");
+}
+
+/// The tracing subsystem's zero-allocation claim: once a worker's span
+/// scratch has warmed to the per-batch reservation bound and the shard
+/// ring exists (preallocated at construction), recording a full batch's
+/// worth of spans — assemble, cohort links, per-step model/solver pairs
+/// via [`StepSpans`], terminal responds, and the single
+/// [`TraceRing::record_all`] flush — never touches the heap, even as the
+/// ring wraps (overwrite, not growth).
+#[test]
+fn steady_state_trace_recording_is_allocation_free() {
+    let model = (Prediction::Noise, 4usize, |x: &Tensor, _t: f64| x.clone());
+    let timed = TimedModel::new(&model);
+    let epoch = Instant::now();
+    let mut ring = TraceRing::new(256);
+    let mut spans: Vec<SpanEvent> = Vec::new();
+    let steps = 8usize;
+    let members = 4usize;
+
+    // One batch's worth of recording, shaped exactly like the worker's
+    // execute_batch at trace=steps (same reservation bound, same event
+    // mix, one ring flush at the end).
+    let run = |spans: &mut Vec<SpanEvent>, ring: &mut TraceRing| {
+        spans.clear();
+        spans.reserve(2 * steps + 3 * members + 2);
+        spans.push(SpanEvent {
+            trace_id: 1,
+            stage: Stage::Assemble,
+            a: members as u64,
+            b: 1,
+            ..Default::default()
+        });
+        for i in 0..members {
+            spans.push(SpanEvent {
+                trace_id: 2 + i as u64,
+                parent: 1,
+                stage: Stage::CohortLink,
+                a: i as u64,
+                b: 1,
+                ..Default::default()
+            });
+        }
+        {
+            let mut obs = StepSpans::new(&mut *spans, &timed, epoch, 1, 0, 0, members as u64);
+            for k in 0..steps {
+                obs.on_step(k);
+            }
+        }
+        for i in 0..members {
+            spans.push(SpanEvent {
+                trace_id: 2 + i as u64,
+                stage: Stage::Respond,
+                b: steps as u64,
+                ..Default::default()
+            });
+        }
+        ring.record_all(spans);
+    };
+
+    // Warm batch: grows the scratch to the steady-state capacity, exactly
+    // as a worker's first batch does.
+    run(&mut spans, &mut ring);
+
+    ALLOCS.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    for _ in 0..64 {
+        run(&mut spans, &mut ring);
+    }
+    ARMED.with(|a| a.set(false));
+    let n = ALLOCS.with(|c| c.get());
+    assert_eq!(n, 0, "steady-state span recording allocated {n} times");
+    assert!(
+        ring.dropped() > 0,
+        "65 batches x 25 events must wrap a 256-slot ring — overwrite, never grow"
+    );
 }

@@ -1,0 +1,332 @@
+//! End-to-end span-tree suite for the request tracing subsystem (PR 9).
+//!
+//! The coordinator mints a `trace_id` at admission and records a span
+//! event at every lifecycle stage into per-shard rings. These tests pin
+//! the contracts that make the trace trustworthy as an audit log:
+//!
+//! * **exactly one complete tree per admitted request** — under ~10%
+//!   injected faults, every request's trace carries exactly one `admit`,
+//!   exactly one `queue` (popped or absorbed, never both), and exactly one
+//!   terminal `respond` whose ok/failure code matches the typed response
+//!   the client saw;
+//! * **steals are attributed to the victim shard** — every `route` event
+//!   with a steal origin was recorded on the shard that owned the queue,
+//!   names a different stealer home, and the count equals the `steals`
+//!   metric exactly;
+//! * **quarantined members carry a `quarantine` span** — a NaN-targeted
+//!   member of a surviving cohort gets the span; its unharmed cohort mates
+//!   do not;
+//! * **trace ids round-trip the wire** — a client-chosen id comes back on
+//!   the response and keys the span tree served by the `trace` op.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::config::ServerConfig;
+use unipc::coordinator::{
+    silence_injected_panics, ChaosConfig, FailureKind, ModelBackend, SampleRequest, Service,
+};
+use unipc::json::Value;
+use unipc::server::{Client, Server};
+use unipc::trace::{SpanEvent, Stage};
+
+fn analytic_backend() -> ModelBackend {
+    let spec = DatasetSpec::Cifar10Like;
+    let gm = Arc::new(dataset(spec));
+    let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+    ModelBackend::Analytic { gm, class_components: Arc::new(classes) }
+}
+
+/// Count events of `stage` belonging to `id`.
+fn count(events: &[SpanEvent], id: u64, stage: Stage) -> usize {
+    events.iter().filter(|e| e.trace_id == id && e.stage == stage).count()
+}
+
+/// Every admitted request yields exactly one complete span tree even when
+/// ~10% of model evals panic or NaN: one admit, one queue (worker pop or
+/// batch absorption), one terminal respond agreeing with the typed
+/// response. Retries and quarantines add spans; they never duplicate or
+/// drop the terminal.
+#[test]
+fn every_admitted_request_yields_one_complete_tree_under_chaos() {
+    silence_injected_panics();
+    let svc = Service::start(
+        ServerConfig {
+            workers: 4,
+            shards: 2,
+            queue_cap: 4096,
+            trace_buf: 1 << 16, // nothing may fall off the ring mid-test
+            ..Default::default()
+        },
+        ModelBackend::chaos(
+            analytic_backend(),
+            ChaosConfig {
+                seed: 23,
+                panic_rate: 0.05,
+                nan_rate: 0.05,
+                ..ChaosConfig::default()
+            },
+        ),
+    );
+
+    let threads = 4usize;
+    let per_thread = 16usize;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                (0..per_thread)
+                    .map(|i| {
+                        let k = (t * per_thread + i) as u64;
+                        let r = svc.sample_blocking(SampleRequest {
+                            n: 1,
+                            steps: 5 + (k % 4) as usize,
+                            class: Some((k % 8) as usize),
+                            seed: k,
+                            return_samples: false,
+                            ..Default::default()
+                        });
+                        (r.trace_id, r.ok, r.kind)
+                    })
+                    .collect::<Vec<_>>()
+            })
+        })
+        .collect();
+    let mut outcomes = Vec::new();
+    for h in handles {
+        outcomes.extend(h.join().expect("submitter thread panicked"));
+    }
+    let total = threads * per_thread;
+    assert_eq!(outcomes.len(), total);
+
+    // Minted ids are nonzero and unique per request.
+    let ids: std::collections::BTreeSet<u64> = outcomes.iter().map(|&(id, _, _)| id).collect();
+    assert!(!ids.contains(&0), "0 is the unset sentinel, never a minted id");
+    assert_eq!(ids.len(), total, "every request gets its own trace id");
+
+    // Nothing was dropped, so the ring is a complete record.
+    let m = svc.metrics_json();
+    assert_eq!(m.get("trace_dropped").and_then(|v| v.as_f64()), Some(0.0));
+
+    let events = svc.trace_events();
+    for &(id, ok, kind) in &outcomes {
+        assert_eq!(count(&events, id, Stage::Admit), 1, "trace {id}: one admit");
+        assert_eq!(
+            count(&events, id, Stage::Queue),
+            1,
+            "trace {id}: exactly one queue span (popped xor absorbed)"
+        );
+        let respond: Vec<&SpanEvent> = events
+            .iter()
+            .filter(|e| e.trace_id == id && e.stage == Stage::Respond)
+            .collect();
+        assert_eq!(respond.len(), 1, "trace {id}: exactly one terminal respond");
+        let want = match kind {
+            None => 0,
+            Some(k) => k.index() as u64 + 1,
+        };
+        assert_eq!(
+            respond[0].a, want,
+            "trace {id}: respond outcome must match the typed response (ok={ok})"
+        );
+    }
+    svc.shutdown();
+}
+
+/// Work stealing leaves an audit trail on the *victim* shard: every route
+/// event with a steal origin (`b != 0`) was recorded on the shard it names
+/// as owner, points at a different stealer home, and the event count
+/// equals the `steals` counter exactly.
+#[test]
+fn steals_are_attributed_to_the_victim_shard() {
+    let svc = Service::start(
+        ServerConfig {
+            workers: 4,
+            shards: 4,
+            queue_cap: 4096,
+            // No batch absorption: every job is a leader pop, so the hot
+            // shard can only drain through pops — most of them steals.
+            max_batch: 1,
+            trace_buf: 1 << 16,
+            ..Default::default()
+        },
+        analytic_backend(),
+    );
+    // One batch key: everything routes to a single hot shard, so the three
+    // workers homed elsewhere can only make progress by stealing.
+    let rxs: Vec<_> = (0..96u64)
+        .map(|i| {
+            svc.submit(SampleRequest {
+                n: 1,
+                steps: 5,
+                seed: i,
+                return_samples: false,
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv_timeout(Duration::from_secs(120)).expect("response").ok);
+    }
+
+    let m = svc.metrics_json();
+    let steals = m.get("steals").and_then(|v| v.as_f64()).unwrap();
+    assert!(steals > 0.0, "a single hot key over 4 shards must force steals");
+    assert_eq!(m.get("trace_dropped").and_then(|v| v.as_f64()), Some(0.0));
+
+    let events = svc.trace_events();
+    let stolen: Vec<&SpanEvent> = events
+        .iter()
+        .filter(|e| e.stage == Stage::Route && e.b != 0)
+        .collect();
+    assert_eq!(
+        stolen.len() as f64,
+        steals,
+        "one steal-marked route event per counted steal"
+    );
+    for e in stolen {
+        assert_eq!(
+            e.shard as u64, e.a,
+            "steal must be recorded on the victim (owner) shard"
+        );
+        assert_ne!(
+            e.b - 1,
+            e.a,
+            "stealer home must differ from the victim shard"
+        );
+    }
+    svc.shutdown();
+}
+
+/// A NaN-targeted member of a surviving cohort carries a `quarantine` span
+/// (with the non-finite failure code) while its unharmed cohort mates
+/// respond ok without one.
+#[test]
+fn quarantined_members_carry_a_quarantine_span() {
+    silence_injected_panics();
+    let svc = Service::start(
+        ServerConfig {
+            workers: 1,
+            queue_cap: 256,
+            batch_linger_us: 50_000,
+            trace_buf: 1 << 16,
+            ..Default::default()
+        },
+        ModelBackend::chaos(
+            analytic_backend(),
+            ChaosConfig {
+                seed: 11,
+                nan_rate: 1.0,
+                target_class: Some(4),
+                ..ChaosConfig::default()
+            },
+        ),
+    );
+    // Same plan key: the doomed class-4 member and three healthy members
+    // linger into one cohort.
+    let classes = [4usize, 0, 1, 2];
+    let rxs: Vec<_> = classes
+        .iter()
+        .map(|&c| {
+            svc.submit(SampleRequest {
+                n: 1,
+                steps: 5,
+                class: Some(c),
+                seed: c as u64,
+                return_samples: false,
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    let mut doomed_id = 0u64;
+    let mut healthy_ids = Vec::new();
+    for (&c, rx) in classes.iter().zip(rxs) {
+        let r = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        if c == 4 {
+            assert!(!r.ok, "targeted member must be quarantined");
+            assert_eq!(r.kind, Some(FailureKind::NonFiniteOutput), "{:?}", r.error);
+            doomed_id = r.trace_id;
+        } else {
+            assert!(r.ok, "untargeted member must survive: {:?}", r.error);
+            healthy_ids.push(r.trace_id);
+        }
+    }
+    let events = svc.trace_events();
+    let quarantines: Vec<&SpanEvent> = events
+        .iter()
+        .filter(|e| e.trace_id == doomed_id && e.stage == Stage::Quarantine)
+        .collect();
+    assert_eq!(quarantines.len(), 1, "doomed member must carry one quarantine span");
+    assert_eq!(
+        quarantines[0].b,
+        FailureKind::NonFiniteOutput.index() as u64,
+        "quarantine span carries the failure code"
+    );
+    for id in healthy_ids {
+        assert_eq!(
+            count(&events, id, Stage::Quarantine),
+            0,
+            "healthy cohort mates never carry a quarantine span"
+        );
+        assert_eq!(count(&events, id, Stage::Respond), 1);
+    }
+    svc.shutdown();
+}
+
+/// Trace ids round-trip the wire: the client's id comes back on the
+/// response and keys the span tree served by the `trace` op; requests
+/// without one get a server-minted id. Trees read admit-first,
+/// respond-last.
+#[test]
+fn trace_ids_round_trip_the_wire() {
+    let svc = Service::start(
+        ServerConfig { workers: 2, queue_cap: 256, ..Default::default() },
+        analytic_backend(),
+    );
+    let server = Server::spawn(svc.clone(), "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(&server.addr.to_string()).unwrap();
+
+    let chosen = c
+        .sample(&SampleRequest {
+            n: 1,
+            steps: 5,
+            trace_id: Some(777),
+            return_samples: false,
+            ..Default::default()
+        })
+        .unwrap();
+    assert!(chosen.ok, "{:?}", chosen.error);
+    assert_eq!(chosen.trace_id, 777, "client-chosen id must round-trip");
+
+    let minted = c
+        .sample(&SampleRequest { n: 1, steps: 5, seed: 9, return_samples: false, ..Default::default() })
+        .unwrap();
+    assert!(minted.ok, "{:?}", minted.error);
+    assert_ne!(minted.trace_id, 0, "server must mint an id when the client sends none");
+    assert_ne!(minted.trace_id, 777);
+
+    // The trace op serves both trees; spans are ordered admit -> respond.
+    let traces = c.trace(16).unwrap();
+    let arr = traces.as_arr().expect("traces is an array");
+    let mut by_id: BTreeMap<u64, &Value> = BTreeMap::new();
+    for t in arr {
+        let id = t.get("trace_id").and_then(|v| v.as_f64()).expect("tree id") as u64;
+        by_id.insert(id, t);
+    }
+    for id in [777, minted.trace_id] {
+        let tree = by_id.get(&id).unwrap_or_else(|| panic!("tree {id} missing: {traces:?}"));
+        let spans = tree.get("spans").and_then(|v| v.as_arr()).expect("spans");
+        assert!(spans.len() >= 4, "admit/route/queue/respond at minimum: {spans:?}");
+        assert_eq!(spans[0].get("stage").and_then(|v| v.as_str()), Some("admit"));
+        assert_eq!(
+            spans.last().unwrap().get("stage").and_then(|v| v.as_str()),
+            Some("respond")
+        );
+    }
+    server.stop();
+    svc.shutdown();
+}
