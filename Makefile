@@ -6,7 +6,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: build test test-full stress docs check perf trace-demo
+.PHONY: build test test-full stress docs check perf trace-demo slo-demo
 
 build:
 	$(CARGO) build --release --manifest-path $(MANIFEST)
@@ -27,7 +27,10 @@ test:
 # independent outputs, exact metrics aggregation, the collapsed-vs-split
 # batch-key ablation), and the span-tree tracing suite (one complete
 # admit-to-respond tree per request under chaos, steal attribution,
-# quarantine spans, wire round-trip of trace ids). All suites are sized to
+# quarantine spans, wire round-trip of trace ids), and the telemetry-plane
+# suite (windowed rates vs deterministic replay, Prometheus round-trip,
+# exactly-once-or-counted push delivery under chaos, SLO burn-rate
+# breaches, corrector-delta health trends). All suites are sized to
 # also pass inside plain `make test` (debug) so the tier-1 gate exercises
 # them; this target re-runs just these optimized, which is the fast path
 # when iterating on solver numerics or the serving layer.
@@ -35,7 +38,7 @@ test-full:
 	$(CARGO) test --release -q --manifest-path $(MANIFEST) \
 		--test solver_conformance --test solver_convergence \
 		--test batch_equiv --test fault_injection --test shard_serving \
-		--test trace_spans
+		--test trace_spans --test telemetry
 
 # Submitter-storm stress run: the shard/chaos concurrency suites in
 # release mode with elevated thread and request counts (UNIPC_STRESS=1).
@@ -75,3 +78,11 @@ perf: build
 # https://ui.perfetto.dev to see per-request span trees.
 trace-demo: build
 	cd rust && $(CARGO) run --release --quiet -- trace-demo --out TRACE_demo.json
+
+# End-to-end SLO probe: configures a worker_panic burn-rate objective,
+# injects eval-panic chaos that burns through its budget, and verifies —
+# via a live push-channel subscription — that exactly the expected
+# slo_breach events fire. Exits nonzero when the telemetry plane fails to
+# observe the breach, so CI can gate on it.
+slo-demo: build
+	cd rust && $(CARGO) run --release --quiet -- slo-demo

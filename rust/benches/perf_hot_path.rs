@@ -18,6 +18,10 @@
 //!         run bare vs. instrumented exactly as the worker runs it at
 //!         trace=steps (TimedModel wrap, per-step span pairs into a
 //!         preallocated scratch vec, lifecycle events, one ring flush)
+//!   L3-i  full telemetry plane on the batched hot path: L3-h's traced run
+//!         plus per-step numerical health (HealthSpans), windowed
+//!         time-series metrics records, and a no-subscriber EventHub
+//!         publish — the worker's steady state with every PR-10 signal on
 //!   RT-a  PJRT ε call latency vs batch size (batching amortization)
 //!   RT-b  fused correct artifact vs eval + host update (round-trip saving)
 //!
@@ -360,6 +364,107 @@ fn main() {
             "L3-h   tracing overhead (steps vs off)",
             100.0 * (on.as_secs_f64() / off.as_secs_f64() - 1.0)
         );
+
+        // L3-i: the full telemetry plane on the same cohort — everything
+        // the L3-h traced row does, plus the PR-10 signals the worker adds
+        // in steady state: HealthSpans accumulating the per-step corrector
+        // delta + finiteness, a Metrics record set (windowed slot updates
+        // at a fixed now_s, batch/health/completion records), and an
+        // EventHub publish with no subscriber (one relaxed atomic load).
+        // The tracked invariant matches L3-h: under ~2% over the bare run.
+        use unipc::coordinator::Metrics;
+        use unipc::telemetry::{EventHub, HealthAccum, HealthSpans};
+        let mut metrics = Metrics::default();
+        let hub = EventHub::new();
+        let mut health = HealthAccum::default();
+        let mut iter = 0u64;
+        let full = bench(
+            &mut results,
+            "L3-i batched b=8 UniPC-3 x8 telemetry=full (gmm)",
+            500,
+            || {
+                // Advance one second per iteration so slot recycling (the
+                // steady-state path, not first-touch zeroing) is measured.
+                iter += 1;
+                let now_s = iter;
+                spans.clear();
+                spans.reserve(2 * plan.len() + 3 * members + 2);
+                spans.push(SpanEvent {
+                    trace_id: 1,
+                    stage: Stage::Assemble,
+                    a: members as u64,
+                    b: 1,
+                    ..Default::default()
+                });
+                for i in 0..members {
+                    spans.push(SpanEvent {
+                        trace_id: 2 + i as u64,
+                        parent: 1,
+                        stage: Stage::CohortLink,
+                        a: i as u64,
+                        b: 1,
+                        ..Default::default()
+                    });
+                }
+                let timed = TimedModel::new(&gmm_model);
+                health.reset();
+                {
+                    let mut obs = HealthSpans {
+                        spans: Some(StepSpans::new(
+                            &mut spans,
+                            &timed,
+                            epoch,
+                            1,
+                            0,
+                            0,
+                            members as u64,
+                        )),
+                        accum: &mut health,
+                    };
+                    black_box(sample_batch_with_plan_observed(
+                        &timed,
+                        &sched,
+                        &refs,
+                        &opts,
+                        &plan,
+                        &mut bw,
+                        Some(&mut obs),
+                    ));
+                }
+                for i in 0..members {
+                    spans.push(SpanEvent {
+                        trace_id: 2 + i as u64,
+                        stage: Stage::Respond,
+                        b: 8,
+                        ..Default::default()
+                    });
+                }
+                metrics.record_batch(now_s, members, 1, members as u64);
+                metrics.record_health(health.mean_delta(), health.first_nonfinite);
+                for i in 0..members {
+                    metrics.record_completion(
+                        now_s,
+                        1,
+                        8,
+                        Duration::from_micros(50),
+                        Duration::from_micros(400),
+                        Duration::from_micros(300),
+                        2 + i as u64,
+                    );
+                }
+                ring.record_all(&spans);
+                hub.publish_spans(&spans);
+                black_box(hub.dropped());
+            },
+        );
+        println!(
+            "{:<48} {:>10.2}%",
+            "L3-i   telemetry overhead (full vs bare)",
+            100.0 * (full.as_secs_f64() / off.as_secs_f64() - 1.0)
+        );
+        // Paranoia: the no-subscriber publish really took the fast path.
+        assert_eq!(hub.dropped(), 0, "no subscriber, nothing to drop");
+        assert!(metrics.completed > 0, "telemetry rows must have recorded");
     }
 
     // L3-f: the plan compiler generalized to the whole zoo — naive

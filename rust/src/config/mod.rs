@@ -4,6 +4,7 @@
 use crate::cli::Args;
 use crate::json::{self, Value};
 use crate::sched::TimeSpacing;
+use crate::telemetry::SloSpec;
 use crate::trace::TraceLevel;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -71,6 +72,16 @@ pub struct ServerConfig {
     /// Span-event ring capacity **per shard** (events, preallocated;
     /// oldest overwritten).
     pub trace_buf: usize,
+    /// SLO burn-rate objectives, e.g. `deadline_exceeded<0.1%/5m` (JSON
+    /// `"slos"`: array of spec strings; CLI `--slo a,b,c`). Each declares a
+    /// failure-rate budget over a trailing window; the service evaluates
+    /// them against the windowed metrics rings and emits at most one
+    /// `slo_breach` event per objective per window.
+    pub slos: Vec<SloSpec>,
+    /// Per-subscriber event-queue capacity for `{"op":"subscribe"}`
+    /// streams (events, preallocated; overflow is counted in
+    /// `sub_dropped`, never blocking workers).
+    pub sub_buf: usize,
 }
 
 impl Default for ServerConfig {
@@ -95,6 +106,8 @@ impl Default for ServerConfig {
             t_end: 1e-3,
             trace: TraceLevel::Lifecycle,
             trace_buf: 4096,
+            slos: Vec::new(),
+            sub_buf: 1024,
         }
     }
 }
@@ -148,6 +161,20 @@ impl ServerConfig {
                         .ok_or_else(|| anyhow::anyhow!("unknown trace level '{s}'"))?;
                 }
                 "trace_buf" => c.trace_buf = req_usize(val, k)?,
+                "slos" => {
+                    let arr = match val {
+                        Value::Arr(a) => a,
+                        _ => bail!("'slos' must be an array of spec strings"),
+                    };
+                    c.slos = arr
+                        .iter()
+                        .map(|s| {
+                            let s = req_str(s, k)?;
+                            SloSpec::parse(&s).map_err(anyhow::Error::msg)
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                "sub_buf" => c.sub_buf = req_usize(val, k)?,
                 other => bail!("unknown config key '{other}'"),
             }
         }
@@ -190,6 +217,14 @@ impl ServerConfig {
         }
         self.trace_buf =
             args.get_usize("trace-buf", self.trace_buf).map_err(anyhow::Error::msg)?;
+        if let Some(specs) = args.get("slo") {
+            self.slos = specs
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| SloSpec::parse(s.trim()).map_err(anyhow::Error::msg))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        self.sub_buf = args.get_usize("sub-buf", self.sub_buf).map_err(anyhow::Error::msg)?;
         self.validate()?;
         Ok(self)
     }
@@ -217,6 +252,9 @@ impl ServerConfig {
         }
         if self.trace_buf == 0 {
             bail!("trace_buf must be ≥ 1");
+        }
+        if self.sub_buf == 0 {
+            bail!("sub_buf must be ≥ 1");
         }
         Ok(())
     }
@@ -305,6 +343,42 @@ mod tests {
             crate::cli::Args::parse(&["--trace".to_string(), "off".to_string()]).unwrap();
         let c = ServerConfig::default().apply_args(&args).unwrap();
         assert_eq!(c.trace, TraceLevel::Off);
+    }
+
+    #[test]
+    fn slos_and_sub_buf_from_json_and_cli() {
+        let c = ServerConfig::default();
+        assert!(c.slos.is_empty());
+        assert_eq!(c.sub_buf, 1024);
+
+        let v = json::parse(
+            r#"{"slos": ["deadline_exceeded<0.1%/5m", "queue_full<1%/60s"], "sub_buf": 64}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.slos.len(), 2);
+        assert_eq!(c.slos[0].to_string(), "deadline_exceeded<0.1%/300s");
+        assert_eq!(c.slos[1].window_s, 60);
+        assert_eq!(c.sub_buf, 64);
+
+        for bad in
+            [r#"{"slos": ["wat<1%/5m"]}"#, r#"{"slos": "x"}"#, r#"{"sub_buf": 0}"#]
+        {
+            let v = json::parse(bad).unwrap();
+            assert!(ServerConfig::from_json(&v).is_err(), "{bad}");
+        }
+
+        let args = crate::cli::Args::parse(&[
+            "--slo".to_string(),
+            "worker_panic<0.5%/1m, non_finite_output<2%/30s".to_string(),
+            "--sub-buf".to_string(),
+            "16".to_string(),
+        ])
+        .unwrap();
+        let c = ServerConfig::default().apply_args(&args).unwrap();
+        assert_eq!(c.slos.len(), 2);
+        assert_eq!(c.slos[1].window_s, 30);
+        assert_eq!(c.sub_buf, 16);
     }
 
     #[test]

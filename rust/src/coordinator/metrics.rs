@@ -11,6 +11,7 @@
 use super::request::FailureKind;
 use crate::json::Value;
 use crate::stats::LatencyDigest;
+use crate::telemetry::{PromWriter, WindowStore};
 use std::time::Duration;
 
 /// How many slowest-e2e exemplars each store retains (and the merged
@@ -144,11 +145,29 @@ pub struct Metrics {
     /// Slowest-K end-to-end exemplars with their stage splits and trace
     /// ids.
     pub slowest: ExemplarStore,
+    /// Windowed time-series rings (60×1s + 60×1m) fed by the same record
+    /// calls that bump the cumulative counters above; `now_s` is whole
+    /// seconds on the service clock, passed explicitly so deterministic
+    /// replays drive synthetic time.
+    pub windows: WindowStore,
+    /// Runs that reported solver numerical health (trace=steps batches).
+    pub health_runs: u64,
+    /// Histogram of per-run **mean** predictor→corrector relative delta
+    /// norms ‖x̃ᶜ−x̃ᵖ‖/‖x̃ᶜ‖, in power-of-ten buckets: ≤1e-6, ≤1e-5, …,
+    /// ≤1e-1, ≤1, >1. A zero-extra-NFE local error signal (UniC reuses the
+    /// step's model evaluation, §3.2).
+    pub corrector_delta_hist: [u64; 8],
+    /// Histogram over the FIRST step index whose state went non-finite
+    /// (provenance, not just occurrence): buckets 0, 1, 2, 3–4, 5–8, 9–16,
+    /// 17–32, >32.
+    pub nonfinite_first_step_hist: [u64; 8],
 }
 
 impl Metrics {
+    #[allow(clippy::too_many_arguments)]
     pub fn record_completion(
         &mut self,
+        now_s: u64,
         n_samples: usize,
         nfe: usize,
         queue: Duration,
@@ -156,6 +175,12 @@ impl Metrics {
         model_eval: Duration,
         trace_id: u64,
     ) {
+        self.windows.record_completion(
+            now_s,
+            n_samples,
+            nfe,
+            (queue + compute).as_micros() as u64,
+        );
         self.completed += 1;
         self.samples_out += n_samples as u64;
         self.nfe_total += nfe as u64;
@@ -177,10 +202,51 @@ impl Metrics {
     }
 
     /// Count one typed failure: the `failed` total plus the per-kind
-    /// counter.
-    pub fn record_failure(&mut self, kind: FailureKind) {
+    /// counter, in both the cumulative and windowed stores.
+    pub fn record_failure(&mut self, now_s: u64, kind: FailureKind) {
+        self.windows.record_failure(now_s, kind);
         self.failed += 1;
         self.failures_by_kind[kind.index()] += 1;
+    }
+
+    /// Count one cross-shard steal of a job this shard owned.
+    pub fn record_steal(&mut self, now_s: u64) {
+        self.windows.record_steal(now_s);
+        self.steals += 1;
+    }
+
+    /// Record one run's solver numerical health (from the serving-layer
+    /// health accumulator): the per-run mean corrector delta, and the first
+    /// non-finite step index if the state went bad.
+    pub fn record_health(&mut self, mean_delta: Option<f64>, first_nonfinite: Option<u32>) {
+        self.health_runs += 1;
+        if let Some(d) = mean_delta {
+            self.corrector_delta_hist[Self::delta_bucket(d)] += 1;
+        }
+        if let Some(k) = first_nonfinite {
+            self.nonfinite_first_step_hist[Self::first_step_bucket(k)] += 1;
+        }
+    }
+
+    /// Bucket index for [`Metrics::corrector_delta_hist`] (power-of-ten
+    /// upper bounds 1e-6 … 1e-1, 1, +Inf).
+    pub fn delta_bucket(d: f64) -> usize {
+        const LE: [f64; 7] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0];
+        LE.iter().position(|&le| d <= le).unwrap_or(LE.len())
+    }
+
+    /// Bucket index for [`Metrics::nonfinite_first_step_hist`].
+    pub fn first_step_bucket(step: u32) -> usize {
+        match step {
+            0 => 0,
+            1 => 1,
+            2 => 2,
+            3..=4 => 3,
+            5..=8 => 4,
+            9..=16 => 5,
+            17..=32 => 6,
+            _ => 7,
+        }
     }
 
     /// Record one plan-executed run that served `members` requests spanning
@@ -188,9 +254,10 @@ impl Metrics {
     /// count), `reuses` of whose workspace acquisitions came from pooled
     /// capacity (0 or 1 for a single run; passed as a delta so callers can
     /// batch).
-    pub fn record_batch(&mut self, members: usize, distinct_conds: usize, reuses: u64) {
+    pub fn record_batch(&mut self, now_s: u64, members: usize, distinct_conds: usize, reuses: u64) {
         debug_assert!(members >= 1);
         debug_assert!(distinct_conds >= 1 && distinct_conds <= members);
+        self.windows.record_batch(now_s, members);
         self.batch_size_hist[members.min(8) - 1] += 1;
         self.cond_distinct_hist[distinct_conds.min(8) - 1] += 1;
         if members >= 2 {
@@ -203,7 +270,8 @@ impl Metrics {
     }
 
     /// Record the queue depth observed right after an enqueue.
-    pub fn record_depth(&mut self, depth: usize) {
+    pub fn record_depth(&mut self, now_s: u64, depth: usize) {
+        self.windows.record_depth(now_s, depth);
         self.shard_depth_hist[Self::depth_bucket(depth)] += 1;
     }
 
@@ -258,12 +326,42 @@ impl Metrics {
         for (a, b) in self.failures_by_kind.iter_mut().zip(&other.failures_by_kind) {
             *a += *b;
         }
+        self.health_runs += other.health_runs;
+        for (a, b) in self.corrector_delta_hist.iter_mut().zip(&other.corrector_delta_hist) {
+            *a += *b;
+        }
+        for (a, b) in
+            self.nonfinite_first_step_hist.iter_mut().zip(&other.nonfinite_first_step_hist)
+        {
+            *a += *b;
+        }
         self.queue.merge(&other.queue);
         self.compute.merge(&other.compute);
         self.e2e.merge(&other.e2e);
         self.model_eval.merge(&other.model_eval);
         self.solver.merge(&other.solver);
         self.slowest.merge(&other.slowest);
+        self.windows.merge(&other.windows);
+    }
+
+    /// Canonical full-state dump for the merge property tests: every
+    /// counter, histogram, windowed slot, exemplar, and raw digest sample
+    /// in a representation independent of recording/merge order.
+    #[doc(hidden)]
+    pub fn fingerprint(&mut self) -> String {
+        use std::fmt::Write as _;
+        let mut out = self.snapshot_json().to_string();
+        for (name, d) in [
+            ("queue", &mut self.queue),
+            ("compute", &mut self.compute),
+            ("e2e", &mut self.e2e),
+            ("model_eval", &mut self.model_eval),
+            ("solver", &mut self.solver),
+        ] {
+            let _ = write!(out, "|{name}:{:?}", d.samples_sorted());
+        }
+        let _ = write!(out, "|windows:{:?}", self.windows);
+        out
     }
 
     pub fn snapshot_json(&mut self) -> Value {
@@ -306,6 +404,22 @@ impl Metrics {
             ("worker_restarts", Value::from(self.worker_restarts as f64)),
             ("quarantined_members", Value::from(self.quarantined_members as f64)),
             ("batch_retries", Value::from(self.batch_retries as f64)),
+            ("health_runs", Value::from(self.health_runs as f64)),
+            (
+                "corrector_delta_hist",
+                Value::Arr(
+                    self.corrector_delta_hist.iter().map(|&c| Value::Num(c as f64)).collect(),
+                ),
+            ),
+            (
+                "nonfinite_first_step_hist",
+                Value::Arr(
+                    self.nonfinite_first_step_hist
+                        .iter()
+                        .map(|&c| Value::Num(c as f64))
+                        .collect(),
+                ),
+            ),
             ("queue_p50_us", Value::from(self.queue.percentile_us(50.0) as f64)),
             ("queue_p99_us", Value::from(self.queue.percentile_us(99.0) as f64)),
             ("compute_p50_us", Value::from(self.compute.percentile_us(50.0) as f64)),
@@ -340,6 +454,85 @@ impl Metrics {
         ]);
         Value::obj(pairs)
     }
+
+    /// Render every counter, gauge, histogram, and latency digest in the
+    /// Prometheus text exposition format (`unipc_`-prefixed families). The
+    /// serving layer appends its own gauges (pending, subscribers, …) to
+    /// the same writer.
+    pub fn prometheus_into(&mut self, w: &mut PromWriter) {
+        w.counter("unipc_submitted_total", "Requests admitted to a shard queue.", self.submitted as f64);
+        w.counter("unipc_rejected_total", "Requests refused at admission.", self.rejected as f64);
+        w.counter("unipc_completed_total", "Requests completed successfully.", self.completed as f64);
+        w.counter("unipc_failed_total", "Requests failed (all kinds).", self.failed as f64);
+        w.counter("unipc_samples_out_total", "Sample rows returned.", self.samples_out as f64);
+        w.counter("unipc_nfe_total", "Model function evaluations (the paper's NFE).", self.nfe_total as f64);
+        w.counter("unipc_plan_builds_total", "Sampling plans compiled.", self.plan_builds as f64);
+        w.counter("unipc_plan_hits_total", "Requests served from a cached plan.", self.plan_hits as f64);
+        w.counter("unipc_batched_runs_total", "Runs grouping >= 2 requests in lockstep.", self.batched_runs as f64);
+        w.counter("unipc_mixed_cond_batches_total", "Batched runs spanning >= 2 conditionings.", self.mixed_cond_batches as f64);
+        w.counter("unipc_workspace_reuses_total", "Runs started from pooled workspace capacity.", self.workspace_reuses as f64);
+        w.counter("unipc_worker_restarts_total", "Workers respawned after a panic.", self.worker_restarts as f64);
+        w.counter("unipc_quarantined_members_total", "Members failed for non-finite output inside a healthy cohort.", self.quarantined_members as f64);
+        w.counter("unipc_batch_retries_total", "Members re-run solo after a mid-batch panic.", self.batch_retries as f64);
+        w.counter("unipc_steals_total", "Jobs popped by a worker homed on another shard.", self.steals as f64);
+        w.counter("unipc_health_runs_total", "Runs reporting solver numerical health.", self.health_runs as f64);
+        let failures: Vec<(&str, f64)> = FailureKind::ALL
+            .iter()
+            .map(|k| (k.as_str(), self.failures_by_kind[k.index()] as f64))
+            .collect();
+        w.counter_vec("unipc_failures_total", "Failures by kind.", "kind", &failures);
+        w.histogram(
+            "unipc_batch_size",
+            "Member requests per plan-executed run.",
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            &self.batch_size_hist,
+            None,
+        );
+        w.histogram(
+            "unipc_cond_distinct",
+            "Distinct model conditionings per batched run.",
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+            &self.cond_distinct_hist,
+            None,
+        );
+        w.histogram(
+            "unipc_shard_depth",
+            "Queue depth observed after each enqueue.",
+            &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0],
+            &self.shard_depth_hist,
+            None,
+        );
+        w.histogram(
+            "unipc_corrector_delta",
+            "Per-run mean predictor-corrector relative delta norm.",
+            &[1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0],
+            &self.corrector_delta_hist,
+            None,
+        );
+        w.histogram(
+            "unipc_nonfinite_first_step",
+            "First step index whose state went non-finite.",
+            &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+            &self.nonfinite_first_step_hist,
+            None,
+        );
+        for (name, help, d) in [
+            ("unipc_queue_us", "Queue wait per completion (microseconds).", &mut self.queue),
+            ("unipc_compute_us", "Compute time per completion (microseconds).", &mut self.compute),
+            ("unipc_e2e_us", "End-to-end latency per completion (microseconds).", &mut self.e2e),
+            ("unipc_model_eval_us", "Model-evaluation share of compute (microseconds).", &mut self.model_eval),
+            ("unipc_solver_us", "Solver share of compute (microseconds).", &mut self.solver),
+        ] {
+            let count = d.count() as u64;
+            let sum: u64 = d.samples_sorted().iter().sum();
+            let quantiles = [
+                (0.5, d.percentile_us(50.0) as f64),
+                (0.95, d.percentile_us(95.0) as f64),
+                (0.99, d.percentile_us(99.0) as f64),
+            ];
+            w.summary(name, help, &quantiles, sum as f64, count);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -350,6 +543,7 @@ mod tests {
     fn completion_updates_everything() {
         let mut m = Metrics::default();
         m.record_completion(
+            3,
             4,
             10,
             Duration::from_micros(50),
@@ -360,6 +554,10 @@ mod tests {
         assert_eq!(m.completed, 1);
         assert_eq!(m.samples_out, 4);
         assert_eq!(m.nfe_total, 10);
+        // The windowed ring saw the same completion at second 3.
+        let t = m.windows.totals(3, 1);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.e2e_sum_us, 1000);
         let snap = m.snapshot_json();
         assert_eq!(snap.get("completed").unwrap().as_f64(), Some(1.0));
         assert_eq!(snap.get("e2e_p50_us").unwrap().as_f64(), Some(1000.0));
@@ -378,6 +576,7 @@ mod tests {
         // A model-eval reading slightly above compute (clock skew between
         // the two measurements) must clamp, keeping solver non-negative.
         m.record_completion(
+            0,
             1,
             5,
             Duration::ZERO,
@@ -393,9 +592,9 @@ mod tests {
     #[test]
     fn record_batch_updates_hist_and_counters() {
         let mut m = Metrics::default();
-        m.record_batch(1, 1, 1);
-        m.record_batch(4, 3, 1);
-        m.record_batch(12, 12, 0);
+        m.record_batch(0, 1, 1, 1);
+        m.record_batch(0, 4, 3, 1);
+        m.record_batch(0, 12, 12, 0);
         assert_eq!(m.batched_runs, 2, "singletons are not batched runs");
         assert_eq!(m.batch_size_hist[0], 1);
         assert_eq!(m.batch_size_hist[3], 1);
@@ -414,6 +613,59 @@ mod tests {
         let chist = snap.get("cond_distinct_hist").unwrap().as_arr().unwrap();
         assert_eq!(chist.len(), 8);
         assert_eq!(chist[2].as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn health_buckets_and_counters() {
+        let mut m = Metrics::default();
+        m.record_health(Some(5e-4), None);
+        m.record_health(None, Some(0));
+        m.record_health(Some(2.0), Some(40));
+        assert_eq!(m.health_runs, 3);
+        assert_eq!(m.corrector_delta_hist[3], 1, "5e-4 lands in le=1e-3");
+        assert_eq!(m.corrector_delta_hist[7], 1, ">1 lands in the overflow bucket");
+        assert_eq!(m.nonfinite_first_step_hist[0], 1, "step 0 provenance");
+        assert_eq!(m.nonfinite_first_step_hist[7], 1, "step 40 overflow");
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("health_runs").unwrap().as_f64(), Some(3.0));
+        let hist = snap.get("corrector_delta_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 8);
+    }
+
+    #[test]
+    fn prometheus_exposition_round_trips_for_a_populated_store() {
+        let mut m = Metrics::default();
+        m.submitted = 9;
+        m.record_completion(
+            2,
+            4,
+            10,
+            Duration::from_micros(50),
+            Duration::from_micros(950),
+            Duration::from_micros(600),
+            7,
+        );
+        m.record_failure(2, FailureKind::QueueFull);
+        m.record_batch(2, 4, 2, 1);
+        m.record_depth(2, 3);
+        m.record_steal(2);
+        m.record_health(Some(1e-3), Some(5));
+        let mut w = PromWriter::new();
+        m.prometheus_into(&mut w);
+        let text = w.finish();
+        let parsed =
+            crate::telemetry::parse_exposition(&text).expect("exposition must parse");
+        assert_eq!(parsed.value("unipc_submitted_total", &[]), Some(9.0));
+        assert_eq!(parsed.value("unipc_completed_total", &[]), Some(1.0));
+        assert_eq!(
+            parsed.value("unipc_failures_total", &[("kind", "queue_full")]),
+            Some(1.0)
+        );
+        assert_eq!(parsed.value("unipc_batch_size_count", &[]), Some(1.0));
+        assert_eq!(parsed.value("unipc_e2e_us_count", &[]), Some(1.0));
+        assert_eq!(parsed.value("unipc_e2e_us_sum", &[]), Some(1000.0));
+        assert_eq!(parsed.value("unipc_e2e_us", &[("quantile", "0.5")]), Some(1000.0));
+        assert_eq!(parsed.value("unipc_health_runs_total", &[]), Some(1.0));
     }
 
     #[test]
@@ -438,29 +690,35 @@ mod tests {
         for us in [10u64, 20, 30] {
             let (q, c, me) =
                 (Duration::from_micros(us), Duration::from_micros(us), Duration::from_micros(us / 2));
-            a.record_completion(2, 8, q, c, me, us);
-            whole.record_completion(2, 8, q, c, me, us);
+            a.record_completion(us, 2, 8, q, c, me, us);
+            whole.record_completion(us, 2, 8, q, c, me, us);
         }
         for us in [10_000u64, 20_000] {
             let (q, c, me) =
                 (Duration::from_micros(us), Duration::from_micros(us), Duration::from_micros(us / 4));
-            b.record_completion(1, 5, q, c, me, us);
-            whole.record_completion(1, 5, q, c, me, us);
+            b.record_completion(7, 1, 5, q, c, me, us);
+            whole.record_completion(7, 1, 5, q, c, me, us);
         }
-        a.record_batch(3, 2, 1);
-        whole.record_batch(3, 2, 1);
-        b.record_batch(3, 1, 0);
-        b.record_batch(12, 9, 1);
-        whole.record_batch(3, 1, 0);
-        whole.record_batch(12, 9, 1);
-        a.record_depth(1);
-        whole.record_depth(1);
-        b.record_depth(40);
-        whole.record_depth(40);
-        a.record_failure(FailureKind::WorkerPanic);
-        whole.record_failure(FailureKind::WorkerPanic);
-        a.steals = 2;
-        whole.steals = 2;
+        a.record_batch(1, 3, 2, 1);
+        whole.record_batch(1, 3, 2, 1);
+        b.record_batch(2, 3, 1, 0);
+        b.record_batch(2, 12, 9, 1);
+        whole.record_batch(2, 3, 1, 0);
+        whole.record_batch(2, 12, 9, 1);
+        a.record_depth(1, 1);
+        whole.record_depth(1, 1);
+        b.record_depth(3, 40);
+        whole.record_depth(3, 40);
+        a.record_failure(5, FailureKind::WorkerPanic);
+        whole.record_failure(5, FailureKind::WorkerPanic);
+        a.record_steal(6);
+        a.record_steal(6);
+        whole.record_steal(6);
+        whole.record_steal(6);
+        a.record_health(Some(1e-3), None);
+        whole.record_health(Some(1e-3), None);
+        b.record_health(Some(0.4), Some(11));
+        whole.record_health(Some(0.4), Some(11));
 
         let mut merged = Metrics::default();
         merged.merge(&a);
@@ -475,6 +733,11 @@ mod tests {
         assert_eq!(merged.mixed_cond_batches, whole.mixed_cond_batches);
         assert_eq!(merged.shard_depth_hist, whole.shard_depth_hist);
         assert_eq!(merged.failures_by_kind, whole.failures_by_kind);
+        assert_eq!(merged.windows, whole.windows, "windowed slots merge exactly");
+        assert_eq!(merged.health_runs, whole.health_runs);
+        assert_eq!(merged.corrector_delta_hist, whole.corrector_delta_hist);
+        assert_eq!(merged.nonfinite_first_step_hist, whole.nonfinite_first_step_hist);
+        assert_eq!(merged.fingerprint(), whole.fingerprint());
         let (ms, mw) = (merged.snapshot_json(), whole.snapshot_json());
         // Exact percentiles prove the digests merged raw samples: the p50
         // of the union (30us) is not derivable from the two stores' own
@@ -510,8 +773,8 @@ mod tests {
             let c = Duration::from_micros(50);
             let me = Duration::from_micros(20);
             let store = if i % 2 == 0 { &mut a } else { &mut b };
-            store.record_completion(1, 5, q, c, me, i);
-            whole.record_completion(1, 5, q, c, me, i);
+            store.record_completion(0, 1, 5, q, c, me, i);
+            whole.record_completion(0, 1, 5, q, c, me, i);
         }
         let mut merged = Metrics::default();
         merged.merge(&a);
@@ -540,7 +803,7 @@ mod tests {
             assert_eq!(Metrics::depth_bucket(depth), bucket, "depth {depth}");
         }
         let mut m = Metrics::default();
-        m.record_depth(7);
+        m.record_depth(0, 7);
         assert_eq!(m.shard_depth_hist[3], 1);
         let snap = m.snapshot_json();
         let hist = snap.get("shard_depth_hist").unwrap().as_arr().unwrap();
@@ -552,9 +815,9 @@ mod tests {
     #[test]
     fn record_failure_counts_per_kind() {
         let mut m = Metrics::default();
-        m.record_failure(FailureKind::DeadlineExceeded);
-        m.record_failure(FailureKind::DeadlineExceeded);
-        m.record_failure(FailureKind::WorkerPanic);
+        m.record_failure(0, FailureKind::DeadlineExceeded);
+        m.record_failure(0, FailureKind::DeadlineExceeded);
+        m.record_failure(1, FailureKind::WorkerPanic);
         m.worker_restarts = 1;
         m.quarantined_members = 2;
         m.batch_retries = 3;

@@ -265,6 +265,17 @@ pub struct SampleResponse {
     /// Flattened samples `[n * dim]` when requested.
     pub samples: Option<Vec<f64>>,
     pub dim: usize,
+    /// Mean per-step predictor→corrector delta ‖x̃ᶜ−x̃ᵖ‖/‖x̃ᶜ‖ across the
+    /// cohort this request ran in — the zero-extra-NFE local error estimate
+    /// the UniC corrector yields for free. Stamped only under `trace=steps`
+    /// and only on steps that actually applied a corrector.
+    pub corrector_delta_mean: Option<f64>,
+    /// Max per-step corrector delta over the run (same gating).
+    pub corrector_delta_max: Option<f64>,
+    /// First solver step index whose state contained a non-finite value
+    /// (numerical-health provenance; same gating). `None` = all finite or
+    /// tracing below `steps`.
+    pub first_nonfinite_step: Option<u32>,
 }
 
 impl SampleResponse {
@@ -282,6 +293,9 @@ impl SampleResponse {
             trace_id: 0,
             samples,
             dim,
+            corrector_delta_mean: None,
+            corrector_delta_max: None,
+            first_nonfinite_step: None,
         }
     }
 
@@ -299,6 +313,9 @@ impl SampleResponse {
             trace_id: 0,
             samples: None,
             dim: 0,
+            corrector_delta_mean: None,
+            corrector_delta_max: None,
+            first_nonfinite_step: None,
         }
     }
 
@@ -324,6 +341,15 @@ impl SampleResponse {
                 "samples",
                 Value::Arr(s.iter().map(|&v| Value::Num(v)).collect()),
             ));
+        }
+        if let Some(d) = self.corrector_delta_mean {
+            pairs.push(("corrector_delta_mean", Value::from(d)));
+        }
+        if let Some(d) = self.corrector_delta_max {
+            pairs.push(("corrector_delta_max", Value::from(d)));
+        }
+        if let Some(k) = self.first_nonfinite_step {
+            pairs.push(("first_nonfinite_step", Value::from(k as usize)));
         }
         Value::obj(pairs)
     }
@@ -352,6 +378,12 @@ impl SampleResponse {
                 a.iter().filter_map(Value::as_f64).collect()
             }),
             dim: v.get("dim").and_then(Value::as_usize).unwrap_or(0),
+            corrector_delta_mean: v.get("corrector_delta_mean").and_then(Value::as_f64),
+            corrector_delta_max: v.get("corrector_delta_max").and_then(Value::as_f64),
+            first_nonfinite_step: v
+                .get("first_nonfinite_step")
+                .and_then(Value::as_usize)
+                .map(|k| k as u32),
         })
     }
 }
@@ -467,6 +499,27 @@ mod tests {
         assert_eq!(r2.kind, None);
         assert_eq!(r2.samples.unwrap(), vec![0.5, -1.0]);
         assert_eq!(r2.compute_us, 345);
+    }
+
+    #[test]
+    fn health_fields_roundtrip_and_are_omitted_when_unset() {
+        let r = SampleResponse::success(10, None, 2);
+        let v = json::parse(&r.to_json().to_string()).unwrap();
+        assert!(v.get("corrector_delta_mean").is_none());
+        assert!(v.get("first_nonfinite_step").is_none());
+        let r2 = SampleResponse::from_json(&v).unwrap();
+        assert_eq!(r2.corrector_delta_mean, None);
+        assert_eq!(r2.first_nonfinite_step, None);
+
+        let mut r = SampleResponse::success(10, None, 2);
+        r.corrector_delta_mean = Some(1.5e-3);
+        r.corrector_delta_max = Some(4.0e-3);
+        r.first_nonfinite_step = Some(7);
+        let v = json::parse(&r.to_json().to_string()).unwrap();
+        let r2 = SampleResponse::from_json(&v).unwrap();
+        assert!((r2.corrector_delta_mean.unwrap() - 1.5e-3).abs() < 1e-12);
+        assert!((r2.corrector_delta_max.unwrap() - 4.0e-3).abs() < 1e-12);
+        assert_eq!(r2.first_nonfinite_step, Some(7));
     }
 
     #[test]

@@ -101,6 +101,10 @@ use crate::solver::{
     plan_key, sample, sample_batch_with_plan_observed, BatchWorkspace, Model, Prediction,
     SampleOptions, SamplePlan,
 };
+use crate::telemetry::{
+    BurnRateMonitor, EventHub, HealthAccum, HealthSpans, PromWriter, Subscription,
+    TelemetryEvent, WindowTotals,
+};
 use crate::tensor::Tensor;
 use crate::trace::{SpanEvent, Stage, StepSpans, TimedModel, TraceRing};
 use std::any::Any;
@@ -117,6 +121,12 @@ use std::time::{Duration, Instant};
 /// worker discover a hot queue elsewhere; it also bounds shutdown-wakeup
 /// latency.
 const STEAL_POLL: Duration = Duration::from_micros(500);
+
+/// How often the SLO monitor thread re-evaluates every configured
+/// burn-rate objective against the windowed counters. Breach emission is
+/// deduplicated per evaluation window, so a short tick costs only a few
+/// windowed-totals sums, not alert spam.
+const SLO_TICK: Duration = Duration::from_millis(100);
 
 /// Fault-injection settings for [`ModelBackend::Chaos`]: a seeded,
 /// deterministic fault stream drawn once per model evaluation. Each eval
@@ -598,6 +608,19 @@ struct Inner {
     /// [`Service::shutdown`]. The supervisor pushes replacements here as it
     /// respawns panicked workers (same id ⇒ same home shard).
     handles: Mutex<Vec<(usize, JoinHandle<()>)>>,
+    /// The push-based telemetry hub: spans and SLO breaches fan out to
+    /// bounded per-subscriber queues at the same moment they are recorded
+    /// into the trace rings, closing the ring-wrap blind spot. With no
+    /// subscriber, every publish is one relaxed atomic load.
+    hub: EventHub,
+    /// The configured SLO burn-rate evaluators with their per-window
+    /// dedup state; the monitor thread (and [`Service::poke_slos`]) drive
+    /// it against the cross-shard windowed totals.
+    monitor: Mutex<BurnRateMonitor>,
+    /// Total `slo_breach` events emitted since boot.
+    slo_breaches: AtomicU64,
+    /// SLO monitor thread handle, joined at shutdown.
+    monitor_handle: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Inner {
@@ -607,9 +630,65 @@ impl Inner {
         at.checked_duration_since(self.epoch).map_or(0, |d| d.as_micros() as u64)
     }
 
+    /// Now on the windowed-metrics clock: whole seconds since the service
+    /// epoch (the slot key for [`crate::telemetry::WindowStore`]).
+    fn now_s(&self) -> u64 {
+        self.epoch.elapsed().as_secs()
+    }
+
     /// Mint a fresh nonzero trace id.
     fn mint_trace_id(&self) -> u64 {
         self.trace_ids.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one span into `shard`'s ring and publish it to subscribers.
+    /// Every ring record site routes through here (or
+    /// [`Inner::record_spans`]) so the push channel sees exactly what the
+    /// ring sees.
+    fn record_span(&self, shard: &Shard, ev: SpanEvent) {
+        shard.trace.lock().unwrap().record(ev);
+        self.hub.publish(TelemetryEvent::Span(ev));
+    }
+
+    /// Flush a batch of spans into `shard`'s ring and publish them: one
+    /// ring lock and one queue lock per subscriber for the whole batch.
+    fn record_spans(&self, shard: &Shard, evs: &[SpanEvent]) {
+        shard.trace.lock().unwrap().record_all(evs);
+        self.hub.publish_spans(evs);
+    }
+
+    /// Cross-shard windowed totals for the trailing `window_s` seconds.
+    fn window_totals(&self, now_s: u64, window_s: u64) -> WindowTotals {
+        let mut t = WindowTotals { window_s, ..WindowTotals::default() };
+        for shard in &self.shards {
+            let m = shard.metrics.lock().unwrap();
+            t.add_totals(&m.windows.totals(now_s, window_s));
+        }
+        t
+    }
+
+    /// Evaluate every configured SLO once at `now_s`; emits breach events
+    /// on the push channel and counts them. Returns how many fired.
+    fn evaluate_slos(&self, now_s: u64) -> usize {
+        let mut events = Vec::new();
+        {
+            let mut mon = self.monitor.lock().unwrap();
+            mon.evaluate(now_s, |w| self.window_totals(now_s, w), &mut events);
+        }
+        for ev in &events {
+            self.slo_breaches.fetch_add(1, Ordering::Relaxed);
+            self.hub.publish(*ev);
+        }
+        events.len()
+    }
+}
+
+/// The SLO monitor loop: tick until shutdown. Kept out of the worker pool —
+/// burn evaluation must not compete with sampling for a queue slot.
+fn monitor_loop(inner: Arc<Inner>) {
+    while !inner.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(SLO_TICK);
+        inner.evaluate_slos(inner.now_s());
     }
 }
 
@@ -625,6 +704,7 @@ impl Service {
     pub fn start(cfg: ServerConfig, backend: ModelBackend) -> Service {
         let n_shards = cfg.effective_shards();
         let trace_cap = cfg.trace_buf;
+        let slos = cfg.slos.clone();
         let inner = Arc::new(Inner {
             shards: (0..n_shards).map(|i| Shard::new(i as u32, trace_cap)).collect(),
             cfg,
@@ -636,9 +716,21 @@ impl Service {
             epoch: Instant::now(),
             trace_ids: AtomicU64::new(1),
             handles: Mutex::new(Vec::new()),
+            hub: EventHub::new(),
+            monitor: Mutex::new(BurnRateMonitor::new(slos.clone())),
+            slo_breaches: AtomicU64::new(0),
+            monitor_handle: Mutex::new(None),
         });
         for i in 0..inner.cfg.workers {
             spawn_worker(&inner, i);
+        }
+        if !slos.is_empty() {
+            let arc = Arc::clone(&inner);
+            let handle = std::thread::Builder::new()
+                .name("slo-monitor".into())
+                .spawn(move || monitor_loop(arc))
+                .expect("spawn slo monitor");
+            *inner.monitor_handle.lock().unwrap() = Some(handle);
         }
         Service { inner }
     }
@@ -667,12 +759,18 @@ impl Service {
         };
         let (opts, batch_key) = admission_setup(&self.inner, &req);
         let shard = &self.inner.shards[route_shard(&self.inner, batch_key.as_deref())];
+        let now_s = self.inner.now_s();
         {
             let mut metrics = shard.metrics.lock().unwrap();
             metrics.submitted += 1;
+            // Rejections bump `rejected` + the per-kind counter (not the
+            // cumulative `failed`, which counts accepted-then-failed jobs)
+            // but DO land in the windowed failure slots: SLOs over
+            // queue_full / invalid_request need them visible in rates.
             if self.inner.shutdown.load(Ordering::SeqCst) {
                 metrics.rejected += 1;
                 metrics.failures_by_kind[FailureKind::BackendError.index()] += 1;
+                metrics.windows.record_failure(now_s, FailureKind::BackendError);
                 return Err(stamp(SampleResponse::failure(
                     FailureKind::BackendError,
                     "service is shut down".into(),
@@ -681,6 +779,7 @@ impl Service {
             if let Err(e) = req.validate(self.inner.cfg.max_batch) {
                 metrics.rejected += 1;
                 metrics.failures_by_kind[FailureKind::InvalidRequest.index()] += 1;
+                metrics.windows.record_failure(now_s, FailureKind::InvalidRequest);
                 return Err(stamp(SampleResponse::failure(
                     FailureKind::InvalidRequest,
                     format!("{e:#}"),
@@ -701,6 +800,7 @@ impl Service {
                 let mut metrics = shard.metrics.lock().unwrap();
                 metrics.rejected += 1;
                 metrics.failures_by_kind[FailureKind::QueueFull.index()] += 1;
+                metrics.windows.record_failure(now_s, FailureKind::QueueFull);
                 return Err(stamp(SampleResponse::failure(
                     FailureKind::QueueFull,
                     format!("queue full ({pending} pending)"),
@@ -717,18 +817,21 @@ impl Service {
             });
             q.len()
         };
-        shard.metrics.lock().unwrap().record_depth(depth);
+        shard.metrics.lock().unwrap().record_depth(now_s, depth);
         if self.inner.cfg.trace.lifecycle() {
-            shard.trace.lock().unwrap().record(SpanEvent {
-                trace_id,
-                parent: 0,
-                stage: Stage::Admit,
-                shard: shard.id,
-                start_us: self.inner.rel_us(arrived),
-                dur_us: arrived.elapsed().as_micros() as u64,
-                a: n as u64,
-                b: steps as u64,
-            });
+            self.inner.record_span(
+                shard,
+                SpanEvent {
+                    trace_id,
+                    parent: 0,
+                    stage: Stage::Admit,
+                    shard: shard.id,
+                    start_us: self.inner.rel_us(arrived),
+                    dur_us: arrived.elapsed().as_micros() as u64,
+                    a: n as u64,
+                    b: steps as u64,
+                },
+            );
         }
         // notify_all, not notify_one: a lingering batch assembler waits on
         // this same condvar and would otherwise swallow the only wakeup
@@ -803,8 +906,103 @@ impl Service {
             }
             m.insert("trace_recorded".into(), crate::json::Value::Num(recorded as f64));
             m.insert("trace_dropped".into(), crate::json::Value::Num(dropped as f64));
+            m.insert(
+                "sub_dropped".into(),
+                crate::json::Value::Num(self.inner.hub.dropped() as f64),
+            );
+            m.insert(
+                "subscribers".into(),
+                crate::json::Value::Num(self.inner.hub.active() as f64),
+            );
+            m.insert(
+                "slo_breaches".into(),
+                crate::json::Value::Num(
+                    self.inner.slo_breaches.load(Ordering::Relaxed) as f64
+                ),
+            );
         }
         v
+    }
+
+    /// Windowed rates: cross-shard totals over the trailing `window_s`
+    /// seconds (the `{"op":"stats","window":…}` payload). Windows ≤ 60 s
+    /// read the per-second ring at full resolution; up to 3600 s read the
+    /// per-minute rollup.
+    pub fn windowed_stats_json(&self, window_s: u64) -> crate::json::Value {
+        let now_s = self.inner.now_s();
+        let mut v = self.inner.window_totals(now_s, window_s).json();
+        if let crate::json::Value::Obj(m) = &mut v {
+            m.insert("now_s".into(), crate::json::Value::Num(now_s as f64));
+        }
+        v
+    }
+
+    /// The full Prometheus text exposition: every merged per-shard counter,
+    /// histogram, and latency digest plus the service-level gauges
+    /// (pending, workers, subscribers, trace/subscription loss, SLO
+    /// breaches). Served by `{"op":"metrics"}` and `serve --metrics-out`.
+    pub fn prometheus_text(&self) -> String {
+        let mut agg = Metrics::default();
+        for shard in &self.inner.shards {
+            agg.merge(&shard.metrics.lock().unwrap());
+        }
+        let mut w = PromWriter::new();
+        agg.prometheus_into(&mut w);
+        w.gauge("unipc_pending", "Jobs currently queued across all shards.", self.pending() as f64);
+        w.gauge("unipc_shards", "Coordinator shard count.", self.shards() as f64);
+        w.gauge("unipc_workers_alive", "Live worker threads.", self.workers_alive() as f64);
+        let (mut recorded, mut dropped) = (0u64, 0u64);
+        for s in &self.inner.shards {
+            let tr = s.trace.lock().unwrap();
+            recorded += tr.recorded();
+            dropped += tr.dropped();
+        }
+        w.counter("unipc_trace_recorded_total", "Span events recorded into trace rings.", recorded as f64);
+        w.counter("unipc_trace_dropped_total", "Span events overwritten by ring wrap.", dropped as f64);
+        w.gauge("unipc_subscribers", "Live push-channel subscribers.", self.inner.hub.active() as f64);
+        w.counter("unipc_sub_dropped_total", "Events a full subscriber queue could not accept.", self.inner.hub.dropped() as f64);
+        w.counter(
+            "unipc_slo_breaches_total",
+            "slo_breach events emitted by the burn-rate monitors.",
+            self.inner.slo_breaches.load(Ordering::Relaxed) as f64,
+        );
+        w.finish()
+    }
+
+    /// Register a push-channel subscriber with a queue bounded at `cap`
+    /// events. From this moment until [`Service::unsubscribe`], every span
+    /// recorded anywhere in the service (and every SLO breach) is either
+    /// delivered to this queue or counted in `sub_dropped` — never silently
+    /// lost, even when the trace ring wraps.
+    pub fn subscribe(&self, cap: usize) -> Arc<Subscription> {
+        self.inner.hub.subscribe(cap)
+    }
+
+    /// Deregister a push-channel subscriber.
+    pub fn unsubscribe(&self, sub: &Arc<Subscription>) {
+        self.inner.hub.unsubscribe(sub);
+    }
+
+    /// The configured per-subscriber queue capacity (`ServerConfig::sub_buf`).
+    pub fn sub_buf(&self) -> usize {
+        self.inner.cfg.sub_buf
+    }
+
+    /// Events full subscriber queues could not accept (cumulative).
+    pub fn sub_dropped(&self) -> u64 {
+        self.inner.hub.dropped()
+    }
+
+    /// `slo_breach` events emitted since boot.
+    pub fn slo_breaches(&self) -> u64 {
+        self.inner.slo_breaches.load(Ordering::Relaxed)
+    }
+
+    /// Force one SLO evaluation right now (the monitor thread ticks every
+    /// `SLO_TICK` anyway; tests and the demo use this for determinism).
+    /// Returns how many breach events fired.
+    pub fn poke_slos(&self) -> usize {
+        self.inner.evaluate_slos(self.inner.now_s())
     }
 
     /// One snapshot per shard, in shard order. For every counter and
@@ -917,9 +1115,10 @@ impl Service {
         for shard in &self.inner.shards {
             let shed: Vec<QueuedJob> = shard.queue.lock().unwrap().drain(..).collect();
             if !shed.is_empty() {
+                let now_s = self.inner.now_s();
                 let mut m = shard.metrics.lock().unwrap();
                 for _ in &shed {
-                    m.record_failure(FailureKind::BackendError);
+                    m.record_failure(now_s, FailureKind::BackendError);
                 }
             }
             for job in shed {
@@ -954,6 +1153,13 @@ impl Service {
             if let Err(p) = h.join() {
                 std::panic::resume_unwind(p);
             }
+        }
+
+        // The SLO monitor checks the shutdown flag every tick; join it
+        // after the workers so its last evaluation sees final counters.
+        let monitor = self.inner.monitor_handle.lock().unwrap().take();
+        if let Some(h) = monitor {
+            let _ = h.join();
         }
     }
 }
@@ -1023,6 +1229,9 @@ fn worker_loop(inner: Arc<Inner>, id: usize) {
     // and flush to the owner shard's ring under one lock. The vec is
     // reserved up front per run, so steady-state recording never allocates.
     let mut spans = Vec::new();
+    // Per-worker solver-health accumulator, reset per run: plain Copy
+    // state, so the observed path stays allocation-free.
+    let mut health = HealthAccum::default();
     loop {
         let (job, owner) = match next_job(&inner, home) {
             Some(pair) => pair,
@@ -1046,6 +1255,7 @@ fn worker_loop(inner: Arc<Inner>, id: usize) {
                     shard,
                     &mut scratch,
                     &mut spans,
+                    &mut health,
                     jobs,
                     &opts,
                     &plan,
@@ -1078,16 +1288,15 @@ fn next_job(inner: &Inner, home: usize) -> Option<(QueuedJob, usize)> {
             let job = inner.shards[idx].queue.lock().unwrap().pop_front();
             if let Some(job) = job {
                 if off != 0 {
-                    inner.shards[idx].metrics.lock().unwrap().steals += 1;
+                    inner.shards[idx].metrics.lock().unwrap().record_steal(inner.now_s());
                 }
                 if inner.cfg.trace.lifecycle() {
                     let now = Instant::now();
-                    let mut tr = inner.shards[idx].trace.lock().unwrap();
                     // Route: owner shard in `a`; `b` = 0 for a home pop,
                     // else the stealing worker's home shard + 1 — steals
                     // stay attributed to the victim shard, matching the
                     // `steals` counter.
-                    tr.record(SpanEvent {
+                    let route = SpanEvent {
                         trace_id: job.trace_id,
                         parent: 0,
                         stage: Stage::Route,
@@ -1096,8 +1305,8 @@ fn next_job(inner: &Inner, home: usize) -> Option<(QueuedJob, usize)> {
                         dur_us: 0,
                         a: idx as u64,
                         b: if off != 0 { home as u64 + 1 } else { 0 },
-                    });
-                    tr.record(SpanEvent {
+                    };
+                    let queue = SpanEvent {
                         trace_id: job.trace_id,
                         parent: 0,
                         stage: Stage::Queue,
@@ -1106,7 +1315,8 @@ fn next_job(inner: &Inner, home: usize) -> Option<(QueuedJob, usize)> {
                         dur_us: now.saturating_duration_since(job.enqueued).as_micros() as u64,
                         a: 0,
                         b: 0,
-                    });
+                    };
+                    inner.record_spans(&inner.shards[idx], &[route, queue]);
                 }
                 return Some((job, idx));
             }
@@ -1139,18 +1349,25 @@ fn shed_if_expired(inner: &Inner, shard: &Shard, job: QueuedJob) -> Option<Queue
 
 fn shed_expired(inner: &Inner, shard: &Shard, job: QueuedJob) {
     let waited = job.enqueued.elapsed();
-    shard.metrics.lock().unwrap().record_failure(FailureKind::DeadlineExceeded);
+    shard
+        .metrics
+        .lock()
+        .unwrap()
+        .record_failure(inner.now_s(), FailureKind::DeadlineExceeded);
     if inner.cfg.trace.lifecycle() {
-        shard.trace.lock().unwrap().record(SpanEvent {
-            trace_id: job.trace_id,
-            parent: 0,
-            stage: Stage::Respond,
-            shard: shard.id,
-            start_us: inner.rel_us(job.enqueued),
-            dur_us: waited.as_micros() as u64,
-            a: FailureKind::DeadlineExceeded.index() as u64 + 1,
-            b: 0,
-        });
+        inner.record_span(
+            shard,
+            SpanEvent {
+                trace_id: job.trace_id,
+                parent: 0,
+                stage: Stage::Respond,
+                shard: shard.id,
+                start_us: inner.rel_us(job.enqueued),
+                dur_us: waited.as_micros() as u64,
+                a: FailureKind::DeadlineExceeded.index() as u64 + 1,
+                b: 0,
+            },
+        );
     }
     let mut resp = SampleResponse::failure(
         FailureKind::DeadlineExceeded,
@@ -1242,16 +1459,19 @@ fn gather_batch(inner: &Inner, shard: &Shard, key: &str, jobs: &mut Vec<QueuedJo
                     // `a = 1` marks absorption; queue lock → trace lock is
                     // fine — trace locks are terminal, like metrics.
                     if inner.cfg.trace.lifecycle() {
-                        shard.trace.lock().unwrap().record(SpanEvent {
-                            trace_id: j.trace_id,
-                            parent: 0,
-                            stage: Stage::Queue,
-                            shard: shard.id,
-                            start_us: inner.rel_us(j.enqueued),
-                            dur_us: j.enqueued.elapsed().as_micros() as u64,
-                            a: 1,
-                            b: 0,
-                        });
+                        inner.record_span(
+                            shard,
+                            SpanEvent {
+                                trace_id: j.trace_id,
+                                parent: 0,
+                                stage: Stage::Queue,
+                                shard: shard.id,
+                                start_us: inner.rel_us(j.enqueued),
+                                dur_us: j.enqueued.elapsed().as_micros() as u64,
+                                a: 1,
+                                b: 0,
+                            },
+                        );
                     }
                     rows += j.req.n;
                     jobs.push(j);
@@ -1311,6 +1531,7 @@ fn execute_batch(
     shard: &Shard,
     scratch: &mut BatchWorkspace,
     spans: &mut Vec<SpanEvent>,
+    health: &mut HealthAccum,
     mut jobs: Vec<QueuedJob>,
     opts: &SampleOptions,
     plan: &SamplePlan,
@@ -1374,10 +1595,25 @@ fn execute_batch(
     // The timing wrapper always runs (it feeds the model_eval/solver
     // digests); per-step span emission additionally needs `trace=steps`.
     let timed = TimedModel::new(&model);
+    health.reset();
     let outcome = catch_unwind(AssertUnwindSafe(|| {
         if level.steps() {
-            let mut obs =
-                StepSpans::new(&mut *spans, &timed, inner.epoch, cohort, 0, shard.id, rows as u64);
+            // HealthSpans opts into the executor's per-step health payload
+            // (corrector delta + finiteness), feeding the worker-local
+            // accumulator while forwarding each step to the span recorder —
+            // one executor pass serves both tracing and numerical health.
+            let mut obs = HealthSpans {
+                spans: Some(StepSpans::new(
+                    &mut *spans,
+                    &timed,
+                    inner.epoch,
+                    cohort,
+                    0,
+                    shard.id,
+                    rows as u64,
+                )),
+                accum: &mut *health,
+            };
             sample_batch_with_plan_observed(
                 &timed,
                 &inner.sched,
@@ -1416,7 +1652,7 @@ fn execute_batch(
                         a: jobs.len() as u64,
                         b: 0,
                     });
-                    shard.trace.lock().unwrap().record_all(spans);
+                    inner.record_spans(shard, spans);
                 }
                 for job in jobs {
                     let _ = execute_solo(inner, shard, job);
@@ -1424,7 +1660,7 @@ fn execute_batch(
             } else {
                 // A batch of one has no cohort to protect; fail it typed.
                 if level.lifecycle() {
-                    shard.trace.lock().unwrap().record_all(spans);
+                    inner.record_spans(shard, spans);
                 }
                 let job = jobs.into_iter().next().expect("non-empty batch");
                 let resp = SampleResponse::failure(
@@ -1460,20 +1696,35 @@ fn execute_batch(
             .collect()
     };
 
+    let now_s = inner.now_s();
     let mut m = shard.metrics.lock().unwrap();
     // The leader's lookup_plan counted its own hit/build; followers were
     // absorbed without a lookup but are equally served from the cached
     // plan, so count them as hits to keep plan_hits per-request.
     m.plan_hits += jobs.len() as u64 - 1;
-    m.record_batch(jobs.len(), distinct_conds, scratch.reuses() - reuses_before);
+    m.record_batch(now_s, jobs.len(), distinct_conds, scratch.reuses() - reuses_before);
+    if level.steps() {
+        // One health record per run: the observer saw the whole cohort's
+        // stacked state, so its delta norms and non-finite provenance are
+        // cohort-level signals.
+        m.record_health(health.mean_delta(), health.first_nonfinite);
+    }
     for ((job, r), (qt, ok)) in
         jobs.iter().zip(results.iter()).zip(queue_times.iter().zip(&finite))
     {
         if *ok {
-            m.record_completion(job.req.n, r.nfe, *qt, compute_time, model_time, job.trace_id);
+            m.record_completion(
+                now_s,
+                job.req.n,
+                r.nfe,
+                *qt,
+                compute_time,
+                model_time,
+                job.trace_id,
+            );
         } else {
             m.quarantined_members += 1;
-            m.record_failure(FailureKind::NonFiniteOutput);
+            m.record_failure(now_s, FailureKind::NonFiniteOutput);
         }
     }
     drop(m);
@@ -1506,6 +1757,14 @@ fn execute_batch(
         // sums to compute_us exactly despite µs truncation.
         resp.solver_us = resp.compute_us - resp.model_eval_us;
         resp.trace_id = job.trace_id;
+        if level.steps() {
+            // Cohort-level numerical health stamped on every member (the
+            // solver state is stacked, so the signal is shared).
+            resp.corrector_delta_mean = health.mean_delta();
+            resp.corrector_delta_max =
+                (health.corrected_steps > 0).then_some(health.delta_max);
+            resp.first_nonfinite_step = health.first_nonfinite;
+        }
         if level.lifecycle() {
             if !ok {
                 spans.push(SpanEvent {
@@ -1533,7 +1792,7 @@ fn execute_batch(
         let _ = job.reply.send(resp);
     }
     if level.lifecycle() {
-        shard.trace.lock().unwrap().record_all(spans);
+        inner.record_spans(shard, spans);
     }
     false
 }
@@ -1581,25 +1840,35 @@ fn finish_solo(
 ) {
     let model_eval = model_eval.min(compute);
     {
+        let now_s = inner.now_s();
         let mut m = shard.metrics.lock().unwrap();
         match resp.kind {
-            None => {
-                m.record_completion(job.req.n, resp.nfe, queued, compute, model_eval, job.trace_id)
-            }
-            Some(k) => m.record_failure(k),
+            None => m.record_completion(
+                now_s,
+                job.req.n,
+                resp.nfe,
+                queued,
+                compute,
+                model_eval,
+                job.trace_id,
+            ),
+            Some(k) => m.record_failure(now_s, k),
         }
     }
     if inner.cfg.trace.lifecycle() {
-        shard.trace.lock().unwrap().record(SpanEvent {
-            trace_id: job.trace_id,
-            parent: 0,
-            stage: Stage::Respond,
-            shard: shard.id,
-            start_us: inner.rel_us(job.enqueued),
-            dur_us: (queued + compute).as_micros() as u64,
-            a: resp.kind.map_or(0, |k| k.index() as u64 + 1),
-            b: resp.nfe as u64,
-        });
+        inner.record_span(
+            shard,
+            SpanEvent {
+                trace_id: job.trace_id,
+                parent: 0,
+                stage: Stage::Respond,
+                shard: shard.id,
+                start_us: inner.rel_us(job.enqueued),
+                dur_us: (queued + compute).as_micros() as u64,
+                a: resp.kind.map_or(0, |k| k.index() as u64 + 1),
+                b: resp.nfe as u64,
+            },
+        );
     }
     resp.queue_us = queued.as_micros() as u64;
     resp.compute_us = compute.as_micros() as u64;

@@ -26,6 +26,11 @@
 //!   lifecycle stage (admit → route/queue → assemble → per-step
 //!   model-eval/solver split → respond), bounded per-shard rings, span-tree
 //!   and Chrome `trace_event` exporters.
+//! * [`telemetry`] — the continuous telemetry plane: windowed time-series
+//!   metrics (60×1s + 60×1m rings), Prometheus text exposition, push-based
+//!   event subscription with bounded per-subscriber queues, SLO burn-rate
+//!   monitors, and solver numerical-health accumulation (predictor→
+//!   corrector delta norms, non-finite provenance).
 //! * substrates built from scratch for the offline environment:
 //!   [`tensor`], [`rng`], [`stats`], [`json`], [`cli`], [`config`],
 //!   [`testing`].
@@ -49,6 +54,7 @@ pub mod sched;
 pub mod server;
 pub mod solver;
 pub mod stats;
+pub mod telemetry;
 pub mod tensor;
 pub mod testing;
 pub mod trace;

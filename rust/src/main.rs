@@ -6,6 +6,7 @@
 //!   sample       one-shot sampling to stdout/JSON
 //!   client       fire a request at a running server
 //!   trace-demo   headless serve + load + Chrome trace artifact
+//!   slo-demo     headless SLO burn-rate breach demo (chaos + subscription)
 //!   order-sweep  empirical order-of-convergence study (analytic model)
 //!   info         print manifest/weights/artifact info
 
@@ -27,6 +28,7 @@ fn main() {
         "sample" => cmd_sample(&args),
         "client" => cmd_client(&args),
         "trace-demo" => cmd_trace_demo(&args),
+        "slo-demo" => cmd_slo_demo(&args),
         "order-sweep" => cmd_order_sweep(&args),
         "info" => cmd_info(&args),
         "" | "help" | "--help" => {
@@ -53,6 +55,7 @@ fn top_usage() -> String {
     \x20 sample       one-shot sampling (no server)\n\
     \x20 client       send a request to a running server\n\
     \x20 trace-demo   headless serve + load + Chrome trace artifact\n\
+    \x20 slo-demo     headless SLO burn-rate breach demo\n\
     \x20 order-sweep  empirical convergence orders on the analytic model\n\
     \x20 info         inspect artifacts + weights\n"
         .to_string()
@@ -114,6 +117,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                     OptSpec { name: "trace", help: "span level: off|lifecycle|steps", default: Some("lifecycle") },
                     OptSpec { name: "trace-buf", help: "span-ring capacity per shard", default: Some("4096") },
                     OptSpec { name: "trace-out", help: "Chrome trace_event JSON, rewritten each minute", default: None },
+                    OptSpec { name: "metrics-out", help: "Prometheus text file, rewritten each minute", default: None },
+                    OptSpec { name: "slo", help: "comma-separated SLOs, e.g. deadline_exceeded<0.1%/5m", default: None },
+                    OptSpec { name: "sub-buf", help: "per-subscriber event queue capacity", default: Some("1024") },
                     OptSpec { name: "analytic", help: "force the analytic backend", default: None },
                 ],
             )
@@ -132,6 +138,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cfg.trace.as_str(),
     );
     let trace_out = args.get("trace-out").map(|s| s.to_string());
+    let metrics_out = args.get("metrics-out").map(|s| s.to_string());
     // Serve until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(60));
@@ -139,6 +146,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         if let Some(path) = &trace_out {
             if let Err(e) = std::fs::write(path, service.chrome_trace_json().to_string()) {
                 log::warn!("failed to write trace to {path}: {e}");
+            }
+        }
+        if let Some(path) = &metrics_out {
+            // Periodic Prometheus text dump: a file-based scrape target
+            // (node_exporter textfile-collector style) for setups without
+            // a wire scraper.
+            if let Err(e) = std::fs::write(path, service.prometheus_text()) {
+                log::warn!("failed to write metrics to {path}: {e}");
             }
         }
     }
@@ -193,6 +208,102 @@ fn cmd_trace_demo(args: &Args) -> anyhow::Result<()> {
     );
     server.stop();
     service.shutdown();
+    Ok(())
+}
+
+/// Headless SLO demo: configure a burn-rate objective, inject worker-panic
+/// chaos that burns through its budget, subscribe to the push channel, and
+/// prove the breach event fires (exactly once per evaluation window).
+/// Exits nonzero when no breach is observed — `make slo-demo` uses this as
+/// an end-to-end CI probe of the telemetry plane.
+fn cmd_slo_demo(args: &Args) -> anyhow::Result<()> {
+    use unipc::coordinator::{silence_injected_panics, ChaosConfig};
+    use unipc::server::{run_load, LoadConfig};
+    use unipc::telemetry::{SloSpec, TelemetryEvent};
+    if args.flag("help") {
+        print!(
+            "{}",
+            usage(
+                "slo-demo",
+                "provoke and observe an SLO burn-rate breach, headlessly",
+                &[
+                    OptSpec { name: "requests", help: "requests to fire", default: Some("64") },
+                    OptSpec {
+                        name: "slo",
+                        help: "objective to breach",
+                        default: Some("worker_panic<1%/1m"),
+                    },
+                    OptSpec { name: "panic-rate", help: "injected eval panic probability", default: Some("0.2") },
+                ],
+            )
+        );
+        return Ok(());
+    }
+    let total = args.get_usize("requests", 64).map_err(anyhow::Error::msg)?;
+    let spec = SloSpec::parse(args.get_or("slo", "worker_panic<1%/1m"))
+        .map_err(anyhow::Error::msg)?;
+    let panic_rate = args.get_f64("panic-rate", 0.2).map_err(anyhow::Error::msg)?;
+
+    let mut cfg = ServerConfig { workers: 2, ..Default::default() };
+    cfg.slos = vec![spec];
+    let backend = ModelBackend::chaos(
+        backend_from(&cfg, true)?,
+        ChaosConfig { seed: 11, panic_rate, ..Default::default() },
+    );
+    silence_injected_panics();
+    let service = Service::start(cfg, backend);
+    let server = Server::spawn(service.clone(), "127.0.0.1:0")?;
+    println!("objective: {spec} — injecting eval panics at rate {panic_rate:.2}");
+
+    // Subscribe before the load so every breach event is observable.
+    let sub = service.subscribe(service.sub_buf());
+    let load = LoadConfig {
+        rps: 400.0,
+        total,
+        connections: 4,
+        template: SampleRequest { n: 1, steps: 8, return_samples: false, ..Default::default() },
+        seed: 3,
+        key_mix: 1,
+        mix_guidance: None,
+        plan_mix: 2,
+    };
+    let mut report = run_load(&server.addr.to_string(), &load)?;
+    println!("{}", report.summary());
+
+    // Deterministic evaluation (the monitor thread ticks anyway).
+    service.poke_slos();
+    let mut events = Vec::new();
+    sub.drain_into(&mut events);
+    service.unsubscribe(&sub);
+    let breaches: Vec<_> = events
+        .iter()
+        .filter_map(|ev| match ev {
+            TelemetryEvent::SloBreach { kind, window_s, failed, total, .. } => {
+                Some(format!(
+                    "slo_breach: {kind} failed {failed}/{total} over trailing {window_s}s"
+                ))
+            }
+            _ => None,
+        })
+        .collect();
+    for b in &breaches {
+        println!("{b}");
+    }
+    println!(
+        "windowed 1m stats: {}",
+        service.windowed_stats_json(60).to_string()
+    );
+    let total_breaches = service.slo_breaches();
+    server.stop();
+    service.shutdown();
+    if breaches.is_empty() || total_breaches == 0 {
+        anyhow::bail!(
+            "no slo_breach observed (events={}, counter={total_breaches}) — \
+             the telemetry plane failed end to end",
+            events.len()
+        );
+    }
+    println!("ok: {total_breaches} breach event(s) — telemetry plane verified end to end");
     Ok(())
 }
 

@@ -40,6 +40,60 @@ impl Client {
         self.raw(r#"{"op":"stats"}"#)
     }
 
+    /// Windowed rates over a trailing span, e.g. `"30s"`, `"1m"`, `"1h"`.
+    pub fn stats_window(&mut self, window: &str) -> Result<Value> {
+        self.raw(&format!(r#"{{"op":"stats","window":"{window}"}}"#))
+    }
+
+    /// The Prometheus text exposition (the `metrics` op's `text` field).
+    pub fn metrics_text(&mut self) -> Result<String> {
+        let v = self.raw(r#"{"op":"metrics"}"#)?;
+        v.get("text")
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("metrics reply missing text: {v:?}"))
+    }
+
+    /// Switch this connection into event-streaming mode (`subscribe` op).
+    /// Returns the ack object; after it, every line read from this client
+    /// via [`Client::read_event`] is one telemetry event (NDJSON).
+    pub fn subscribe(&mut self) -> Result<Value> {
+        let ack = self.raw(r#"{"op":"subscribe"}"#)?;
+        if ack.get("subscribed").and_then(Value::as_bool) != Some(true) {
+            return Err(anyhow!("subscribe refused: {ack:?}"));
+        }
+        Ok(ack)
+    }
+
+    /// Read one streamed event line (blocks; use a read timeout on the
+    /// underlying socket to bound it). `Ok(None)` = server closed.
+    pub fn read_event(&mut self) -> Result<Option<Value>> {
+        let mut line = String::new();
+        loop {
+            match self.reader.read_line(&mut line) {
+                Ok(0) => return Ok(None),
+                Ok(_) => {
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        line.clear();
+                        continue;
+                    }
+                    return json::parse(trimmed)
+                        .map(Some)
+                        .map_err(|e| anyhow!("bad event line: {e}"));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Bound every read on this connection (event streams use this so a
+    /// quiet server can't pin the test).
+    pub fn set_read_timeout(&mut self, d: std::time::Duration) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(Some(d))?;
+        Ok(())
+    }
+
     /// Fetch the span trees of the most recent `limit` requests (the
     /// `trace` op); returns the `traces` array from the reply.
     pub fn trace(&mut self, limit: usize) -> Result<Value> {

@@ -83,6 +83,13 @@ pub struct LoadReport {
     pub failures: BTreeMap<String, u64>,
     /// Where server-side time went, from per-response timing stamps.
     pub stages: StageDigests,
+    /// Server-side telemetry-loss accounting, snapshotted from a final
+    /// `stats` call: span events recorded into trace rings, span events
+    /// overwritten by ring wrap, and events dropped on full subscriber
+    /// queues. Zero when the final stats fetch failed.
+    pub trace_recorded: u64,
+    pub trace_dropped: u64,
+    pub sub_dropped: u64,
 }
 
 impl LoadReport {
@@ -99,6 +106,10 @@ impl LoadReport {
         if !self.failures.is_empty() {
             s.push_str(&format!(" fails={:?}", self.failures));
         }
+        s.push_str(&format!(
+            " trace[recorded={} dropped={} sub_dropped={}]",
+            self.trace_recorded, self.trace_dropped, self.sub_dropped
+        ));
         if self.stages.queue.count() > 0 {
             // Queue-vs-compute attribution: how much of the server-side
             // latency was waiting rather than working, and how the working
@@ -215,6 +226,15 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
     let failures = Arc::try_unwrap(failures)
         .map(|m| m.into_inner().unwrap())
         .unwrap_or_else(|arc| arc.lock().unwrap().clone());
+    // Close the loop on telemetry loss: one stats call after the run pulls
+    // the server's trace-ring and subscription accounting into the report.
+    let get = |v: &crate::json::Value, key: &str| {
+        v.get(key).and_then(crate::json::Value::as_f64).unwrap_or(0.0) as u64
+    };
+    let (trace_recorded, trace_dropped, sub_dropped) = Client::connect(addr)
+        .and_then(|mut c| c.stats())
+        .map(|v| (get(&v, "trace_recorded"), get(&v, "trace_dropped"), get(&v, "sub_dropped")))
+        .unwrap_or((0, 0, 0));
     Ok(LoadReport {
         sent: per_conn * cfg.connections,
         ok: ok.load(Ordering::Relaxed) as usize,
@@ -224,6 +244,9 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> Result<LoadReport> {
         latency,
         failures,
         stages,
+        trace_recorded,
+        trace_dropped,
+        sub_dropped,
     })
 }
 
@@ -278,6 +301,17 @@ mod tests {
         let s = report.summary();
         assert!(s.contains("breakdown:"), "summary must print the stage breakdown: {s}");
         assert!(s.contains("model_eval["), "summary must print the compute split: {s}");
+        // Telemetry-loss accounting rides on the report: every request
+        // records spans under the default lifecycle level, and a ring
+        // sized far above the span volume drops nothing.
+        assert!(
+            report.trace_recorded >= report.sent as u64,
+            "expected ≥1 span per request, got {}",
+            report.trace_recorded
+        );
+        assert_eq!(report.trace_dropped, 0);
+        assert_eq!(report.sub_dropped, 0);
+        assert!(s.contains("sub_dropped=0"), "summary must print telemetry loss: {s}");
         server.stop();
         svc.shutdown();
     }

@@ -6,8 +6,17 @@
 //!   → {"op":"sample", "n":4, "steps":10, "method":"unipc-3", ...}
 //!   ← {"ok":true, "nfe":10, "samples":[...], "trace_id":…, ...}
 //!   → {"op":"stats"}   ← metrics snapshot + front-end gauges
+//!   → {"op":"stats", "window":"1m"}  ← windowed rates (see [`crate::telemetry`])
 //!   → {"op":"ping"}    ← {"ok":true}
 //!   → {"op":"trace", "limit":8}  ← recent span trees (see [`crate::trace`])
+//!   → {"op":"metrics"} ← {"ok":true, "text": <Prometheus exposition>}
+//!   → {"op":"subscribe"}  ← ack, then the connection becomes a push
+//!     channel: span events and `slo_breach` events stream back as NDJSON
+//!     until the client disconnects (bounded per-subscriber queue;
+//!     overflow is counted in `sub_dropped`, never blocking workers).
+//!
+//! Present-but-invalid parameters (`limit`, `window`) get a typed
+//! `invalid_request` error reply instead of a silent default.
 //!
 //! The listener accounts for its connections: a `connections_open` gauge
 //! and per-op counters ride on every `stats` reply, and [`Server::stop`]
@@ -23,6 +32,7 @@ pub use loadgen::{run_load, LoadConfig, LoadReport};
 use crate::coordinator::{SampleRequest, Service};
 use crate::json::{self, Value};
 use crate::log;
+use crate::telemetry::{event_line, parse_window, PromWriter, Subscription};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -48,6 +58,8 @@ pub struct FrontendStats {
     pub op_stats: AtomicU64,
     pub op_ping: AtomicU64,
     pub op_trace: AtomicU64,
+    pub op_metrics: AtomicU64,
+    pub op_subscribe: AtomicU64,
     /// Unknown ops and unparsable lines.
     pub op_other: AtomicU64,
 }
@@ -63,8 +75,42 @@ impl FrontendStats {
             ("op_stats", g(&self.op_stats)),
             ("op_ping", g(&self.op_ping)),
             ("op_trace", g(&self.op_trace)),
+            ("op_metrics", g(&self.op_metrics)),
+            ("op_subscribe", g(&self.op_subscribe)),
             ("op_other", g(&self.op_other)),
         ]
+    }
+
+    /// The same block as Prometheus lines, appended to `{"op":"metrics"}`
+    /// replies so scrapes see the front end too.
+    fn prometheus(&self) -> String {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64;
+        let mut w = PromWriter::new();
+        w.counter(
+            "unipc_connections_total",
+            "Connections ever accepted.",
+            g(&self.connections_total),
+        );
+        w.gauge(
+            "unipc_connections_open",
+            "Connections currently open.",
+            g(&self.connections_open),
+        );
+        w.counter_vec(
+            "unipc_requests_total",
+            "Front-end requests by op.",
+            "op",
+            &[
+                ("sample", g(&self.op_sample)),
+                ("stats", g(&self.op_stats)),
+                ("ping", g(&self.op_ping)),
+                ("trace", g(&self.op_trace)),
+                ("metrics", g(&self.op_metrics)),
+                ("subscribe", g(&self.op_subscribe)),
+                ("other", g(&self.op_other)),
+            ],
+        );
+        w.finish()
     }
 }
 
@@ -177,47 +223,149 @@ fn handle_conn(
         }
         let trimmed = line.trim();
         if !trimmed.is_empty() {
-            let reply = dispatch(trimmed, &service, &stats);
-            stream.write_all(reply.to_string().as_bytes())?;
-            stream.write_all(b"\n")?;
+            match dispatch(trimmed, &service, &stats) {
+                Dispatch::Reply(reply) => {
+                    stream.write_all(reply.to_string().as_bytes())?;
+                    stream.write_all(b"\n")?;
+                }
+                Dispatch::Subscribe => {
+                    // The connection becomes a push channel: ack, then
+                    // stream events until the client goes away.
+                    let sub = service.subscribe(service.sub_buf());
+                    let ack = Value::obj(vec![
+                        ("ok", Value::from(true)),
+                        ("subscribed", Value::from(true)),
+                        ("cap", Value::from(service.sub_buf())),
+                    ]);
+                    let r = stream
+                        .write_all(ack.to_string().as_bytes())
+                        .and_then(|()| stream.write_all(b"\n"))
+                        .map_err(anyhow::Error::from)
+                        .and_then(|()| {
+                            stream_events(&mut reader, &mut stream, &sub, &stop)
+                        });
+                    service.unsubscribe(&sub);
+                    return r;
+                }
+            }
         }
         line.clear();
     }
 }
 
-fn dispatch(line: &str, service: &Service, stats: &FrontendStats) -> Value {
+/// Streams queued telemetry events to a subscribed connection as NDJSON.
+/// Returns when the client closes, writes fail, or the server stops.
+fn stream_events(
+    reader: &mut BufReader<TcpStream>,
+    stream: &mut TcpStream,
+    sub: &Arc<Subscription>,
+    stop: &AtomicBool,
+) -> Result<()> {
+    // Short read timeout: each lap polls for client close (Ok(0)) without
+    // stalling event delivery.
+    reader.get_ref().set_read_timeout(Some(Duration::from_millis(1))).ok();
+    let mut junk = String::new();
+    let mut events = Vec::with_capacity(64);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match reader.read_line(&mut junk) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => junk.clear(),  // input on a streaming conn is ignored
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) => return Err(e.into()),
+        }
+        if sub.wait_drain_into(&mut events, Duration::from_millis(50)) {
+            for ev in events.drain(..) {
+                stream.write_all(event_line(&ev).to_string().as_bytes())?;
+                stream.write_all(b"\n")?;
+            }
+            stream.flush()?;
+        }
+    }
+}
+
+/// What a request line turns into: an immediate reply, or a switch of the
+/// connection into event-streaming mode.
+enum Dispatch {
+    Reply(Value),
+    Subscribe,
+}
+
+fn error_reply(msg: String) -> Value {
+    Value::obj(vec![
+        ("ok", Value::from(false)),
+        ("kind", Value::from("invalid_request")),
+        ("error", Value::from(msg)),
+    ])
+}
+
+fn dispatch(line: &str, service: &Service, stats: &FrontendStats) -> Dispatch {
     let parsed = match json::parse(line) {
         Ok(v) => v,
         Err(e) => {
             stats.op_other.fetch_add(1, Ordering::Relaxed);
-            return Value::obj(vec![
-                ("ok", Value::from(false)),
-                ("kind", Value::from("invalid_request")),
-                ("error", Value::from(format!("bad json: {e}"))),
-            ])
+            return Dispatch::Reply(error_reply(format!("bad json: {e}")));
         }
     };
-    match parsed.get("op").and_then(Value::as_str) {
+    Dispatch::Reply(match parsed.get("op").and_then(Value::as_str) {
         Some("ping") => {
             stats.op_ping.fetch_add(1, Ordering::Relaxed);
             Value::obj(vec![("ok", Value::from(true))])
         }
         Some("stats") => {
             stats.op_stats.fetch_add(1, Ordering::Relaxed);
-            let mut v = service.metrics_json();
-            if let Value::Obj(m) = &mut v {
-                for (k, val) in stats.fields() {
-                    m.insert(k.to_string(), val);
+            // A present `window` selects windowed rates; present-but-bad
+            // values are a typed error, not a silent fallback.
+            match parsed.get("window") {
+                Some(w) => {
+                    let spec = w.as_str().map(str::to_string).or_else(|| {
+                        // Bare numbers are accepted too: {"window": 30}.
+                        w.as_usize().map(|n| n.to_string())
+                    });
+                    match spec.as_deref().and_then(parse_window) {
+                        Some(window_s) => {
+                            let mut v = service.windowed_stats_json(window_s);
+                            if let Value::Obj(m) = &mut v {
+                                m.insert("ok".to_string(), Value::from(true));
+                            }
+                            v
+                        }
+                        None => error_reply(format!(
+                            "bad 'window' {w:?}: want seconds or a 1s..=1h \
+                             suffixed span like \"90s\", \"5m\", \"1h\""
+                        )),
+                    }
+                }
+                None => {
+                    let mut v = service.metrics_json();
+                    if let Value::Obj(m) = &mut v {
+                        for (k, val) in stats.fields() {
+                            m.insert(k.to_string(), val);
+                        }
+                    }
+                    v
                 }
             }
-            v
         }
         Some("trace") => {
             stats.op_trace.fetch_add(1, Ordering::Relaxed);
-            let limit = parsed
-                .get("limit")
-                .and_then(Value::as_usize)
-                .unwrap_or(DEFAULT_TRACE_LIMIT);
+            let limit = match parsed.get("limit") {
+                None => DEFAULT_TRACE_LIMIT,
+                // Present but non-numeric / negative / fractional: typed
+                // error instead of the silent default.
+                Some(l) => match l.as_usize() {
+                    Some(n) => n,
+                    None => {
+                        return Dispatch::Reply(error_reply(format!(
+                            "bad 'limit' {l:?}: want a non-negative integer"
+                        )))
+                    }
+                },
+            };
             // `trace_json` already returns `{"traces": [...]}`; stamp the
             // protocol's `ok` onto it rather than nesting another object.
             let mut v = service.trace_json(limit);
@@ -226,26 +374,28 @@ fn dispatch(line: &str, service: &Service, stats: &FrontendStats) -> Value {
             }
             v
         }
+        Some("metrics") => {
+            stats.op_metrics.fetch_add(1, Ordering::Relaxed);
+            let mut text = service.prometheus_text();
+            text.push_str(&stats.prometheus());
+            Value::obj(vec![("ok", Value::from(true)), ("text", Value::from(text))])
+        }
+        Some("subscribe") => {
+            stats.op_subscribe.fetch_add(1, Ordering::Relaxed);
+            return Dispatch::Subscribe;
+        }
         Some("sample") => {
             stats.op_sample.fetch_add(1, Ordering::Relaxed);
             match SampleRequest::from_json(&parsed) {
                 Ok(req) => service.sample_blocking(req).to_json(),
-                Err(e) => Value::obj(vec![
-                    ("ok", Value::from(false)),
-                    ("kind", Value::from("invalid_request")),
-                    ("error", Value::from(format!("{e:#}"))),
-                ]),
+                Err(e) => error_reply(format!("{e:#}")),
             }
         }
         other => {
             stats.op_other.fetch_add(1, Ordering::Relaxed);
-            Value::obj(vec![
-                ("ok", Value::from(false)),
-                ("kind", Value::from("invalid_request")),
-                ("error", Value::from(format!("unknown op {other:?}"))),
-            ])
+            error_reply(format!("unknown op {other:?}"))
         }
-    }
+    })
 }
 
 #[cfg(test)]
@@ -337,6 +487,150 @@ mod tests {
             0,
             "stop must wait for connection threads to exit"
         );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn metrics_op_returns_valid_exposition() {
+        let (server, svc) = test_server();
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        let r = c
+            .sample(&SampleRequest { n: 1, steps: 5, seed: 2, return_samples: false, ..Default::default() })
+            .unwrap();
+        assert!(r.ok, "{:?}", r.error);
+
+        let text = c.metrics_text().unwrap();
+        let parsed = crate::telemetry::parse_exposition(&text).unwrap();
+        assert_eq!(parsed.value("unipc_completed_total", &[]), Some(1.0));
+        // Front-end lines ride along.
+        assert_eq!(parsed.value("unipc_requests_total", &[("op", "sample")]), Some(1.0));
+        assert_eq!(parsed.value("unipc_connections_open", &[]), Some(1.0));
+        server.stop();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn windowed_stats_and_typed_param_errors() {
+        let (server, svc) = test_server();
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        let r = c
+            .sample(&SampleRequest { n: 3, steps: 5, seed: 4, return_samples: false, ..Default::default() })
+            .unwrap();
+        assert!(r.ok, "{:?}", r.error);
+
+        // The completion lands in the 60-second window.
+        let w = c.stats_window("1m").unwrap();
+        assert_eq!(w.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(w.get("window_s").unwrap().as_f64(), Some(60.0));
+        assert_eq!(w.get("completed").unwrap().as_f64(), Some(1.0));
+        assert_eq!(w.get("samples_out").unwrap().as_f64(), Some(3.0));
+        // Bare-number windows are accepted.
+        let w = c.raw(r#"{"op":"stats","window":30}"#).unwrap();
+        assert_eq!(w.get("window_s").unwrap().as_f64(), Some(30.0));
+
+        // Present-but-invalid params are typed errors, not silent defaults.
+        for bad in [
+            r#"{"op":"stats","window":"eternity"}"#,
+            r#"{"op":"stats","window":-5}"#,
+            r#"{"op":"stats","window":"0s"}"#,
+            r#"{"op":"trace","limit":"many"}"#,
+            r#"{"op":"trace","limit":-1}"#,
+            r#"{"op":"trace","limit":1.5}"#,
+        ] {
+            let v = c.raw(bad).unwrap();
+            assert_eq!(v.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+            assert_eq!(v.get("kind").unwrap().as_str(), Some("invalid_request"), "{bad}");
+        }
+        // The connection survives the error replies.
+        assert!(c.ping().unwrap());
+        server.stop();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn subscribe_streams_span_events() {
+        let (server, svc) = test_server();
+        let mut sub = Client::connect(&server.addr.to_string()).unwrap();
+        sub.set_read_timeout(Duration::from_secs(5)).unwrap();
+        let ack = sub.subscribe().unwrap();
+        assert_eq!(ack.get("ok").unwrap().as_bool(), Some(true));
+
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        let r = c
+            .sample(&SampleRequest {
+                n: 1,
+                steps: 5,
+                seed: 9,
+                trace_id: Some(4242),
+                return_samples: false,
+                ..Default::default()
+            })
+            .unwrap();
+        assert!(r.ok, "{:?}", r.error);
+
+        // The request's span events stream back as NDJSON; collect until
+        // the respond-stage span for our trace id shows up.
+        let mut saw_respond = false;
+        for _ in 0..64 {
+            let ev = sub.read_event().unwrap().expect("stream open");
+            assert_eq!(ev.get("event").and_then(Value::as_str), Some("span"));
+            if ev.get("trace_id").and_then(Value::as_f64) == Some(4242.0)
+                && ev.get("stage").and_then(Value::as_str) == Some("respond")
+            {
+                saw_respond = true;
+                break;
+            }
+        }
+        assert!(saw_respond, "respond span for trace 4242 never streamed");
+        drop(sub);
+        server.stop();
+        svc.shutdown();
+    }
+
+    // Satellite: `connections_open` must return to zero however the
+    // connection dies — clean close, garbage then close, close mid-line,
+    // or a subscriber hangup.
+    #[test]
+    fn connection_gauge_survives_failing_connection_churn() {
+        let (server, svc) = test_server();
+        let addr = server.addr.to_string();
+        for i in 0..12 {
+            let mut s = std::net::TcpStream::connect(&addr).unwrap();
+            match i % 4 {
+                0 => {} // connect and immediately close
+                1 => {
+                    // Garbage line (error reply), then close without reading.
+                    s.write_all(b"{not json\n").unwrap();
+                }
+                2 => {
+                    // Half a line, no newline: the read loop must not hang.
+                    s.write_all(b"{\"op\":\"pi").unwrap();
+                }
+                _ => {
+                    // Subscribe, then vanish mid-stream.
+                    s.write_all(b"{\"op\":\"subscribe\"}\n").unwrap();
+                    let mut one = [0u8; 1];
+                    use std::io::Read;
+                    let _ = s.read(&mut one); // wait for the ack to start
+                }
+            }
+            drop(s);
+        }
+        let st = server.frontend_stats();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while (st.connections_total.load(Ordering::Relaxed) < 12
+            || st.connections_open.load(Ordering::Relaxed) > 0)
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(st.connections_total.load(Ordering::Relaxed), 12);
+        assert_eq!(
+            st.connections_open.load(Ordering::Relaxed),
+            0,
+            "every exit path must decrement the gauge"
+        );
+        server.stop();
         svc.shutdown();
     }
 

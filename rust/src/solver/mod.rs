@@ -45,7 +45,7 @@ pub use method::{Method, UniPcCoeffs};
 pub use plan::{
     plan_key, sample_batch_with_plan, sample_batch_with_plan_observed, sample_with_plan,
     sample_with_plan_observed, BatchWorkspace, CompileStep, PlannedStep, SamplePlan, StepCx,
-    StepObserver, StepOp, StepWorkspace,
+    StepHealth, StepObserver, StepOp, StepWorkspace,
 };
 pub use runner::{sample, sample_batch, sample_unplanned, SampleOptions, SampleResult};
 pub use thresholding::DynamicThresholding;

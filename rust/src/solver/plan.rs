@@ -1126,9 +1126,69 @@ impl SamplePlan {
 /// the executor uses to combine history outputs without heap traffic.
 const MAX_COMB: usize = 8;
 
+/// Per-step numerical-health signal handed to a [`StepObserver`].
+///
+/// The UniC corrector reuses the model evaluation the *next* predictor
+/// step needs (§3.2 of the paper), so the relative predictor→corrector
+/// delta ‖x̃ᶜ − x̃ᵖ‖/‖x̃ᶜ‖ is a **zero-extra-NFE local error estimate** —
+/// the same signal DC-Solver exploits for dynamic compensation and
+/// DPM-Solver bounds analytically for its order claims. On corrector-less
+/// steps there is nothing to compare, so `corrector_delta` is `None`.
+///
+/// Computing the payload costs two passes over the state tensor per step,
+/// so executors only do it when [`StepObserver::wants_health`] says the
+/// observer will look at it; otherwise they pass [`StepHealth::default`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepHealth {
+    /// ‖x̃ᶜ − x̃ᵖ‖ / ‖x̃ᶜ‖ for a corrected step; `None` on corrector-less
+    /// steps, on non-finite states, and when health was not requested.
+    pub corrector_delta: Option<f64>,
+    /// Whether every element of the post-step state is finite. `true` when
+    /// health was not requested (the unobserved paths assert nothing).
+    pub finite: bool,
+}
+
+impl Default for StepHealth {
+    fn default() -> Self {
+        StepHealth { corrector_delta: None, finite: true }
+    }
+}
+
+/// Scan the post-step state once: finiteness plus, when the predictor
+/// state is supplied, the relative corrector delta — fused into a single
+/// pass pair so the observed path touches each element at most twice and
+/// never allocates.
+fn step_health(corrected: &Tensor, predicted: Option<&Tensor>) -> StepHealth {
+    let data = corrected.data();
+    match predicted {
+        Some(p) => {
+            let mut finite = true;
+            let (mut num, mut den) = (0.0f64, 0.0f64);
+            for (a, b) in data.iter().zip(p.data()) {
+                finite &= a.is_finite();
+                let d = a - b;
+                num += d * d;
+                den += a * a;
+            }
+            let delta = if den > 0.0 { (num / den).sqrt() } else { 0.0 };
+            StepHealth {
+                corrector_delta: (finite && delta.is_finite()).then_some(delta),
+                finite,
+            }
+        }
+        None => StepHealth {
+            corrector_delta: None,
+            finite: data.iter().all(|v| v.is_finite()),
+        },
+    }
+}
+
 /// Per-step hook for the plan executors, called once after each planned
 /// step completes (predictor, optional corrector, and any lookahead model
-/// evaluation included). `k` is the step index into `plan.steps`.
+/// evaluation included). `k` is the step index into `plan.steps`;
+/// `health` carries the step's numerical-health payload when the observer
+/// opted in via [`StepObserver::wants_health`], and
+/// [`StepHealth::default`] otherwise.
 ///
 /// The executor stays timing-agnostic: an observer that wants wall-clock
 /// attribution takes its own marks between calls (see
@@ -1137,7 +1197,14 @@ const MAX_COMB: usize = 8;
 /// solver-kernel time). The hook is behind an `Option` so the unobserved
 /// paths pay one branch per step.
 pub trait StepObserver {
-    fn on_step(&mut self, k: usize);
+    fn on_step(&mut self, k: usize, health: &StepHealth);
+
+    /// Whether the executor should compute the [`StepHealth`] payload
+    /// (two extra passes over the state per step). Defaults to `false` so
+    /// purely timing-oriented observers stay free.
+    fn wants_health(&self) -> bool {
+        false
+    }
 }
 
 /// Drive a full run from the plan, mutating `x` in place. Shared by the
@@ -1162,8 +1229,9 @@ fn execute_plan(
     let n = plan.steps.len();
     for k in 0..n {
         let sp = &plan.steps[k];
+        let corrected = sp.corrector.is_some();
         plan.predict_into(k, &hist, x, ws);
-        if sp.corrector.is_some() {
+        if corrected {
             let m_t = ev.eval(&ws.pred, sp.t);
             plan.correct_into(k, &hist, &m_t, ws, x);
             let m_buf = if plan.oracle { ev.eval(x, sp.t) } else { m_t };
@@ -1179,7 +1247,15 @@ fn execute_plan(
             tr.push((sp.t, x.clone()));
         }
         if let Some(o) = obs.as_deref_mut() {
-            o.on_step(k);
+            // On a corrected step `x` holds x̃ᶜ and `ws.pred` still holds
+            // the predictor state x̃ᵖ (correct_into reads it but writes only
+            // lin/d/res), so the delta costs no extra storage.
+            let health = if o.wants_health() {
+                step_health(x, corrected.then_some(&ws.pred))
+            } else {
+                StepHealth::default()
+            };
+            o.on_step(k, &health);
         }
     }
     ev.nfe()
@@ -1228,7 +1304,8 @@ fn execute_singlestep_plan(
         }
 
         let last = k + 1 == n;
-        if sp.corrector.is_some() {
+        let corrected = sp.corrector.is_some();
+        if corrected {
             let m_t = ev.eval(&ws.pred, sp.t);
             plan.correct_into(k, &hist, &m_t, ws, x);
             let m_next = if plan.oracle { ev.eval(x, sp.t) } else { m_t };
@@ -1246,7 +1323,12 @@ fn execute_singlestep_plan(
             tr.push((sp.t, x.clone()));
         }
         if let Some(o) = obs.as_deref_mut() {
-            o.on_step(k);
+            let health = if o.wants_health() {
+                step_health(x, corrected.then_some(&ws.pred))
+            } else {
+                StepHealth::default()
+            };
+            o.on_step(k, &health);
         }
     }
     ev.nfe()

@@ -56,6 +56,17 @@ impl LatencyDigest {
         self.samples_us[rank]
     }
 
+    /// The raw samples in canonical (sorted) order — the merge property
+    /// tests fingerprint digests with this, and the Prometheus summary
+    /// exposition derives its exact `_sum` from it.
+    pub fn samples_sorted(&mut self) -> &[u64] {
+        if !self.sorted {
+            self.samples_us.sort_unstable();
+            self.sorted = true;
+        }
+        &self.samples_us
+    }
+
     /// "p50/p95/p99 (mean) over n" one-liner for logs.
     pub fn summary(&mut self) -> String {
         let n = self.count();

@@ -1,0 +1,1215 @@
+//! The continuous telemetry plane: always-on observability for the
+//! sharded coordinator, complementing the per-request forensics in
+//! [`crate::trace`].
+//!
+//! Four pillars:
+//!
+//! * **Windowed time-series metrics** — [`WindowStore`]: a fixed-slot ring
+//!   of per-second buckets (60×1s) plus a per-minute rollup ring (60×1m)
+//!   over completions, failures-by-kind, batch sizes, queue depth, steals,
+//!   and a fixed-bucket e2e latency histogram. Slots are keyed by the
+//!   *absolute* second (or minute) they cover, so cross-shard
+//!   [`WindowStore::merge`] is lossless: two slots at the same ring index
+//!   either cover the same instant (counters sum exactly) or differ by a
+//!   full ring span — and the older one is outside every window the store
+//!   can answer, so dropping it loses nothing a query could see. Exposed
+//!   on the wire as `{"op":"stats","window":"1m"}`.
+//! * **Prometheus text exposition** — [`PromWriter`] renders every
+//!   counter/gauge/histogram in the standard text format (`# HELP` /
+//!   `# TYPE` lines) for the `{"op":"metrics"}` op and `serve
+//!   --metrics-out`; [`parse_exposition`] is the round-trip validator the
+//!   format test drives.
+//! * **Push-based event subscription** — [`EventHub`]: bounded
+//!   per-subscriber queues of [`TelemetryEvent`]s published at span-flush
+//!   time. Publishing never blocks workers and never allocates: when no
+//!   subscriber is registered it is a single relaxed atomic load, and a
+//!   full queue counts the miss in `sub_dropped` instead of growing. Every
+//!   span recorded while a subscription is live is therefore delivered
+//!   exactly once or counted dropped — closing the ring-wrap blind spot of
+//!   the pull-only `{"op":"trace"}` op.
+//! * **SLO burn-rate monitors + solver numerical health** —
+//!   [`BurnRateMonitor`] evaluates config-declared per-failure-kind error
+//!   budgets (e.g. `deadline_exceeded<0.1%/5m`) against the windowed
+//!   counters and emits at most one `slo_breach` event per evaluation
+//!   window on the push channel. [`HealthAccum`] + [`HealthSpans`] feed on
+//!   the executor's [`StepHealth`] payload — the predictor→corrector
+//!   relative delta is a zero-extra-NFE local error estimate because UniC
+//!   reuses the current model evaluation (§3.2 of the paper) — recording
+//!   per-run delta norms and non-finite provenance (first bad step).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::FailureKind;
+use crate::json::Value;
+use crate::solver::{StepHealth, StepObserver};
+use crate::trace::{event_json, SpanEvent, StepSpans};
+
+/// Slots per ring: the seconds ring covers the trailing 60 s, the minutes
+/// ring the trailing 60 min.
+pub const WINDOW_SLOTS: usize = 60;
+
+/// Upper `le` bounds (µs) of the windowed e2e latency histogram; the
+/// eighth bucket is `+Inf`. Powers of four from 1 ms.
+pub const E2E_LE_US: [u64; 7] =
+    [1_000, 4_000, 16_000, 64_000, 256_000, 1_024_000, 4_096_000];
+
+fn e2e_bucket(us: u64) -> usize {
+    E2E_LE_US.iter().position(|&le| us <= le).unwrap_or(E2E_LE_US.len())
+}
+
+/// One fixed time bucket of windowed counters, keyed by the absolute
+/// second (seconds ring) or minute (minutes ring) it covers. An all-zero
+/// slot is indistinguishable from "no activity at epoch 0", which is
+/// exactly what it means — so empty needs no sentinel.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowSlot {
+    /// Absolute slot index on the service clock, in this ring's resolution.
+    pub epoch: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub failures_by_kind: [u64; 6],
+    pub samples_out: u64,
+    pub nfe_total: u64,
+    pub batched_runs: u64,
+    pub batch_members: u64,
+    pub steals: u64,
+    pub depth_sum: u64,
+    pub depth_obs: u64,
+    pub e2e_sum_us: u64,
+    pub e2e_max_us: u64,
+    pub e2e_hist: [u64; 8],
+}
+
+impl WindowSlot {
+    fn accumulate(&mut self, other: &WindowSlot) {
+        self.completed += other.completed;
+        self.failed += other.failed;
+        for (a, b) in self.failures_by_kind.iter_mut().zip(&other.failures_by_kind) {
+            *a += b;
+        }
+        self.samples_out += other.samples_out;
+        self.nfe_total += other.nfe_total;
+        self.batched_runs += other.batched_runs;
+        self.batch_members += other.batch_members;
+        self.steals += other.steals;
+        self.depth_sum += other.depth_sum;
+        self.depth_obs += other.depth_obs;
+        self.e2e_sum_us += other.e2e_sum_us;
+        self.e2e_max_us = self.e2e_max_us.max(other.e2e_max_us);
+        for (a, b) in self.e2e_hist.iter_mut().zip(&other.e2e_hist) {
+            *a += b;
+        }
+    }
+}
+
+/// The windowed time-series store: 60 one-second slots plus a 60-slot
+/// per-minute rollup, all fixed-size arrays — recording and querying never
+/// allocate (the counting-allocator proof in `tests/plan_alloc.rs` pins
+/// this). Timestamps are explicit (`now_s` = whole seconds on the service
+/// clock) so deterministic replays drive synthetic time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WindowStore {
+    pub secs: [WindowSlot; WINDOW_SLOTS],
+    pub mins: [WindowSlot; WINDOW_SLOTS],
+}
+
+impl Default for WindowStore {
+    fn default() -> Self {
+        WindowStore {
+            secs: [WindowSlot::default(); WINDOW_SLOTS],
+            mins: [WindowSlot::default(); WINDOW_SLOTS],
+        }
+    }
+}
+
+fn ring_slot(ring: &mut [WindowSlot; WINDOW_SLOTS], epoch: u64) -> &mut WindowSlot {
+    let s = &mut ring[(epoch % WINDOW_SLOTS as u64) as usize];
+    if s.epoch != epoch {
+        // The slot last covered an instant a full ring span ago (or is
+        // fresh): recycle it for the current epoch.
+        *s = WindowSlot { epoch, ..WindowSlot::default() };
+    }
+    s
+}
+
+impl WindowStore {
+    fn both(&mut self, now_s: u64, f: impl Fn(&mut WindowSlot)) {
+        f(ring_slot(&mut self.secs, now_s));
+        f(ring_slot(&mut self.mins, now_s / 60));
+    }
+
+    pub fn record_completion(&mut self, now_s: u64, n_samples: usize, nfe: usize, e2e_us: u64) {
+        self.both(now_s, |s| {
+            s.completed += 1;
+            s.samples_out += n_samples as u64;
+            s.nfe_total += nfe as u64;
+            s.e2e_sum_us += e2e_us;
+            s.e2e_max_us = s.e2e_max_us.max(e2e_us);
+            s.e2e_hist[e2e_bucket(e2e_us)] += 1;
+        });
+    }
+
+    pub fn record_failure(&mut self, now_s: u64, kind: FailureKind) {
+        self.both(now_s, |s| {
+            s.failed += 1;
+            s.failures_by_kind[kind.index()] += 1;
+        });
+    }
+
+    pub fn record_batch(&mut self, now_s: u64, members: usize) {
+        self.both(now_s, |s| {
+            s.batched_runs += 1;
+            s.batch_members += members as u64;
+        });
+    }
+
+    pub fn record_depth(&mut self, now_s: u64, depth: usize) {
+        self.both(now_s, |s| {
+            s.depth_sum += depth as u64;
+            s.depth_obs += 1;
+        });
+    }
+
+    pub fn record_steal(&mut self, now_s: u64) {
+        self.both(now_s, |s| s.steals += 1);
+    }
+
+    /// Lossless cross-shard merge. Per ring index: equal epochs cover the
+    /// same instant, so counters sum exactly; unequal epochs differ by ≥
+    /// one full ring span, so the older slot is outside every answerable
+    /// window and keeping the newer one drops nothing a query could see.
+    /// Commutative and associative (sum on equal epochs, max-epoch-wins
+    /// otherwise) — the merge property test exercises all three laws.
+    pub fn merge(&mut self, other: &WindowStore) {
+        for (mine, theirs) in self
+            .secs
+            .iter_mut()
+            .chain(self.mins.iter_mut())
+            .zip(other.secs.iter().chain(other.mins.iter()))
+        {
+            if theirs.epoch == mine.epoch {
+                mine.accumulate(theirs);
+            } else if theirs.epoch > mine.epoch {
+                *mine = *theirs;
+            }
+        }
+    }
+
+    /// Sum every slot covering `(now_s − window_s, now_s]`. Windows of up
+    /// to 60 s read the seconds ring at full resolution; longer windows
+    /// (≤ 3600 s) read the minute rollup.
+    pub fn totals(&self, now_s: u64, window_s: u64) -> WindowTotals {
+        let mut t = WindowTotals { window_s, ..WindowTotals::default() };
+        // The lower bound is signed: early in the service's life the window
+        // extends past the epoch (lo < 0), and slot 0 — a real second of
+        // traffic — must still be counted. Saturating at zero would make
+        // the first second invisible whenever `now_s < window_s`.
+        if window_s <= WINDOW_SLOTS as u64 {
+            let lo = now_s as i64 - window_s as i64;
+            for s in &self.secs {
+                if s.epoch as i64 > lo && s.epoch <= now_s {
+                    t.add(s);
+                }
+            }
+        } else {
+            let now_m = now_s / 60;
+            let lo = now_m as i64 - window_s.div_ceil(60) as i64;
+            for s in &self.mins {
+                if s.epoch as i64 > lo && s.epoch <= now_m {
+                    t.add(s);
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Aggregated counters over one query window (cross-shard totals sum with
+/// [`WindowTotals::add_totals`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WindowTotals {
+    pub window_s: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub failures_by_kind: [u64; 6],
+    pub samples_out: u64,
+    pub nfe_total: u64,
+    pub batched_runs: u64,
+    pub batch_members: u64,
+    pub steals: u64,
+    pub depth_sum: u64,
+    pub depth_obs: u64,
+    pub e2e_sum_us: u64,
+    pub e2e_max_us: u64,
+    pub e2e_hist: [u64; 8],
+}
+
+impl WindowTotals {
+    fn add(&mut self, slot: &WindowSlot) {
+        self.completed += slot.completed;
+        self.failed += slot.failed;
+        for (a, b) in self.failures_by_kind.iter_mut().zip(&slot.failures_by_kind) {
+            *a += b;
+        }
+        self.samples_out += slot.samples_out;
+        self.nfe_total += slot.nfe_total;
+        self.batched_runs += slot.batched_runs;
+        self.batch_members += slot.batch_members;
+        self.steals += slot.steals;
+        self.depth_sum += slot.depth_sum;
+        self.depth_obs += slot.depth_obs;
+        self.e2e_sum_us += slot.e2e_sum_us;
+        self.e2e_max_us = self.e2e_max_us.max(slot.e2e_max_us);
+        for (a, b) in self.e2e_hist.iter_mut().zip(&slot.e2e_hist) {
+            *a += b;
+        }
+    }
+
+    /// Sum another shard's totals for the same window into this one.
+    pub fn add_totals(&mut self, other: &WindowTotals) {
+        debug_assert_eq!(self.window_s, other.window_s);
+        let as_slot = WindowSlot {
+            epoch: 0,
+            completed: other.completed,
+            failed: other.failed,
+            failures_by_kind: other.failures_by_kind,
+            samples_out: other.samples_out,
+            nfe_total: other.nfe_total,
+            batched_runs: other.batched_runs,
+            batch_members: other.batch_members,
+            steals: other.steals,
+            depth_sum: other.depth_sum,
+            depth_obs: other.depth_obs,
+            e2e_sum_us: other.e2e_sum_us,
+            e2e_max_us: other.e2e_max_us,
+            e2e_hist: other.e2e_hist,
+        };
+        self.add(&as_slot);
+    }
+
+    /// The `{"op":"stats","window":…}` payload: raw windowed counters plus
+    /// derived per-second rates and means.
+    pub fn json(&self) -> Value {
+        let w = self.window_s.max(1) as f64;
+        let mut pairs = vec![
+            ("window_s", Value::from(self.window_s as f64)),
+            ("completed", Value::from(self.completed as f64)),
+            ("failed", Value::from(self.failed as f64)),
+            ("samples_out", Value::from(self.samples_out as f64)),
+            ("nfe_total", Value::from(self.nfe_total as f64)),
+            ("batched_runs", Value::from(self.batched_runs as f64)),
+            ("batch_members", Value::from(self.batch_members as f64)),
+            ("steals", Value::from(self.steals as f64)),
+            ("completed_per_sec", Value::from(self.completed as f64 / w)),
+            ("failed_per_sec", Value::from(self.failed as f64 / w)),
+            ("samples_per_sec", Value::from(self.samples_out as f64 / w)),
+            (
+                "mean_batch",
+                Value::from(if self.batched_runs > 0 {
+                    self.batch_members as f64 / self.batched_runs as f64
+                } else {
+                    0.0
+                }),
+            ),
+            (
+                "mean_depth",
+                Value::from(if self.depth_obs > 0 {
+                    self.depth_sum as f64 / self.depth_obs as f64
+                } else {
+                    0.0
+                }),
+            ),
+            (
+                "e2e_mean_us",
+                Value::from(if self.completed > 0 {
+                    self.e2e_sum_us as f64 / self.completed as f64
+                } else {
+                    0.0
+                }),
+            ),
+            ("e2e_max_us", Value::from(self.e2e_max_us as f64)),
+            (
+                "e2e_hist",
+                Value::Arr(self.e2e_hist.iter().map(|&c| Value::from(c as f64)).collect()),
+            ),
+        ];
+        for kind in FailureKind::ALL {
+            pairs.push((
+                kind.as_str(),
+                Value::from(self.failures_by_kind[kind.index()] as f64),
+            ));
+        }
+        Value::obj(pairs)
+    }
+}
+
+/// Parse a window spec into whole seconds: a bare number is seconds, and
+/// `s`/`m`/`h` suffixes scale. Rejects zero, non-numeric input, and
+/// anything past the 1 h horizon the minute ring retains.
+pub fn parse_window(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (digits, scale) = match s.as_bytes().last()? {
+        b's' => (&s[..s.len() - 1], 1u64),
+        b'm' => (&s[..s.len() - 1], 60u64),
+        b'h' => (&s[..s.len() - 1], 3_600u64),
+        _ => (s, 1u64),
+    };
+    let n: u64 = digits.parse().ok()?;
+    let secs = n.checked_mul(scale)?;
+    (secs >= 1 && secs <= 3_600).then_some(secs)
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Incremental writer for the Prometheus text exposition format. Every
+/// family gets its `# HELP` / `# TYPE` preamble exactly once; histogram
+/// emission takes *per-bucket* (non-cumulative) counts and writes the
+/// cumulative `_bucket{le=…}` series, terminal `+Inf` bucket, and
+/// `_count` the format requires.
+#[derive(Default)]
+pub struct PromWriter {
+    buf: String,
+}
+
+fn fmt_value(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        PromWriter::default()
+    }
+
+    fn head(&mut self, name: &str, typ: &str, help: &str) {
+        self.buf.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {typ}\n"));
+    }
+
+    fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.buf.push_str(name);
+        if !labels.is_empty() {
+            self.buf.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.buf.push(',');
+                }
+                self.buf.push_str(&format!("{k}=\"{v}\""));
+            }
+            self.buf.push('}');
+        }
+        self.buf.push(' ');
+        self.buf.push_str(&fmt_value(value));
+        self.buf.push('\n');
+    }
+
+    pub fn counter(&mut self, name: &str, help: &str, value: f64) {
+        self.head(name, "counter", help);
+        self.sample(name, &[], value);
+    }
+
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.head(name, "gauge", help);
+        self.sample(name, &[], value);
+    }
+
+    /// A counter family with one label dimension (e.g. failures by kind).
+    pub fn counter_vec(&mut self, name: &str, help: &str, label: &str, items: &[(&str, f64)]) {
+        self.head(name, "counter", help);
+        for (lv, v) in items {
+            self.sample(name, &[(label, lv)], *v);
+        }
+    }
+
+    /// Histogram from per-bucket counts: `les[i]` bounds bucket `i`, and a
+    /// final overflow bucket (`counts.len() == les.len() + 1`) lands in
+    /// `+Inf`. `sum` is emitted only when the caller tracks it exactly.
+    pub fn histogram(&mut self, name: &str, help: &str, les: &[f64], counts: &[u64], sum: Option<f64>) {
+        debug_assert_eq!(counts.len(), les.len() + 1);
+        self.head(name, "histogram", help);
+        let bucket = format!("{name}_bucket");
+        let mut cum = 0u64;
+        for (le, c) in les.iter().zip(counts) {
+            cum += c;
+            self.sample(&bucket, &[("le", &fmt_value(*le))], cum as f64);
+        }
+        cum += counts[les.len()];
+        self.sample(&bucket, &[("le", "+Inf")], cum as f64);
+        if let Some(s) = sum {
+            self.sample(&format!("{name}_sum"), &[], s);
+        }
+        self.sample(&format!("{name}_count"), &[], cum as f64);
+    }
+
+    /// Summary with precomputed quantiles (the latency digests keep raw
+    /// samples, so these are exact).
+    pub fn summary(
+        &mut self,
+        name: &str,
+        help: &str,
+        quantiles: &[(f64, f64)],
+        sum: f64,
+        count: u64,
+    ) {
+        self.head(name, "summary", help);
+        for (q, v) in quantiles {
+            self.sample(name, &[("quantile", &fmt_value(*q))], *v);
+        }
+        self.sample(&format!("{name}_sum"), &[], sum);
+        self.sample(&format!("{name}_count"), &[], count as f64);
+    }
+
+    pub fn finish(self) -> String {
+        self.buf
+    }
+}
+
+/// One parsed sample line of an exposition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// A parsed exposition: family metadata plus every sample, in order.
+#[derive(Clone, Debug, Default)]
+pub struct PromParsed {
+    pub types: std::collections::BTreeMap<String, String>,
+    pub helps: std::collections::BTreeMap<String, String>,
+    pub samples: Vec<PromSample>,
+}
+
+impl PromParsed {
+    /// Value of the sample with this name and exact label set.
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| {
+                s.name == name
+                    && s.labels.len() == labels.len()
+                    && s.labels
+                        .iter()
+                        .zip(labels)
+                        .all(|((k, v), (wk, wv))| k == wk && v == wv)
+            })
+            .map(|s| s.value)
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// The family a sample belongs to: `_bucket`/`_sum`/`_count` suffixes fold
+/// into their histogram or summary base metric when one is declared.
+fn family_of<'a>(name: &'a str, types: &std::collections::BTreeMap<String, String>) -> &'a str {
+    for (suffix, kinds) in [
+        ("_bucket", &["histogram"][..]),
+        ("_sum", &["histogram", "summary"][..]),
+        ("_count", &["histogram", "summary"][..]),
+    ] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if types.get(base).is_some_and(|t| kinds.contains(&t.as_str())) {
+                return base;
+            }
+        }
+    }
+    name
+}
+
+/// Strict parser/validator for the Prometheus text format — the test-side
+/// half of the exposition round-trip. Rejects malformed lines, samples
+/// without a preceding `# TYPE`, unparseable values, duplicate label sets,
+/// and histograms whose `_bucket` series is non-cumulative or missing the
+/// terminal `+Inf` bucket.
+pub fn parse_exposition(text: &str) -> Result<PromParsed, String> {
+    let mut out = PromParsed::default();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let (kw, rest) = rest.split_once(' ').ok_or(format!("line {ln}: bare comment keyword"))?;
+            let (name, payload) = rest.split_once(' ').unwrap_or((rest, ""));
+            if !valid_metric_name(name) {
+                return Err(format!("line {ln}: invalid metric name {name:?}"));
+            }
+            match kw {
+                "HELP" => {
+                    out.helps.insert(name.to_string(), payload.to_string());
+                }
+                "TYPE" => {
+                    if !["counter", "gauge", "histogram", "summary", "untyped"]
+                        .contains(&payload)
+                    {
+                        return Err(format!("line {ln}: unknown type {payload:?}"));
+                    }
+                    if out.types.contains_key(name) {
+                        return Err(format!("line {ln}: duplicate TYPE for {name}"));
+                    }
+                    out.types.insert(name.to_string(), payload.to_string());
+                }
+                other => return Err(format!("line {ln}: unknown comment keyword {other:?}")),
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+        // Sample line: name[{labels}] value
+        let (head, value) = line
+            .rsplit_once(' ')
+            .ok_or(format!("line {ln}: sample line without value"))?;
+        let value: f64 = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            v => v.parse().map_err(|_| format!("line {ln}: bad value {v:?}"))?,
+        };
+        let (name, labels) = match head.split_once('{') {
+            None => (head, Vec::new()),
+            Some((n, rest)) => {
+                let body = rest
+                    .strip_suffix('}')
+                    .ok_or(format!("line {ln}: unterminated label set"))?;
+                let mut labels = Vec::new();
+                for pair in body.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) =
+                        pair.split_once('=').ok_or(format!("line {ln}: bad label {pair:?}"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or(format!("line {ln}: unquoted label value {v:?}"))?;
+                    labels.push((k.to_string(), v.to_string()));
+                }
+                (n, labels)
+            }
+        };
+        if !valid_metric_name(name) {
+            return Err(format!("line {ln}: invalid sample name {name:?}"));
+        }
+        let family = family_of(name, &out.types);
+        if !out.types.contains_key(family) {
+            return Err(format!("line {ln}: sample {name} has no preceding # TYPE"));
+        }
+        if out.samples.iter().any(|s| s.name == name && s.labels == labels) {
+            return Err(format!("line {ln}: duplicate sample {name} {labels:?}"));
+        }
+        out.samples.push(PromSample {
+            name: name.to_string(),
+            labels,
+            value,
+        });
+    }
+    // Histogram structural checks: cumulative buckets ending in +Inf that
+    // agree with _count.
+    let histos: Vec<String> = out
+        .types
+        .iter()
+        .filter(|(_, t)| t.as_str() == "histogram")
+        .map(|(n, _)| n.clone())
+        .collect();
+    for base in histos {
+        let bucket = format!("{base}_bucket");
+        let series: Vec<&PromSample> =
+            out.samples.iter().filter(|s| s.name == bucket).collect();
+        if series.is_empty() {
+            return Err(format!("histogram {base} has no _bucket series"));
+        }
+        let mut prev = 0.0f64;
+        let mut saw_inf = false;
+        for s in &series {
+            let le = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .map(|(_, v)| v.clone())
+                .ok_or(format!("histogram {base} bucket without le label"))?;
+            if s.value < prev {
+                return Err(format!("histogram {base} buckets not cumulative at le={le}"));
+            }
+            prev = s.value;
+            saw_inf |= le == "+Inf";
+        }
+        if !saw_inf {
+            return Err(format!("histogram {base} missing +Inf bucket"));
+        }
+        if let Some(count) = out.value(&format!("{base}_count"), &[]) {
+            if count != prev {
+                return Err(format!("histogram {base}: _count {count} != +Inf bucket {prev}"));
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Push-based event subscription
+// ---------------------------------------------------------------------------
+
+/// One event on the push channel. `Copy` so per-subscriber queues hold
+/// events by value in preallocated storage — publishing never allocates.
+#[derive(Clone, Copy, Debug)]
+pub enum TelemetryEvent {
+    /// A span event, published at the same moment it is recorded into a
+    /// shard's trace ring.
+    Span(SpanEvent),
+    /// An SLO error-budget burn: `failed`/`total` of the trailing
+    /// `window_s` seconds crossed `budget_ppm` during evaluation window
+    /// `window_id` (= `now_s / window_s`; at most one event per id).
+    SloBreach {
+        kind: FailureKind,
+        window_s: u64,
+        window_id: u64,
+        failed: u64,
+        total: u64,
+        budget_ppm: u64,
+    },
+}
+
+/// The NDJSON frame for one pushed event.
+pub fn event_line(ev: &TelemetryEvent) -> Value {
+    match ev {
+        TelemetryEvent::Span(sp) => {
+            let mut v = event_json(sp);
+            if let Value::Obj(m) = &mut v {
+                m.insert("event".into(), Value::from("span"));
+                m.insert("trace_id".into(), Value::from(sp.trace_id as f64));
+            }
+            v
+        }
+        TelemetryEvent::SloBreach { kind, window_s, window_id, failed, total, budget_ppm } => {
+            Value::obj(vec![
+                ("event", Value::from("slo_breach")),
+                ("kind", Value::from(kind.as_str())),
+                ("window_s", Value::from(*window_s as f64)),
+                ("window_id", Value::from(*window_id as f64)),
+                ("failed", Value::from(*failed as f64)),
+                ("total", Value::from(*total as f64)),
+                ("budget_ppm", Value::from(*budget_ppm as f64)),
+            ])
+        }
+    }
+}
+
+/// One live subscription: a bounded queue of events drained by the
+/// subscriber's connection thread.
+pub struct Subscription {
+    queue: Mutex<VecDeque<TelemetryEvent>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl Subscription {
+    /// Move every queued event into `out` without blocking.
+    pub fn drain_into(&self, out: &mut Vec<TelemetryEvent>) {
+        let mut q = self.queue.lock().unwrap();
+        out.extend(q.drain(..));
+    }
+
+    /// Wait up to `timeout` for at least one event, then drain. Returns
+    /// whether anything was drained.
+    pub fn wait_drain_into(&self, out: &mut Vec<TelemetryEvent>, timeout: Duration) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+        }
+        let any = !q.is_empty();
+        out.extend(q.drain(..));
+        any
+    }
+}
+
+/// The publish/subscribe hub. Workers publish at span-flush time; the only
+/// cost with no subscriber registered is one relaxed atomic load. Full
+/// queues drop (counted in [`EventHub::dropped`], the wire `sub_dropped`)
+/// rather than block or grow, so a slow subscriber can never stall a
+/// worker or break the steady-state allocation discipline.
+#[derive(Default)]
+pub struct EventHub {
+    active: AtomicUsize,
+    dropped: AtomicU64,
+    subs: Mutex<Vec<Arc<Subscription>>>,
+}
+
+impl EventHub {
+    pub fn new() -> Self {
+        EventHub::default()
+    }
+
+    /// Register a subscriber with a queue bounded at `cap` events
+    /// (preallocated here, on the subscriber's thread).
+    pub fn subscribe(&self, cap: usize) -> Arc<Subscription> {
+        let cap = cap.max(1);
+        let sub = Arc::new(Subscription {
+            queue: Mutex::new(VecDeque::with_capacity(cap)),
+            cv: Condvar::new(),
+            cap,
+        });
+        let mut subs = self.subs.lock().unwrap();
+        subs.push(Arc::clone(&sub));
+        self.active.store(subs.len(), Ordering::Release);
+        sub
+    }
+
+    /// Deregister; pending undrained events are discarded (the subscriber
+    /// chose to leave — they are not counted dropped).
+    pub fn unsubscribe(&self, sub: &Arc<Subscription>) {
+        let mut subs = self.subs.lock().unwrap();
+        subs.retain(|s| !Arc::ptr_eq(s, sub));
+        self.active.store(subs.len(), Ordering::Release);
+    }
+
+    /// Live subscriber count.
+    pub fn active(&self) -> usize {
+        self.active.load(Ordering::Acquire)
+    }
+
+    /// Missed deliveries: events a full subscriber queue could not accept,
+    /// counted per (event, subscriber). `delivered + dropped` equals the
+    /// events published while subscribed — nothing is ever lost silently.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Publish one event to every subscriber.
+    pub fn publish(&self, ev: TelemetryEvent) {
+        self.publish_batch(std::slice::from_ref(&ev), |e| *e);
+    }
+
+    /// Publish every span in `spans` (the flush-time batch form: one queue
+    /// lock per subscriber for the whole batch).
+    pub fn publish_spans(&self, spans: &[SpanEvent]) {
+        self.publish_batch(spans, |s| TelemetryEvent::Span(*s));
+    }
+
+    fn publish_batch<T>(&self, items: &[T], wrap: impl Fn(&T) -> TelemetryEvent) {
+        if items.is_empty() || self.active.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let subs = self.subs.lock().unwrap();
+        for sub in subs.iter() {
+            let mut q = sub.queue.lock().unwrap();
+            for item in items {
+                if q.len() >= sub.cap {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    q.push_back(wrap(item));
+                }
+            }
+            drop(q);
+            sub.cv.notify_one();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SLO burn-rate monitors
+// ---------------------------------------------------------------------------
+
+/// A declared service-level objective: `kind` failures must stay under
+/// `budget_ppm` parts-per-million of windowed traffic over any trailing
+/// `window_s` seconds. Declared in config as e.g. `deadline_exceeded<0.1%/5m`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SloSpec {
+    pub kind: FailureKind,
+    pub budget_ppm: u64,
+    pub window_s: u64,
+}
+
+impl SloSpec {
+    /// Parse `<kind><<percent>%/<window>`, e.g. `deadline_exceeded<0.1%/5m`.
+    pub fn parse(s: &str) -> Result<SloSpec, String> {
+        let (kind, rest) = s
+            .split_once('<')
+            .ok_or_else(|| format!("SLO {s:?}: expected <kind><<budget>%/<window>"))?;
+        let kind = FailureKind::parse(kind.trim())
+            .ok_or_else(|| format!("SLO {s:?}: unknown failure kind {kind:?}"))?;
+        let (pct, window) = rest
+            .split_once('/')
+            .ok_or_else(|| format!("SLO {s:?}: missing /<window>"))?;
+        let pct = pct
+            .trim()
+            .strip_suffix('%')
+            .ok_or_else(|| format!("SLO {s:?}: budget must end in %"))?;
+        let pct: f64 = pct
+            .parse()
+            .map_err(|_| format!("SLO {s:?}: bad budget percent {pct:?}"))?;
+        if !(0.0..=100.0).contains(&pct) {
+            return Err(format!("SLO {s:?}: budget must be within 0..=100%"));
+        }
+        let window_s = parse_window(window)
+            .ok_or_else(|| format!("SLO {s:?}: bad window {window:?} (1s..=1h)"))?;
+        Ok(SloSpec { kind, budget_ppm: (pct * 10_000.0).round() as u64, window_s })
+    }
+}
+
+impl std::fmt::Display for SloSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}<{}%/{}s",
+            self.kind.as_str(),
+            self.budget_ppm as f64 / 10_000.0,
+            self.window_s
+        )
+    }
+}
+
+/// Sliding error-budget evaluator over the windowed counters. Time is an
+/// explicit parameter (`now_s` on the service clock), so tests drive it
+/// deterministically; the serving layer ticks it from a monitor thread.
+/// Emits **at most one breach per evaluation window** per SLO — window id
+/// `now_s / window_s` — so a sustained burn alerts once per window instead
+/// of once per tick.
+pub struct BurnRateMonitor {
+    specs: Vec<SloSpec>,
+    last_window: Vec<Option<u64>>,
+}
+
+impl BurnRateMonitor {
+    pub fn new(specs: Vec<SloSpec>) -> Self {
+        let last_window = vec![None; specs.len()];
+        BurnRateMonitor { specs, last_window }
+    }
+
+    pub fn specs(&self) -> &[SloSpec] {
+        &self.specs
+    }
+
+    /// Evaluate every SLO at `now_s`; `totals` supplies the cross-shard
+    /// windowed counters for a requested window. Breaches append to `out`.
+    pub fn evaluate(
+        &mut self,
+        now_s: u64,
+        mut totals: impl FnMut(u64) -> WindowTotals,
+        out: &mut Vec<TelemetryEvent>,
+    ) {
+        for (i, spec) in self.specs.iter().enumerate() {
+            let t = totals(spec.window_s);
+            let total = t.completed + t.failed;
+            let failed = t.failures_by_kind[spec.kind.index()];
+            // Burn test: failed/total >= budget (ppm math keeps it exact in
+            // integers). A zero budget means any failure breaches.
+            if total == 0 || failed == 0 || failed * 1_000_000 < spec.budget_ppm * total {
+                continue;
+            }
+            let window_id = now_s / spec.window_s;
+            if self.last_window[i] == Some(window_id) {
+                continue;
+            }
+            self.last_window[i] = Some(window_id);
+            out.push(TelemetryEvent::SloBreach {
+                kind: spec.kind,
+                window_s: spec.window_s,
+                window_id,
+                failed,
+                total,
+                budget_ppm: spec.budget_ppm,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Solver numerical health
+// ---------------------------------------------------------------------------
+
+/// Per-run accumulator of the executor's [`StepHealth`] stream: corrector
+/// delta-norm statistics plus non-finite provenance (the first step index
+/// whose state went bad). Plain `Copy` data, reset per run — a worker
+/// holds one across its lifetime so the observed path never allocates.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HealthAccum {
+    pub steps: u32,
+    pub corrected_steps: u32,
+    pub delta_sum: f64,
+    pub delta_max: f64,
+    pub first_nonfinite: Option<u32>,
+}
+
+impl HealthAccum {
+    pub fn reset(&mut self) {
+        *self = HealthAccum::default();
+    }
+
+    pub fn observe(&mut self, k: usize, h: &StepHealth) {
+        self.steps += 1;
+        if let Some(d) = h.corrector_delta {
+            self.corrected_steps += 1;
+            self.delta_sum += d;
+            self.delta_max = self.delta_max.max(d);
+        }
+        if !h.finite && self.first_nonfinite.is_none() {
+            self.first_nonfinite = Some(k as u32);
+        }
+    }
+
+    /// Mean relative corrector delta across corrected steps, if any.
+    pub fn mean_delta(&self) -> Option<f64> {
+        (self.corrected_steps > 0).then(|| self.delta_sum / self.corrected_steps as f64)
+    }
+}
+
+/// The serving-layer step observer: requests the health payload, feeds the
+/// [`HealthAccum`], and forwards each step to an optional [`StepSpans`]
+/// recorder so one executor pass serves both tracing and health.
+pub struct HealthSpans<'a> {
+    pub spans: Option<StepSpans<'a>>,
+    pub accum: &'a mut HealthAccum,
+}
+
+impl StepObserver for HealthSpans<'_> {
+    fn on_step(&mut self, k: usize, health: &StepHealth) {
+        if let Some(s) = &mut self.spans {
+            s.on_step(k, health);
+        }
+        self.accum.observe(k, health);
+    }
+
+    fn wants_health(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windowed_counters_land_in_the_right_slots() {
+        let mut w = WindowStore::default();
+        w.record_completion(10, 4, 8, 2_000);
+        w.record_completion(11, 2, 8, 10_000);
+        w.record_failure(11, FailureKind::DeadlineExceeded);
+        w.record_batch(10, 3);
+        w.record_depth(10, 5);
+        w.record_steal(12);
+
+        let t = w.totals(12, 3);
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.samples_out, 6);
+        assert_eq!(t.failed, 1);
+        assert_eq!(t.failures_by_kind[FailureKind::DeadlineExceeded.index()], 1);
+        assert_eq!(t.batched_runs, 1);
+        assert_eq!(t.batch_members, 3);
+        assert_eq!(t.steals, 1);
+        assert_eq!(t.e2e_sum_us, 12_000);
+        assert_eq!(t.e2e_max_us, 10_000);
+        // A 2 s window at now=12 covers (10, 12]: second 11's completion
+        // and second 12's steal stay, second 10 has slid past.
+        let t = w.totals(12, 2);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.steals, 1);
+    }
+
+    #[test]
+    fn second_slots_recycle_after_a_full_ring_span() {
+        let mut w = WindowStore::default();
+        w.record_completion(5, 1, 8, 1_000);
+        // Same ring index, one span later: the old slot must be recycled.
+        w.record_completion(65, 1, 8, 1_000);
+        assert_eq!(w.totals(65, 60).completed, 1);
+        // The minute rollup still sees both (minutes 0 and 1).
+        assert_eq!(w.totals(65, 120).completed, 2);
+    }
+
+    #[test]
+    fn window_merge_sums_equal_epochs_and_keeps_newer() {
+        let mut a = WindowStore::default();
+        let mut b = WindowStore::default();
+        a.record_completion(100, 1, 8, 1_000);
+        b.record_completion(100, 1, 8, 3_000);
+        b.record_completion(160, 1, 8, 5_000); // same index as 100, newer
+        a.merge(&b);
+        // Index 40 keeps epoch 160 (the newer second); epoch 100 is a full
+        // ring span stale and outside every answerable window.
+        assert_eq!(a.totals(160, 60).completed, 1);
+        assert_eq!(a.totals(160, 60).e2e_sum_us, 5_000);
+        // The minute ring kept both: minutes 1 (epoch 100) and 2 (epoch 160).
+        assert_eq!(a.totals(160, 120).completed, 3);
+    }
+
+    #[test]
+    fn parse_window_accepts_suffixes_and_rejects_junk() {
+        assert_eq!(parse_window("30"), Some(30));
+        assert_eq!(parse_window("30s"), Some(30));
+        assert_eq!(parse_window("5m"), Some(300));
+        assert_eq!(parse_window("1h"), Some(3_600));
+        assert_eq!(parse_window("0"), None);
+        assert_eq!(parse_window("2h"), None);
+        assert_eq!(parse_window("-5"), None);
+        assert_eq!(parse_window("abc"), None);
+        assert_eq!(parse_window("1.5m"), None);
+    }
+
+    #[test]
+    fn prom_writer_output_round_trips_through_the_parser() {
+        let mut w = PromWriter::new();
+        w.counter("unipc_submitted_total", "Requests admitted.", 42.0);
+        w.gauge("unipc_pending", "Queued jobs.", 3.0);
+        w.counter_vec(
+            "unipc_failures_total",
+            "Failures by kind.",
+            "kind",
+            &[("deadline_exceeded", 2.0), ("queue_full", 1.0)],
+        );
+        w.histogram("unipc_batch_size", "Members per run.", &[1.0, 2.0, 4.0], &[5, 3, 1, 2], None);
+        w.summary("unipc_e2e_seconds", "E2E latency.", &[(0.5, 0.01), (0.99, 0.09)], 1.5, 100);
+        let text = w.finish();
+        let parsed = parse_exposition(&text).expect("rendered exposition must parse");
+        assert_eq!(parsed.value("unipc_submitted_total", &[]), Some(42.0));
+        assert_eq!(parsed.value("unipc_pending", &[]), Some(3.0));
+        assert_eq!(
+            parsed.value("unipc_failures_total", &[("kind", "queue_full")]),
+            Some(1.0)
+        );
+        assert_eq!(parsed.value("unipc_batch_size_bucket", &[("le", "2")]), Some(8.0));
+        assert_eq!(parsed.value("unipc_batch_size_bucket", &[("le", "+Inf")]), Some(11.0));
+        assert_eq!(parsed.value("unipc_batch_size_count", &[]), Some(11.0));
+        assert_eq!(parsed.value("unipc_e2e_seconds", &[("quantile", "0.99")]), Some(0.09));
+        assert_eq!(parsed.types.get("unipc_batch_size").map(String::as_str), Some("histogram"));
+    }
+
+    #[test]
+    fn parser_rejects_structural_violations() {
+        assert!(parse_exposition("no_type_metric 1\n").is_err(), "sample without TYPE");
+        assert!(
+            parse_exposition("# TYPE m counter\nm{x=\"1\" 2\n").is_err(),
+            "unterminated labels"
+        );
+        assert!(parse_exposition("# TYPE m counter\nm pancake\n").is_err(), "bad value");
+        assert!(
+            parse_exposition("# TYPE m counter\nm 1\nm 2\n").is_err(),
+            "duplicate sample"
+        );
+        let non_cumulative = "# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"+Inf\"} 3\n";
+        assert!(parse_exposition(non_cumulative).is_err(), "non-cumulative buckets");
+        let no_inf = "# TYPE h histogram\nh_bucket{le=\"1\"} 5\n";
+        assert!(parse_exposition(no_inf).is_err(), "missing +Inf bucket");
+    }
+
+    #[test]
+    fn hub_counts_overflow_and_delivers_the_rest() {
+        let hub = EventHub::new();
+        let sub = hub.subscribe(4);
+        assert_eq!(hub.active(), 1);
+        let spans: Vec<SpanEvent> = (0..6)
+            .map(|i| SpanEvent { trace_id: i as u64 + 1, ..Default::default() })
+            .collect();
+        hub.publish_spans(&spans);
+        let mut got = Vec::new();
+        sub.drain_into(&mut got);
+        assert_eq!(got.len(), 4, "queue bounded at cap");
+        assert_eq!(hub.dropped(), 2, "overflow counted, not silently lost");
+        // Drained capacity is reusable.
+        hub.publish_spans(&spans[..2]);
+        sub.drain_into(&mut got);
+        assert_eq!(got.len(), 6);
+        assert_eq!(hub.dropped(), 2);
+        hub.unsubscribe(&sub);
+        assert_eq!(hub.active(), 0);
+        hub.publish_spans(&spans);
+        assert_eq!(hub.dropped(), 2, "publishing with no subscriber is a no-op");
+    }
+
+    #[test]
+    fn slo_spec_parses_and_displays() {
+        let s = SloSpec::parse("deadline_exceeded<0.1%/5m").unwrap();
+        assert_eq!(s.kind, FailureKind::DeadlineExceeded);
+        assert_eq!(s.budget_ppm, 1_000);
+        assert_eq!(s.window_s, 300);
+        assert_eq!(s.to_string(), "deadline_exceeded<0.1%/300s");
+        assert!(SloSpec::parse("bogus_kind<1%/5m").is_err());
+        assert!(SloSpec::parse("queue_full<1/5m").is_err(), "missing %");
+        assert!(SloSpec::parse("queue_full<1%").is_err(), "missing window");
+        assert!(SloSpec::parse("queue_full<200%/5m").is_err(), "budget > 100%");
+    }
+
+    #[test]
+    fn burn_monitor_emits_once_per_window() {
+        let spec = SloSpec::parse("non_finite_output<1%/10s").unwrap();
+        let mut mon = BurnRateMonitor::new(vec![spec]);
+        let mut w = WindowStore::default();
+        for s in 0..5 {
+            w.record_completion(s, 1, 8, 1_000);
+        }
+        w.record_failure(3, FailureKind::NonFiniteOutput);
+
+        let mut out = Vec::new();
+        // Many ticks inside window id 0: exactly one breach. Start at
+        // now=4 so the trailing 10 s window (−6, 4] holds all five
+        // completions plus the failure when the first evaluation fires.
+        for now in 4..10 {
+            mon.evaluate(now, |ws| w.totals(now, ws), &mut out);
+        }
+        assert_eq!(out.len(), 1);
+        match out[0] {
+            TelemetryEvent::SloBreach { kind, window_id, failed, total, .. } => {
+                assert_eq!(kind, FailureKind::NonFiniteOutput);
+                assert_eq!(window_id, 0);
+                assert_eq!(failed, 1);
+                assert_eq!(total, 6);
+            }
+            _ => panic!("expected a breach"),
+        }
+        // The next evaluation window re-alerts while the burn persists…
+        for now in 10..20 {
+            mon.evaluate(now, |ws| w.totals(now, ws), &mut out);
+        }
+        assert_eq!(out.len(), 2);
+        // …and stays quiet once the failures age out of the window.
+        for now in 20..40 {
+            mon.evaluate(now, |ws| w.totals(now, ws), &mut out);
+        }
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn health_accum_tracks_deltas_and_first_bad_step() {
+        let mut acc = HealthAccum::default();
+        acc.observe(0, &StepHealth { corrector_delta: Some(0.5), finite: true });
+        acc.observe(1, &StepHealth { corrector_delta: Some(0.1), finite: true });
+        acc.observe(2, &StepHealth { corrector_delta: None, finite: false });
+        acc.observe(3, &StepHealth { corrector_delta: None, finite: false });
+        assert_eq!(acc.steps, 4);
+        assert_eq!(acc.corrected_steps, 2);
+        assert!((acc.mean_delta().unwrap() - 0.3).abs() < 1e-12);
+        assert_eq!(acc.delta_max, 0.5);
+        assert_eq!(acc.first_nonfinite, Some(2), "provenance pins the FIRST bad step");
+        acc.reset();
+        assert_eq!(acc.steps, 0);
+        assert_eq!(acc.first_nonfinite, None);
+    }
+
+    #[test]
+    fn event_lines_are_wire_shaped() {
+        let sp = SpanEvent { trace_id: 7, ..Default::default() };
+        let line = event_line(&TelemetryEvent::Span(sp));
+        assert_eq!(line.get("event").and_then(Value::as_str), Some("span"));
+        assert_eq!(line.get("trace_id").and_then(Value::as_f64), Some(7.0));
+        let breach = TelemetryEvent::SloBreach {
+            kind: FailureKind::QueueFull,
+            window_s: 60,
+            window_id: 2,
+            failed: 5,
+            total: 100,
+            budget_ppm: 10_000,
+        };
+        let line = event_line(&breach);
+        assert_eq!(line.get("event").and_then(Value::as_str), Some("slo_breach"));
+        assert_eq!(line.get("kind").and_then(Value::as_str), Some("queue_full"));
+        assert_eq!(line.get("window_id").and_then(Value::as_f64), Some(2.0));
+    }
+}

@@ -329,7 +329,10 @@ impl<'a> StepSpans<'a> {
 }
 
 impl StepObserver for StepSpans<'_> {
-    fn on_step(&mut self, k: usize) {
+    // `wants_health` stays at the default `false`: StepSpans is purely a
+    // timing observer. The serving layer's `HealthSpans` wrapper
+    // (`crate::telemetry`) opts in and forwards here.
+    fn on_step(&mut self, k: usize, _health: &crate::solver::StepHealth) {
         let now = Instant::now();
         let seg_us = now.duration_since(self.mark).as_micros() as u64;
         let model_ns_now = self.model_ns.get();
@@ -362,7 +365,10 @@ impl StepObserver for StepSpans<'_> {
     }
 }
 
-fn event_json(ev: &SpanEvent) -> Value {
+/// One span event as a JSON object with per-stage field naming (the same
+/// shape `span_trees_json` embeds; also reused by the telemetry push
+/// channel's NDJSON frames).
+pub fn event_json(ev: &SpanEvent) -> Value {
     let mut pairs = vec![
         ("stage", Value::from(ev.stage.as_str())),
         ("start_us", Value::from(ev.start_us as f64)),
@@ -666,10 +672,11 @@ mod tests {
         let mut out = Vec::with_capacity(8);
         let x = Tensor::zeros(&[1, timed.dim()]);
         let mut spans = StepSpans::new(&mut out, &timed, epoch, 42, 0, 3, 1);
+        let health = crate::solver::StepHealth::default();
         let _ = timed.eval(&x, 0.9);
-        spans.on_step(0);
+        spans.on_step(0, &health);
         let _ = timed.eval(&x, 0.5);
-        spans.on_step(1);
+        spans.on_step(1, &health);
         assert_eq!(out.len(), 4);
         for (i, pair) in out.chunks(2).enumerate() {
             assert_eq!(pair[0].stage, Stage::ModelEval);

@@ -240,9 +240,10 @@ fn steady_state_trace_recording_is_allocation_free() {
             });
         }
         {
+            let health = unipc::solver::StepHealth::default();
             let mut obs = StepSpans::new(&mut *spans, &timed, epoch, 1, 0, 0, members as u64);
             for k in 0..steps {
-                obs.on_step(k);
+                obs.on_step(k, &health);
             }
         }
         for i in 0..members {
@@ -272,4 +273,81 @@ fn steady_state_trace_recording_is_allocation_free() {
         ring.dropped() > 0,
         "65 batches x 25 events must wrap a 256-slot ring — overwrite, never grow"
     );
+}
+
+/// The telemetry plane's windowed time-series store is fixed-size arrays
+/// end to end: recording completions, failures, batches, depths, and
+/// steals into the 60×1s + 60×1m rings — including slot recycling as the
+/// clock advances past a full ring span — and querying window totals never
+/// touch the heap.
+#[test]
+fn windowed_metrics_recording_is_allocation_free() {
+    use unipc::coordinator::FailureKind;
+    use unipc::telemetry::WindowStore;
+
+    let mut w = WindowStore::default();
+    // Warm nothing: the store is inline arrays from construction. Arm
+    // immediately and drive synthetic time far enough to recycle every
+    // slot in both rings several times over.
+    ALLOCS.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    let mut acc = 0u64;
+    for now_s in 0..10_000u64 {
+        w.record_completion(now_s, 2, 16, 1_500 + now_s % 7_000);
+        if now_s % 11 == 0 {
+            w.record_failure(now_s, FailureKind::DeadlineExceeded);
+        }
+        w.record_batch(now_s, 4);
+        w.record_depth(now_s, (now_s % 40) as usize);
+        w.record_steal(now_s);
+        if now_s % 100 == 0 {
+            let t = w.totals(now_s, 60);
+            acc += t.completed + t.e2e_hist[0];
+        }
+    }
+    ARMED.with(|a| a.set(false));
+    let n = ALLOCS.with(|c| c.get());
+    assert_eq!(n, 0, "windowed recording allocated {n} times (acc={acc})");
+}
+
+/// The subscription flush path's zero-allocation claim: with no subscriber,
+/// publishing is a single atomic load; with a subscriber whose bounded
+/// queue has warmed to capacity, publishing span batches pushes into
+/// preallocated storage and counts overflow — no heap traffic either way.
+#[test]
+fn event_hub_publish_is_allocation_free() {
+    use unipc::telemetry::EventHub;
+
+    let hub = EventHub::new();
+    let spans: Vec<SpanEvent> = (0..25)
+        .map(|i| SpanEvent { trace_id: i as u64 + 1, ..Default::default() })
+        .collect();
+
+    // No subscriber: the hot path every worker pays by default.
+    ALLOCS.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    for _ in 0..256 {
+        hub.publish_spans(&spans);
+    }
+    ARMED.with(|a| a.set(false));
+    let n = ALLOCS.with(|c| c.get());
+    assert_eq!(n, 0, "no-subscriber publish allocated {n} times");
+
+    // Active subscriber: queue preallocated at subscribe time; publishing
+    // into it (including overflow past cap) must not allocate. Draining is
+    // the subscriber's cost, outside the worker-side claim.
+    let sub = hub.subscribe(64);
+    let mut drained = Vec::with_capacity(256);
+    ALLOCS.with(|c| c.set(0));
+    ARMED.with(|a| a.set(true));
+    for _ in 0..64 {
+        hub.publish_spans(&spans); // 25 events: fills, then overflows
+    }
+    ARMED.with(|a| a.set(false));
+    let n = ALLOCS.with(|c| c.get());
+    assert_eq!(n, 0, "subscribed publish allocated {n} times");
+    assert!(hub.dropped() > 0, "64x25 events past a 64-cap queue must count drops");
+    sub.drain_into(&mut drained);
+    assert_eq!(drained.len(), 64);
+    hub.unsubscribe(&sub);
 }

@@ -1,0 +1,642 @@
+//! Acceptance suite for the continuous telemetry plane (PR 10).
+//!
+//! Five contracts:
+//!
+//! * **windowed rates match ground truth** — a deterministic 200-second
+//!   replay drives the slot rings and an independent event-log model;
+//!   every queried window (seconds ring, minute rollup, idle tail after
+//!   slot recycling) must agree field-for-field;
+//! * **exactly once or counted** — under ~10% injected faults, every span
+//!   published while a subscription is live is either delivered to its
+//!   queue exactly once or counted in `sub_dropped`: `delivered +
+//!   sub_dropped == trace_recorded`, with both a lossless (large-cap) and
+//!   a deliberately overflowing (cap-4) subscriber;
+//! * **one breach per evaluation window** — the burn-rate monitor under
+//!   synthetic time, and a configured SLO breached end to end through the
+//!   service, each emit exactly one `slo_breach` per window id no matter
+//!   how often they are evaluated;
+//! * **corrector deltas shrink with step count** — the per-response mean
+//!   predictor→corrector relative delta (UniPC §3.2: UniC reuses the
+//!   current model eval, so the delta is a zero-extra-NFE local error
+//!   estimate) decreases monotonically on the analytic backend, and is
+//!   only stamped under `trace=steps`;
+//! * **merge is a lawful aggregation** — `Metrics::merge` is commutative,
+//!   associative, and identity-preserving across every field, including
+//!   windowed slots and the slowest-K exemplar store (satellite of the
+//!   sharded snapshot path).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unipc::analytic::datasets::{dataset, DatasetSpec};
+use unipc::config::ServerConfig;
+use unipc::coordinator::{
+    silence_injected_panics, ChaosConfig, FailureKind, Metrics, ModelBackend, SampleRequest,
+    Service,
+};
+use unipc::json::Value;
+use unipc::telemetry::{
+    parse_exposition, BurnRateMonitor, SloSpec, TelemetryEvent, WindowStore, WindowTotals,
+    E2E_LE_US,
+};
+use unipc::trace::{Stage, TraceLevel};
+
+fn analytic_backend() -> ModelBackend {
+    let spec = DatasetSpec::Cifar10Like;
+    let gm = Arc::new(dataset(spec));
+    let classes = (0..spec.n_classes()).map(|c| spec.class_components(c)).collect();
+    ModelBackend::Analytic { gm, class_components: Arc::new(classes) }
+}
+
+/// Deterministic PRNG for replays (splitmix-style LCG).
+fn lcg(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+fn num(v: &Value, key: &str) -> f64 {
+    v.get(key).and_then(Value::as_f64).unwrap_or_else(|| panic!("missing numeric {key:?}: {v:?}"))
+}
+
+/// Spans are flushed by workers just after the reply is delivered, so a
+/// joined submitter does not imply a quiet ring. Wait until the recorded
+/// count is stable across a full poll interval (the service is idle — no
+/// request is in flight when this is called).
+fn quiesce(svc: &Service) -> u64 {
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let mut last = num(&svc.metrics_json(), "trace_recorded") as u64;
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        let now = num(&svc.metrics_json(), "trace_recorded") as u64;
+        if now == last || std::time::Instant::now() > deadline {
+            return now;
+        }
+        last = now;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Windowed rates vs. deterministic replay
+// ---------------------------------------------------------------------------
+
+/// One replayed event, timestamped on the synthetic service clock.
+enum Op {
+    Comp { at: u64, n: usize, nfe: usize, e2e: u64 },
+    Fail { at: u64, kind: FailureKind },
+    Batch { at: u64, members: usize },
+    Depth { at: u64, depth: usize },
+    Steal { at: u64 },
+}
+
+impl Op {
+    fn at(&self) -> u64 {
+        match *self {
+            Op::Comp { at, .. }
+            | Op::Fail { at, .. }
+            | Op::Batch { at, .. }
+            | Op::Depth { at, .. }
+            | Op::Steal { at } => at,
+        }
+    }
+}
+
+/// Ground truth straight from the documented window semantics: a sub-60s
+/// window sums events with second in `(now − w, now]`; a longer window
+/// sums whole minutes in `(now_m − ceil(w/60), now_m]`. Computed from the
+/// raw event log, independent of the ring implementation.
+fn naive_totals(ops: &[Op], now_s: u64, window_s: u64) -> WindowTotals {
+    let mut t = WindowTotals { window_s, ..WindowTotals::default() };
+    let in_window = |at: u64| {
+        if window_s <= 60 {
+            at as i64 > now_s as i64 - window_s as i64 && at <= now_s
+        } else {
+            let (m, now_m) = (at / 60, now_s / 60);
+            m as i64 > now_m as i64 - window_s.div_ceil(60) as i64 && m <= now_m
+        }
+    };
+    let bucket =
+        |us: u64| E2E_LE_US.iter().position(|&le| us <= le).unwrap_or(E2E_LE_US.len());
+    for op in ops.iter().filter(|o| in_window(o.at())) {
+        match *op {
+            Op::Comp { n, nfe, e2e, .. } => {
+                t.completed += 1;
+                t.samples_out += n as u64;
+                t.nfe_total += nfe as u64;
+                t.e2e_sum_us += e2e;
+                t.e2e_max_us = t.e2e_max_us.max(e2e);
+                t.e2e_hist[bucket(e2e)] += 1;
+            }
+            Op::Fail { kind, .. } => {
+                t.failed += 1;
+                t.failures_by_kind[kind.index()] += 1;
+            }
+            Op::Batch { members, .. } => {
+                t.batched_runs += 1;
+                t.batch_members += members as u64;
+            }
+            Op::Depth { depth, .. } => {
+                t.depth_sum += depth as u64;
+                t.depth_obs += 1;
+            }
+            Op::Steal { .. } => t.steals += 1,
+        }
+    }
+    t
+}
+
+#[test]
+fn windowed_rates_match_deterministic_replay() {
+    let mut store = WindowStore::default();
+    let mut ops: Vec<Op> = Vec::new();
+    let mut st = 0x9e37_79b9_7f4a_7c15u64;
+    // 200 virtual seconds: the seconds ring recycles more than three times
+    // over, and the replay crosses four minute boundaries. Queries run
+    // interleaved, at the virtual instant they would be served — a slot
+    // ring only answers for the trailing ring span, so querying second 30
+    // after second 90 has recycled its slot would be asking about history
+    // the store (correctly) no longer holds.
+    for s in 0..200u64 {
+        let r = lcg(&mut st);
+        let (n, nfe) = (1 + (r % 3) as usize, 4 + (r % 5) as usize);
+        let e2e = 400 + (r % 64) * 700; // spans several histogram buckets
+        store.record_completion(s, n, nfe, e2e);
+        ops.push(Op::Comp { at: s, n, nfe, e2e });
+        if s % 7 == 3 {
+            let kind = FailureKind::ALL[(r % 6) as usize];
+            store.record_failure(s, kind);
+            ops.push(Op::Fail { at: s, kind });
+        }
+        if s % 5 == 0 {
+            let members = 2 + (r % 7) as usize;
+            store.record_batch(s, members);
+            ops.push(Op::Batch { at: s, members });
+        }
+        if s % 3 == 1 {
+            let depth = (r % 9) as usize;
+            store.record_depth(s, depth);
+            ops.push(Op::Depth { at: s, depth });
+        }
+        if s % 11 == 5 {
+            store.record_steal(s);
+            ops.push(Op::Steal { at: s });
+        }
+
+        // Seconds ring at full resolution, including the boot edge (a
+        // window larger than the elapsed time must still see second 0).
+        if [0u64, 1, 30, 59, 120, 199].contains(&s) {
+            for window in [1u64, 5, 30, 60] {
+                let got = store.totals(s, window);
+                let want = naive_totals(&ops, s, window);
+                assert_eq!(got, want, "seconds ring, now={s} window={window}");
+            }
+        }
+        // Minute rollup for windows past the seconds horizon.
+        if [59u64, 61, 150, 199].contains(&s) {
+            for window in [61u64, 120, 180, 3_600] {
+                let got = store.totals(s, window);
+                let want = naive_totals(&ops, s, window);
+                assert_eq!(got, want, "minute ring, now={s} window={window}");
+            }
+        }
+    }
+    // Idle tail: querying after the replay stopped must exclude recycled
+    // slots — a 30 s window 31 s after the last event is empty.
+    let tail = store.totals(230, 30);
+    assert_eq!(tail, WindowTotals { window_s: 30, ..WindowTotals::default() });
+    assert_eq!(store.totals(230, 60), naive_totals(&ops, 230, 60));
+}
+
+#[test]
+fn live_windowed_stats_count_traffic_and_rejections() {
+    let svc = Service::start(
+        ServerConfig { workers: 2, queue_cap: 64, ..Default::default() },
+        analytic_backend(),
+    );
+    let mut nfe_total = 0u64;
+    for i in 0..4u64 {
+        let r = svc.sample_blocking(SampleRequest {
+            n: 2,
+            steps: 6,
+            class: Some((i % 4) as usize),
+            seed: i,
+            ..Default::default()
+        });
+        assert!(r.ok, "{:?}", r.error);
+        nfe_total += r.nfe as u64;
+    }
+    // Rejections burn windowed failure budget without polluting the
+    // cumulative completion/failure counters of admitted work.
+    for _ in 0..2 {
+        let r = svc.sample_blocking(SampleRequest { n: 0, ..Default::default() });
+        assert!(!r.ok);
+        assert_eq!(r.kind, Some(FailureKind::InvalidRequest));
+    }
+
+    let s = svc.windowed_stats_json(60);
+    assert_eq!(num(&s, "window_s"), 60.0);
+    assert_eq!(num(&s, "completed"), 4.0);
+    assert_eq!(num(&s, "samples_out"), 8.0);
+    assert_eq!(num(&s, "nfe_total"), nfe_total as f64);
+    assert_eq!(num(&s, "failed"), 2.0);
+    assert_eq!(num(&s, "invalid_request"), 2.0);
+    assert!((num(&s, "completed_per_sec") - 4.0 / 60.0).abs() < 1e-12);
+    assert!(num(&s, "e2e_mean_us") > 0.0);
+    let hist = s.get("e2e_hist").and_then(Value::as_arr).expect("e2e_hist array");
+    let hist_n: f64 = hist.iter().map(|v| v.as_f64().unwrap_or(0.0)).sum();
+    assert_eq!(hist_n, 4.0, "one histogram observation per completion");
+
+    let m = svc.metrics_json();
+    assert_eq!(num(&m, "completed"), 4.0);
+    assert_eq!(num(&m, "failed"), 0.0, "rejections are not admitted failures");
+    assert_eq!(num(&m, "rejected"), 2.0);
+    svc.shutdown();
+}
+
+#[test]
+fn prometheus_exposition_round_trips_against_live_metrics() {
+    let svc = Service::start(
+        ServerConfig { workers: 2, queue_cap: 64, ..Default::default() },
+        analytic_backend(),
+    );
+    for i in 0..3u64 {
+        let r = svc.sample_blocking(SampleRequest {
+            n: 1,
+            steps: 5,
+            seed: i,
+            ..Default::default()
+        });
+        assert!(r.ok, "{:?}", r.error);
+    }
+    let text = svc.prometheus_text();
+    let parsed = parse_exposition(&text).expect("exposition must parse");
+    assert_eq!(parsed.value("unipc_completed_total", &[]), Some(3.0));
+    assert_eq!(parsed.value("unipc_failed_total", &[]), Some(0.0));
+    assert_eq!(
+        parsed.value("unipc_failures_total", &[("kind", "worker_panic")]),
+        Some(0.0)
+    );
+    assert_eq!(parsed.value("unipc_sub_dropped_total", &[]), Some(0.0));
+    assert_eq!(parsed.value("unipc_slo_breaches_total", &[]), Some(0.0));
+    assert_eq!(parsed.value("unipc_subscribers", &[]), Some(0.0));
+    assert_eq!(
+        parsed.value("unipc_workers_alive", &[]),
+        Some(svc.workers_alive() as f64)
+    );
+    assert_eq!(parsed.value("unipc_e2e_us_count", &[]), Some(3.0));
+    assert_eq!(
+        parsed.value("unipc_trace_dropped_total", &[]),
+        Some(0.0),
+        "nothing fell off the ring in a 3-request run"
+    );
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Push channel: exactly once or counted
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_span_is_delivered_exactly_once_or_counted_under_chaos() {
+    silence_injected_panics();
+    let svc = Service::start(
+        ServerConfig {
+            workers: 4,
+            shards: 2,
+            queue_cap: 4096,
+            trace_buf: 1 << 16,
+            ..Default::default()
+        },
+        ModelBackend::chaos(
+            analytic_backend(),
+            ChaosConfig { seed: 31, panic_rate: 0.05, nan_rate: 0.05, ..ChaosConfig::default() },
+        ),
+    );
+    // Subscribed before the first request with room for every span the
+    // run can produce: this subscriber must see a lossless feed.
+    let sub = svc.subscribe(1 << 16);
+
+    let threads = 4usize;
+    let per_thread = 16usize;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                (0..per_thread)
+                    .map(|i| {
+                        let k = (t * per_thread + i) as u64;
+                        let r = svc.sample_blocking(SampleRequest {
+                            n: 1 + (k % 2) as usize,
+                            steps: 5 + (k % 4) as usize,
+                            class: Some((k % 8) as usize),
+                            seed: k,
+                            return_samples: false,
+                            ..Default::default()
+                        });
+                        r.trace_id
+                    })
+                    .collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+    let mut ids = Vec::new();
+    for h in handles {
+        ids.extend(h.join().expect("submitter panicked"));
+    }
+    let recorded = quiesce(&svc);
+
+    let mut events = Vec::new();
+    sub.drain_into(&mut events);
+    let delivered = events.len() as u64;
+    assert_eq!(
+        delivered + svc.sub_dropped(),
+        recorded,
+        "every recorded span is delivered or counted dropped"
+    );
+    assert_eq!(svc.sub_dropped(), 0, "a 64Ki queue must not overflow here");
+    // Exactly once: with zero drops, each request's terminal respond span
+    // arrives exactly one time.
+    for &id in &ids {
+        let n = events
+            .iter()
+            .filter(|e| {
+                matches!(e, TelemetryEvent::Span(sp)
+                    if sp.trace_id == id && sp.stage == Stage::Respond)
+            })
+            .count();
+        assert_eq!(n, 1, "trace {id}: one delivered respond span");
+    }
+    svc.unsubscribe(&sub);
+
+    // A cap-4 subscriber that never drains: the overflow is counted, and
+    // the ledger still balances exactly.
+    let r0 = num(&svc.metrics_json(), "trace_recorded") as u64;
+    let d0 = svc.sub_dropped();
+    let sub2 = svc.subscribe(4);
+    for k in 0..8u64 {
+        let _ = svc.sample_blocking(SampleRequest {
+            n: 1,
+            steps: 5,
+            class: Some((k % 8) as usize),
+            seed: 1_000 + k,
+            ..Default::default()
+        });
+    }
+    let r1 = quiesce(&svc);
+    let d1 = svc.sub_dropped();
+    let mut tail = Vec::new();
+    sub2.drain_into(&mut tail);
+    assert_eq!(
+        tail.len() as u64 + (d1 - d0),
+        r1 - r0,
+        "overflowing subscriber: delivered + dropped == published"
+    );
+    assert!(d1 > d0, "eight requests must overflow a cap-4 queue");
+    svc.unsubscribe(&sub2);
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// SLO burn-rate monitors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn burn_rate_monitor_fires_once_per_evaluation_window() {
+    let spec = SloSpec::parse("deadline_exceeded<1%/10s").expect("valid spec");
+    assert_eq!(spec.budget_ppm, 10_000);
+    assert_eq!(spec.window_s, 10);
+    let mut mon = BurnRateMonitor::new(vec![spec]);
+    let totals = |completed: u64, deadline_failed: u64| {
+        move |w: u64| {
+            let mut t = WindowTotals { window_s: w, completed, ..WindowTotals::default() };
+            t.failed = deadline_failed;
+            t.failures_by_kind[FailureKind::DeadlineExceeded.index()] = deadline_failed;
+            t
+        }
+    };
+    let mut out = Vec::new();
+
+    // Below budget: 5 of 1005 is under 1%.
+    mon.evaluate(100, totals(1_000, 5), &mut out);
+    assert!(out.is_empty(), "below-budget burn must not alert");
+    // Breach fires once…
+    mon.evaluate(100, totals(1_000, 11), &mut out);
+    assert_eq!(out.len(), 1);
+    match out[0] {
+        TelemetryEvent::SloBreach { kind, window_s, window_id, failed, total, budget_ppm } => {
+            assert_eq!(kind, FailureKind::DeadlineExceeded);
+            assert_eq!((window_s, window_id), (10, 10));
+            assert_eq!((failed, total), (11, 1_011));
+            assert_eq!(budget_ppm, 10_000);
+        }
+        TelemetryEvent::Span(_) => panic!("expected a breach event"),
+    }
+    // …and stays silent for the rest of window id 10, sustained burn or not.
+    mon.evaluate(105, totals(1_000, 11), &mut out);
+    mon.evaluate(109, totals(1_000, 40), &mut out);
+    assert_eq!(out.len(), 1, "at most one breach per evaluation window");
+    // The next window re-alerts.
+    mon.evaluate(110, totals(1_000, 11), &mut out);
+    assert_eq!(out.len(), 2);
+    // Recovery inside a window does not reset its dedup.
+    mon.evaluate(115, totals(1_000, 0), &mut out);
+    mon.evaluate(119, totals(1_000, 11), &mut out);
+    assert_eq!(out.len(), 2);
+    mon.evaluate(120, totals(1_000, 11), &mut out);
+    assert_eq!(out.len(), 3);
+
+    // A zero-percent budget alerts on any failure at all.
+    let strict = SloSpec::parse("worker_panic<0%/1m").expect("valid spec");
+    let mut mon = BurnRateMonitor::new(vec![strict]);
+    let mut out = Vec::new();
+    let one_panic = |w: u64| {
+        let mut t = WindowTotals { window_s: w, completed: 10_000, ..WindowTotals::default() };
+        t.failed = 1;
+        t.failures_by_kind[FailureKind::WorkerPanic.index()] = 1;
+        t
+    };
+    mon.evaluate(30, one_panic, &mut out);
+    assert_eq!(out.len(), 1, "zero budget: one failure in 10k breaches");
+}
+
+#[test]
+fn configured_slo_breach_emits_one_event_end_to_end() {
+    let mut cfg = ServerConfig { workers: 2, queue_cap: 64, ..Default::default() };
+    cfg.slos = vec![SloSpec::parse("invalid_request<0.5%/60s").expect("valid spec")];
+    let svc = Service::start(cfg, analytic_backend());
+    let sub = svc.subscribe(1024);
+
+    for i in 0..3u64 {
+        let r = svc.sample_blocking(SampleRequest {
+            n: 1,
+            steps: 5,
+            seed: i,
+            ..Default::default()
+        });
+        assert!(r.ok, "{:?}", r.error);
+    }
+    for _ in 0..2 {
+        assert!(!svc.sample_blocking(SampleRequest { n: 0, ..Default::default() }).ok);
+    }
+    // Evaluate repeatedly — poked and via the background monitor thread —
+    // all inside evaluation window 0 of the 60 s objective (the service
+    // clock starts at zero, and this test runs in well under a minute).
+    for _ in 0..3 {
+        svc.poke_slos();
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    svc.poke_slos();
+    assert_eq!(svc.slo_breaches(), 1, "exactly one breach per evaluation window");
+
+    let mut events = Vec::new();
+    sub.drain_into(&mut events);
+    let breaches: Vec<_> = events
+        .iter()
+        .filter_map(|e| match *e {
+            TelemetryEvent::SloBreach { kind, window_s, window_id, failed, total, budget_ppm } => {
+                Some((kind, window_s, window_id, failed, total, budget_ppm))
+            }
+            TelemetryEvent::Span(_) => None,
+        })
+        .collect();
+    assert_eq!(breaches.len(), 1, "one slo_breach on the push channel: {breaches:?}");
+    let (kind, window_s, window_id, failed, total, budget_ppm) = breaches[0];
+    assert_eq!(kind, FailureKind::InvalidRequest);
+    assert_eq!((window_s, window_id), (60, 0));
+    assert_eq!(budget_ppm, 5_000);
+    assert!(failed >= 1 && total >= failed, "breach carries its evidence");
+    svc.unsubscribe(&sub);
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Solver numerical health
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrector_delta_shrinks_with_step_count_on_the_analytic_backend() {
+    let svc = Service::start(
+        ServerConfig {
+            workers: 1,
+            queue_cap: 16,
+            trace: TraceLevel::Steps,
+            ..Default::default()
+        },
+        analytic_backend(),
+    );
+    let mut means = Vec::new();
+    for &steps in &[4usize, 8, 16, 32] {
+        let r = svc.sample_blocking(SampleRequest {
+            n: 2,
+            steps,
+            class: Some(1),
+            seed: 7,
+            ..Default::default()
+        });
+        assert!(r.ok, "{:?}", r.error);
+        assert_eq!(r.first_nonfinite_step, None, "analytic flow stays finite");
+        let mean = r.corrector_delta_mean.expect("steps-level trace stamps health");
+        let max = r.corrector_delta_max.expect("steps-level trace stamps health");
+        assert!(mean.is_finite() && mean > 0.0, "corrector moved the state: {mean}");
+        assert!(max >= mean, "max delta bounds the mean: {max} < {mean}");
+        means.push(mean);
+    }
+    // The predictor→corrector delta is a local error estimate: finer grids
+    // (more steps, smaller h) must shrink it monotonically.
+    for pair in means.windows(2) {
+        assert!(
+            pair[1] < pair[0],
+            "mean corrector delta must shrink as steps double: {means:?}"
+        );
+    }
+    svc.shutdown();
+
+    // Gating: below trace=steps the health fields stay unset.
+    let svc = Service::start(
+        ServerConfig { workers: 1, queue_cap: 16, ..Default::default() },
+        analytic_backend(),
+    );
+    let r = svc.sample_blocking(SampleRequest { n: 1, steps: 8, seed: 7, ..Default::default() });
+    assert!(r.ok);
+    assert_eq!(r.corrector_delta_mean, None, "health costs an observer; lifecycle skips it");
+    assert_eq!(r.first_nonfinite_step, None);
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Merge laws (satellite d)
+// ---------------------------------------------------------------------------
+
+/// A deterministic random metrics store: `ops` events spread over 150
+/// virtual seconds, so slots collide across ring spans and both rings and
+/// the exemplar store carry state.
+fn replay_metrics(seed: u64, ops: usize) -> Metrics {
+    let mut m = Metrics::default();
+    let mut st = seed.wrapping_mul(0x2545_f491_4f6c_dd1d) ^ 0xdead_beef;
+    for i in 0..ops {
+        let r = lcg(&mut st);
+        let now = r % 150;
+        match r % 7 {
+            0..=2 => m.record_completion(
+                now,
+                1 + (r % 4) as usize,
+                4 + (r % 8) as usize,
+                Duration::from_micros(r % 3_000),
+                Duration::from_micros(100 + r % 9_000),
+                Duration::from_micros(r % 90),
+                1 + seed * 10_000 + i as u64,
+            ),
+            3 => m.record_failure(now, FailureKind::ALL[(r % 6) as usize]),
+            4 => {
+                let members = 1 + (r % 8) as usize;
+                let distinct = 1 + (r as usize % members);
+                m.record_batch(now, members, distinct, r % 4);
+            }
+            5 => m.record_depth(now, (r % 40) as usize),
+            _ => {
+                m.record_steal(now);
+                m.record_health(
+                    (r % 2 == 0).then(|| 1e-6 * (1 + r % 1_000) as f64),
+                    (r % 5 == 0).then(|| (r % 30) as u32),
+                );
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn metrics_merge_is_commutative_associative_and_identity_preserving() {
+    for seed in 0..8u64 {
+        let (sa, sb, sc) = (3 * seed + 1, 3 * seed + 2, 3 * seed + 3);
+
+        // Commutativity: a⊕b == b⊕a.
+        let mut ab = replay_metrics(sa, 60);
+        ab.merge(&replay_metrics(sb, 60));
+        let mut ba = replay_metrics(sb, 60);
+        ba.merge(&replay_metrics(sa, 60));
+        assert_eq!(ab.fingerprint(), ba.fingerprint(), "seed {seed}: merge must commute");
+
+        // Associativity: (a⊕b)⊕c == a⊕(b⊕c).
+        let mut left = replay_metrics(sa, 60);
+        left.merge(&replay_metrics(sb, 60));
+        left.merge(&replay_metrics(sc, 60));
+        let mut bc = replay_metrics(sb, 60);
+        bc.merge(&replay_metrics(sc, 60));
+        let mut right = replay_metrics(sa, 60);
+        right.merge(&bc);
+        assert_eq!(
+            left.fingerprint(),
+            right.fingerprint(),
+            "seed {seed}: merge must associate"
+        );
+
+        // Identity: default ⊕ a == a ⊕ default == a.
+        let want = replay_metrics(sa, 60).fingerprint();
+        let mut lhs = Metrics::default();
+        lhs.merge(&replay_metrics(sa, 60));
+        assert_eq!(lhs.fingerprint(), want, "seed {seed}: left identity");
+        let mut rhs = replay_metrics(sa, 60);
+        rhs.merge(&Metrics::default());
+        assert_eq!(rhs.fingerprint(), want, "seed {seed}: right identity");
+    }
+}
